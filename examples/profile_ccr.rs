@@ -1,0 +1,58 @@
+//! Distributed profiler demo (§III.B, Fig. 3): why naive per-process
+//! profiling overestimates communication time under worker skew, and how
+//! timeline alignment fixes it — first on synthetic skewed timelines, then
+//! live on the real DP engine over the tiny artifacts.
+//!
+//!     make artifacts && cargo run --release --example profile_ccr
+
+use covap::covap::interval_from_ccr;
+use covap::profiler::synthetic_profile;
+use covap::util::bench::Table;
+use covap::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    // ---- synthetic: sweep skew ----
+    let mut t = Table::new(&["skew", "naive CCR", "aligned CCR", "naive err", "chosen I"]);
+    let (comp, comm) = (0.135, 0.280); // ResNet-101's Table I profile
+    for skew in [0.0, 0.1, 0.2, 0.4, 0.6] {
+        let p = synthetic_profile(8, 12, comp, comm, skew, 99);
+        let r = p.ccr();
+        t.row(&[
+            format!("{:.0}%", skew * 100.0),
+            format!("{:.2}", r.naive_ccr),
+            format!("{:.2}", r.ccr),
+            format!("{:+.0}%", (r.naive_comm_s / comm - 1.0) * 100.0),
+            format!("{}", interval_from_ccr(r.ccr)),
+        ]);
+    }
+    t.print("distributed profiler vs naive profiler (synthetic ResNet-101 timeline)");
+    println!("\ntrue CCR = {:.2}; the aligned estimate stays put while the naive one", comm / comp);
+    println!("inflates with skew — the paper reports up to 20% error (§III.B).");
+
+    // ---- live: profile the real engine ----
+    println!("\nlive profile over artifacts/tiny (4 workers, 3 iterations):");
+    use covap::compress::SchemeKind;
+    use covap::config::RunConfig;
+    use covap::coordinator::DpEngine;
+    use covap::runtime::{ModelArtifacts, Runtime};
+    let cfg = RunConfig {
+        workers: 4,
+        steps: 3,
+        profile_steps: 3,
+        scheme: SchemeKind::Baseline,
+        ..RunConfig::default()
+    };
+    let rt = Runtime::cpu()?;
+    let arts = ModelArtifacts::load(&rt, &cfg.artifacts)?;
+    let mut engine = DpEngine::new(cfg, arts)?;
+    for _ in 0..3 {
+        engine.step()?;
+    }
+    let r = engine.profile_report();
+    println!("  T_comp         = {}", fmt_secs(r.comp_s));
+    println!("  T_comm naive   = {}", fmt_secs(r.naive_comm_s));
+    println!("  T_comm aligned = {}", fmt_secs(r.aligned_comm_s));
+    println!("  CCR aligned    = {:.3}  ->  interval I = {}", r.ccr, interval_from_ccr(r.ccr));
+    println!("  (tiny model on a fast simulated fabric is compute-bound: I = 1, no compression)");
+    Ok(())
+}

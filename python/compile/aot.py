@@ -1,0 +1,193 @@
+"""AOT compile path: lower the L2/L1 computations to HLO *text* artifacts.
+
+Runs ONCE at build time (`make artifacts`); the rust binary is self-contained
+afterwards. Interchange format is HLO text, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per preset, emits into artifacts/<preset>/:
+    fwd_bwd.hlo.txt      (params f32[N], tokens i32[B,T+1]) -> (loss f32[], grads f32[N])
+    sgd_update.hlo.txt   (params, grads, lr f32[])          -> (params',)
+    adam_update.hlo.txt  (params, m, v, grads, step i32[], lr f32[]) -> (params', m', v')
+    ef_compress.hlo.txt  (g f32[EB], r f32[EB], coeff f32[], keep f32[]) -> (out, new_r)
+    quantize.hlo.txt     (x f32[EB]) -> (x_q,)
+    manifest.json        model config + flat layer table + artifact signatures
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ef_compress, quantize_fp16
+
+# Canonical bucket length (elements) for the standalone compression
+# artifacts. The rust runtime pads real buckets up to this size when routing
+# compression through XLA instead of the native hot path.
+EF_BLOCK = 1 << 20
+
+PRESETS = {
+    # ~92k params — unit/integration tests; compiles in seconds.
+    "tiny": M.ModelConfig(
+        vocab=256, d_model=64, n_heads=2, n_layers=2, d_ff=128,
+        seq_len=64, batch=2,
+    ),
+    # ~4.3M params — the end-to-end training example (examples/train_transformer).
+    "small": M.ModelConfig(
+        vocab=4096, d_model=256, n_heads=8, n_layers=4, d_ff=1024,
+        seq_len=128, batch=4,
+    ),
+    # ~26M params — heavier runs / perf measurements.
+    "base": M.ModelConfig(
+        vocab=8192, d_model=512, n_heads=8, n_layers=8, d_ff=2048,
+        seq_len=256, batch=4,
+    ),
+    # ~124M params — GPT-2-small scale; compile-only target on this testbed.
+    "gpt2s": M.ModelConfig(
+        vocab=32768, d_model=768, n_heads=12, n_layers=12, d_ff=3072,
+        seq_len=512, batch=4,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax.jit(...).lower(...) -> XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all(cfg: M.ModelConfig):
+    """Return {artifact_name: (hlo_text, signature_doc)}."""
+    n = M.param_count(cfg)
+    pv = _spec((n,))
+    tokens = _spec((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    scalar_f = _spec(())
+    scalar_i = _spec((), jnp.int32)
+    eb = _spec((EF_BLOCK,))
+
+    def fwd_bwd(params, toks):
+        return M.fwd_bwd(cfg, params, toks)
+
+    def sgd(params, grads, lr):
+        return (M.sgd_update(params, grads, lr),)
+
+    def adam(params, m, v, grads, step, lr):
+        return M.adam_update(params, m, v, grads, step, lr)
+
+    def ef(g, r, coeff, keep):
+        return ef_compress(g, r, coeff, keep)
+
+    def quant(x):
+        return (quantize_fp16(x),)
+
+    arts = {}
+    arts["fwd_bwd"] = (
+        jax.jit(fwd_bwd).lower(pv, tokens),
+        {
+            "inputs": [f"params f32[{n}]", f"tokens i32[{cfg.batch},{cfg.seq_len + 1}]"],
+            "outputs": ["loss f32[]", f"grads f32[{n}]"],
+        },
+    )
+    arts["sgd_update"] = (
+        jax.jit(sgd).lower(pv, pv, scalar_f),
+        {
+            "inputs": [f"params f32[{n}]", f"grads f32[{n}]", "lr f32[]"],
+            "outputs": [f"params f32[{n}]"],
+        },
+    )
+    arts["adam_update"] = (
+        jax.jit(adam).lower(pv, pv, pv, pv, scalar_i, scalar_f),
+        {
+            "inputs": [
+                f"params f32[{n}]", f"m f32[{n}]", f"v f32[{n}]",
+                f"grads f32[{n}]", "step i32[]", "lr f32[]",
+            ],
+            "outputs": [f"params f32[{n}]", f"m f32[{n}]", f"v f32[{n}]"],
+        },
+    )
+    arts["ef_compress"] = (
+        jax.jit(ef).lower(eb, eb, scalar_f, scalar_f),
+        {
+            "inputs": [
+                f"g f32[{EF_BLOCK}]", f"r f32[{EF_BLOCK}]",
+                "coeff f32[]", "keep f32[]",
+            ],
+            "outputs": [f"out f32[{EF_BLOCK}]", f"new_r f32[{EF_BLOCK}]"],
+        },
+    )
+    arts["quantize"] = (
+        jax.jit(quant).lower(eb),
+        {
+            "inputs": [f"x f32[{EF_BLOCK}]"],
+            "outputs": [f"x_q f32[{EF_BLOCK}]"],
+        },
+    )
+    return {k: (to_hlo_text(low), sig) for k, (low, sig) in arts.items()}
+
+
+def build_manifest(preset: str, cfg: M.ModelConfig, sigs) -> dict:
+    return {
+        "preset": preset,
+        "config": dataclasses.asdict(cfg),
+        "param_count": M.param_count(cfg),
+        "ef_block": EF_BLOCK,
+        "params": [
+            {
+                "name": name,
+                "offset": off,
+                "numel": int(math.prod(shape)),
+                "shape": list(shape),
+            }
+            for name, off, shape in M.param_table(cfg)
+        ],
+        "artifacts": {
+            name: {"file": f"{name}.hlo.txt", **sig}
+            for name, sig in sigs.items()
+        },
+    }
+
+
+def emit(preset: str, out_dir: str) -> None:
+    cfg = PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    arts = lower_all(cfg)
+    for name, (text, _sig) in arts.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {path}: {len(text)} chars")
+    manifest = build_manifest(preset, cfg, {k: s for k, (_t, s) in arts.items()})
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {out_dir}/manifest.json: {manifest['param_count']} params")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", action="append", default=None,
+                    help=f"one of {list(PRESETS)}; repeatable")
+    ap.add_argument("--out-root", default="../artifacts")
+    args = ap.parse_args()
+    presets = args.preset or ["tiny", "small"]
+    for p in presets:
+        print(f"[aot] preset={p}")
+        emit(p, os.path.join(args.out_root, p))
+
+
+if __name__ == "__main__":
+    main()

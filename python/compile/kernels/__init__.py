@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for the paper's compute hot spots + pure-jnp oracles."""
+
+from .attention import attention
+from .ef_compress import ef_compress
+from .quantize import quantize_fp16
+
+__all__ = ["attention", "ef_compress", "quantize_fp16"]

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: causal self-attention tile kernel (model hot spot).
+
+Flash-attention-style tiling rethought for TPU (DESIGN.md Hardware-Adaptation):
+instead of CUDA threadblocks + shared memory, the grid iterates (batch*heads,
+q-blocks) and BlockSpec stages a q tile plus the full K/V stripes of that head
+through VMEM. For the sequence lengths this model targets (T <= 512, dh <= 128)
+K and V stripes are T*dh*4 B <= 256 KiB each — comfortably VMEM-resident, so a
+single-pass stable softmax beats the online two-pass variant (no rescaling
+traffic). The matmuls q@K^T and p@V are MXU work (128-lane friendly dh).
+
+interpret=True for CPU-PJRT executability (see ef_compress.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = jnp.finfo(jnp.float32).min
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, t, scale, causal):
+    iq = pl.program_id(1)
+    q = q_ref[0, :, :]  # [bq, dh]
+    k = k_ref[0, :, :]  # [t, dh]
+    v = v_ref[0, :, :]  # [t, dh]
+    s = jnp.dot(q, k.T) * scale  # [bq, t] — MXU
+    if causal:
+        rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, t), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bq, t), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, :, :] = jnp.dot(p, v)  # MXU
+
+
+def _attention_fwd_pallas(q, k, v, bq, causal):
+    bh, t, dh = q.shape
+    if bq is None:
+        bq = min(t, 128)
+    if t % bq != 0:
+        raise ValueError(f"T={t} must be a multiple of bq={bq}")
+    scale = 1.0 / (dh**0.5)
+    kernel = functools.partial(
+        _kernel, bq=bq, t=t, scale=scale, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, t // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _probs(q, k, causal):
+    """Softmax attention probabilities (shared by the analytic backward)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        t = q.shape[1]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        s = jnp.where((cols <= rows)[None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _attention(q, k, v, bq, causal):
+    return _attention_fwd_pallas(q, k, v, bq, causal)
+
+
+def _attention_vjp_fwd(q, k, v, bq, causal):
+    return _attention_fwd_pallas(q, k, v, bq, causal), (q, k, v)
+
+
+def _attention_vjp_bwd(bq, causal, res, do):
+    # Flash-attention-style backward: recompute p from (q, k) instead of
+    # saving the [T, T] probability matrix. Pallas JVP rules cannot
+    # differentiate through program_id, hence the analytic path here; it is
+    # the exact gradient of the forward kernel's math.
+    q, k, v = res
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    p = _probs(q, k, causal)
+    dv = jnp.einsum("bts,btd->bsd", p, do)
+    dp = jnp.einsum("btd,bsd->bts", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bts,bsd->btd", ds, k) * scale
+    dk = jnp.einsum("bts,btd->bsd", ds, q) * scale
+    return dq, dk, dv
+
+
+_attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "causal"))
+def attention(q, k, v, *, bq=None, causal=True):
+    """Causal SDPA. q, k, v: f32[BH, T, dh] -> f32[BH, T, dh].
+
+    Forward runs the Pallas tile kernel; backward is the analytic
+    recompute-from-(q,k) gradient (see _attention_vjp_bwd). bq: q-tile rows
+    per grid step (defaults to min(T, 128), the MXU-native tile height); T
+    must be a multiple of bq.
+    """
+    t = q.shape[1]
+    if bq is None:
+        bq = min(t, 128)
+    return _attention(q, k, v, bq, causal)

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: fused error-feedback compress (COVAP hot spot).
+
+The per-bucket compression step of COVAP is a streaming elementwise op:
+
+    acc   = g + coeff * r
+    out   = keep ? acc : 0
+    new_r = keep ? 0   : acc
+
+On TPU this is HBM-bandwidth bound (no MXU work). The BlockSpec streams
+`block` elements of g and r through VMEM per grid step; with f32 inputs the
+VMEM working set is 4 buffers * block * 4 B. The default block of 64 Ki
+elements uses 1 MiB — small enough for double buffering in a 16 MiB VMEM
+(see DESIGN.md section Hardware-Adaptation).
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; the interpret path lowers to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 64 * 1024
+
+
+def _kernel(coeff_ref, keep_ref, g_ref, r_ref, out_ref, newr_ref):
+    coeff = coeff_ref[0]
+    keep = keep_ref[0]
+    acc = g_ref[...] + coeff * r_ref[...]
+    out_ref[...] = acc * keep
+    newr_ref[...] = acc * (1.0 - keep)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ef_compress(g, r, coeff, keep, *, block=DEFAULT_BLOCK):
+    """Fused EF compress over one bucket.
+
+    Args:
+      g, r:  f32[n] with n a multiple of `block` (callers pad; the rust
+             runtime pads buckets to the artifact's canonical size).
+      coeff: f32 scalar (compensation coefficient).
+      keep:  f32 scalar (1.0 transmit, 0.0 drop) — scalar, not per-element:
+             COVAP's filter granularity is the whole bucket.
+      block: VMEM tile size in elements.
+    Returns (out, new_r): f32[n] each.
+    """
+    n = g.shape[0]
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    coeff = jnp.asarray(coeff, jnp.float32).reshape((1,))
+    keep = jnp.asarray(keep, jnp.float32).reshape((1,))
+    grid = (n // block,)
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    out, new_r = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec, vec_spec, vec_spec],
+        out_specs=[vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(coeff, keep, g, r)
+    return out, new_r

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy only. pytest (python/tests/test_kernel.py)
+asserts allclose between kernel and oracle across shape/dtype sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_compress_ref(g, r, coeff, keep):
+    """Error-feedback compress for one communication bucket.
+
+    acc   = g + coeff * r          (residual re-injection, scheduled coeff)
+    out   = acc  if keep else 0    (COVAP coarse filter: whole-bucket keep/drop)
+    new_r = 0    if keep else acc  (residual accumulation for dropped buckets)
+
+    Args:
+      g:     f32[n] local gradient of the bucket.
+      r:     f32[n] residual carried from previous iterations.
+      coeff: scalar f32 compensation coefficient in [0, 1].
+      keep:  scalar f32, 1.0 transmit / 0.0 drop.
+    Returns (out, new_r), both f32[n].
+    """
+    acc = g + coeff * r
+    out = acc * keep
+    new_r = acc * (1.0 - keep)
+    return out, new_r
+
+
+def quantize_fp16_ref(x):
+    """FP16 quantization baseline: round-trip f32 -> f16 -> f32."""
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def attention_ref(q, k, v, causal=True):
+    """Reference scaled-dot-product attention.
+
+    q, k, v: f32[B*H, T, dh]. Returns f32[B*H, T, dh].
+    """
+    dh = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v)

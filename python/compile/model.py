@@ -1,0 +1,223 @@
+"""L2: decoder-only transformer LM over a FLAT f32 parameter vector.
+
+The whole model lives in a single f32[N] vector. The flat layout is the
+contract with the rust coordinator (L3): gradients come back as f32[N] and
+rust builds DDP communication buckets as (offset, len) slices using the
+per-parameter layer table exported in artifacts/manifest.json — exactly the
+paper's bucket model (PyTorch DDP allocates whole parameter tensors into
+fixed-size buckets).
+
+Layout (offsets in manifest.json):
+    tok_embed [V, D]          (tied LM head)
+    pos_embed [T, D]
+    per block l in 0..L (contiguous, layer-major):
+        ln1_scale [D], ln1_bias [D]
+        w_qkv [D, 3D], b_qkv [3D]
+        w_o [D, D],    b_o [D]
+        ln2_scale [D], ln2_bias [D]
+        w_fc1 [D, F],  b_fc1 [F]
+        w_fc2 [F, D],  b_fc2 [D]
+    lnf_scale [D], lnf_bias [D]
+
+Attention uses the L1 Pallas kernel (kernels.attention), so the kernel
+lowers into the same HLO artifact the rust runtime executes.
+"""
+
+import dataclasses
+import functools
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 128
+    seq_len: int = 64
+    batch: int = 2  # per-worker micro-batch
+
+    def __post_init__(self):
+        assert self.d_model % self.n_heads == 0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def _numel(shape) -> int:
+    return int(math.prod(shape))
+
+
+def block_param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) of each parameter tensor inside one transformer block."""
+    d, f = cfg.d_model, cfg.d_ff
+    return [
+        ("ln1_scale", (d,)),
+        ("ln1_bias", (d,)),
+        ("w_qkv", (d, 3 * d)),
+        ("b_qkv", (3 * d,)),
+        ("w_o", (d, d)),
+        ("b_o", (d,)),
+        ("ln2_scale", (d,)),
+        ("ln2_bias", (d,)),
+        ("w_fc1", (d, f)),
+        ("b_fc1", (f,)),
+        ("w_fc2", (f, d)),
+        ("b_fc2", (d,)),
+    ]
+
+
+def param_table(cfg: ModelConfig) -> List[Tuple[str, int, Tuple[int, ...]]]:
+    """Full layer table: (name, offset, shape) for every parameter tensor.
+
+    This is the source of truth for manifest.json and for the rust
+    bucketizer; order == memory order in the flat vector.
+    """
+    table = []
+    off = 0
+
+    def add(name, shape):
+        nonlocal off
+        table.append((name, off, shape))
+        off += _numel(shape)
+
+    add("tok_embed", (cfg.vocab, cfg.d_model))
+    add("pos_embed", (cfg.seq_len, cfg.d_model))
+    for l in range(cfg.n_layers):
+        for name, shape in block_param_specs(cfg):
+            add(f"h{l}.{name}", shape)
+    add("lnf_scale", (cfg.d_model,))
+    add("lnf_bias", (cfg.d_model,))
+    return table
+
+
+def param_count(cfg: ModelConfig) -> int:
+    name, off, shape = param_table(cfg)[-1]
+    return off + _numel(shape)
+
+
+def block_numel(cfg: ModelConfig) -> int:
+    return sum(_numel(s) for _, s in block_param_specs(cfg))
+
+
+def _layernorm(x, scale, bias):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _split_block(cfg: ModelConfig, flat):
+    """flat f32[block_numel] -> dict of this block's parameter tensors."""
+    out = {}
+    off = 0
+    for name, shape in block_param_specs(cfg):
+        n = _numel(shape)
+        out[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def _block_fwd(cfg: ModelConfig, x, flat_block):
+    """One pre-LN transformer block. x: f32[B, T, D]."""
+    p = _split_block(cfg, flat_block)
+    b, t, d = x.shape
+    h = _layernorm(x, p["ln1_scale"], p["ln1_bias"])
+    qkv = h @ p["w_qkv"] + p["b_qkv"]  # [B, T, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):  # [B, T, D] -> [B*H, T, dh]
+        z = z.reshape(b, t, cfg.n_heads, cfg.d_head)
+        return z.transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, t, cfg.d_head)
+
+    o = attention(heads(q), heads(k), heads(v), causal=True)
+    o = (
+        o.reshape(b, cfg.n_heads, t, cfg.d_head)
+        .transpose(0, 2, 1, 3)
+        .reshape(b, t, d)
+    )
+    x = x + o @ p["w_o"] + p["b_o"]
+    h = _layernorm(x, p["ln2_scale"], p["ln2_bias"])
+    h = jax.nn.gelu(h @ p["w_fc1"] + p["b_fc1"]) @ p["w_fc2"] + p["b_fc2"]
+    return x + h
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Next-token logits. params: f32[N]; tokens: i32[B, T] -> f32[B, T, V]."""
+    d = cfg.d_model
+    tok_embed = params[: cfg.vocab * d].reshape(cfg.vocab, d)
+    off = cfg.vocab * d
+    pos_embed = params[off : off + cfg.seq_len * d].reshape(cfg.seq_len, d)
+    off += cfg.seq_len * d
+    bn = block_numel(cfg)
+    blocks = params[off : off + cfg.n_layers * bn].reshape(cfg.n_layers, bn)
+    off += cfg.n_layers * bn
+    lnf_scale = params[off : off + d]
+    lnf_bias = params[off + d : off + 2 * d]
+
+    t = tokens.shape[1]
+    x = tok_embed[tokens] + pos_embed[:t]
+
+    def body(x, flat_block):
+        return _block_fwd(cfg, x, flat_block), None
+
+    x, _ = jax.lax.scan(body, x, blocks)
+    x = _layernorm(x, lnf_scale, lnf_bias)
+    return x @ tok_embed.T  # tied head
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Mean next-token cross entropy. tokens: i32[B, T+1]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def fwd_bwd(cfg: ModelConfig, params, tokens):
+    """(loss f32[], grads f32[N]) — the per-worker step the rust DP loop runs."""
+    return jax.value_and_grad(functools.partial(loss_fn, cfg))(params, tokens)
+
+
+def sgd_update(params, grads, lr):
+    """params' = params - lr * grads (lr: f32[] runtime scalar)."""
+    return params - lr * grads
+
+
+def adam_update(params, m, v, grads, step, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Adam over flat vectors. step: i32[] (1-based); returns (params', m', v')."""
+    step_f = step.astype(jnp.float32)
+    m = beta1 * m + (1.0 - beta1) * grads
+    v = beta2 * v + (1.0 - beta2) * grads * grads
+    mhat = m / (1.0 - beta1**step_f)
+    vhat = v / (1.0 - beta2**step_f)
+    return params - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Reference initializer (tests / python-side experiments).
+
+    The rust coordinator performs the same scheme natively from the
+    manifest layer table: N(0, 0.02) for matrices/embeddings, zeros for
+    biases, ones for layernorm scales.
+    """
+    parts = []
+    for name, off, shape in param_table(cfg):
+        key, sub = jax.random.split(key)
+        n = _numel(shape)
+        base = name.split(".")[-1]
+        if base.endswith("_scale"):
+            parts.append(jnp.ones((n,), jnp.float32))
+        elif base.endswith("_bias") or base.startswith("b_"):
+            parts.append(jnp.zeros((n,), jnp.float32))
+        else:
+            parts.append(0.02 * jax.random.normal(sub, (n,), jnp.float32))
+    return jnp.concatenate(parts)

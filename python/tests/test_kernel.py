@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes/dtypes per the repo's testing contract; each kernel
+also gets targeted edge-case tests (zero inputs, keep/drop, extreme values).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ef_compress, quantize_fp16
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- ef_compress
+class TestEfCompress:
+    @given(
+        blocks=st.integers(1, 4),
+        block_log2=st.integers(8, 12),
+        coeff=st.floats(0.0, 1.0),
+        keep=st.sampled_from([0.0, 1.0]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, blocks, block_log2, coeff, keep, seed):
+        block = 1 << block_log2
+        n = blocks * block
+        g = _rand(seed, (n,))
+        r = _rand(seed + 1, (n,))
+        out, new_r = ef_compress(g, r, coeff, keep, block=block)
+        eout, enew_r = ref.ef_compress_ref(g, r, coeff, keep)
+        # atol floor covers fused-multiply-add reassociation in the kernel.
+        np.testing.assert_allclose(out, eout, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(new_r, enew_r, rtol=1e-5, atol=1e-6)
+
+    def test_keep_transmits_everything(self):
+        g, r = _rand(0, (1024,)), _rand(1, (1024,))
+        out, new_r = ef_compress(g, r, 1.0, 1.0, block=256)
+        np.testing.assert_allclose(out, g + r, rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(new_r), 0.0)
+
+    def test_drop_accumulates_residual(self):
+        g, r = _rand(0, (1024,)), _rand(1, (1024,))
+        out, new_r = ef_compress(g, r, 1.0, 0.0, block=256)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+        np.testing.assert_allclose(new_r, g + r, rtol=1e-6)
+
+    def test_mass_conservation(self):
+        """out + new_r == g + coeff*r regardless of keep — EF never loses mass."""
+        g, r = _rand(2, (2048,)), _rand(3, (2048,))
+        for keep in (0.0, 1.0):
+            out, new_r = ef_compress(g, r, 0.37, keep, block=512)
+            np.testing.assert_allclose(
+                np.asarray(out) + np.asarray(new_r),
+                np.asarray(g + 0.37 * r),
+                rtol=1e-6, atol=1e-7,
+            )
+
+    def test_rejects_misaligned(self):
+        with pytest.raises(ValueError):
+            ef_compress(jnp.zeros(100), jnp.zeros(100), 1.0, 1.0, block=64)
+
+
+# ------------------------------------------------------------------- quantize
+class TestQuantize:
+    @given(
+        blocks=st.integers(1, 4),
+        block_log2=st.integers(8, 12),
+        scale=st.floats(1e-3, 1e3),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, blocks, block_log2, scale, seed):
+        block = 1 << block_log2
+        x = _rand(seed, (blocks * block,), scale)
+        np.testing.assert_array_equal(
+            np.asarray(quantize_fp16(x, block=block)),
+            np.asarray(ref.quantize_fp16_ref(x)),
+        )
+
+    def test_overflow_saturates_like_f16(self):
+        x = jnp.full((256,), 1e38, jnp.float32)
+        got = np.asarray(quantize_fp16(x, block=256))
+        want = np.asarray(ref.quantize_fp16_ref(x))
+        np.testing.assert_array_equal(got, want)
+
+    def test_exact_on_representable(self):
+        x = jnp.arange(256, dtype=jnp.float32)  # small ints are f16-exact
+        np.testing.assert_array_equal(np.asarray(quantize_fp16(x, block=256)), np.asarray(x))
+
+
+# ------------------------------------------------------------------ attention
+class TestAttention:
+    @given(
+        bh=st.integers(1, 4),
+        t_log2=st.integers(4, 7),
+        dh=st.sampled_from([8, 16, 32, 64]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, bh, t_log2, dh, causal, seed):
+        t = 1 << t_log2
+        q = _rand(seed, (bh, t, dh))
+        k = _rand(seed + 1, (bh, t, dh))
+        v = _rand(seed + 2, (bh, t, dh))
+        got = attention(q, k, v, bq=min(t, 32), causal=causal)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_tile_boundary_invariance(self):
+        """Output must not depend on the q-tile size."""
+        q, k, v = (_rand(i, (2, 64, 16)) for i in range(3))
+        a = attention(q, k, v, bq=16)
+        b = attention(q, k, v, bq=64)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_causal_first_row_is_v0(self):
+        """Row 0 of causal attention can only attend to position 0."""
+        q, k, v = (_rand(i, (1, 32, 8)) for i in range(3))
+        out = attention(q, k, v, bq=8, causal=True)
+        np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-5, atol=1e-6)
+
+    def test_gradients_match_ref(self):
+        q, k, v = (_rand(i, (2, 32, 16)) for i in range(3))
+
+        def f_kernel(q, k, v):
+            return jnp.sum(attention(q, k, v, bq=8) ** 2)
+
+        def f_ref(q, k, v):
+            return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_rejects_bad_tile(self):
+        q = jnp.zeros((1, 48, 8))
+        with pytest.raises(ValueError):
+            attention(q, q, q, bq=32)

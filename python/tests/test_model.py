@@ -1,0 +1,106 @@
+"""L2 correctness: model shapes, layout table, loss/grad sanity, optimizers."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig()  # tiny
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(
+        jax.random.PRNGKey(1), (CFG.batch, CFG.seq_len + 1), 0, CFG.vocab
+    )
+
+
+class TestLayout:
+    def test_table_is_contiguous_and_ordered(self):
+        off = 0
+        for name, offset, shape in M.param_table(CFG):
+            assert offset == off, name
+            off += int(np.prod(shape))
+        assert off == M.param_count(CFG)
+
+    def test_block_region_is_layer_major(self):
+        table = {n: (o, s) for n, o, s in M.param_table(CFG)}
+        bn = M.block_numel(CFG)
+        base = table["h0.ln1_scale"][0]
+        assert table["h1.ln1_scale"][0] == base + bn
+
+    def test_init_matches_count(self, params):
+        assert params.shape == (M.param_count(CFG),)
+
+    def test_init_layernorm_scales_are_one(self, params):
+        table = {n: (o, s) for n, o, s in M.param_table(CFG)}
+        off, shape = table["h0.ln1_scale"]
+        np.testing.assert_array_equal(
+            np.asarray(params[off : off + shape[0]]), 1.0
+        )
+
+
+class TestForward:
+    def test_logits_shape(self, params, tokens):
+        logits = M.forward(CFG, params, tokens[:, :-1])
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+    def test_initial_loss_near_log_vocab(self, params, tokens):
+        loss = M.loss_fn(CFG, params, tokens)
+        assert abs(float(loss) - math.log(CFG.vocab)) < 0.5
+
+    def test_causality(self, params, tokens):
+        """Changing a future token must not change past logits."""
+        inp = tokens[:, :-1]
+        logits_a = M.forward(CFG, params, inp)
+        inp_b = inp.at[:, -1].set((inp[:, -1] + 1) % CFG.vocab)
+        logits_b = M.forward(CFG, params, inp_b)
+        np.testing.assert_allclose(
+            logits_a[:, :-1], logits_b[:, :-1], rtol=1e-5, atol=1e-5
+        )
+
+    def test_grads_finite_and_nonzero(self, params, tokens):
+        loss, g = M.fwd_bwd(CFG, params, tokens)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.linalg.norm(g)) > 0
+
+
+class TestOptimizers:
+    def test_sgd_descends(self, params, tokens):
+        loss, g = M.fwd_bwd(CFG, params, tokens)
+        loss2, _ = M.fwd_bwd(CFG, M.sgd_update(params, g, 0.1), tokens)
+        assert float(loss2) < float(loss)
+
+    def test_adam_descends_over_steps(self, params, tokens):
+        p = params
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        losses = []
+        for step in range(1, 6):
+            loss, g = M.fwd_bwd(CFG, p, tokens)
+            losses.append(float(loss))
+            p, m, v = M.adam_update(
+                p, m, v, g, jnp.int32(step), jnp.float32(1e-2)
+            )
+        assert losses[-1] < losses[0]
+
+    def test_adam_bias_correction_first_step(self):
+        """With m=v=0 and step=1, Adam moves by ~lr*sign(g)."""
+        p = jnp.zeros((8,))
+        g = jnp.array([1.0, -1.0, 2.0, -2.0, 0.5, -0.5, 3.0, -3.0])
+        p2, m, v = M.adam_update(
+            p, jnp.zeros_like(p), jnp.zeros_like(p), g,
+            jnp.int32(1), jnp.float32(0.1),
+        )
+        np.testing.assert_allclose(
+            np.asarray(p2), -0.1 * np.sign(g), rtol=1e-4
+        )

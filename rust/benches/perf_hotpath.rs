@@ -1,0 +1,87 @@
+//! §Perf — L3 hot-path micro-benchmarks (the data behind EXPERIMENTS.md
+//! §Perf): compressor throughputs, filter decision cost, EF accumulate
+//! bandwidth, ring allreduce bandwidth, f16 pack/unpack.
+
+use covap::comm::ring_allreduce;
+use covap::compress::{f16_to_f32, f32_to_f16, SchemeKind};
+use covap::covap::CoarseFilter;
+use covap::util::bench::{sink, time_fn, Table};
+use covap::util::rng::Rng;
+
+fn main() {
+    let n = 1 << 22; // 4 Mi elements = 16 MiB
+    let mut rng = Rng::seed(0xBE7C);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+    let mut t = Table::new(&["hot path", "median", "throughput"]);
+
+    // COVAP filter decision: O(1) per tensor
+    let filter = CoarseFilter::new(4);
+    let s = time_fn(3, 200, || {
+        let mut keep = 0usize;
+        for tensor in 0..1024usize {
+            keep += usize::from(filter.keep(tensor, sink(7)));
+        }
+        keep
+    });
+    t.row(&[
+        "COVAP filter (1024 tensors)".into(),
+        format!("{:.2}µs", s.median_s * 1e6),
+        format!("{:.1}ns/tensor", s.median_s * 1e9 / 1024.0),
+    ]);
+
+    // scheme round throughput (1 worker, includes EF where applicable)
+    for kind in [
+        SchemeKind::Covap { interval: 1, ef: Default::default() },
+        SchemeKind::Fp16,
+        SchemeKind::TopK { ratio: 0.01 },
+        SchemeKind::Dgc { ratio: 0.001 },
+        SchemeKind::RandomK { ratio: 0.01 },
+        SchemeKind::EfSignSgd,
+        SchemeKind::PowerSgd { rank: 1 },
+        SchemeKind::OkTopk { ratio: 0.01 },
+    ] {
+        let mut scheme = kind.build(1, 1);
+        let refs: Vec<&[f32]> = vec![&g];
+        let mut step = 0u64;
+        let s = time_fn(1, 5, || {
+            let (u, _) = scheme.round(0, step, &refs);
+            step += 1;
+            u[0]
+        });
+        t.row(&[
+            format!("{} round (4Mi elems)", kind.label()),
+            format!("{:.2}ms", s.median_s * 1e3),
+            format!("{:.2} GB/s", s.gbps(n * 4)),
+        ]);
+    }
+
+    // f16 pack+unpack
+    let s = time_fn(2, 10, || {
+        let mut acc = 0.0f32;
+        for &x in &g[..1 << 20] {
+            acc += f16_to_f32(f32_to_f16(x));
+        }
+        acc
+    });
+    t.row(&[
+        "f32->f16->f32 roundtrip (1Mi)".into(),
+        format!("{:.2}ms", s.median_s * 1e3),
+        format!("{:.2} GB/s", s.gbps(1 << 22)),
+    ]);
+
+    // ring allreduce, 4 ranks x 4Mi
+    let bufs: Vec<Vec<f32>> = (0..4).map(|w| g.iter().map(|x| x * (w as f32 + 1.0)).collect()).collect();
+    let s = time_fn(1, 5, || {
+        let mut b = bufs.clone();
+        ring_allreduce(&mut b);
+        b[0][0]
+    });
+    t.row(&[
+        "ring allreduce (4 ranks, 16MiB)".into(),
+        format!("{:.2}ms", s.median_s * 1e3),
+        format!("{:.2} GB/s", s.gbps(4 * n * 4)),
+    ]);
+
+    t.print("perf — L3 hot paths (1-core testbed)");
+}

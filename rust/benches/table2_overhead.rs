@@ -1,0 +1,92 @@
+//! Table II — compression overheads and communication-time reductions of
+//! the GC schemes on VGG-19 (143.65 M gradients, 64 GPUs, 30 Gbps).
+//!
+//! Two overhead columns:
+//!   * `ours` — this build's rust compressors, measured on real N(0,1)
+//!     gradients at 2^22 elements and extrapolated linearly to model size,
+//!     GPU-calibrated via the FP16 anchor (see harness::calibrated_profiles).
+//!   * `paper` — the paper's measured numbers (their PyTorch/CUDA and
+//!     mpi4py implementations).
+//!
+//! The comm-reduction column is the network model: dense allreduce time
+//! minus the scheme's compressed collective time.
+
+use covap::compress::SchemeKind;
+use covap::harness::{
+    calibrated_profiles, collective_of, paper_profile, rounds_of, wire_bytes,
+};
+use covap::network::{ClusterSpec, NetworkModel};
+use covap::util::bench::Table;
+use covap::workload;
+
+fn main() {
+    let w = workload::vgg19();
+    let n = w.total_params();
+    let net = NetworkModel::default();
+    let cluster = ClusterSpec::ecs(64);
+    let dense_s = net.allreduce_s(n * 4, cluster);
+
+    let kinds: Vec<SchemeKind> = SchemeKind::evaluation_set()
+        .into_iter()
+        .filter(|k| !matches!(k, SchemeKind::Baseline))
+        .collect();
+    println!("measuring native compressor throughput (2^22-element sample)...");
+    let profiles = calibrated_profiles(&kinds, 1 << 22, 3);
+
+    let paper_rows = [
+        ("Top-k", "k=1%", 1560.0, 603.0),
+        ("DGC", "k=0.1%", 25.0, 747.0),
+        ("Random-k", "k=1%", 200.0, 653.0),
+        ("FP16", "-", 5.0, 423.0),
+        ("EFsignSGD", "-", 20.0, -210.0),
+        ("PowerSGD", "rank=1", 20.0, 753.0),
+        ("Ok-topk", "k=1%", 500.0, 674.0),
+        ("COVAP", "I=4", 0.0, f64::NAN),
+    ];
+
+    let mut t = Table::new(&[
+        "scheme", "hyper", "T_compress ours", "T_compress paper",
+        "comm reduction ours", "comm reduction paper",
+    ]);
+    for (kind, prof) in &profiles {
+        let label = kind.label();
+        let Some(&(_, hyper, p_compress, p_red)) =
+            paper_rows.iter().find(|(l, ..)| *l == label)
+        else {
+            continue;
+        };
+        // compressed collective time over the whole model
+        let wire = match kind {
+            SchemeKind::Covap { interval, .. } => {
+                // per-iteration average: 1/I of the model goes out densely
+                (wire_bytes(kind, n) as f64 / *interval as f64) as usize
+            }
+            k => wire_bytes(k, n),
+        };
+        let (rounds, syncs, _dep) = rounds_of(kind);
+        let comm_s = match collective_of(kind) {
+            covap::compress::Collective::AllReduce => net.allreduce_s(wire, cluster),
+            covap::compress::Collective::AllGather => net.allgather_s(wire, cluster),
+        } * rounds as f64
+            + syncs as f64 * net.sync_round_s(cluster);
+        let ours_compress_ms = prof.s_per_elem * n as f64 * 1e3;
+        let ours_red_ms = (dense_s - comm_s) * 1e3;
+        t.row(&[
+            label.to_string(),
+            hyper.to_string(),
+            format!("{ours_compress_ms:.1}ms"),
+            format!("{p_compress:.0}ms"),
+            format!("{ours_red_ms:.0}ms"),
+            if p_red.is_nan() { "-".into() } else { format!("{p_red:.0}ms") },
+        ]);
+        // sanity: paper_profile replays the Table II overheads (COVAP has
+        // no paper number — "close to zero" — so allow its 2 ms stand-in)
+        let pp = paper_profile(kind);
+        assert!((pp.s_per_elem * 143_652_544.0 - p_compress / 1e3).abs() <= 2e-3 + 1e-9);
+    }
+    t.print("Table II — compression overhead & comm reduction (VGG-19, 64 GPUs)");
+    println!("\nShape checks vs paper: Top-k is the most expensive compressor; DGC ~ an");
+    println!("order cheaper; COVAP's filter cost is near zero; EFsignSGD's allgather");
+    println!("*increases* communication time at this scale (negative reduction).");
+    println!("Our native Ok-topk is much faster than the paper's mpi4py reimplementation.");
+}

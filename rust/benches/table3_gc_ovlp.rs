@@ -1,0 +1,82 @@
+//! Table III — applying GC and Overlapping concurrently (ResNet-101):
+//! Random-k and FP16 reduce CCR to ~1 and push DP near linear scaling.
+//!
+//! Paper row (ResNet-101, CCR 2.1, S_LS 2.67):
+//!   Random-k: CCR after 1.07, S_GC 1.29x, S_GC&ovlp 2.05x
+//!   FP16:     CCR after 1.04, S_GC 1.42x, S_GC&ovlp 2.35x
+
+use covap::compress::Collective;
+use covap::harness::{bucket_comp_fractions, workload_buckets};
+use covap::network::{ClusterSpec, NetworkModel};
+use covap::sim::{simulate_iteration, Breakdown, Policy, TensorCost};
+use covap::util::bench::Table;
+use covap::workload;
+
+fn main() {
+    let w = workload::resnet101();
+    let net = NetworkModel::default();
+    let cluster = ClusterSpec::ecs(64);
+    let t_ls = w.t_before_s + w.t_comp_s;
+
+    // Table III needs Random-k in its AllReduce-compatible form: all
+    // workers draw the SAME indices from a shared seed (our implementation
+    // does — compress::RandomK), so the k values are summable in-network.
+    // ratio 0.25 with (idx,val) wire = half the dense bytes -> the paper's
+    // "CCR after ~ 1.07" regime.
+    //
+    // (scheme label, wire bytes per element, compression overhead per iter)
+    let rows: [(&str, f64, f64); 2] = [
+        ("Random-k", 0.25 * 8.0 / 4.0, 0.200 * 44_654_504.0 / 143_652_544.0),
+        ("FP16", 0.5, 0.005 * 44_654_504.0 / 143_652_544.0),
+    ];
+
+    let breakdown = |wire_per_byte: f64, compress_total: f64, policy: Policy| -> Breakdown {
+        let buckets = workload_buckets(&w);
+        let fracs = bucket_comp_fractions(&w, &buckets);
+        let total: usize = buckets.iter().sum();
+        let costs: Vec<TensorCost> = buckets
+            .iter()
+            .zip(fracs.iter())
+            .map(|(&n, &f)| TensorCost {
+                comp_s: w.t_comp_s * f,
+                compress_s: compress_total * n as f64 / total as f64,
+                wire_bytes: (n as f64 * 4.0 * wire_per_byte) as usize,
+                collective: Collective::AllReduce,
+                rounds: 1,
+                sync_rounds: 0,
+                data_dependency: false,
+            })
+            .collect();
+        simulate_iteration(&net, cluster, w.t_before_s, &costs, policy)
+    };
+
+    let mut t = Table::new(&[
+        "scheme", "CCR", "CCR after", "S_GC", "S_GC&ovlp", "S_LS",
+        "paper S_GC", "paper S_GC&ovlp",
+    ]);
+    let paper = [("Random-k", 1.29, 2.05), ("FP16", 1.42, 2.35)];
+    let base_seq = breakdown(1.0, 0.0, Policy::Sequential);
+    for (label, wire, compress) in rows {
+        let seq = breakdown(wire, compress, Policy::Sequential);
+        let ovl = breakdown(wire, compress, Policy::Overlap);
+        let ccr_after = seq.t_comm_s / w.t_comp_s;
+        let (p_gc, p_ovlp) = paper
+            .iter()
+            .find(|(l, ..)| *l == label)
+            .map(|&(_, a, b)| (a, b))
+            .unwrap();
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", w.ccr(&net, cluster)),
+            format!("{ccr_after:.2}"),
+            format!("{:.2}x", base_seq.total_s / seq.total_s),
+            format!("{:.2}x", base_seq.total_s / ovl.total_s),
+            format!("{:.2}x", base_seq.total_s / t_ls),
+            format!("{p_gc:.2}x"),
+            format!("{p_ovlp:.2}x"),
+        ]);
+    }
+    t.print("Table III — GC + Overlapping concurrently (ResNet-101, 64 GPUs)");
+    println!("\nShape check: combining GC with Overlapping (S_GC&ovlp) recovers most of");
+    println!("the linear-scaling headroom that either technique alone leaves on the table.");
+}

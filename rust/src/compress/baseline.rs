@@ -1,0 +1,36 @@
+//! DDPovlp baseline: no compression — dense f32 AllReduce per bucket.
+
+
+use super::{mean_of, CommRecord, Scheme};
+
+pub struct Baseline {
+    _private: (),
+}
+
+impl Baseline {
+    pub fn new() -> Baseline {
+        Baseline { _private: () }
+    }
+}
+
+impl Default for Baseline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for Baseline {
+    fn name(&self) -> &'static str {
+        "DDPovlp"
+    }
+
+    fn round(&mut self, _bucket: usize, _step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
+        let update = mean_of(grads);
+        // The mean IS the collective (no local compression stage), so the
+        // scheme's T_compress is exactly zero by construction.
+        let rec = CommRecord::dense(grads[0].len() * 4, 0.0);
+        (update, rec)
+    }
+
+    fn reset(&mut self) {}
+}

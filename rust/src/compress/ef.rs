@@ -1,0 +1,102 @@
+//! Error-feedback residual state (Algorithm 1 of the paper).
+//!
+//! Per (worker, bucket) residual vectors. Each scheme that is lossy w.r.t.
+//! the transmitted gradient stores `acc - transmitted` here and re-injects
+//! it (optionally scaled by the COVAP scheduler coefficient) next round.
+
+use std::collections::HashMap;
+
+/// Residual store: (bucket -> per-worker residual vectors).
+#[derive(Debug, Default)]
+pub struct EfState {
+    residuals: HashMap<usize, Vec<Vec<f32>>>,
+    workers: usize,
+}
+
+impl EfState {
+    pub fn new(workers: usize) -> EfState {
+        EfState { residuals: HashMap::new(), workers }
+    }
+
+    /// acc_w = g_w + coeff * r_w for every worker; returns the accumulated
+    /// vectors (residuals are *consumed* — caller must `store` what was not
+    /// transmitted).
+    pub fn accumulate(&mut self, bucket: usize, coeff: f32, grads: &[&[f32]]) -> Vec<Vec<f32>> {
+        assert_eq!(grads.len(), self.workers);
+        let n = grads[0].len();
+        let res = self
+            .residuals
+            .entry(bucket)
+            .or_insert_with(|| vec![vec![0.0; n]; grads.len()]);
+        grads
+            .iter()
+            .zip(res.iter())
+            .map(|(g, r)| {
+                debug_assert_eq!(g.len(), r.len());
+                g.iter().zip(r.iter()).map(|(gi, ri)| gi + coeff * ri).collect()
+            })
+            .collect()
+    }
+
+    /// Store the untransmitted part for every worker.
+    pub fn store(&mut self, bucket: usize, new_residuals: Vec<Vec<f32>>) {
+        self.residuals.insert(bucket, new_residuals);
+    }
+
+    /// L2 mass currently parked in residuals (diagnostics / tests).
+    pub fn residual_norm(&self) -> f64 {
+        self.residuals
+            .values()
+            .flat_map(|ws| ws.iter())
+            .flat_map(|r| r.iter())
+            .map(|x| (*x as f64) * (*x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn clear(&mut self) {
+        self.residuals.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_adds_scaled_residual() {
+        let mut ef = EfState::new(2);
+        let g0 = vec![1.0f32, 2.0];
+        let g1 = vec![3.0f32, 4.0];
+        // first round: residuals are zero
+        let acc = ef.accumulate(0, 1.0, &[&g0, &g1]);
+        assert_eq!(acc[0], g0);
+        ef.store(0, vec![vec![0.5, 0.5], vec![1.0, 1.0]]);
+        let acc = ef.accumulate(0, 0.5, &[&g0, &g1]);
+        assert_eq!(acc[0], vec![1.25, 2.25]);
+        assert_eq!(acc[1], vec![3.5, 4.5]);
+    }
+
+    #[test]
+    fn buckets_are_independent() {
+        let mut ef = EfState::new(1);
+        let g = vec![1.0f32];
+        ef.accumulate(0, 1.0, &[&g]);
+        ef.store(0, vec![vec![9.0]]);
+        let acc1 = ef.accumulate(1, 1.0, &[&g]);
+        assert_eq!(acc1[0], vec![1.0]); // bucket 1 has no residual
+        let acc0 = ef.accumulate(0, 1.0, &[&g]);
+        assert_eq!(acc0[0], vec![10.0]);
+    }
+
+    #[test]
+    fn clear_resets_mass() {
+        let mut ef = EfState::new(1);
+        let g = vec![3.0f32, 4.0];
+        ef.accumulate(0, 1.0, &[&g]);
+        ef.store(0, vec![vec![3.0, 4.0]]);
+        assert!((ef.residual_norm() - 5.0).abs() < 1e-9);
+        ef.clear();
+        assert_eq!(ef.residual_norm(), 0.0);
+    }
+}

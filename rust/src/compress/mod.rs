@@ -1,0 +1,250 @@
+//! Gradient compression schemes: COVAP plus the paper's seven comparison
+//! baselines (Table II / VII).
+//!
+//! A [`Scheme`] models one *communication bucket round* exactly as the
+//! cluster would execute it: per-worker local compression (with per-worker
+//! error-feedback state), the collective exchange, and decompression into
+//! the averaged dense update. The numeric path is bit-faithful; the *wire*
+//! cost is returned as a [`CommRecord`] that the timeline simulator prices
+//! with the network model.
+//!
+//! `compress_s` in the record is the measured wall time of the local
+//! compression work (the paper's `T_compress`) — this is what Table II and
+//! the Fig. 7–10 breakdowns report.
+
+mod baseline;
+mod covap;
+mod ef;
+mod fp16;
+mod oktopk;
+mod powersgd;
+mod randomk;
+mod signsgd;
+mod topk;
+
+pub use baseline::Baseline;
+pub use covap::CovapScheme;
+pub use ef::EfState;
+pub use fp16::{f16_to_f32, f32_to_f16, Fp16};
+pub use oktopk::OkTopk;
+pub use powersgd::PowerSgd;
+pub use randomk::RandomK;
+pub use signsgd::EfSignSgd;
+pub use topk::{Dgc, TopK};
+
+use crate::covap::EfScheduler;
+
+/// Which collective the scheme's wire format requires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    /// Payloads are summable in-network (dense / shared-index sparse).
+    AllReduce,
+    /// Payloads must be gathered to every rank (worker-specific indices).
+    AllGather,
+}
+
+/// Wire + overhead accounting for one bucket round.
+#[derive(Debug, Clone, Copy)]
+pub struct CommRecord {
+    /// Bytes each rank puts on the wire for this bucket (0 = skipped).
+    pub wire_bytes: usize,
+    pub collective: Collective,
+    /// Number of dependent collective rounds (PowerSGD = 2).
+    pub rounds: u32,
+    /// Extra synchronous rendezvous (threshold exchange etc.).
+    pub sync_rounds: u32,
+    /// Measured per-worker local compression+decompression wall time, s.
+    pub compress_s: f64,
+    /// True if the scheme's later computation depends on an earlier
+    /// collective's *result* (breaks overlapping; §I "data dependency").
+    pub data_dependency: bool,
+}
+
+impl CommRecord {
+    pub fn dense(bytes: usize, compress_s: f64) -> CommRecord {
+        CommRecord {
+            wire_bytes: bytes,
+            collective: Collective::AllReduce,
+            rounds: 1,
+            sync_rounds: 0,
+            compress_s,
+            data_dependency: false,
+        }
+    }
+}
+
+/// One gradient-compression scheme, holding all per-worker state.
+///
+/// `round` receives the per-worker raw bucket gradients and returns the
+/// averaged dense update the optimizer applies, plus the comm record. The
+/// scheme owns per-(worker, bucket) error-feedback residuals where the
+/// algorithm uses them.
+pub trait Scheme: Send {
+    fn name(&self) -> &'static str;
+
+    fn round(&mut self, bucket: usize, step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord);
+
+    /// Reset all error-feedback / iteration state (new training run).
+    fn reset(&mut self);
+}
+
+/// Scheme selector + hyperparameters (mirrors the paper's Table II column).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchemeKind {
+    /// DDPovlp — no compression.
+    Baseline,
+    /// COVAP with a fixed interval (adaptive selection happens in the
+    /// trainer via the profiler; see covap::interval_from_ccr).
+    Covap { interval: usize, ef: EfScheduler },
+    TopK { ratio: f64 },
+    Dgc { ratio: f64 },
+    RandomK { ratio: f64 },
+    Fp16,
+    EfSignSgd,
+    PowerSgd { rank: usize },
+    OkTopk { ratio: f64 },
+}
+
+impl SchemeKind {
+    /// Paper defaults (Table II hyperparameter column).
+    pub fn paper_default(name: &str) -> Option<SchemeKind> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "baseline" | "ddp" | "ddpovlp" => SchemeKind::Baseline,
+            "covap" => SchemeKind::Covap { interval: 4, ef: EfScheduler::default() },
+            "topk" | "top-k" => SchemeKind::TopK { ratio: 0.01 },
+            "dgc" => SchemeKind::Dgc { ratio: 0.001 },
+            "randomk" | "random-k" => SchemeKind::RandomK { ratio: 0.01 },
+            "fp16" => SchemeKind::Fp16,
+            "efsignsgd" => SchemeKind::EfSignSgd,
+            "powersgd" => SchemeKind::PowerSgd { rank: 1 },
+            "oktopk" | "ok-topk" => SchemeKind::OkTopk { ratio: 0.01 },
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchemeKind::Baseline => "DDPovlp",
+            SchemeKind::Covap { .. } => "COVAP",
+            SchemeKind::TopK { .. } => "Top-k",
+            SchemeKind::Dgc { .. } => "DGC",
+            SchemeKind::RandomK { .. } => "Random-k",
+            SchemeKind::Fp16 => "FP16",
+            SchemeKind::EfSignSgd => "EFsignSGD",
+            SchemeKind::PowerSgd { .. } => "PowerSGD",
+            SchemeKind::OkTopk { .. } => "Ok-topk",
+        }
+    }
+
+    /// Instantiate for `workers` ranks with a deterministic seed.
+    pub fn build(&self, workers: usize, seed: u64) -> Box<dyn Scheme> {
+        match self.clone() {
+            SchemeKind::Baseline => Box::new(Baseline::new()),
+            SchemeKind::Covap { interval, ef } => {
+                Box::new(CovapScheme::new(interval, ef, workers))
+            }
+            SchemeKind::TopK { ratio } => Box::new(TopK::new(ratio, workers)),
+            SchemeKind::Dgc { ratio } => Box::new(Dgc::new(ratio, workers, seed)),
+            SchemeKind::RandomK { ratio } => Box::new(RandomK::new(ratio, workers, seed)),
+            SchemeKind::Fp16 => Box::new(Fp16::new()),
+            SchemeKind::EfSignSgd => Box::new(EfSignSgd::new(workers)),
+            SchemeKind::PowerSgd { rank } => Box::new(PowerSgd::new(rank, workers, seed)),
+            SchemeKind::OkTopk { ratio } => Box::new(OkTopk::new(ratio, workers)),
+        }
+    }
+
+    /// All schemes of the paper's evaluation, with paper hyperparameters.
+    pub fn evaluation_set() -> Vec<SchemeKind> {
+        vec![
+            SchemeKind::Baseline,
+            SchemeKind::TopK { ratio: 0.01 },
+            SchemeKind::Dgc { ratio: 0.001 },
+            SchemeKind::RandomK { ratio: 0.01 },
+            SchemeKind::Fp16,
+            SchemeKind::EfSignSgd,
+            SchemeKind::PowerSgd { rank: 1 },
+            SchemeKind::OkTopk { ratio: 0.01 },
+            SchemeKind::Covap { interval: 4, ef: EfScheduler::default() },
+        ]
+    }
+}
+
+/// Mean of per-worker dense vectors (the collective's arithmetic result).
+pub(crate) fn mean_of(grads: &[&[f32]]) -> Vec<f32> {
+    let n = grads[0].len();
+    let inv = 1.0 / grads.len() as f32;
+    let mut out = vec![0.0f32; n];
+    for g in grads {
+        debug_assert_eq!(g.len(), n);
+        for (o, x) in out.iter_mut().zip(g.iter()) {
+            *o += x;
+        }
+    }
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// All schemes must be unbiased-ish on identical inputs: if every worker
+    /// holds the same gradient g, the aggregated update of a dense-complete
+    /// scheme equals g (baseline, fp16~, covap-kept buckets).
+    #[test]
+    fn baseline_identity_on_identical_grads() {
+        let mut s = SchemeKind::Baseline.build(4, 0);
+        let g: Vec<f32> = (0..100).map(|i| i as f32 * 0.1 - 5.0).collect();
+        let refs: Vec<&[f32]> = (0..4).map(|_| g.as_slice()).collect();
+        let (u, rec) = s.round(0, 0, &refs);
+        assert_eq!(u, g);
+        assert_eq!(rec.wire_bytes, 400);
+    }
+
+    #[test]
+    fn mean_of_averages() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        assert_eq!(mean_of(&[&a, &b]), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn paper_default_lookup() {
+        assert!(SchemeKind::paper_default("covap").is_some());
+        assert!(SchemeKind::paper_default("PowerSGD").is_some());
+        assert!(SchemeKind::paper_default("nope").is_none());
+    }
+
+    /// Property: every scheme preserves "signal mass" over repeated rounds —
+    /// with error feedback, the sum of (update*P applied) + residuals equals
+    /// the sum of raw gradients fed in (up to fp32 tolerance). We check the
+    /// weaker, universal property: updates are finite and the scheme never
+    /// panics across random shapes.
+    #[test]
+    fn all_schemes_finite_updates() {
+        for kind in SchemeKind::evaluation_set() {
+            prop::check(kind.label(), 42, 8, |rng: &mut Rng| {
+                let workers = 1 + rng.below(4);
+                let n = 32 + rng.below(2048);
+                let mut s = kind.build(workers, 7);
+                let gs: Vec<Vec<f32>> =
+                    (0..workers).map(|_| prop::vec_f32(rng, n, 1.0)).collect();
+                let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
+                for step in 0..5 {
+                    let (u, rec) = s.round(0, step, &refs);
+                    // empty update = "all zeros" (COVAP dropped tensors)
+                    assert!(
+                        u.is_empty() || u.len() == n,
+                        "{}", kind.label()
+                    );
+                    assert!(u.iter().all(|x| x.is_finite()), "{}", kind.label());
+                    assert!(rec.compress_s >= 0.0);
+                }
+            });
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! Run configuration: JSON config files + CLI overrides -> a validated
+//! [`RunConfig`]. This is the single knob surface for the trainer, the
+//! examples and the bench harnesses.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::SchemeKind;
+use crate::covap::EfScheduler;
+use crate::network::{ClusterSpec, NetworkModel};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Optimizer selection (both are AOT artifacts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimizer {
+    Sgd,
+    Adam,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Artifact directory (artifacts/<preset>).
+    pub artifacts: PathBuf,
+    /// Logical DP workers (simulated ranks computing real gradients).
+    pub workers: usize,
+    /// Simulated cluster shape for the network model (defaults to
+    /// `workers` GPUs in nodes of 8 — may be larger than `workers` when
+    /// modeling big clusters).
+    pub cluster: ClusterSpec,
+    pub net: NetworkModel,
+    pub scheme: SchemeKind,
+    pub steps: u64,
+    pub lr: f32,
+    pub optimizer: Optimizer,
+    pub seed: u64,
+    /// Bucket capacity in bytes (PyTorch DDP default: 25 MiB).
+    pub bucket_bytes: usize,
+    /// COVAP adaptive interval: profile CCR for this many warmup steps and
+    /// set I = ceil(CCR). 0 = use the configured interval as-is.
+    pub profile_steps: u64,
+    /// Emit per-step metrics here (CSV) if set.
+    pub metrics_csv: Option<PathBuf>,
+    /// Maps measured per-step compute wall time onto the simulated
+    /// accelerator: sim_compute = wall * compute_scale. 1.0 = this CPU;
+    /// ~0.01 puts the small preset's step on a V100-like timescale so the
+    /// CCR regime matches the paper's (see EXPERIMENTS.md "Calibration").
+    pub compute_scale: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: PathBuf::from("artifacts/tiny"),
+            workers: 4,
+            // one simulated worker per node by default (network-bound DP);
+            // use --gpus / cluster config to model bigger fleets
+            cluster: ClusterSpec::new(4, 1),
+            net: NetworkModel::default(),
+            scheme: SchemeKind::Baseline,
+            steps: 50,
+            lr: 1e-3,
+            optimizer: Optimizer::Adam,
+            seed: 42,
+            bucket_bytes: 25 * 1024 * 1024,
+            profile_steps: 0,
+            metrics_csv: None,
+            compute_scale: 1.0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file then apply CLI overrides.
+    pub fn load(path: Option<&Path>, args: &Args) -> Result<RunConfig> {
+        let mut cfg = match path {
+            Some(p) => {
+                let src = std::fs::read_to_string(p)
+                    .with_context(|| format!("reading config {}", p.display()))?;
+                Self::from_json(&Json::parse(&src)?)?
+            }
+            None => RunConfig::default(),
+        };
+        cfg.apply_args(args)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let mut cfg = RunConfig {
+            artifacts: PathBuf::from(
+                j.get_or("artifacts", &Json::Str("artifacts/tiny".into())).as_str()?,
+            ),
+            workers: j.get_or("workers", &Json::from(d.workers)).as_usize()?,
+            ..d.clone()
+        };
+        if let Ok(c) = j.get("cluster") {
+            cfg.cluster = ClusterSpec::new(
+                c.get("nodes")?.as_usize()?,
+                c.get("gpus_per_node")?.as_usize()?,
+            );
+        } else {
+            cfg.cluster = default_cluster(cfg.workers);
+        }
+        if let Ok(n) = j.get("network") {
+            cfg.net = NetworkModel {
+                nic_gbps: n.get_or("nic_gbps", &Json::from(30.0)).as_f64()?,
+                efficiency: n.get_or("efficiency", &Json::from(0.32)).as_f64()?,
+                latency_s: n.get_or("latency_s", &Json::from(50e-6)).as_f64()?,
+                intra_gbps: n.get_or("intra_gbps", &Json::from(12.0)).as_f64()?,
+            };
+        }
+        if let Ok(s) = j.get("scheme") {
+            cfg.scheme = scheme_from_json(s)?;
+        }
+        cfg.steps = j.get_or("steps", &Json::from(d.steps as usize)).as_usize()? as u64;
+        cfg.lr = j.get_or("lr", &Json::from(d.lr as f64)).as_f64()? as f32;
+        cfg.optimizer = match j.get_or("optimizer", &Json::Str("adam".into())).as_str()? {
+            "sgd" => Optimizer::Sgd,
+            "adam" => Optimizer::Adam,
+            o => bail!("unknown optimizer '{o}'"),
+        };
+        cfg.seed = j.get_or("seed", &Json::from(d.seed as usize)).as_usize()? as u64;
+        cfg.bucket_bytes =
+            j.get_or("bucket_bytes", &Json::from(d.bucket_bytes)).as_usize()?;
+        cfg.profile_steps =
+            j.get_or("profile_steps", &Json::from(d.profile_steps as usize)).as_usize()? as u64;
+        cfg.compute_scale = j.get_or("compute_scale", &Json::from(1.0)).as_f64()?;
+        Ok(cfg)
+    }
+
+    /// CLI overrides: --artifacts --workers --scheme --steps --lr
+    /// --optimizer --seed --bucket-mb --profile-steps --metrics-csv
+    /// --gpus (cluster size) --bandwidth-gbps.
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(v) = a.get("artifacts") {
+            self.artifacts = PathBuf::from(v);
+        }
+        self.workers = a.get_parsed("workers", self.workers)?;
+        self.cluster = default_cluster(self.workers);
+        if let Some(g) = a.get("gpus") {
+            let gpus: usize = g.parse().context("--gpus")?;
+            self.cluster = if gpus % 8 == 0 && gpus >= 8 {
+                ClusterSpec::ecs(gpus)
+            } else {
+                ClusterSpec::new(gpus, 1)
+            };
+        }
+        if let Some(s) = a.get("scheme") {
+            self.scheme = SchemeKind::paper_default(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown scheme '{s}'"))?;
+        }
+        if let Some(i) = a.get("interval") {
+            let interval: usize = i.parse().context("--interval")?;
+            self.scheme = SchemeKind::Covap { interval, ef: EfScheduler::default() };
+        }
+        self.steps = a.get_parsed("steps", self.steps)?;
+        self.lr = a.get_parsed("lr", self.lr)?;
+        if let Some(o) = a.get("optimizer") {
+            self.optimizer = match o {
+                "sgd" => Optimizer::Sgd,
+                "adam" => Optimizer::Adam,
+                _ => bail!("unknown optimizer '{o}'"),
+            };
+        }
+        self.seed = a.get_parsed("seed", self.seed)?;
+        if let Some(mb) = a.get("bucket-mb") {
+            let mb: f64 = mb.parse().context("--bucket-mb")?;
+            self.bucket_bytes = (mb * 1024.0 * 1024.0) as usize;
+        }
+        self.profile_steps = a.get_parsed("profile-steps", self.profile_steps)?;
+        if let Some(p) = a.get("metrics-csv") {
+            self.metrics_csv = Some(PathBuf::from(p));
+        }
+        if let Some(bw) = a.get("bandwidth-gbps") {
+            self.net.nic_gbps = bw.parse().context("--bandwidth-gbps")?;
+        }
+        self.compute_scale = a.get_parsed("compute-scale", self.compute_scale)?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.bucket_bytes < 4096 {
+            bail!("bucket_bytes too small ({}); min 4096", self.bucket_bytes);
+        }
+        if self.lr <= 0.0 || !self.lr.is_finite() {
+            bail!("bad lr {}", self.lr);
+        }
+        if let SchemeKind::Covap { interval, .. } = &self.scheme {
+            if *interval == 0 {
+                bail!("covap interval must be >= 1");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Cluster shape implied by a worker count: multiples of 8 map onto the
+/// paper's 8-GPU nodes, anything else is one worker per node.
+pub fn default_cluster(workers: usize) -> ClusterSpec {
+    if workers % 8 == 0 && workers >= 8 {
+        ClusterSpec::ecs(workers)
+    } else {
+        // treat each simulated worker as its own node (network-bound DP)
+        ClusterSpec::new(workers, 1)
+    }
+}
+
+fn scheme_from_json(j: &Json) -> Result<SchemeKind> {
+    let name = j.get("name")?.as_str()?;
+    let mut kind = SchemeKind::paper_default(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme '{name}'"))?;
+    match &mut kind {
+        SchemeKind::Covap { interval, ef } => {
+            if let Ok(i) = j.get("interval") {
+                *interval = i.as_usize()?;
+            }
+            if let Ok(e) = j.get("ef") {
+                *ef = EfScheduler {
+                    init_value: e.get_or("init_value", &Json::from(0.1)).as_f64()? as f32,
+                    ascend_steps: e.get_or("ascend_steps", &Json::from(100usize)).as_usize()?
+                        as u64,
+                    ascend_range: e.get_or("ascend_range", &Json::from(0.09)).as_f64()? as f32,
+                };
+            }
+        }
+        SchemeKind::TopK { ratio }
+        | SchemeKind::Dgc { ratio }
+        | SchemeKind::RandomK { ratio }
+        | SchemeKind::OkTopk { ratio } => {
+            if let Ok(r) = j.get("ratio") {
+                *ratio = r.as_f64()?;
+            }
+        }
+        SchemeKind::PowerSgd { rank } => {
+            if let Ok(r) = j.get("rank") {
+                *rank = r.as_usize()?;
+            }
+        }
+        _ => {}
+    }
+    Ok(kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_with_scheme() {
+        let j = Json::parse(
+            r#"{"workers": 8, "steps": 10,
+                "scheme": {"name": "covap", "interval": 3,
+                           "ef": {"init_value": 0.2}},
+                "network": {"nic_gbps": 100}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.cluster.world(), 8);
+        assert_eq!(cfg.net.nic_gbps, 100.0);
+        match cfg.scheme {
+            SchemeKind::Covap { interval, ef } => {
+                assert_eq!(interval, 3);
+                assert!((ef.init_value - 0.2).abs() < 1e-6);
+            }
+            _ => panic!("wrong scheme"),
+        }
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let args = Args::parse(
+            ["--scheme", "powersgd", "--steps", "7", "--bucket-mb", "1"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.bucket_bytes, 1024 * 1024);
+        assert!(matches!(cfg.scheme, SchemeKind::PowerSgd { rank: 1 }));
+    }
+
+    #[test]
+    fn interval_flag_selects_covap() {
+        let args =
+            Args::parse(["--interval", "5"].iter().map(|s| s.to_string())).unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert!(matches!(cfg.scheme, SchemeKind::Covap { interval: 5, .. }));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut cfg = RunConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.lr = -1.0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,395 @@
+//! The data-parallel training engine.
+//!
+//! P logical workers each run the AOT `fwd_bwd` artifact on their own data
+//! shard (real numerics); per-bucket (or per-shard, once COVAP sharding is
+//! active) gradients go through the configured compression scheme; the
+//! reduced gradient feeds the AOT optimizer artifact. Every step also
+//! produces the simulated cluster-time breakdown via the overlap timeline.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::compress::{CommRecord, Scheme, SchemeKind};
+use crate::config::{Optimizer, RunConfig};
+use crate::coordinator::bucketizer::{bucketize, Bucket};
+use crate::covap::{interval_from_ccr, shard_buckets, EfScheduler};
+use crate::data::{DataShard, SyntheticCorpus};
+use crate::profiler::{Event, EventKind, Profile};
+use crate::runtime::{
+    lit_f32, lit_i32_2d, lit_scalar_f32, lit_scalar_i32, to_f32_scalar, to_f32_vec,
+    ModelArtifacts,
+};
+use crate::sim::{simulate_iteration, Breakdown, Policy, TensorCost};
+
+/// A communication tensor: a bucket or a COVAP shard of one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommTensor {
+    /// Absolute offset into the flat gradient vector.
+    pub offset: usize,
+    pub numel: usize,
+    /// Source bucket id (diagnostics).
+    pub bucket: usize,
+}
+
+/// Per-step output.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub step: u64,
+    /// Mean worker loss.
+    pub loss: f32,
+    /// Wall time of the whole step on this testbed.
+    pub wall_s: f64,
+    /// Simulated cluster breakdown (Eq. 3/4/6 timeline).
+    pub breakdown: Breakdown,
+    /// Total wire bytes per rank this step.
+    pub wire_bytes: usize,
+    /// Summed per-tensor compression overhead (per-worker mean).
+    pub compress_s: f64,
+}
+
+pub struct DpEngine {
+    pub cfg: RunConfig,
+    arts: ModelArtifacts,
+    scheme: Box<dyn Scheme>,
+    buckets: Vec<Bucket>,
+    tensors: Vec<CommTensor>,
+    shards: Vec<DataShard>,
+    /// Replicated model state (identical across workers in synchronous DP,
+    /// so stored once).
+    params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u64,
+    /// Profile of warmup steps for adaptive interval selection.
+    profile: Profile,
+    /// Chosen interval once profiling concludes (COVAP adaptive mode).
+    pub chosen_interval: Option<usize>,
+}
+
+impl DpEngine {
+    pub fn new(cfg: RunConfig, arts: ModelArtifacts) -> Result<DpEngine> {
+        let manifest = &arts.manifest;
+        let n = manifest.param_count;
+        let dims = &manifest.dims;
+        ensure!(cfg.workers >= 1);
+
+        let buckets = bucketize(&manifest.params, cfg.bucket_bytes);
+        let tensors = plain_tensors(&buckets);
+
+        let corpus = SyntheticCorpus::new(dims.vocab);
+        let shards = (0..cfg.workers)
+            .map(|w| {
+                DataShard::new(corpus.clone(), cfg.seed, w, dims.batch, dims.seq_len + 1)
+            })
+            .collect();
+
+        let params = init_params(manifest, cfg.seed);
+        let scheme = cfg.scheme.build(cfg.workers, cfg.seed);
+
+        Ok(DpEngine {
+            cfg,
+            arts,
+            scheme,
+            buckets,
+            tensors,
+            shards,
+            params: params.clone(),
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            profile: Profile::new(),
+            chosen_interval: None,
+        })
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub fn tensors(&self) -> &[CommTensor] {
+        &self.tensors
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Run one synchronous DP step.
+    pub fn step(&mut self) -> Result<StepOutput> {
+        let wall0 = Instant::now();
+        let n = self.params.len();
+        let dims = self.arts.manifest.dims.clone();
+
+        // ---- per-worker forward/backward (real gradients) ----
+        let mut losses = Vec::with_capacity(self.cfg.workers);
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.cfg.workers);
+        let mut comp_walls = Vec::with_capacity(self.cfg.workers);
+        let params_lit = lit_f32(&self.params);
+        for w in 0..self.cfg.workers {
+            let batch = self.shards[w].next_batch();
+            let toks = lit_i32_2d(&batch, dims.batch, dims.seq_len + 1)?;
+            let t0 = Instant::now();
+            let out = self.arts.fwd_bwd.run(&[params_lit.clone(), toks])?;
+            comp_walls.push(t0.elapsed().as_secs_f64());
+            losses.push(to_f32_scalar(&out[0])?);
+            let g = to_f32_vec(&out[1])?;
+            ensure!(g.len() == n, "gradient length mismatch");
+            grads.push(g);
+        }
+
+        // ---- per-tensor compression + collective ----
+        let mut reduced = vec![0.0f32; n];
+        let mut records: Vec<CommRecord> = Vec::with_capacity(self.tensors.len());
+        for (t_idx, t) in self.tensors.iter().enumerate() {
+            let slices: Vec<&[f32]> = grads
+                .iter()
+                .map(|g| &g[t.offset..t.offset + t.numel])
+                .collect();
+            let (update, rec) = self.scheme.round(t_idx, self.step, &slices);
+            // empty update = scheme transmitted nothing (COVAP dropped
+            // tensor); `reduced` is already zeroed there.
+            if !update.is_empty() {
+                reduced[t.offset..t.offset + t.numel].copy_from_slice(&update);
+            }
+            records.push(rec);
+        }
+
+        // ---- optimizer (AOT artifact) ----
+        self.apply_update(&reduced)?;
+
+        // ---- simulated timeline ----
+        let breakdown = self.simulate(&comp_walls, &records);
+        self.record_profile(&comp_walls, &records);
+
+        let wire_bytes: usize = records.iter().map(|r| r.wire_bytes).sum();
+        let compress_s: f64 = records.iter().map(|r| r.compress_s).sum();
+        let loss = losses.iter().sum::<f32>() / losses.len() as f32;
+        let out = StepOutput {
+            step: self.step,
+            loss,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            breakdown,
+            wire_bytes,
+            compress_s,
+        };
+        self.step += 1;
+
+        // adaptive interval: conclude profiling
+        if self.cfg.profile_steps > 0 && self.step == self.cfg.profile_steps {
+            self.conclude_profiling();
+        }
+        Ok(out)
+    }
+
+    fn apply_update(&mut self, grads: &[f32]) -> Result<()> {
+        match self.cfg.optimizer {
+            Optimizer::Sgd => {
+                let out = self.arts.sgd_update.run(&[
+                    lit_f32(&self.params),
+                    lit_f32(grads),
+                    lit_scalar_f32(self.cfg.lr),
+                ])?;
+                self.params = to_f32_vec(&out[0])?;
+            }
+            Optimizer::Adam => {
+                let out = self.arts.adam_update.run(&[
+                    lit_f32(&self.params),
+                    lit_f32(&self.m),
+                    lit_f32(&self.v),
+                    lit_f32(grads),
+                    lit_scalar_i32(self.step as i32 + 1),
+                    lit_scalar_f32(self.cfg.lr),
+                ])?;
+                self.params = to_f32_vec(&out[0])?;
+                self.m = to_f32_vec(&out[1])?;
+                self.v = to_f32_vec(&out[2])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the simulated iteration timeline. Computation time per tensor:
+    /// the paper's Table-I-style T_comp split across tensors by size; we use
+    /// the *measured* mean worker fwd_bwd wall time as (T_before + T_comp)
+    /// with the Bert-like 80/170 split.
+    fn simulate(&self, comp_walls: &[f64], records: &[CommRecord]) -> Breakdown {
+        let mean_wall = comp_walls.iter().sum::<f64>() / comp_walls.len() as f64
+            * self.cfg.compute_scale;
+        let t_before = mean_wall * 0.32; // fwd ~1/3, bwd ~2/3
+        let t_comp_total = mean_wall - t_before;
+        let total_elems: usize = self.tensors.iter().map(|t| t.numel).sum();
+        let costs: Vec<TensorCost> = self
+            .tensors
+            .iter()
+            .zip(records.iter())
+            .map(|(t, r)| TensorCost {
+                comp_s: t_comp_total * t.numel as f64 / total_elems as f64,
+                // compression runs on the same accelerator as the backward
+                // pass: map its measured wall time with the same scale
+                compress_s: r.compress_s * self.cfg.compute_scale,
+                wire_bytes: r.wire_bytes,
+                collective: r.collective,
+                rounds: r.rounds,
+                sync_rounds: r.sync_rounds,
+                data_dependency: r.data_dependency,
+            })
+            .collect();
+        simulate_iteration(&self.cfg.net, self.cfg.cluster, t_before, &costs, Policy::Overlap)
+    }
+
+    /// Feed this step's measured compute + modeled comm into the
+    /// distributed profiler (per-worker skew from real wall times).
+    fn record_profile(&mut self, comp_walls: &[f64], records: &[CommRecord]) {
+        if self.cfg.profile_steps == 0 || self.step >= self.cfg.profile_steps {
+            return;
+        }
+        let op_base = (self.step as usize) * (records.len() + 1);
+        // one compute event per worker (their real, skewed wall times,
+        // mapped to the simulated accelerator's timescale)...
+        let arrive: Vec<f64> =
+            comp_walls.iter().map(|w| w * self.cfg.compute_scale).collect();
+        for (w, &d) in arrive.iter().enumerate() {
+            self.profile.record(Event {
+                worker: w,
+                kind: EventKind::Compute,
+                op: op_base,
+                start_s: 0.0,
+                end_s: d,
+            });
+        }
+        // ...and the dense-equivalent collective with rendezvous semantics.
+        let last = arrive.iter().copied().fold(f64::MIN, f64::max);
+        let dense_bytes: usize = self.tensors.iter().map(|t| t.numel * 4).sum();
+        let dur = self.cfg.net.allreduce_s(dense_bytes, self.cfg.cluster);
+        for (w, &a) in arrive.iter().enumerate() {
+            self.profile.record(Event {
+                worker: w,
+                kind: EventKind::Comm,
+                op: op_base + 1,
+                start_s: a,
+                end_s: last + dur,
+            });
+        }
+    }
+
+    /// §III.B: set I = ceil(CCR) from the aligned profile and re-shard.
+    fn conclude_profiling(&mut self) {
+        // ccr() aggregates comm and comp over all profiled steps, so the
+        // ratio is step-count invariant.
+        let report = self.profile.ccr();
+        let interval = interval_from_ccr(report.ccr);
+        self.set_covap_interval(interval);
+    }
+
+    /// Switch the engine to COVAP with the given interval: rebuild the
+    /// scheme and apply tensor sharding (§III.C) over the buckets.
+    pub fn set_covap_interval(&mut self, interval: usize) {
+        self.chosen_interval = Some(interval);
+        let ef = match &self.cfg.scheme {
+            SchemeKind::Covap { ef, .. } => *ef,
+            _ => EfScheduler::default(),
+        };
+        self.cfg.scheme = SchemeKind::Covap { interval, ef };
+        self.scheme = self.cfg.scheme.build(self.cfg.workers, self.cfg.seed);
+        // sharding: slice oversized buckets
+        let sizes: Vec<usize> = self.buckets.iter().map(|b| b.numel).collect();
+        let shards = shard_buckets(&sizes, interval);
+        self.tensors = shards
+            .iter()
+            .map(|s| CommTensor {
+                offset: self.buckets[s.bucket].offset + s.offset,
+                numel: s.len,
+                bucket: s.bucket,
+            })
+            .collect();
+    }
+
+    /// CCR report of the warmup profile (for logging).
+    pub fn profile_report(&self) -> crate::profiler::CcrReport {
+        self.profile.ccr()
+    }
+}
+
+fn plain_tensors(buckets: &[Bucket]) -> Vec<CommTensor> {
+    buckets
+        .iter()
+        .map(|b| CommTensor { offset: b.offset, numel: b.numel, bucket: b.id })
+        .collect()
+}
+
+/// Initialize the flat parameter vector from the manifest layer table:
+/// N(0, 0.02) for weight matrices/embeddings, zeros for biases, ones for
+/// layernorm scales (matches python model.init_params).
+pub fn init_params(manifest: &crate::runtime::Manifest, seed: u64) -> Vec<f32> {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::seed(seed ^ 0x1A17);
+    let mut out = vec![0.0f32; manifest.param_count];
+    for p in &manifest.params {
+        let base = p.name.rsplit('.').next().unwrap_or(&p.name);
+        let dst = &mut out[p.offset..p.offset + p.numel];
+        if base.ends_with("_scale") {
+            dst.fill(1.0);
+        } else if base.ends_with("_bias") || base.starts_with("b_") {
+            dst.fill(0.0);
+        } else {
+            for x in dst {
+                *x = rng.normal() as f32 * 0.02;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "preset": "t",
+          "config": {"vocab": 16, "d_model": 4, "n_heads": 2, "n_layers": 1,
+                     "d_ff": 8, "seq_len": 8, "batch": 2},
+          "param_count": 100,
+          "ef_block": 64,
+          "params": [
+            {"name": "tok_embed", "offset": 0, "numel": 64, "shape": [16, 4]},
+            {"name": "h0.b_qkv", "offset": 64, "numel": 12, "shape": [12]},
+            {"name": "h0.ln1_scale", "offset": 76, "numel": 4, "shape": [4]},
+            {"name": "h0.w_o", "offset": 80, "numel": 16, "shape": [4, 4]},
+            {"name": "lnf_bias", "offset": 96, "numel": 4, "shape": [4]}
+          ],
+          "artifacts": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_respects_param_classes() {
+        let m = tiny_manifest();
+        let p = init_params(&m, 1);
+        assert_eq!(p.len(), 100);
+        // ln scale -> ones
+        assert!(p[76..80].iter().all(|&x| x == 1.0));
+        // biases -> zeros
+        assert!(p[64..76].iter().all(|&x| x == 0.0));
+        assert!(p[96..].iter().all(|&x| x == 0.0));
+        // embeddings -> small nonzero
+        assert!(p[0..64].iter().any(|&x| x != 0.0));
+        assert!(p[0..64].iter().all(|&x| x.abs() < 0.2));
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let m = tiny_manifest();
+        assert_eq!(init_params(&m, 9), init_params(&m, 9));
+        assert_ne!(init_params(&m, 9), init_params(&m, 10));
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: gradient bucketing and the data-parallel training engine.
+//!
+//! [`bucketizer`] reproduces the DDP bucket model: parameter tensors are
+//! packed into fixed-capacity communication buckets in gradient-ready
+//! (reverse registration) order. [`engine`] runs synchronous DP over P
+//! simulated workers: each computes *real* gradients through the PJRT
+//! artifact on its own data shard; buckets flow through the configured
+//! compression scheme; the overlap timeline is priced by the network model.
+
+pub mod bucketizer;
+pub mod engine;
+
+pub use bucketizer::{bucketize, bucketize_layers, Bucket};
+pub use engine::{CommTensor, DpEngine, StepOutput};

@@ -1,0 +1,94 @@
+//! §III.A — the coarse-grained gradient filter.
+//!
+//! Granularity is the communication tensor (bucket/shard), not individual
+//! gradients: tensor `t` is transmitted in iteration `s` iff
+//! `(t + s) % I == 0`. The decision is a modular counter — O(1) per tensor,
+//! no value inspection, no synchronization (every worker derives the same
+//! decision from (t, s, I) locally), hence zero data dependency.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoarseFilter {
+    interval: usize,
+}
+
+impl CoarseFilter {
+    pub fn new(interval: usize) -> CoarseFilter {
+        assert!(interval >= 1, "interval must be >= 1");
+        CoarseFilter { interval }
+    }
+
+    pub fn interval(&self) -> usize {
+        self.interval
+    }
+
+    /// Is tensor `t` transmitted at iteration `step`?
+    #[inline]
+    pub fn keep(&self, tensor: usize, step: u64) -> bool {
+        (tensor as u64 + step) % self.interval as u64 == 0
+    }
+
+    /// The tensors transmitted at `step` out of `n_tensors` — each step
+    /// selects ~n/I tensors, rotating so every tensor goes exactly once per
+    /// I iterations.
+    pub fn selected(&self, n_tensors: usize, step: u64) -> Vec<usize> {
+        (0..n_tensors).filter(|&t| self.keep(t, step)).collect()
+    }
+
+    /// Effective compression ratio (volume reduction factor) = I.
+    pub fn ratio(&self) -> f64 {
+        self.interval as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_fig2a_example() {
+        // I = 4: tensor 0 goes at steps 0, 4, 8...; the paper's 1-indexed
+        // description ("first tensor at the 1st and 5th iterations") maps to
+        // 0-indexed steps here. Tensor t goes when (t + s) % 4 == 0.
+        let f = CoarseFilter::new(4);
+        assert!(f.keep(0, 0) && f.keep(0, 4) && !f.keep(0, 1));
+        assert!(f.keep(3, 1) && f.keep(2, 2) && f.keep(1, 3));
+    }
+
+    #[test]
+    fn every_tensor_exactly_once_per_interval() {
+        // Invariant (staleness bound): over any window of I consecutive
+        // steps, each tensor is transmitted exactly once.
+        prop::check("filter-coverage", 11, 100, |rng: &mut Rng| {
+            let i = 1 + rng.below(16);
+            let n = 1 + rng.below(64);
+            let start = rng.below(1000) as u64;
+            let f = CoarseFilter::new(i);
+            for t in 0..n {
+                let count = (start..start + i as u64).filter(|&s| f.keep(t, s)).count();
+                assert_eq!(count, 1, "tensor {t} interval {i} window start {start}");
+            }
+        });
+    }
+
+    #[test]
+    fn per_step_load_is_balanced() {
+        // Each step transmits floor(n/I) or ceil(n/I) tensors.
+        prop::check("filter-balance", 12, 100, |rng: &mut Rng| {
+            let i = 1 + rng.below(8);
+            let n = 1 + rng.below(100);
+            let f = CoarseFilter::new(i);
+            for s in 0..(2 * i as u64) {
+                let k = f.selected(n, s).len();
+                assert!(k == n / i || k == n / i + (n % i != 0) as usize, "n={n} I={i} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn interval_one_keeps_everything() {
+        let f = CoarseFilter::new(1);
+        assert!((0..50).all(|t| f.keep(t, 17)));
+    }
+}

@@ -1,0 +1,43 @@
+//! COVAP core: the paper's §III — coarse-grained filter, adaptive interval
+//! selection, tensor sharding, and the error-feedback scheduler.
+
+mod filter;
+mod scheduler;
+mod sharding;
+
+pub use filter::CoarseFilter;
+pub use scheduler::EfScheduler;
+pub use sharding::{shard_buckets, Shard};
+
+/// §III.B: the interval (compression ratio) is ceil(CCR), clamped to >= 1.
+///
+/// COVAP must reduce communication volume by at least CCR× so that the
+/// compressed communication fits under the computation for full overlap;
+/// ceil() compresses "a little more than CCR times".
+pub fn interval_from_ccr(ccr: f64) -> usize {
+    if !ccr.is_finite() || ccr <= 1.0 {
+        1
+    } else {
+        ccr.ceil() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_is_ceil_ccr() {
+        assert_eq!(interval_from_ccr(2.1), 3);
+        assert_eq!(interval_from_ccr(4.0), 4);
+        assert_eq!(interval_from_ccr(3.5), 4);
+    }
+
+    #[test]
+    fn interval_clamps_low_and_garbage() {
+        assert_eq!(interval_from_ccr(0.4), 1); // computation-bound: no compression
+        assert_eq!(interval_from_ccr(1.0), 1);
+        assert_eq!(interval_from_ccr(f64::NAN), 1);
+        assert_eq!(interval_from_ccr(f64::INFINITY), 1);
+    }
+}

@@ -1,0 +1,67 @@
+//! §III.D — the error-feedback compensation scheduler.
+//!
+//! Residuals are re-injected scaled by
+//! `min(init_value + floor(step / ascend_steps) * ascend_range, 1)`:
+//! small early in training (large stale compensation harms accuracy,
+//! cf. LSDDL) and ramping to full feedback.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EfScheduler {
+    pub init_value: f32,
+    pub ascend_steps: u64,
+    pub ascend_range: f32,
+}
+
+impl Default for EfScheduler {
+    fn default() -> Self {
+        // Reaches full compensation after ~10 * ascend_steps iterations.
+        EfScheduler { init_value: 0.1, ascend_steps: 100, ascend_range: 0.09 }
+    }
+}
+
+impl EfScheduler {
+    /// Constant-coefficient feedback (classic error feedback).
+    pub fn constant(c: f32) -> EfScheduler {
+        EfScheduler { init_value: c, ascend_steps: u64::MAX, ascend_range: 0.0 }
+    }
+
+    /// Compensation coefficient at iteration `step`.
+    pub fn coeff(&self, step: u64) -> f32 {
+        let ascents = (step / self.ascend_steps) as f32;
+        (self.init_value + ascents * self.ascend_range).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascends_in_plateaus() {
+        let s = EfScheduler { init_value: 0.1, ascend_steps: 10, ascend_range: 0.2 };
+        assert_eq!(s.coeff(0), 0.1);
+        assert_eq!(s.coeff(9), 0.1);
+        assert!((s.coeff(10) - 0.3).abs() < 1e-6);
+        assert!((s.coeff(25) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn caps_at_one() {
+        let s = EfScheduler { init_value: 0.5, ascend_steps: 1, ascend_range: 0.5 };
+        assert_eq!(s.coeff(100), 1.0);
+    }
+
+    #[test]
+    fn constant_never_moves() {
+        let s = EfScheduler::constant(0.7);
+        assert_eq!(s.coeff(0), 0.7);
+        assert_eq!(s.coeff(1_000_000), 0.7);
+    }
+
+    #[test]
+    fn default_reaches_full_feedback() {
+        let s = EfScheduler::default();
+        assert_eq!(s.coeff(0), 0.1);
+        assert_eq!(s.coeff(1000), 1.0);
+    }
+}

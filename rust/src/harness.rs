@@ -1,0 +1,369 @@
+//! Evaluation harness shared by the paper-table benches and examples:
+//! per-scheme cost measurement (real compressor timings, extrapolated to
+//! workload scale), analytic wire volumes, and workload-level iteration
+//! breakdowns averaged over a COVAP interval.
+
+use crate::compress::{Collective, PowerSgd, SchemeKind};
+use crate::coordinator::bucketize_layers;
+use crate::covap::{shard_buckets, CoarseFilter};
+use crate::network::{ClusterSpec, NetworkModel};
+use crate::sim::{simulate_iteration, Breakdown, Policy, TensorCost};
+use crate::util::bench::time_fn;
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// Per-element local compression cost of a scheme, measured on real data.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressProfile {
+    /// Seconds per gradient element (compress + decompress, per worker).
+    pub s_per_elem: f64,
+    /// Sample size the measurement used.
+    pub sample_elems: usize,
+}
+
+/// Measure a scheme's per-element compression cost on `sample_elems`
+/// synthetic gradients (N(0,1)), `iters` timed repetitions.
+pub fn measure_compress(kind: &SchemeKind, sample_elems: usize, iters: usize) -> CompressProfile {
+    let mut rng = Rng::seed(0xC0317);
+    let g: Vec<f32> = (0..sample_elems).map(|_| rng.normal() as f32).collect();
+    let refs: Vec<&[f32]> = vec![&g];
+    let mut scheme = kind.build(1, 1);
+    // One warm round (allocates EF state), then timed rounds. Steps advance
+    // so COVAP alternates keep/drop realistically; we time the *kept* path
+    // for COVAP by using interval 1 here and relying on wire math for drops.
+    let mut step = 0u64;
+    let stats = time_fn(1, iters, || {
+        let (_, rec) = scheme.round(0, step, &refs);
+        step += 1;
+        rec.compress_s
+    });
+    CompressProfile { s_per_elem: stats.median_s / sample_elems as f64, sample_elems }
+}
+
+/// The paper's V100 anchor: FP16 compression of the whole VGG-19 gradient
+/// (143.6 M elements) costs 5 ms (Table II) => 3.48e-11 s/elem on the
+/// paper's hardware. Our testbed is a single CPU core, so raw measured
+/// costs are ~100x larger; `calibrated_profiles` rescales every scheme by
+/// the common CPU/GPU factor derived from the FP16 anchor, preserving the
+/// *relative* costs between schemes that we actually measured. See
+/// EXPERIMENTS.md "Calibration".
+pub const V100_FP16_S_PER_ELEM: f64 = 5.0e-3 / 143_652_544.0;
+
+/// Measure every scheme's compression cost and rescale to the V100
+/// timescale via the FP16 anchor.
+pub fn calibrated_profiles(
+    kinds: &[SchemeKind],
+    sample_elems: usize,
+    iters: usize,
+) -> Vec<(SchemeKind, CompressProfile)> {
+    let fp16 = measure_compress(&SchemeKind::Fp16, sample_elems, iters);
+    let scale = V100_FP16_S_PER_ELEM / fp16.s_per_elem;
+    kinds
+        .iter()
+        .map(|k| {
+            let mut p = match k {
+                SchemeKind::Fp16 => fp16,
+                _ => measure_compress(k, sample_elems, iters),
+            };
+            p.s_per_elem *= scale;
+            // COVAP's filter decision is O(1) per tensor; its measured cost
+            // is the EF pass, which the paper counts as ~zero because it
+            // fuses into the optimizer kernel. We keep our measured EF cost
+            // (scaled) — an honest upper bound that is still near-zero.
+            (k.clone(), p)
+        })
+        .collect()
+}
+
+/// The paper's own measured compression overheads (Table II, VGG-19 whole
+/// model = 143.65 M gradients) expressed per element — use these to replay
+/// the paper's exact overhead regime in the figure benches (our native rust
+/// compressors are faster than some of the paper's implementations, notably
+/// Ok-topk's mpi4py version; see EXPERIMENTS.md).
+pub fn paper_profile(kind: &SchemeKind) -> CompressProfile {
+    const N: f64 = 143_652_544.0;
+    let total_s = match kind {
+        SchemeKind::Baseline => 0.0,
+        SchemeKind::Covap { .. } => 0.002, // "close to zero" (§III.A)
+        SchemeKind::TopK { .. } => 1.560,
+        SchemeKind::Dgc { .. } => 0.025,
+        SchemeKind::RandomK { .. } => 0.200,
+        SchemeKind::Fp16 => 0.005,
+        SchemeKind::EfSignSgd => 0.020,
+        SchemeKind::PowerSgd { .. } => 0.020,
+        SchemeKind::OkTopk { .. } => 0.500,
+    };
+    CompressProfile { s_per_elem: total_s / N, sample_elems: 143_652_544 }
+}
+
+/// Analytic wire bytes for one tensor of `n` elements under a scheme
+/// (matches the CommRecord each scheme emits; see compress/*.rs).
+pub fn wire_bytes(kind: &SchemeKind, n: usize) -> usize {
+    match kind {
+        SchemeKind::Baseline => n * 4,
+        SchemeKind::Covap { .. } => n * 4, // when kept; filter handled upstream
+        SchemeKind::TopK { ratio } | SchemeKind::RandomK { ratio } | SchemeKind::OkTopk { ratio } => {
+            (((ratio * n as f64).round() as usize).clamp(1, n)) * 8
+        }
+        SchemeKind::Dgc { ratio } => (((ratio * n as f64).round() as usize).clamp(1, n)) * 8,
+        SchemeKind::Fp16 => n * 2,
+        SchemeKind::EfSignSgd => n.div_ceil(8) + 4,
+        SchemeKind::PowerSgd { rank } => {
+            let (rows, cols) = PowerSgd::shape(n);
+            (rows + cols) * (*rank).min(rows).min(cols) * 4
+        }
+    }
+}
+
+pub fn collective_of(kind: &SchemeKind) -> Collective {
+    match kind {
+        SchemeKind::TopK { .. }
+        | SchemeKind::Dgc { .. }
+        | SchemeKind::RandomK { .. }
+        | SchemeKind::EfSignSgd => Collective::AllGather,
+        _ => Collective::AllReduce,
+    }
+}
+
+pub fn rounds_of(kind: &SchemeKind) -> (u32, u32, bool) {
+    // (collective rounds, sync rounds, data dependency)
+    match kind {
+        // PowerSGD's two rounds are per-bucket dependent, but the DDP hook
+        // still overlaps them with *other* buckets' computation (warm-start
+        // Q breaks cross-bucket dependencies) -> overlappable, 2 rounds.
+        SchemeKind::PowerSgd { .. } => (2, 0, false),
+        // Ok-topk's split/threshold rendezvous sits on the compute path:
+        // its communication cannot be overlapped (paper §IV.C.1).
+        SchemeKind::OkTopk { .. } => (1, 2, true),
+        _ => (1, 0, false),
+    }
+}
+
+/// Bucket element counts for a workload: the paper's observed buckets when
+/// available, otherwise the DDP bucketizer at 25 MiB.
+pub fn workload_buckets(w: &Workload) -> Vec<usize> {
+    w.paper_buckets.clone().unwrap_or_else(|| {
+        bucketize_layers(
+            &w.layers.iter().map(|l| (l.name.clone(), l.numel)).collect::<Vec<_>>(),
+            25 * 1024 * 1024,
+        )
+        .iter()
+        .map(|b| b.numel)
+        .collect()
+    })
+}
+
+/// Compute-time fraction of each bucket: layers are consumed in reverse
+/// (gradient-ready) order into the bucket sizes; a bucket's weight is the
+/// sum of its layers' `comp_weight`, proportionally split if a boundary
+/// lands inside a layer (only with synthetic bucket sizes).
+pub fn bucket_comp_fractions(w: &Workload, bucket_sizes: &[usize]) -> Vec<f64> {
+    let total_w: f64 = w.layers.iter().map(|l| l.comp_weight).sum();
+    let mut fracs = vec![0.0f64; bucket_sizes.len()];
+    let rev: Vec<&crate::workload::LayerSpec> = w.layers.iter().rev().collect();
+    let mut li = 0usize; // current layer
+    let mut loff = 0usize; // elements of layer li already consumed
+    for (b, &target) in bucket_sizes.iter().enumerate() {
+        let mut need = target;
+        while need > 0 && li < rev.len() {
+            let l = rev[li];
+            let avail = l.numel - loff;
+            let take = avail.min(need);
+            fracs[b] += l.comp_weight * take as f64 / l.numel.max(1) as f64;
+            need -= take;
+            loff += take;
+            if loff == l.numel {
+                li += 1;
+                loff = 0;
+            }
+        }
+    }
+    // any residual layers (bucket list shorter than model) fold into last
+    while li < rev.len() {
+        let l = rev[li];
+        let frac = (l.numel - loff) as f64 / l.numel.max(1) as f64;
+        *fracs.last_mut().unwrap() += l.comp_weight * frac;
+        li += 1;
+        loff = 0;
+    }
+    if total_w > 0.0 {
+        for f in &mut fracs {
+            *f /= total_w;
+        }
+    }
+    fracs
+}
+
+/// Simulated per-iteration breakdown of (workload, scheme) on a cluster.
+///
+/// For COVAP the breakdown is averaged over one full interval of steps
+/// (different steps transmit different shards); other schemes are
+/// step-invariant. `profile` supplies the measured compression cost.
+/// Per-bucket computation time is FLOPs-weighted (`bucket_comp_fractions`),
+/// and all shards of one bucket become ready together (the bucket's compute
+/// is attached to its first shard).
+pub fn scheme_breakdown(
+    w: &Workload,
+    kind: &SchemeKind,
+    profile: &CompressProfile,
+    net: &NetworkModel,
+    cluster: ClusterSpec,
+    policy: Policy,
+) -> Breakdown {
+    let buckets = workload_buckets(w);
+    let comp_fracs = bucket_comp_fractions(w, &buckets);
+    let (rounds, sync_rounds, dep) = rounds_of(kind);
+
+    // (numel, comp_s) per tensor; `keep` gates wire bytes per step.
+    let build_costs = |tensors: &[(usize, f64)], keep: &dyn Fn(usize) -> bool| -> Vec<TensorCost> {
+        tensors
+            .iter()
+            .enumerate()
+            .map(|(i, &(n, comp_s))| TensorCost {
+                comp_s,
+                compress_s: profile.s_per_elem * n as f64,
+                wire_bytes: if keep(i) { wire_bytes(kind, n) } else { 0 },
+                collective: collective_of(kind),
+                rounds,
+                sync_rounds,
+                data_dependency: dep,
+            })
+            .collect()
+    };
+
+    match kind {
+        SchemeKind::Covap { interval, .. } => {
+            // shard, then average the timeline over I consecutive steps;
+            // a bucket's compute time rides on its first shard (all shards
+            // of a bucket become ready at the same instant).
+            let shards = shard_buckets(&buckets, *interval);
+            let sizes: Vec<(usize, f64)> = shards
+                .iter()
+                .map(|s| {
+                    let comp =
+                        if s.offset == 0 { w.t_comp_s * comp_fracs[s.bucket] } else { 0.0 };
+                    (s.len, comp)
+                })
+                .collect();
+            let filter = CoarseFilter::new(*interval);
+            let mut acc: Option<Breakdown> = None;
+            for step in 0..*interval as u64 {
+                let costs = build_costs(&sizes, &|i| filter.keep(i, step));
+                let b = simulate_iteration(net, cluster, w.t_before_s, &costs, policy);
+                acc = Some(match acc {
+                    None => b,
+                    Some(a) => Breakdown {
+                        t_before_s: a.t_before_s,
+                        t_comp_s: a.t_comp_s,
+                        t_compress_s: a.t_compress_s + b.t_compress_s,
+                        t_comm_s: a.t_comm_s + b.t_comm_s,
+                        t_comm_exposed_s: a.t_comm_exposed_s + b.t_comm_exposed_s,
+                        bubble_s: a.bubble_s + b.bubble_s,
+                        total_s: a.total_s + b.total_s,
+                    },
+                });
+            }
+            let mut b = acc.unwrap();
+            let inv = 1.0 / *interval as f64;
+            b.t_compress_s *= inv;
+            b.t_comm_s *= inv;
+            b.t_comm_exposed_s *= inv;
+            b.bubble_s *= inv;
+            b.total_s *= inv;
+            b
+        }
+        _ => {
+            let tensors: Vec<(usize, f64)> = buckets
+                .iter()
+                .zip(comp_fracs.iter())
+                .map(|(&n, &f)| (n, w.t_comp_s * f))
+                .collect();
+            let costs = build_costs(&tensors, &|_| true);
+            simulate_iteration(net, cluster, w.t_before_s, &costs, policy)
+        }
+    }
+}
+
+/// Memory footprint of aggregation per rank — the paper's "could not scale
+/// beyond 16 GPUs: AllGather OOM" exclusion rule (§IV.D). GRACE-style
+/// allgather aggregation decompresses every rank's payload to a dense
+/// buffer before summing, so the per-rank footprint grows as
+/// world * dense model bytes; allreduce stays at one dense buffer.
+/// (VGG-19 at 32 ranks: 32 * 575 MB = 18 GB > 16 GB V100 — OOM, matching
+/// the paper's Fig. 11b exclusions.)
+pub fn allgather_rank_memory(kind: &SchemeKind, model_params: usize, world: usize) -> usize {
+    match collective_of(kind) {
+        Collective::AllGather => model_params * 4 * world,
+        Collective::AllReduce => model_params * 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    fn prof() -> CompressProfile {
+        CompressProfile { s_per_elem: 1e-9, sample_elems: 1 << 20 }
+    }
+
+    #[test]
+    fn wire_bytes_shapes() {
+        let n = 1_000_000;
+        assert_eq!(wire_bytes(&SchemeKind::Baseline, n), 4 * n);
+        assert_eq!(wire_bytes(&SchemeKind::Fp16, n), 2 * n);
+        assert_eq!(wire_bytes(&SchemeKind::TopK { ratio: 0.01 }, n), 10_000 * 8);
+        assert_eq!(wire_bytes(&SchemeKind::EfSignSgd, n), 125_000 + 4);
+        assert!(wire_bytes(&SchemeKind::PowerSgd { rank: 1 }, n) < 20_000);
+    }
+
+    #[test]
+    fn covap_breakdown_faster_than_baseline() {
+        let w = workload::vgg19();
+        let net = NetworkModel::default();
+        let c = ClusterSpec::ecs(64);
+        let base = scheme_breakdown(&w, &SchemeKind::Baseline, &prof(), &net, c, Policy::Overlap);
+        let covap = scheme_breakdown(
+            &w,
+            &SchemeKind::Covap { interval: 4, ef: Default::default() },
+            &prof(),
+            &net,
+            c,
+            Policy::Overlap,
+        );
+        assert!(covap.total_s < base.total_s * 0.6, "{} vs {}", covap.total_s, base.total_s);
+        assert!(covap.speedup(64) > 40.0, "covap speedup {}", covap.speedup(64));
+    }
+
+    #[test]
+    fn covap_interval_matches_ccr_saturation() {
+        // Fig. 5 shape: speedup rises until I = ceil(CCR), then flattens.
+        let w = workload::vgg19(); // CCR ~ 4
+        let net = NetworkModel::default();
+        let c = ClusterSpec::ecs(64);
+        let speedup_at = |i: usize| {
+            scheme_breakdown(
+                &w,
+                &SchemeKind::Covap { interval: i, ef: Default::default() },
+                &prof(),
+                &net,
+                c,
+                Policy::Overlap,
+            )
+            .speedup(64)
+        };
+        let s2 = speedup_at(2);
+        let s4 = speedup_at(4);
+        let s8 = speedup_at(8);
+        assert!(s4 > s2 * 1.15, "rising region: {s2} -> {s4}");
+        assert!(s8 < s4 * 1.10, "saturation: {s4} -> {s8}");
+    }
+
+    #[test]
+    fn allgather_memory_blows_up_with_world() {
+        let k = SchemeKind::TopK { ratio: 0.01 };
+        let m16 = allgather_rank_memory(&k, 143_652_544, 16);
+        let m64 = allgather_rank_memory(&k, 143_652_544, 64);
+        assert_eq!(m64, 4 * m16);
+    }
+}

@@ -1,0 +1,33 @@
+//! COVAP — reproduction of "Near-Linear Scaling Data Parallel Training with
+//! Overlapping-Aware Gradient Compression" (Meng, Sun & Li, 2023).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: data-parallel orchestration,
+//!   gradient bucketing, overlapping engine, the COVAP compression scheme and
+//!   all baseline GC schemes, collectives, network timing models, the
+//!   distributed profiler and the discrete-event timeline simulator.
+//! * **L2/L1 (python, build-time only)** — the transformer model (JAX) and
+//!   the Pallas kernels, AOT-lowered to HLO-text artifacts which this crate
+//!   loads and executes through the PJRT CPU client (`runtime`).
+//!
+//! Python never runs on the training path: `make artifacts` emits
+//! `artifacts/<preset>/*.hlo.txt` + `manifest.json` once, and the rust binary
+//! is self-contained afterwards.
+
+pub mod comm;
+pub mod compress;
+pub mod harness;
+pub mod config;
+pub mod coordinator;
+pub mod covap;
+pub mod data;
+pub mod metrics;
+pub mod network;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod trainer;
+pub mod util;
+pub mod workload;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,159 @@
+//! covap — leader CLI.
+//!
+//! Subcommands:
+//!   smoke     [--artifacts DIR]                 artifact round-trip check
+//!   train     [--artifacts DIR] [--workers N] [--scheme S | --interval I]
+//!             [--steps N] [--lr F] [--optimizer sgd|adam] [--seed N]
+//!             [--bucket-mb F] [--profile-steps N] [--metrics-csv PATH]
+//!             [--gpus N] [--bandwidth-gbps F] [--config FILE]
+//!   profile   [--artifacts DIR] [--workers N] [--steps N]
+//!             measure CCR with the distributed profiler, print chosen I
+//!   simulate  [--dnn NAME] [--gpus N] [--bandwidth-gbps F]
+//!             one-iteration timeline breakdown for a paper workload
+//!   schemes   list available GC schemes
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+use covap::compress::SchemeKind;
+use covap::config::RunConfig;
+use covap::coordinator::DpEngine;
+use covap::network::{ClusterSpec, NetworkModel};
+use covap::runtime::{ModelArtifacts, Runtime};
+use covap::sim::{dense_tensors, simulate_iteration, Policy};
+use covap::util::cli::Args;
+use covap::util::fmt_secs;
+use covap::{trainer, workload};
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(raw)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("smoke") => smoke(&args),
+        Some("train") => train(&args),
+        Some("profile") => profile(&args),
+        Some("simulate") => simulate(&args),
+        Some("schemes") => {
+            for k in SchemeKind::evaluation_set() {
+                println!("{}", k.label());
+            }
+            Ok(())
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'");
+            }
+            eprintln!("usage: covap <smoke|train|profile|simulate|schemes> [flags]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn config_from(args: &Args) -> Result<RunConfig> {
+    let path = args.get("config").map(PathBuf::from);
+    RunConfig::load(path.as_deref(), args)
+}
+
+fn smoke(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts/tiny");
+    let rt = Runtime::cpu()?;
+    println!("platform = {}", rt.platform());
+    let arts = ModelArtifacts::load(&rt, Path::new(&dir))?;
+    let m = &arts.manifest;
+    println!("preset = {}  params = {}", m.preset, m.param_count);
+    let cfg = RunConfig {
+        artifacts: PathBuf::from(&dir),
+        workers: 2,
+        steps: 2,
+        ..RunConfig::default()
+    };
+    let mut engine = DpEngine::new(cfg, arts)?;
+    let out = engine.step()?;
+    anyhow::ensure!(out.loss.is_finite());
+    println!("step 0: loss = {:.4}  sim = {}", out.loss, fmt_secs(out.breakdown.total_s));
+    println!("smoke OK");
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    println!(
+        "train: {} | {} workers | cluster {}x{} | scheme {} | {} steps",
+        cfg.artifacts.display(),
+        cfg.workers,
+        cfg.cluster.nodes,
+        cfg.cluster.gpus_per_node,
+        cfg.scheme.label(),
+        cfg.steps
+    );
+    let report = trainer::train(cfg, true)?;
+    let s = report.metrics.summary();
+    println!(
+        "done: final loss {:.4} | mean last-10 {:.4} | sim total {} | wall total {} | mean speedup {:.2}x",
+        s.final_loss,
+        s.mean_loss_last10,
+        fmt_secs(s.total_sim_s),
+        fmt_secs(s.total_wall_s),
+        report.mean_speedup,
+    );
+    if let Some(i) = report.chosen_interval {
+        println!("adaptive interval chosen: {i}");
+    }
+    Ok(())
+}
+
+fn profile(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    let steps = args.get_parsed("steps", 3u64)?;
+    cfg.profile_steps = steps;
+    cfg.steps = steps;
+    cfg.scheme = SchemeKind::Baseline;
+    let rt = Runtime::cpu()?;
+    let arts = ModelArtifacts::load(&rt, &cfg.artifacts)?;
+    let mut engine = DpEngine::new(cfg, arts)?;
+    for _ in 0..steps {
+        engine.step()?;
+    }
+    let r = engine.profile_report();
+    println!("distributed profiler ({steps} iterations):");
+    println!("  T_comp        = {}", fmt_secs(r.comp_s));
+    println!("  T_comm naive  = {}  (includes rendezvous wait)", fmt_secs(r.naive_comm_s));
+    println!("  T_comm aligned= {}", fmt_secs(r.aligned_comm_s));
+    println!("  CCR naive     = {:.2}", r.naive_ccr);
+    println!("  CCR aligned   = {:.2}", r.ccr);
+    println!("  interval I    = {}", covap::covap::interval_from_ccr(r.ccr));
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let name = args.get_or("dnn", "VGG-19");
+    let Some(w) = workload::by_name(&name) else {
+        bail!("unknown DNN '{name}' (try: ResNet-101, VGG-19, Bert, GPT-2)");
+    };
+    let gpus: usize = args.get_parsed("gpus", 64usize)?;
+    let cluster = if gpus % 8 == 0 { ClusterSpec::ecs(gpus) } else { ClusterSpec::new(gpus, 1) };
+    let mut net = NetworkModel::default();
+    if let Some(bw) = args.get("bandwidth-gbps") {
+        net.nic_gbps = bw.parse()?;
+    }
+    let buckets = w.paper_buckets.clone().unwrap_or_else(|| {
+        covap::coordinator::bucketize_layers(
+            &w.layers.iter().map(|l| (l.name.clone(), l.numel)).collect::<Vec<_>>(),
+            25 * 1024 * 1024,
+        )
+        .iter()
+        .map(|b| b.numel)
+        .collect()
+    });
+    let tensors = dense_tensors(&buckets, w.t_comp_s, 0.0);
+    let seq = simulate_iteration(&net, cluster, w.t_before_s, &tensors, Policy::Sequential);
+    let ovl = simulate_iteration(&net, cluster, w.t_before_s, &tensors, Policy::Overlap);
+    println!("{} on {} GPUs @ {} Gbps:", w.name, gpus, net.nic_gbps);
+    println!("  params        = {} ({})", w.total_params(), covap::util::fmt_bytes(w.total_bytes()));
+    println!("  CCR           = {:.2}", w.ccr(&net, cluster));
+    println!("  T_iter seq    = {}  speedup {:.2}x", fmt_secs(seq.total_s), seq.speedup(gpus));
+    println!("  T_iter ovlp   = {}  speedup {:.2}x", fmt_secs(ovl.total_s), ovl.speedup(gpus));
+    println!("  T_comm'       = {}", fmt_secs(ovl.t_comm_exposed_s));
+    println!("  linear scaling= {:.0}x", gpus as f64);
+    Ok(())
+}

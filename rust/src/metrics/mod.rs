@@ -1,0 +1,158 @@
+//! Metrics: per-step training records, aggregated run summaries, and
+//! CSV/JSONL emission for the bench harnesses and EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One training step's record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    /// Wall-clock seconds spent in this step on the testbed.
+    pub wall_s: f64,
+    /// Simulated cluster time for this step (network model).
+    pub sim_s: f64,
+    /// Bytes put on the wire per rank this step.
+    pub wire_bytes: usize,
+    /// Compression overhead this step (per-worker mean).
+    pub compress_s: f64,
+}
+
+/// Accumulates step records; emits summaries and files.
+#[derive(Debug, Default)]
+pub struct RunMetrics {
+    pub records: Vec<StepRecord>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunSummary {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub mean_loss_last10: f32,
+    pub total_sim_s: f64,
+    pub total_wall_s: f64,
+    pub total_wire_bytes: usize,
+    pub mean_step_sim_s: f64,
+}
+
+impl RunMetrics {
+    pub fn new() -> RunMetrics {
+        RunMetrics::default()
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        let n = self.records.len();
+        let last10 = &self.records[n.saturating_sub(10)..];
+        let mean10 = if last10.is_empty() {
+            f32::NAN
+        } else {
+            last10.iter().map(|r| r.loss).sum::<f32>() / last10.len() as f32
+        };
+        RunSummary {
+            steps: n,
+            final_loss: self.records.last().map(|r| r.loss).unwrap_or(f32::NAN),
+            mean_loss_last10: mean10,
+            total_sim_s: self.records.iter().map(|r| r.sim_s).sum(),
+            total_wall_s: self.records.iter().map(|r| r.wall_s).sum(),
+            total_wire_bytes: self.records.iter().map(|r| r.wire_bytes).sum(),
+            mean_step_sim_s: if n == 0 {
+                f64::NAN
+            } else {
+                self.records.iter().map(|r| r.sim_s).sum::<f64>() / n as f64
+            },
+        }
+    }
+
+    /// CSV with a header row — the loss-curve format EXPERIMENTS.md cites.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "step,loss,wall_s,sim_s,wire_bytes,compress_s")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.6},{},{:.6}",
+                r.step, r.loss, r.wall_s, r.sim_s, r.wire_bytes, r.compress_s
+            )?;
+        }
+        Ok(())
+    }
+
+    /// JSONL (one object per step).
+    pub fn write_jsonl(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        for r in &self.records {
+            let j = Json::obj(vec![
+                ("step", Json::from(r.step as usize)),
+                ("loss", Json::from(r.loss as f64)),
+                ("wall_s", Json::from(r.wall_s)),
+                ("sim_s", Json::from(r.sim_s)),
+                ("wire_bytes", Json::from(r.wire_bytes)),
+                ("compress_s", Json::from(r.compress_s)),
+            ]);
+            writeln!(f, "{j}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32) -> StepRecord {
+        StepRecord { step, loss, wall_s: 0.1, sim_s: 0.2, wire_bytes: 100, compress_s: 0.01 }
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let mut m = RunMetrics::new();
+        for i in 0..20 {
+            m.push(rec(i, 10.0 - i as f32 * 0.1));
+        }
+        let s = m.summary();
+        assert_eq!(s.steps, 20);
+        assert!((s.final_loss - 8.1).abs() < 1e-6);
+        assert!((s.total_sim_s - 4.0).abs() < 1e-9);
+        assert_eq!(s.total_wire_bytes, 2000);
+        assert!(s.mean_loss_last10 < 9.0);
+    }
+
+    #[test]
+    fn csv_and_jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("covap_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut m = RunMetrics::new();
+        m.push(rec(0, 5.0));
+        m.push(rec(1, 4.5));
+        let csv = dir.join("m.csv");
+        let jsonl = dir.join("m.jsonl");
+        m.write_csv(&csv).unwrap();
+        m.write_jsonl(&jsonl).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with("step,loss"));
+        assert_eq!(csv_text.lines().count(), 3);
+        let jl = std::fs::read_to_string(&jsonl).unwrap();
+        for line in jl.lines() {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("loss").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_summary_is_nan_safe() {
+        let s = RunMetrics::new().summary();
+        assert_eq!(s.steps, 0);
+        assert!(s.final_loss.is_nan());
+    }
+}

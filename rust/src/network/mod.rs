@@ -1,0 +1,205 @@
+//! Network timing models — the substitute for the paper's 30 Gbps Alibaba
+//! ECS fabric (see DESIGN.md §2).
+//!
+//! α–β cost model: a collective over n bytes costs
+//! `steps * α + volume(n, P) / effective_bandwidth`. The effective bandwidth
+//! is the per-node NIC bandwidth derated by `efficiency` — calibrated so the
+//! paper's measured per-model communication times (Table I) reproduce:
+//! ResNet-101 178.6 MB -> 280 ms, VGG-19 574.6 MB -> 842 ms,
+//! Bert 409 MB -> 520 ms all imply ~1.2 GB/s effective on a 30 Gbps NIC
+//! (eta ~ 0.32), consistent with NCCL ring efficiency on TCP fabrics.
+
+/// Cluster shape: `nodes * gpus_per_node` ranks; ring collectives cross the
+/// per-node NIC (intra-node traffic is modeled as free, like NVLink next to
+/// a 30 Gbps NIC).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(nodes: usize, gpus_per_node: usize) -> ClusterSpec {
+        assert!(nodes >= 1 && gpus_per_node >= 1);
+        ClusterSpec { nodes, gpus_per_node }
+    }
+
+    /// The paper's testbed: N nodes x 8 V100.
+    pub fn ecs(gpus: usize) -> ClusterSpec {
+        assert!(gpus % 8 == 0 && gpus >= 8, "paper clusters are multiples of 8 GPUs");
+        ClusterSpec { nodes: gpus / 8, gpus_per_node: 8 }
+    }
+
+    pub fn world(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Per-node NIC bandwidth, Gbit/s.
+    pub nic_gbps: f64,
+    /// Achievable fraction of the NIC line rate (protocol + ring overheads).
+    pub efficiency: f64,
+    /// Per-collective-step latency, seconds.
+    pub latency_s: f64,
+    /// Effective intra-node ring bandwidth, Gbit/s (PCIe-attached V100s on
+    /// cloud instances; protocol efficiency folded in). NCCL pipelines the
+    /// intra- and inter-node stages, so collectives cost
+    /// max(inter, intra) — calibrated so single-node 8-GPU DDPovlp lands
+    /// near the paper's Fig. 11 left edge (~70% of linear on ResNet-101).
+    pub intra_gbps: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // The paper's environment: 30 Gbps public-cloud network.
+        NetworkModel { nic_gbps: 30.0, efficiency: 0.32, latency_s: 50e-6, intra_gbps: 12.0 }
+    }
+}
+
+impl NetworkModel {
+    pub fn hpc_100g() -> NetworkModel {
+        NetworkModel { nic_gbps: 100.0, efficiency: 0.45, latency_s: 10e-6, intra_gbps: 48.0 }
+    }
+
+    /// Effective node-to-node bandwidth in bytes/second.
+    pub fn effective_bps(&self) -> f64 {
+        self.nic_gbps * 1e9 / 8.0 * self.efficiency
+    }
+
+    /// Effective intra-node ring bandwidth in bytes/second.
+    pub fn intra_bps(&self) -> f64 {
+        self.intra_gbps * 1e9 / 8.0
+    }
+
+    /// Intra-node stage of a ring allreduce over g local ranks.
+    fn intra_allreduce_s(&self, bytes: usize, g: usize) -> f64 {
+        if g <= 1 {
+            return 0.0;
+        }
+        let g = g as f64;
+        2.0 * (g - 1.0) / g * bytes as f64 / self.intra_bps() + 5e-6 * 2.0 * (g - 1.0)
+    }
+
+    /// Ring AllReduce over `bytes` payload per rank.
+    ///
+    /// Per-node wire traffic: 2*(N-1)/N * bytes where N = node count (the
+    /// ring is across nodes; each node's 8 local ranks reduce intra-node
+    /// first, which we model as free). Steps: 2*(N-1).
+    pub fn allreduce_s(&self, bytes: usize, cluster: ClusterSpec) -> f64 {
+        let n = cluster.nodes as f64;
+        let intra = self.intra_allreduce_s(bytes, cluster.gpus_per_node);
+        if cluster.nodes == 1 {
+            return intra.max(self.latency_s);
+        }
+        let volume = 2.0 * (n - 1.0) / n * bytes as f64;
+        let inter = volume / self.effective_bps() + 2.0 * (n - 1.0) * self.latency_s;
+        // NCCL pipelines the hierarchical stages: the slower stage binds.
+        inter.max(intra)
+    }
+
+    /// AllGather where each rank contributes `bytes`. Every node must
+    /// receive the payloads of all other nodes' ranks: with g ranks/node,
+    /// inbound volume per node is (N-1) * g * bytes.
+    ///
+    /// This is why allgather-based GC schemes (Top-k, Random-k, EFsignSGD,
+    /// DGC) scale poorly in Fig. 11: volume grows with world size while
+    /// allreduce volume is ~constant.
+    pub fn allgather_s(&self, bytes: usize, cluster: ClusterSpec) -> f64 {
+        let n = cluster.nodes as f64;
+        let g = cluster.gpus_per_node as f64;
+        // intra stage: every local rank ends up with all g*world payloads;
+        // local distribution moves (g-1) * world_bytes over the PCIe ring.
+        let world_bytes = (cluster.world() as f64 - 1.0) * bytes as f64;
+        let intra = if cluster.gpus_per_node > 1 { world_bytes / self.intra_bps() } else { 0.0 };
+        if cluster.nodes == 1 {
+            return intra.max(self.latency_s);
+        }
+        let volume = (n - 1.0) * g * bytes as f64;
+        let inter = volume / self.effective_bps() + (n - 1.0) * self.latency_s;
+        inter.max(intra)
+    }
+
+    /// A small synchronous rendezvous (threshold / count exchange) — the
+    /// "data dependency" collectives of Ok-topk-like schemes.
+    pub fn sync_round_s(&self, cluster: ClusterSpec) -> f64 {
+        if cluster.nodes == 1 {
+            self.latency_s
+        } else {
+            2.0 * (cluster.nodes as f64 - 1.0) * self.latency_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: usize = 1024 * 1024;
+
+    #[test]
+    fn calibration_matches_paper_table1() {
+        // Table I: ResNet-101 T_comm = 280 ms, VGG-19 = 842 ms, Bert = 520 ms
+        // at 64 GPUs (8 nodes), 30 Gbps.
+        let net = NetworkModel::default();
+        let c = ClusterSpec::ecs(64);
+        let cases = [
+            (44_654_504usize, 0.280),
+            (143_652_544, 0.842),
+            (102_267_648, 0.520),
+        ];
+        for (params, t_paper) in cases {
+            let t = net.allreduce_s(params * 4, c);
+            let ratio = t / t_paper;
+            assert!(
+                (0.75..1.35).contains(&ratio),
+                "params={params}: modeled {t:.3}s vs paper {t_paper}s"
+            );
+        }
+    }
+
+    #[test]
+    fn allreduce_volume_saturates_with_nodes() {
+        // 2(N-1)/N -> 2: going 2 -> 8 nodes costs at most 2x-ish, not 4x.
+        let net = NetworkModel::default();
+        let t2 = net.allreduce_s(100 * MB, ClusterSpec::ecs(16));
+        let t8 = net.allreduce_s(100 * MB, ClusterSpec::ecs(64));
+        assert!(t8 / t2 < 2.0);
+        assert!(t8 > t2);
+    }
+
+    #[test]
+    fn allgather_grows_linearly_with_nodes() {
+        let net = NetworkModel::default();
+        let t2 = net.allgather_s(MB, ClusterSpec::ecs(16));
+        let t8 = net.allgather_s(MB, ClusterSpec::ecs(64));
+        assert!(t8 / t2 > 3.0, "allgather must scale ~(N-1): {}", t8 / t2);
+    }
+
+    #[test]
+    fn allgather_worse_than_allreduce_at_scale() {
+        let net = NetworkModel::default();
+        let c = ClusterSpec::ecs(64);
+        assert!(net.allgather_s(10 * MB, c) > net.allreduce_s(10 * MB, c));
+    }
+
+    #[test]
+    fn single_node_bound_by_pcie_ring() {
+        let net = NetworkModel::default();
+        let c = ClusterSpec::new(1, 8);
+        let t = net.allreduce_s(100 * MB, c);
+        // 2*(7/8)*100MB / 1.5 GB/s ~ 122 ms
+        assert!((0.08..0.2).contains(&t), "{t}");
+        // single *rank* is free
+        assert_eq!(net.allreduce_s(100 * MB, ClusterSpec::new(1, 1)), net.latency_s);
+    }
+
+    #[test]
+    fn multinode_never_cheaper_than_intra_stage() {
+        let net = NetworkModel::default();
+        let t1 = net.allreduce_s(100 * MB, ClusterSpec::new(1, 8));
+        let t8 = net.allreduce_s(100 * MB, ClusterSpec::ecs(64));
+        assert!(t8 >= t1);
+    }
+}

@@ -1,0 +1,33 @@
+//! A compiled PJRT executable with tuple-output unwrapping.
+
+use anyhow::{Context, Result};
+
+/// One compiled HLO module. All aot.py artifacts are lowered with
+/// `return_tuple=True`, so execution yields a single tuple literal which
+/// `run` decomposes into per-output literals.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub(crate) fn new(name: String, exe: xla::PjRtLoadedExecutable) -> Executable {
+        Executable { name, exe }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        Ok(tuple.to_tuple()?)
+    }
+}

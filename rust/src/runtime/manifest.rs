@@ -1,0 +1,183 @@
+//! artifacts/<preset>/manifest.json — the contract between the python AOT
+//! path and this coordinator: model dims, the flat-parameter layer table
+//! (bucketization source of truth) and per-artifact signatures.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions (mirrors python ModelConfig).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+/// One parameter tensor in the flat vector — the paper's "layer" unit for
+/// bucket allocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub numel: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Input/output signature documentation for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub dims: ModelDims,
+    pub param_count: usize,
+    pub ef_block: usize,
+    pub params: Vec<ParamEntry>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&src).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src)?;
+        let c = j.get("config")?;
+        let dims = ModelDims {
+            vocab: c.get("vocab")?.as_usize()?,
+            d_model: c.get("d_model")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            n_layers: c.get("n_layers")?.as_usize()?,
+            d_ff: c.get("d_ff")?.as_usize()?,
+            seq_len: c.get("seq_len")?.as_usize()?,
+            batch: c.get("batch")?.as_usize()?,
+        };
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(ParamEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    offset: e.get("offset")?.as_usize()?,
+                    numel: e.get("numel")?.as_usize()?,
+                    shape: e
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            let strs = |key: &str| -> Result<Vec<String>> {
+                a.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: strs("inputs")?,
+                    outputs: strs("outputs")?,
+                },
+            );
+        }
+        let m = Manifest {
+            preset: j.get("preset")?.as_str()?.to_string(),
+            dims,
+            param_count: j.get("param_count")?.as_usize()?,
+            ef_block: j.get("ef_block")?.as_usize()?,
+            params,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Invariant: the layer table tiles [0, param_count) exactly, in order.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for p in &self.params {
+            ensure!(p.offset == off, "param {} not contiguous (offset {} != {})", p.name, p.offset, off);
+            ensure!(
+                p.numel == p.shape.iter().product::<usize>(),
+                "param {} numel/shape mismatch",
+                p.name
+            );
+            off += p.numel;
+        }
+        ensure!(off == self.param_count, "layer table covers {off} != param_count {}", self.param_count);
+        ensure!(self.ef_block > 0, "ef_block must be positive");
+        Ok(())
+    }
+
+    /// Total model size in bytes (f32 parameters) — drives comm volume.
+    pub fn param_bytes(&self) -> usize {
+        self.param_count * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "t",
+      "config": {"vocab": 16, "d_model": 4, "n_heads": 2, "n_layers": 1,
+                 "d_ff": 8, "seq_len": 8, "batch": 2},
+      "param_count": 100,
+      "ef_block": 64,
+      "params": [
+        {"name": "a", "offset": 0, "numel": 64, "shape": [16, 4]},
+        {"name": "b", "offset": 64, "numel": 36, "shape": [6, 6]}
+      ],
+      "artifacts": {
+        "fwd_bwd": {"file": "fwd_bwd.hlo.txt", "inputs": ["params f32[100]"],
+                     "outputs": ["loss f32[]"]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "t");
+        assert_eq!(m.dims.vocab, 16);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.param_bytes(), 400);
+        assert_eq!(m.artifacts["fwd_bwd"].file, "fwd_bwd.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_non_contiguous_table() {
+        let bad = SAMPLE.replace("\"offset\": 64", "\"offset\": 60");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_total() {
+        let bad = SAMPLE.replace("\"param_count\": 100", "\"param_count\": 99");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

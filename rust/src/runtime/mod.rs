@@ -1,0 +1,111 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client (`xla` crate 0.1.6 over xla_extension 0.5.1).
+//!
+//! Interchange is HLO *text* — jax >= 0.5 serialized protos carry 64-bit
+//! instruction ids that this XLA rejects; `HloModuleProto::from_text_file`
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+mod executable;
+mod manifest;
+
+pub use executable::Executable;
+pub use manifest::{ArtifactSig, Manifest, ModelDims, ParamEntry};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client. Cheap to clone (Arc); one per process.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable::new(
+            path.file_stem().unwrap().to_string_lossy().into_owned(),
+            exe,
+        ))
+    }
+}
+
+/// The full artifact bundle for one model preset: manifest + compiled
+/// executables. This is everything the L3 training path needs.
+pub struct ModelArtifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub fwd_bwd: Executable,
+    pub sgd_update: Executable,
+    pub adam_update: Executable,
+    pub ef_compress: Executable,
+    pub quantize: Executable,
+}
+
+impl ModelArtifacts {
+    /// Load `artifacts/<preset>/` produced by `make artifacts`.
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<ModelArtifacts> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let load = |name: &str| rt.load_hlo(&dir.join(format!("{name}.hlo.txt")));
+        Ok(ModelArtifacts {
+            dir: dir.to_path_buf(),
+            manifest,
+            fwd_bwd: load("fwd_bwd")?,
+            sgd_update: load("sgd_update")?,
+            adam_update: load("adam_update")?,
+            ef_compress: load("ef_compress")?,
+            quantize: load("quantize")?,
+        })
+    }
+}
+
+// ---- literal helpers -------------------------------------------------------
+
+/// f32 slice -> rank-1 literal.
+pub fn lit_f32(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// f32 scalar literal (shape f32[]).
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// i32 scalar literal (shape s32[]).
+pub fn lit_scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// i32 matrix literal (shape s32[rows, cols], row-major data).
+pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Literal -> Vec<f32> (flattened).
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Literal -> f32 scalar.
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

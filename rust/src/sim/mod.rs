@@ -1,0 +1,329 @@
+//! Discrete-event timeline simulator for one DP training iteration —
+//! the executable form of the paper's Eq. (1)–(6) and Fig. 1.
+//!
+//! Input: per-tensor computation times (backward pass produces tensor
+//! gradients in order), per-tensor compression overheads, per-tensor
+//! communication times (priced by the network model), and the execution
+//! policy (overlapping on/off, data dependencies). Output: the iteration
+//! breakdown the paper plots in Figs. 7–10 (computation, compression,
+//! exposed communication T_comm', bubbles) and the speedup of Eq. (2).
+
+use crate::compress::Collective;
+use crate::network::{ClusterSpec, NetworkModel};
+
+/// One communication tensor's per-iteration costs.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorCost {
+    /// Backward-pass computation time producing this tensor's gradients.
+    pub comp_s: f64,
+    /// Local compression overhead (serializes with computation, Eq. 6).
+    pub compress_s: f64,
+    /// Wire bytes per rank for this tensor (0 = skipped by the filter).
+    pub wire_bytes: usize,
+    pub collective: Collective,
+    /// Dependent collective rounds (PowerSGD: 2).
+    pub rounds: u32,
+    /// Synchronous rendezvous rounds before the collective can start.
+    pub sync_rounds: u32,
+    /// If true, the *next* tensor's computation cannot start until this
+    /// tensor's communication completes (Fig. 1e data dependency).
+    pub data_dependency: bool,
+}
+
+/// Execution policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Communication starts only after the full backward pass (Fig. 1a/1c).
+    Sequential,
+    /// Wait-free backprop: per-tensor comm overlaps later computation
+    /// (Fig. 1b/1d).
+    Overlap,
+}
+
+/// Simulated breakdown of one iteration (the Fig. 7–10 bars).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Breakdown {
+    pub t_before_s: f64,
+    /// Total backward computation.
+    pub t_comp_s: f64,
+    /// Total compression overhead (on the compute stream).
+    pub t_compress_s: f64,
+    /// Total communication busy time (for reference).
+    pub t_comm_s: f64,
+    /// Exposed communication: comm time not hidden under computation
+    /// (the paper's T_comm').
+    pub t_comm_exposed_s: f64,
+    /// Idle gaps on the comm stream while waiting for gradients.
+    pub bubble_s: f64,
+    /// End-to-end iteration time.
+    pub total_s: f64,
+}
+
+impl Breakdown {
+    /// Speedup of Eq. (2): P * T_DP-LS / T_DP, where T_DP-LS is the
+    /// iteration time with zero communication.
+    pub fn speedup(&self, world: usize) -> f64 {
+        let t_ls = self.t_before_s + self.t_comp_s;
+        world as f64 * t_ls / self.total_s
+    }
+
+    /// Fraction of linear scaling achieved.
+    pub fn scaling_efficiency(&self) -> f64 {
+        (self.t_before_s + self.t_comp_s) / self.total_s
+    }
+}
+
+/// Price one tensor's communication on the fabric.
+pub fn comm_time(net: &NetworkModel, cluster: ClusterSpec, t: &TensorCost) -> f64 {
+    if t.wire_bytes == 0 {
+        return 0.0;
+    }
+    let per_round = match t.collective {
+        Collective::AllReduce => net.allreduce_s(t.wire_bytes, cluster),
+        Collective::AllGather => net.allgather_s(t.wire_bytes, cluster),
+    };
+    per_round * t.rounds as f64 + t.sync_rounds as f64 * net.sync_round_s(cluster)
+}
+
+/// Simulate one iteration.
+///
+/// Model (Eq. 3/4/6): tensors become ready in index order on the compute
+/// stream (`t_before` + cumulative comp + compress). A single comm stream
+/// serves tensors FIFO (NCCL enqueues back-to-back). Under `Sequential`
+/// the comm stream opens only after all computation. A `data_dependency`
+/// tensor blocks the compute stream until its own communication finishes
+/// (synchronous collective semantics).
+pub fn simulate_iteration(
+    net: &NetworkModel,
+    cluster: ClusterSpec,
+    t_before_s: f64,
+    tensors: &[TensorCost],
+    policy: Policy,
+) -> Breakdown {
+    let mut compute_t = t_before_s;
+    let mut comm_free = f64::NEG_INFINITY; // last comm completion
+    let mut comm_busy = 0.0;
+    let mut bubble = 0.0;
+    let mut t_comp = 0.0;
+    let mut t_compress = 0.0;
+    let mut first_comm_start: Option<f64> = None;
+    let mut comm_end = t_before_s;
+
+    // Sequential policy: communication queue opens after all compute.
+    let comm_open = match policy {
+        Policy::Sequential => {
+            t_before_s
+                + tensors.iter().map(|t| t.comp_s + t.compress_s).sum::<f64>()
+        }
+        Policy::Overlap => 0.0,
+    };
+
+    for t in tensors {
+        // compute + compress for this tensor
+        compute_t += t.comp_s + t.compress_s;
+        t_comp += t.comp_s;
+        t_compress += t.compress_s;
+
+        let dur = comm_time(net, cluster, t);
+        if dur > 0.0 {
+            let ready = compute_t.max(comm_open);
+            let start = if comm_free == f64::NEG_INFINITY {
+                ready
+            } else {
+                ready.max(comm_free)
+            };
+            if first_comm_start.is_none() {
+                first_comm_start = Some(start);
+            }
+            if comm_free != f64::NEG_INFINITY && start > comm_free {
+                bubble += start - comm_free;
+            }
+            comm_free = start + dur;
+            comm_busy += dur;
+            comm_end = comm_free;
+            if t.data_dependency {
+                // synchronous collective: compute stream stalls
+                compute_t = compute_t.max(comm_free);
+            }
+        }
+    }
+
+    let total = compute_t.max(comm_end);
+    // Exposed communication: how much later the iteration ends because of
+    // comm, relative to a comm-free run of the same compute stream.
+    // (With data dependencies, stalls are already inside compute_t; the
+    // remainder is the trailing exposed comm.)
+    let compute_only: f64 =
+        t_before_s + tensors.iter().map(|t| t.comp_s + t.compress_s).sum::<f64>();
+    let exposed = (total - compute_only).max(0.0);
+
+    Breakdown {
+        t_before_s,
+        t_comp_s: t_comp,
+        t_compress_s: t_compress,
+        t_comm_s: comm_busy,
+        t_comm_exposed_s: exposed,
+        bubble_s: bubble,
+        total_s: total,
+    }
+}
+
+/// Convenience: uniform dense tensors for a workload of `n` buckets.
+pub fn dense_tensors(
+    bucket_elems: &[usize],
+    comp_total_s: f64,
+    compress_each_s: f64,
+) -> Vec<TensorCost> {
+    let total: usize = bucket_elems.iter().sum();
+    bucket_elems
+        .iter()
+        .map(|&e| TensorCost {
+            comp_s: comp_total_s * e as f64 / total as f64,
+            compress_s: compress_each_s,
+            wire_bytes: e * 4,
+            collective: Collective::AllReduce,
+            rounds: 1,
+            sync_rounds: 0,
+            data_dependency: false,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetworkModel {
+        NetworkModel::default()
+    }
+
+    fn ecs64() -> ClusterSpec {
+        ClusterSpec::ecs(64)
+    }
+
+    fn uniform(n: usize, comp_each: f64, bytes_each: usize) -> Vec<TensorCost> {
+        (0..n)
+            .map(|_| TensorCost {
+                comp_s: comp_each,
+                compress_s: 0.0,
+                wire_bytes: bytes_each,
+                collective: Collective::AllReduce,
+                rounds: 1,
+                sync_rounds: 0,
+                data_dependency: false,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn eq1_sequential_is_sum_of_phases() {
+        // Eq. (1): T_DP = T_before + T_comp + T_comm.
+        let tensors = uniform(8, 0.01, 4 << 20);
+        let b = simulate_iteration(&net(), ecs64(), 0.05, &tensors, Policy::Sequential);
+        let expect = 0.05 + 0.08 + b.t_comm_s;
+        assert!((b.total_s - expect).abs() < 1e-9, "{} vs {expect}", b.total_s);
+        assert!((b.t_comm_exposed_s - b.t_comm_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq4_overlap_hides_up_to_compute() {
+        // CCR > 1: overlapped total = T_before + first comp + comm chain.
+        let tensors = uniform(8, 0.01, 8 << 20);
+        let seq = simulate_iteration(&net(), ecs64(), 0.05, &tensors, Policy::Sequential);
+        let ovl = simulate_iteration(&net(), ecs64(), 0.05, &tensors, Policy::Overlap);
+        assert!(ovl.total_s < seq.total_s);
+        // overlap saves at most the computation time after the first tensor
+        let max_saving = 7.0 * 0.01 + 0.0; // comm starts after tensor 0
+        assert!(seq.total_s - ovl.total_s <= max_saving + 1e-9);
+        assert!(ovl.t_comm_exposed_s > 0.0, "CCR>1 leaves exposed comm");
+    }
+
+    #[test]
+    fn low_ccr_fully_hidden() {
+        // Tiny messages: all comm hides under compute; exposure ~ tail only.
+        let tensors = uniform(8, 0.02, 64 << 10);
+        let b = simulate_iteration(&net(), ecs64(), 0.05, &tensors, Policy::Overlap);
+        let last_comm = comm_time(&net(), ecs64(), &tensors[7]);
+        assert!(b.t_comm_exposed_s <= last_comm + 1e-9);
+        assert!(b.scaling_efficiency() > 0.95);
+    }
+
+    #[test]
+    fn bubbles_appear_when_compute_bound() {
+        // Long compute between small comms -> comm stream idles (Fig 1d).
+        let tensors = uniform(4, 0.05, 256 << 10);
+        let b = simulate_iteration(&net(), ecs64(), 0.0, &tensors, Policy::Overlap);
+        assert!(b.bubble_s > 0.0);
+    }
+
+    #[test]
+    fn back_to_back_comm_no_bubbles_when_comm_bound() {
+        let tensors = uniform(8, 0.001, 16 << 20);
+        let b = simulate_iteration(&net(), ecs64(), 0.0, &tensors, Policy::Overlap);
+        assert_eq!(b.bubble_s, 0.0);
+    }
+
+    #[test]
+    fn data_dependency_degrades_overlap() {
+        let mk = |dep: bool| {
+            (0..8)
+                .map(|_| TensorCost {
+                    comp_s: 0.01,
+                    compress_s: 0.0,
+                    wire_bytes: 4 << 20,
+                    collective: Collective::AllReduce,
+                    rounds: 1,
+                    sync_rounds: 0,
+                    data_dependency: dep,
+                })
+                .collect::<Vec<_>>()
+        };
+        let free = simulate_iteration(&net(), ecs64(), 0.0, &mk(false), Policy::Overlap);
+        let dep = simulate_iteration(&net(), ecs64(), 0.0, &mk(true), Policy::Overlap);
+        assert!(dep.total_s > free.total_s * 1.5, "{} vs {}", dep.total_s, free.total_s);
+    }
+
+    #[test]
+    fn eq2_speedup_at_linear_scaling() {
+        // zero comm -> speedup == world size
+        let tensors = uniform(4, 0.01, 0);
+        let b = simulate_iteration(&net(), ecs64(), 0.01, &tensors, Policy::Overlap);
+        assert!((b.speedup(64) - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_overhead_serializes_with_compute() {
+        let mut tensors = uniform(4, 0.01, 0);
+        for t in &mut tensors {
+            t.compress_s = 0.005;
+        }
+        let b = simulate_iteration(&net(), ecs64(), 0.0, &tensors, Policy::Overlap);
+        assert!((b.total_s - (0.04 + 0.02)).abs() < 1e-9);
+        assert!((b.t_compress_s - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table1_overlap_speedups_reproduce() {
+        // Table I: S_ovlp for ResNet-101 1.43x, VGG-19 1.22x, Bert 1.28x
+        // relative to S_DP = P*k/(k+CCR) ... we check S_ovlp directly:
+        // speedup(overlap) / speedup(sequential) ratios reported as
+        // S_ovlp vs S_LS. Use workload-level sims in benches; here check
+        // ordering: overlap speedup between sequential and linear scaling.
+        use crate::workload;
+        for w in workload::all() {
+            let buckets = w.paper_buckets.clone().unwrap_or_else(|| {
+                // ~25 MB buckets
+                let total = w.total_params();
+                let nb = total.div_ceil(6_553_600);
+                vec![total / nb; nb]
+            });
+            let tensors = dense_tensors(&buckets, w.t_comp_s, 0.0);
+            let seq =
+                simulate_iteration(&net(), ecs64(), w.t_before_s, &tensors, Policy::Sequential);
+            let ovl =
+                simulate_iteration(&net(), ecs64(), w.t_before_s, &tensors, Policy::Overlap);
+            assert!(ovl.speedup(64) > seq.speedup(64), "{}", w.name);
+            assert!(ovl.speedup(64) < 64.0);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! End-to-end training driver: wraps the DP engine with metrics, logging
+//! and time-to-solution accounting.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::DpEngine;
+use crate::metrics::{RunMetrics, StepRecord};
+use crate::runtime::{ModelArtifacts, Runtime};
+
+/// Result of a full run.
+pub struct TrainReport {
+    pub metrics: RunMetrics,
+    /// Simulated cluster speedup (Eq. 2), averaged over post-warmup steps.
+    pub mean_speedup: f64,
+    pub chosen_interval: Option<usize>,
+}
+
+/// Run `cfg.steps` steps of synchronous DP training; prints a progress line
+/// every `log_every` steps if `verbose`.
+pub fn train(cfg: RunConfig, verbose: bool) -> Result<TrainReport> {
+    let rt = Runtime::cpu()?;
+    let arts = ModelArtifacts::load(&rt, &cfg.artifacts)?;
+    train_with(cfg, arts, verbose)
+}
+
+/// Same as [`train`] but with pre-loaded artifacts (examples/benches share
+/// one compiled bundle across configurations).
+pub fn train_with(cfg: RunConfig, arts: ModelArtifacts, verbose: bool) -> Result<TrainReport> {
+    let steps = cfg.steps;
+    let world = cfg.cluster.world();
+    let metrics_csv = cfg.metrics_csv.clone();
+    let mut engine = DpEngine::new(cfg, arts)?;
+    let mut metrics = RunMetrics::new();
+    let mut speedups = Vec::new();
+    let log_every = (steps / 20).max(1);
+
+    for s in 0..steps {
+        let out = engine.step()?;
+        let speedup = out.breakdown.speedup(world);
+        if s >= steps / 5 {
+            speedups.push(speedup);
+        }
+        if verbose && (s % log_every == 0 || s + 1 == steps) {
+            println!(
+                "step {:>5}  loss {:>8.4}  sim {:>9}  wall {:>9}  speedup {:>6.2}x/{world}",
+                out.step,
+                out.loss,
+                crate::util::fmt_secs(out.breakdown.total_s),
+                crate::util::fmt_secs(out.wall_s),
+                speedup,
+            );
+        }
+        metrics.push(StepRecord {
+            step: out.step,
+            loss: out.loss,
+            wall_s: out.wall_s,
+            sim_s: out.breakdown.total_s,
+            wire_bytes: out.wire_bytes,
+            compress_s: out.compress_s,
+        });
+    }
+
+    if let Some(path) = &metrics_csv {
+        metrics.write_csv(path)?;
+        if verbose {
+            println!("metrics -> {}", path.display());
+        }
+    }
+    let mean_speedup = if speedups.is_empty() {
+        f64::NAN
+    } else {
+        speedups.iter().sum::<f64>() / speedups.len() as f64
+    };
+    Ok(TrainReport { metrics, mean_speedup, chosen_interval: engine.chosen_interval })
+}

@@ -1,0 +1,128 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! Warmup + N timed iterations, reporting min/median/mean and derived
+//! throughput. The paper-table benches (rust/benches/*.rs, harness=false)
+//! use `time_fn` for measured rows and the sim for modeled rows.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    /// Throughput in elements/sec given per-iteration element count.
+    pub fn throughput(&self, elems: usize) -> f64 {
+        elems as f64 / self.median_s
+    }
+
+    /// GB/s given bytes moved per iteration.
+    pub fn gbps(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.median_s / 1e9
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. `f` must do its own
+/// black-boxing via `sink` (return a value that we fold into a checksum so
+/// the optimizer cannot elide the work).
+pub fn time_fn<T, F: FnMut() -> T>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        sink(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        sink(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Stats {
+        iters,
+        min_s: samples[0],
+        median_s: samples[samples.len() / 2],
+        mean_s: mean,
+        max_s: *samples.last().unwrap(),
+    }
+}
+
+/// Opaque value sink — prevents dead-code elimination of benched work.
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Right-aligned fixed-width table printer used by all paper-table benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let line = |cells: &[String]| {
+            let s: Vec<String> =
+                cells.iter().enumerate().map(|(i, c)| format!("{:>width$}", c, width = w[i])).collect();
+            println!("| {} |", s.join(" | "));
+        };
+        line(&self.headers);
+        println!("|{}|", w.iter().map(|n| "-".repeat(n + 2)).collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = time_fn(1, 20, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        assert!(s.min_s > 0.0);
+    }
+
+    #[test]
+    fn table_accepts_rows() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_width() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

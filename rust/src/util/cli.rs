@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch lives in main.rs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw args (not including argv[0]). `--flag` with no value
+    /// becomes "true"; `--key value` and `--key=value` both work.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("--{key}={s}: {e}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = parse(&["train", "--preset=small", "--workers", "8", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("preset"), Some("small"));
+        assert_eq!(a.get_parsed("workers", 1usize).unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--flag", "run"]);
+        // "run" is consumed as the value of --flag (documented behaviour;
+        // put positionals first).
+        assert_eq!(a.get("flag"), Some("run"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["--n", "5"]);
+        assert_eq!(a.get_parsed("n", 0usize).unwrap(), 5);
+        assert_eq!(a.get_parsed("m", 3usize).unwrap(), 3);
+        assert!(a.get_parsed::<usize>("n", 0).is_ok());
+        let b = parse(&["--n", "xyz"]);
+        assert!(b.get_parsed::<usize>("n", 0).is_err());
+        assert!(b.require("missing").is_err());
+    }
+}

@@ -1,0 +1,72 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` randomly-seeded inputs;
+//! on failure it panics with the failing case number and the per-case seed,
+//! so the case reproduces with `Rng::seed(seed)`. Generators are plain
+//! closures over `Rng` — see coordinator/covap tests for usage.
+
+use super::rng::Rng;
+
+/// Run a property `f(case_rng)` for `cases` deterministic cases derived from
+/// `master_seed`. `f` should panic (assert!) on violation; the wrapper adds
+/// the reproducing seed to the panic message.
+pub fn check<F: Fn(&mut Rng)>(name: &str, master_seed: u64, cases: usize, f: F) {
+    let root = Rng::seed(master_seed);
+    for case in 0..cases {
+        let mut rng = root.fork(case as u64);
+        let seed_probe = rng.clone();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut r = seed_probe.clone();
+            f(&mut r)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce: master_seed={master_seed}, fork={case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi] (inclusive) — the common generator shape.
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// A random f32 vector with entries ~ N(0, scale).
+pub fn vec_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 1, 50, |rng| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failing_case() {
+        check("always-fails", 1, 5, |_rng| panic!("boom"));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("usize_in-bounds", 2, 100, |rng| {
+            let v = usize_in(rng, 3, 9);
+            assert!((3..=9).contains(&v));
+        });
+    }
+}

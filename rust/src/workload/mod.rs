@@ -1,0 +1,303 @@
+//! Workload descriptors for the paper's four evaluation DNNs.
+//!
+//! A workload is a per-parameter-tensor layer table (gradient-ready order =
+//! reverse registration order, like PyTorch autograd) plus the measured
+//! computation times from the paper's Table I. These drive the timeline
+//! simulator that regenerates the paper's tables/figures; they are *inputs*
+//! taken from the paper, not things we claim to re-measure.
+//!
+//! Parameter counts are exact where the paper pins them down:
+//! * VGG-19: per-layer sizes from Table IV; total weights 143,652,544 and
+//!   with biases 143,667,240 — both match Tables IV/V digit-for-digit.
+//! * Bert: bert-base-chinese (vocab 21128) = 102,267,648 — matches Table VI.
+//! * GPT-2: d=768, 10 layers, vocab 13,317 = 81,894,144 — matches Table VI
+//!   (the paper's GPT-2 is a reduced Chinese model; these dims reproduce its
+//!   exact parameter count).
+//! * ResNet-101: generated from the torchvision architecture = 44,549,160 vs
+//!   the paper's 44,654,504 (+0.24%, counting-convention delta; see
+//!   DESIGN.md).
+
+use crate::network::{ClusterSpec, NetworkModel};
+
+/// One parameter tensor ("layer" in the paper's bucket-allocation sense).
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub numel: usize,
+    /// Relative backward-pass compute weight (~FLOPs). Conv layers carry
+    /// `numel * spatial` (kernel reuse over the feature map); FC / matmul
+    /// layers carry `numel`; embeddings carry ~0 (sparse lookup). This is
+    /// what makes VGG-19's FC1 (72% of parameters, ~1% of compute, ready
+    /// FIRST in backward) overlap so well under COVAP.
+    pub comp_weight: f64,
+}
+
+/// A DNN training task: layer table + Table I timings.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    /// Parameter tensors in *forward/registration* order. Gradients become
+    /// ready in reverse order during the backward pass.
+    pub layers: Vec<LayerSpec>,
+    /// Data loading + forward pass, seconds (Table I `T_before`).
+    pub t_before_s: f64,
+    /// Backward pass, seconds (Table I `T_comp`).
+    pub t_comp_s: f64,
+    /// Observed DDP bucket sizes (elements, comm order) when the paper
+    /// reports them (VGG-19, Table V); otherwise the bucketizer's output is
+    /// used.
+    pub paper_buckets: Option<Vec<usize>>,
+}
+
+impl Workload {
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.numel).sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_params() * 4
+    }
+
+    /// Table I CCR for a given network/cluster: T_comm / T_comp.
+    pub fn ccr(&self, net: &NetworkModel, cluster: ClusterSpec) -> f64 {
+        net.allreduce_s(self.total_bytes(), cluster) / self.t_comp_s
+    }
+}
+
+fn layer(name: impl Into<String>, numel: usize) -> LayerSpec {
+    LayerSpec { name: name.into(), numel, comp_weight: numel as f64 }
+}
+
+fn layer_w(name: impl Into<String>, numel: usize, comp_weight: f64) -> LayerSpec {
+    LayerSpec { name: name.into(), numel, comp_weight }
+}
+
+/// VGG-19 (ImageNet, with biases) — Table IV layer sizes exactly.
+pub fn vgg19() -> Workload {
+    let mut layers = Vec::new();
+    // (name, in_ch, out_ch) for the 16 conv layers of configuration E.
+    // (name, in_ch, out_ch, output spatial size) for configuration E.
+    // comp_weight = numel * spatial: conv FLOPs reuse each weight over the
+    // feature map, so the conv stack is ~99% of compute while the FC stack
+    // holds ~87% of parameters.
+    let convs = [
+        ("conv1_1", 3, 64, 224), ("conv1_2", 64, 64, 224),
+        ("conv2_1", 64, 128, 112), ("conv2_2", 128, 128, 112),
+        ("conv3_1", 128, 256, 56), ("conv3_2", 256, 256, 56),
+        ("conv3_3", 256, 256, 56), ("conv3_4", 256, 256, 56),
+        ("conv4_1", 256, 512, 28), ("conv4_2", 512, 512, 28),
+        ("conv4_3", 512, 512, 28), ("conv4_4", 512, 512, 28),
+        ("conv5_1", 512, 512, 14), ("conv5_2", 512, 512, 14),
+        ("conv5_3", 512, 512, 14), ("conv5_4", 512, 512, 14),
+    ];
+    for (name, cin, cout, sp) in convs {
+        let numel = 3 * 3 * cin * cout;
+        layers.push(layer_w(format!("{name}.weight"), numel, (numel * sp * sp) as f64));
+        layers.push(layer(format!("{name}.bias"), cout));
+    }
+    for (name, fin, fout) in [("fc1", 25088, 4096), ("fc2", 4096, 4096), ("fc3", 4096, 1000)] {
+        layers.push(layer(format!("{name}.weight"), fin * fout));
+        layers.push(layer(format!("{name}.bias"), fout));
+    }
+    Workload {
+        name: "VGG-19",
+        layers,
+        t_before_s: 0.105,
+        t_comp_s: 0.210,
+        // Table V: communication tensors observed in 8-node training.
+        paper_buckets: Some(vec![
+            4_101_096, 16_781_312, 107_480_576, 7_079_424, 7_669_760, 555_072,
+        ]),
+    }
+}
+
+/// ResNet-101 (ImageNet) — generated from the architecture.
+pub fn resnet101() -> Workload {
+    let mut layers = Vec::new();
+    let w1 = (7 * 7 * 3 * 64) as f64 * (112.0 * 112.0);
+    layers.push(layer_w("conv1.weight", 7 * 7 * 3 * 64, w1));
+    layers.push(layer("bn1", 2 * 64));
+    // (stage, blocks, in, mid, out, output spatial)
+    let stages = [
+        (1usize, 3usize, 64usize, 64usize, 256usize, 56usize),
+        (2, 4, 256, 128, 512, 28),
+        (3, 23, 512, 256, 1024, 14),
+        (4, 3, 1024, 512, 2048, 7),
+    ];
+    for (s, blocks, stage_in, mid, out, sp) in stages {
+        let spw = (sp * sp) as f64;
+        for b in 0..blocks {
+            let inp = if b == 0 { stage_in } else { out };
+            let p = format!("layer{s}.{b}");
+            layers.push(layer_w(format!("{p}.conv1.weight"), inp * mid, (inp * mid) as f64 * spw));
+            layers.push(layer(format!("{p}.bn1"), 2 * mid));
+            layers.push(layer_w(format!("{p}.conv2.weight"), 9 * mid * mid, (9 * mid * mid) as f64 * spw));
+            layers.push(layer(format!("{p}.bn2"), 2 * mid));
+            layers.push(layer_w(format!("{p}.conv3.weight"), mid * out, (mid * out) as f64 * spw));
+            layers.push(layer(format!("{p}.bn3"), 2 * out));
+            if b == 0 {
+                layers.push(layer_w(format!("{p}.downsample.weight"), inp * out, (inp * out) as f64 * spw));
+                layers.push(layer(format!("{p}.downsample.bn"), 2 * out));
+            }
+        }
+    }
+    layers.push(layer("fc.weight", 2048 * 1000));
+    layers.push(layer("fc.bias", 1000));
+    Workload {
+        name: "ResNet-101",
+        layers,
+        t_before_s: 0.055,
+        t_comp_s: 0.135,
+        paper_buckets: None,
+    }
+}
+
+/// Transformer-encoder/decoder layer table shared by Bert and GPT-2.
+fn transformer_layers(
+    prefix: &str,
+    n_layers: usize,
+    d: usize,
+    d_ff: usize,
+) -> Vec<LayerSpec> {
+    let mut layers = Vec::new();
+    for l in 0..n_layers {
+        let p = format!("{prefix}.{l}");
+        layers.push(layer(format!("{p}.attn.qkv.weight"), d * 3 * d));
+        layers.push(layer(format!("{p}.attn.qkv.bias"), 3 * d));
+        layers.push(layer(format!("{p}.attn.out.weight"), d * d));
+        layers.push(layer(format!("{p}.attn.out.bias"), d));
+        layers.push(layer(format!("{p}.ln1"), 2 * d));
+        layers.push(layer(format!("{p}.ffn.in.weight"), d * d_ff));
+        layers.push(layer(format!("{p}.ffn.in.bias"), d_ff));
+        layers.push(layer(format!("{p}.ffn.out.weight"), d_ff * d));
+        layers.push(layer(format!("{p}.ffn.out.bias"), d));
+        layers.push(layer(format!("{p}.ln2"), 2 * d));
+    }
+    layers
+}
+
+/// Bert-base (Chinese, vocab 21128) — 102,267,648 params exactly.
+pub fn bert() -> Workload {
+    let d = 768;
+    let mut layers = vec![
+        // embedding backward is a scatter over B*T*d: ~free vs its numel
+        layer_w("embeddings.word", 21128 * d, (21128 * d) as f64 * 0.05),
+        layer("embeddings.position", 512 * d),
+        layer("embeddings.token_type", 2 * d),
+        layer("embeddings.ln", 2 * d),
+    ];
+    layers.extend(transformer_layers("encoder", 12, d, 3072));
+    layers.push(layer("pooler.weight", d * d));
+    layers.push(layer("pooler.bias", d));
+    Workload {
+        name: "Bert",
+        layers,
+        t_before_s: 0.080,
+        t_comp_s: 0.170,
+        paper_buckets: None,
+    }
+}
+
+/// GPT-2 (reduced Chinese config: 10 layers, vocab 13,317) —
+/// 81,894,144 params exactly.
+pub fn gpt2() -> Workload {
+    let d = 768;
+    let mut layers = vec![
+        layer_w("wte", 13_317 * d, (13_317 * d) as f64 * 0.05),
+        layer("wpe", 1024 * d),
+    ];
+    layers.extend(transformer_layers("h", 10, d, 3072));
+    layers.push(layer("ln_f", 2 * d));
+    // Table I has no GPT-2 row; §IV.C.4 reports CCR = 3.5 measured by the
+    // distributed profiler. Back out T_comp from the network model at the
+    // paper's 64-GPU cluster, keeping T_before/T_comp like Bert's ratio.
+    let w = Workload {
+        name: "GPT-2",
+        layers,
+        t_before_s: 0.0,
+        t_comp_s: 0.0,
+        paper_buckets: None,
+    };
+    let net = NetworkModel::default();
+    let t_comm = net.allreduce_s(w.total_bytes(), ClusterSpec::ecs(64));
+    let t_comp = t_comm / 3.5;
+    Workload { t_before_s: t_comp * 0.47, t_comp_s: t_comp, ..w }
+}
+
+/// All four evaluation workloads (Table VI).
+pub fn all() -> Vec<Workload> {
+    vec![resnet101(), vgg19(), bert(), gpt2()]
+}
+
+/// Lookup by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    all().into_iter().find(|w| w.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_weight_total_matches_table4() {
+        let w = vgg19();
+        let weights: usize = w
+            .layers
+            .iter()
+            .filter(|l| l.name.ends_with(".weight"))
+            .map(|l| l.numel)
+            .sum();
+        assert_eq!(weights, 143_652_544);
+        assert_eq!(w.total_params(), 143_667_240); // Table V total
+    }
+
+    #[test]
+    fn vgg19_fc1_ratio_matches_table4() {
+        let w = vgg19();
+        let fc1 = w.layers.iter().find(|l| l.name == "fc1.weight").unwrap();
+        assert_eq!(fc1.numel, 102_760_448);
+        let ratio = fc1.numel as f64 / 143_652_544.0;
+        assert!((ratio - 0.7153).abs() < 0.001);
+    }
+
+    #[test]
+    fn bert_matches_table6() {
+        assert_eq!(bert().total_params(), 102_267_648);
+    }
+
+    #[test]
+    fn gpt2_matches_table6() {
+        assert_eq!(gpt2().total_params(), 81_894_144);
+    }
+
+    #[test]
+    fn resnet101_close_to_table6() {
+        let n = resnet101().total_params();
+        let paper = 44_654_504f64;
+        assert!(
+            (n as f64 - paper).abs() / paper < 0.005,
+            "resnet101 params {n} vs paper {paper}"
+        );
+    }
+
+    #[test]
+    fn table1_ccr_reproduces() {
+        // Table I CCRs: ResNet-101 2.1, VGG-19 4.0, Bert 3.1 (64 GPUs).
+        let net = NetworkModel::default();
+        let c = ClusterSpec::ecs(64);
+        for (w, ccr_paper) in [(resnet101(), 2.1), (vgg19(), 4.0), (bert(), 3.1)] {
+            let ccr = w.ccr(&net, c);
+            assert!(
+                (ccr / ccr_paper - 1.0).abs() < 0.35,
+                "{}: modeled CCR {ccr:.2} vs paper {ccr_paper}",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn gpt2_ccr_is_3_5_by_construction() {
+        let ccr = gpt2().ccr(&NetworkModel::default(), ClusterSpec::ecs(64));
+        assert!((ccr - 3.5).abs() < 0.05);
+    }
+}

@@ -1,0 +1,166 @@
+//! Failure-injection and edge-case tests: malformed inputs, degenerate
+//! configurations, and hostile manifest/HLO files must fail cleanly (no
+//! panics, no partial state).
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use covap::config::RunConfig;
+use covap::runtime::{Manifest, ModelArtifacts, Runtime};
+use covap::util::cli::Args;
+use covap::util::json::Json;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("covap_fail_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let d = tmpdir("manifest");
+    std::fs::write(d.join("manifest.json"), "{ not json").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    assert!(ModelArtifacts::load(&rt, &d).is_err());
+}
+
+#[test]
+fn truncated_hlo_rejected() {
+    let d = tmpdir("hlo");
+    // valid manifest, garbage HLO
+    let manifest = r#"{
+      "preset": "x",
+      "config": {"vocab": 4, "d_model": 2, "n_heads": 1, "n_layers": 1,
+                 "d_ff": 4, "seq_len": 4, "batch": 1},
+      "param_count": 4,
+      "ef_block": 4,
+      "params": [{"name": "tok_embed", "offset": 0, "numel": 4, "shape": [2, 2]}],
+      "artifacts": {}
+    }"#;
+    std::fs::write(d.join("manifest.json"), manifest).unwrap();
+    for a in ["fwd_bwd", "sgd_update", "adam_update", "ef_compress", "quantize"] {
+        let mut f = std::fs::File::create(d.join(format!("{a}.hlo.txt"))).unwrap();
+        writeln!(f, "HloModule truncated_garbage").unwrap();
+        writeln!(f, "ENTRY %main {{ this is not hlo").unwrap();
+    }
+    let rt = Runtime::cpu().unwrap();
+    assert!(ModelArtifacts::load(&rt, &d).is_err());
+}
+
+#[test]
+fn manifest_tampered_offsets_rejected() {
+    // offsets that do not tile the vector must fail validation
+    let bad = r#"{
+      "preset": "x",
+      "config": {"vocab": 4, "d_model": 2, "n_heads": 1, "n_layers": 1,
+                 "d_ff": 4, "seq_len": 4, "batch": 1},
+      "param_count": 10,
+      "ef_block": 4,
+      "params": [
+        {"name": "a", "offset": 0, "numel": 4, "shape": [2, 2]},
+        {"name": "b", "offset": 5, "numel": 5, "shape": [5]}
+      ],
+      "artifacts": {}
+    }"#;
+    assert!(Manifest::parse(bad).is_err());
+}
+
+#[test]
+fn manifest_shape_numel_mismatch_rejected() {
+    let bad = r#"{
+      "preset": "x",
+      "config": {"vocab": 4, "d_model": 2, "n_heads": 1, "n_layers": 1,
+                 "d_ff": 4, "seq_len": 4, "batch": 1},
+      "param_count": 4,
+      "ef_block": 4,
+      "params": [{"name": "a", "offset": 0, "numel": 4, "shape": [3, 2]}],
+      "artifacts": {}
+    }"#;
+    assert!(Manifest::parse(bad).is_err());
+}
+
+#[test]
+fn config_rejects_degenerate_values() {
+    let mut c = RunConfig::default();
+    c.workers = 0;
+    assert!(c.validate().is_err());
+
+    let mut c = RunConfig::default();
+    c.bucket_bytes = 16; // below floor
+    assert!(c.validate().is_err());
+
+    let mut c = RunConfig::default();
+    c.lr = f32::NAN;
+    assert!(c.validate().is_err());
+}
+
+#[test]
+fn cli_rejects_unknown_scheme_and_bad_numbers() {
+    let args =
+        Args::parse(["--scheme", "zstd"].iter().map(|s| s.to_string())).unwrap();
+    let mut c = RunConfig::default();
+    assert!(c.apply_args(&args).is_err());
+
+    let args =
+        Args::parse(["--steps", "many"].iter().map(|s| s.to_string())).unwrap();
+    let mut c = RunConfig::default();
+    assert!(c.apply_args(&args).is_err());
+}
+
+#[test]
+fn deeply_nested_json_rejected_not_crashed() {
+    // 2000 nested arrays: the parser is recursive and enforces a depth
+    // limit — hostile input must yield Err, never a stack overflow.
+    // (This test originally caught exactly that overflow in debug builds.)
+    let depth = 2000;
+    let src = "[".repeat(depth) + &"]".repeat(depth);
+    assert!(Json::parse(&src).is_err());
+}
+
+#[test]
+fn json_parser_fuzz_smoke() {
+    // random byte strings must never panic the parser
+    use covap::util::rng::Rng;
+    let mut rng = Rng::seed(0xF422);
+    for _ in 0..500 {
+        let len = rng.below(64);
+        const ALPHABET: &[u8] = b" {}[]\",:0123456789truefalsenull.eE+-\\";
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| ALPHABET[rng.below(ALPHABET.len())])
+            .collect();
+        let s = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = Json::parse(&s); // must return, not panic
+    }
+}
+
+#[test]
+fn scheme_round_handles_tiny_buckets() {
+    // 1-element buckets and single-worker groups are degenerate but legal.
+    use covap::compress::SchemeKind;
+    for kind in SchemeKind::evaluation_set() {
+        let mut s = kind.build(1, 0);
+        let g = vec![0.5f32];
+        let refs: Vec<&[f32]> = vec![&g];
+        let (u, _) = s.round(0, 0, &refs);
+        assert_eq!(u.len(), 1, "{}", kind.label());
+        assert!(u[0].is_finite());
+    }
+}
+
+#[test]
+fn scheme_round_handles_zero_gradients() {
+    use covap::compress::SchemeKind;
+    for kind in SchemeKind::evaluation_set() {
+        let mut s = kind.build(2, 0);
+        let g = vec![0.0f32; 256];
+        let refs: Vec<&[f32]> = vec![&g, &g];
+        for step in 0..3 {
+            let (u, _) = s.round(0, step, &refs);
+            assert!(
+                u.iter().all(|x| x.is_finite()),
+                "{} produced non-finite on zeros",
+                kind.label()
+            );
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Integration tests over the real artifact bundle (artifacts/tiny must
+//! exist — `make artifacts`). These exercise the full three-layer path:
+//! rust coordinator -> PJRT CPU -> AOT HLO (JAX model + Pallas kernels).
+
+use std::path::{Path, PathBuf};
+
+use covap::compress::{f16_to_f32, f32_to_f16, SchemeKind};
+use covap::config::{Optimizer, RunConfig};
+use covap::coordinator::DpEngine;
+use covap::covap::EfScheduler;
+use covap::runtime::{
+    lit_f32, lit_scalar_f32, to_f32_vec, ModelArtifacts, Runtime,
+};
+use covap::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    let p = PathBuf::from("artifacts/tiny");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/tiny missing — run `make artifacts` first"
+    );
+    p
+}
+
+fn load() -> (Runtime, ModelArtifacts) {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let arts = ModelArtifacts::load(&rt, &artifacts_dir()).expect("artifact bundle");
+    (rt, arts)
+}
+
+fn cfg(scheme: SchemeKind, steps: u64) -> RunConfig {
+    RunConfig {
+        artifacts: artifacts_dir(),
+        workers: 2,
+        steps,
+        lr: 3e-3,
+        scheme,
+        seed: 1234,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn initial_loss_is_log_vocab() {
+    let (_rt, arts) = load();
+    let mut engine = DpEngine::new(cfg(SchemeKind::Baseline, 1), arts).unwrap();
+    let out = engine.step().unwrap();
+    let expect = (256f32).ln();
+    assert!(
+        (out.loss - expect).abs() < 0.5,
+        "loss {} vs ln(vocab) {}",
+        out.loss,
+        expect
+    );
+}
+
+#[test]
+fn baseline_training_descends() {
+    let (_rt, arts) = load();
+    let mut engine = DpEngine::new(cfg(SchemeKind::Baseline, 12), arts).unwrap();
+    let first = engine.step().unwrap().loss;
+    let mut last = first;
+    for _ in 0..11 {
+        last = engine.step().unwrap().loss;
+    }
+    assert!(last < first - 0.3, "no descent: {first} -> {last}");
+}
+
+#[test]
+fn covap_interval_one_equals_baseline_exactly() {
+    // I = 1 keeps every tensor every step and EF residuals stay zero, so
+    // the whole pipeline must be bit-identical to the dense baseline.
+    let (_rt, arts_a) = load();
+    let (_rt2, arts_b) = load();
+    let mut a = DpEngine::new(cfg(SchemeKind::Baseline, 3), arts_a).unwrap();
+    let mut b = DpEngine::new(
+        cfg(
+            SchemeKind::Covap { interval: 1, ef: EfScheduler::constant(1.0) },
+            3,
+        ),
+        arts_b,
+    )
+    .unwrap();
+    for s in 0..3 {
+        let oa = a.step().unwrap();
+        let ob = b.step().unwrap();
+        assert_eq!(oa.loss, ob.loss, "loss diverged at step {s}");
+    }
+    assert_eq!(a.params(), b.params(), "parameters diverged");
+}
+
+#[test]
+fn covap_converges_close_to_baseline() {
+    let steps = 30;
+    let run = |scheme: SchemeKind| {
+        let (_rt, arts) = load();
+        let mut e = DpEngine::new(cfg(scheme, steps), arts).unwrap();
+        let mut last = 0.0;
+        for _ in 0..steps {
+            last = e.step().unwrap().loss;
+        }
+        last
+    };
+    let base = run(SchemeKind::Baseline);
+    let covap = run(SchemeKind::Covap { interval: 4, ef: EfScheduler::constant(1.0) });
+    assert!(
+        covap - base < 1.2,
+        "COVAP too far behind baseline at {steps} steps: {covap} vs {base}"
+    );
+    assert!(covap < 5.0, "COVAP failed to learn: {covap}");
+}
+
+#[test]
+fn training_is_deterministic() {
+    let run = || {
+        let (_rt, arts) = load();
+        let mut e = DpEngine::new(
+            cfg(SchemeKind::Covap { interval: 2, ef: EfScheduler::default() }, 4),
+            arts,
+        )
+        .unwrap();
+        (0..4).map(|_| e.step().unwrap().loss).collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn sgd_and_adam_artifacts_both_work() {
+    for opt in [Optimizer::Sgd, Optimizer::Adam] {
+        let (_rt, arts) = load();
+        let mut c = cfg(SchemeKind::Baseline, 6);
+        c.optimizer = opt;
+        let mut e = DpEngine::new(c, arts).unwrap();
+        let first = e.step().unwrap().loss;
+        let mut last = first;
+        for _ in 0..5 {
+            last = e.step().unwrap().loss;
+        }
+        assert!(last < first, "{opt:?}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn ef_compress_artifact_matches_rust_math() {
+    // The standalone Pallas EF artifact must agree with the coordinator's
+    // native EF arithmetic: out = (g + c*r)*keep, new_r = (g + c*r)*(1-keep).
+    let (_rt, arts) = load();
+    let n = arts.manifest.ef_block;
+    let mut rng = Rng::seed(5);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let r: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    for keep in [0.0f32, 1.0] {
+        let coeff = 0.4f32;
+        let out = arts
+            .ef_compress
+            .run(&[
+                lit_f32(&g),
+                lit_f32(&r),
+                lit_scalar_f32(coeff),
+                lit_scalar_f32(keep),
+            ])
+            .unwrap();
+        let got_out = to_f32_vec(&out[0]).unwrap();
+        let got_r = to_f32_vec(&out[1]).unwrap();
+        for i in (0..n).step_by(n / 97) {
+            let acc = g[i] + coeff * r[i];
+            let want_out = acc * keep;
+            let want_r = acc * (1.0 - keep);
+            assert!((got_out[i] - want_out).abs() < 1e-5, "i={i}");
+            assert!((got_r[i] - want_r).abs() < 1e-5, "i={i}");
+        }
+    }
+}
+
+#[test]
+fn quantize_artifact_matches_rust_f16() {
+    let (_rt, arts) = load();
+    let n = arts.manifest.ef_block;
+    let mut rng = Rng::seed(6);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 100.0).collect();
+    let out = arts.quantize.run(&[lit_f32(&x)]).unwrap();
+    let got = to_f32_vec(&out[0]).unwrap();
+    for i in (0..n).step_by(n / 131) {
+        let want = f16_to_f32(f32_to_f16(x[i]));
+        assert_eq!(got[i], want, "i={i}: {} vs {}", got[i], want);
+    }
+}
+
+#[test]
+fn adaptive_profiling_selects_interval_and_reshards() {
+    let (_rt, arts) = load();
+    let mut c = cfg(SchemeKind::Baseline, 4);
+    c.profile_steps = 2;
+    let param_count = arts.manifest.param_count;
+    let mut e = DpEngine::new(c, arts).unwrap();
+    for _ in 0..4 {
+        e.step().unwrap();
+    }
+    let i = e.chosen_interval.expect("interval must be chosen after profiling");
+    assert!(i >= 1);
+    // comm tensors still partition the flat vector exactly
+    let mut covered = vec![false; param_count];
+    for t in e.tensors() {
+        for i in t.offset..t.offset + t.numel {
+            assert!(!covered[i], "overlap at {i}");
+            covered[i] = true;
+        }
+    }
+    assert!(covered.iter().all(|&c| c), "gap in tensor coverage");
+}
+
+#[test]
+fn all_schemes_run_end_to_end() {
+    for kind in SchemeKind::evaluation_set() {
+        let (_rt, arts) = load();
+        let mut e = DpEngine::new(cfg(kind.clone(), 2), arts).unwrap();
+        for s in 0..2 {
+            let out = e.step().unwrap();
+            assert!(out.loss.is_finite(), "{} step {s}", kind.label());
+            assert!(out.breakdown.total_s > 0.0);
+        }
+    }
+}
+
+#[test]
+fn manifest_matches_loaded_model() {
+    let (_rt, arts) = load();
+    let m = &arts.manifest;
+    assert_eq!(m.preset, "tiny");
+    assert_eq!(m.dims.vocab, 256);
+    // fwd_bwd signature documented in the manifest agrees with param_count
+    let sig = &m.artifacts["fwd_bwd"];
+    assert!(sig.inputs[0].contains(&format!("f32[{}]", m.param_count)));
+}
+
+#[test]
+fn missing_artifacts_error_cleanly() {
+    let rt = Runtime::cpu().unwrap();
+    let err = ModelArtifacts::load(&rt, Path::new("artifacts/definitely-not-here"));
+    assert!(err.is_err());
+}
