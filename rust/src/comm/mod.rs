@@ -7,6 +7,12 @@
 //! shortcut `sum`, so chunking invariants (uneven divisions, single-element
 //! buffers) are genuinely exercised and the per-rank traffic we charge to
 //! the network model matches what the implementation actually moves.
+//!
+//! [`RingSchedule`] is the chunk schedule itself, factored out so the
+//! in-place path here and the threaded executor (`exec::ring`) move
+//! byte-identical chunks in the identical order — which is what makes the
+//! two paths bitwise-comparable (`exec::ring` is property-tested against
+//! [`ring_allreduce`]).
 
 use crate::network::{ClusterSpec, NetworkModel};
 
@@ -15,6 +21,66 @@ use crate::network::{ClusterSpec, NetworkModel};
 pub struct CollectiveCost {
     pub sim_s: f64,
     pub bytes_per_rank: usize,
+}
+
+/// The chunk schedule of a P-rank ring collective over `n` elements.
+///
+/// Chunk `c` covers `[c*n/p, (c+1)*n/p)`. Reduce-scatter runs P-1 steps; at
+/// step `s` rank `r` sends its partial of chunk `(r - s) mod p` to rank
+/// `r+1`, which accumulates `own += incoming`. The allgather phase rotates
+/// the completed chunks another P-1 steps. Addition order per chunk is a
+/// fixed sequential chain, so any two implementations that follow this
+/// schedule produce bitwise-identical sums.
+#[derive(Debug, Clone)]
+pub struct RingSchedule {
+    p: usize,
+    n: usize,
+    starts: Vec<usize>,
+}
+
+impl RingSchedule {
+    pub fn new(p: usize, n: usize) -> RingSchedule {
+        assert!(p >= 1);
+        RingSchedule { p, n, starts: (0..=p).map(|c| c * n / p).collect() }
+    }
+
+    pub fn world(&self) -> usize {
+        self.p
+    }
+
+    pub fn elems(&self) -> usize {
+        self.n
+    }
+
+    /// Element range of chunk `c`.
+    pub fn chunk(&self, c: usize) -> std::ops::Range<usize> {
+        self.starts[c]..self.starts[c + 1]
+    }
+
+    /// Chunk rank `r` sends to `r+1` at reduce-scatter step `s`.
+    pub fn rs_chunk(&self, r: usize, s: usize) -> usize {
+        (r + self.p - s) % self.p
+    }
+
+    /// Chunk rank `r` sends to `r+1` at allgather step `s`.
+    pub fn ag_chunk(&self, r: usize, s: usize) -> usize {
+        (r + 1 + self.p - s) % self.p
+    }
+
+    /// After reduce-scatter, rank `r` holds the full sum of this chunk.
+    pub fn owned_chunk(&self, r: usize) -> usize {
+        (r + 1) % self.p
+    }
+
+    /// Bytes rank `r` sends over one full allreduce (f32 payload).
+    pub fn allreduce_sent_bytes(&self, r: usize) -> usize {
+        let mut b = 0;
+        for s in 0..self.p.saturating_sub(1) {
+            b += self.chunk(self.rs_chunk(r, s)).len() * 4;
+            b += self.chunk(self.ag_chunk(r, s)).len() * 4;
+        }
+        b
+    }
 }
 
 /// In-place ring AllReduce (sum) over per-rank buffers.
@@ -30,19 +96,15 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>]) -> usize {
     if p == 1 || n == 0 {
         return 0;
     }
-
-    // chunk boundaries: chunk c = [starts[c], starts[c+1])
-    let starts: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
-    let chunk = |c: usize| starts[c]..starts[c + 1];
-
+    let sched = RingSchedule::new(p, n);
     let mut traffic = 0usize;
 
     // Reduce-scatter: step s, rank r sends chunk (r - s) to rank r+1.
     for s in 0..p - 1 {
         for r in 0..p {
-            let c = (r + p - s) % p;
+            let c = sched.rs_chunk(r, s);
             let dst = (r + 1) % p;
-            let range = chunk(c);
+            let range = sched.chunk(c);
             traffic += range.len() * 4;
             // dst.chunk[c] += src.chunk[c]
             let (src, dst_buf) = if r < dst {
@@ -61,9 +123,9 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>]) -> usize {
     // Allgather: rotate the completed chunks around the ring.
     for s in 0..p - 1 {
         for r in 0..p {
-            let c = (r + 1 + p - s) % p;
+            let c = sched.ag_chunk(r, s);
             let dst = (r + 1) % p;
-            let range = chunk(c);
+            let range = sched.chunk(c);
             traffic += range.len() * 4;
             let (src, dst_buf) = if r < dst {
                 let (a, b) = bufs.split_at_mut(dst);
@@ -76,6 +138,50 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>]) -> usize {
         }
     }
     traffic / p // per-rank
+}
+
+/// Ring AllGather at object granularity: every rank ends with the
+/// rank-major concatenation of all ranks' payloads (sizes may differ).
+/// Executed as the real P-1-step rotation — each rank forwards the slot it
+/// received in the previous step — and cross-checked against the direct
+/// copy. Returns (the concatenation every rank converges to, the maximum
+/// bytes any one rank sent).
+pub fn ring_allgather(payloads: &[Vec<f32>]) -> (Vec<f32>, usize) {
+    let p = payloads.len();
+    assert!(p >= 1);
+    // slots[r][c] = rank r's copy of rank c's payload (None = not arrived)
+    let mut slots: Vec<Vec<Option<Vec<f32>>>> = (0..p)
+        .map(|r| {
+            (0..p)
+                .map(|c| if c == r { Some(payloads[c].clone()) } else { None })
+                .collect()
+        })
+        .collect();
+    let mut sent = vec![0usize; p];
+    for s in 0..p.saturating_sub(1) {
+        // snapshot the outgoing slot ids first (simultaneous exchange)
+        let moves: Vec<(usize, usize, Vec<f32>)> = (0..p)
+            .map(|r| {
+                let c = (r + p - s) % p;
+                let payload =
+                    slots[r][c].clone().expect("rotation invariant: slot present");
+                sent[r] += payload.len() * 4;
+                ((r + 1) % p, c, payload)
+            })
+            .collect();
+        for (dst, c, payload) in moves {
+            slots[dst][c] = Some(payload);
+        }
+    }
+    let concat: Vec<f32> = payloads.iter().flat_map(|v| v.iter().copied()).collect();
+    for (r, row) in slots.iter().enumerate() {
+        let got: Vec<f32> = row
+            .iter()
+            .flat_map(|o| o.as_ref().expect("all slots arrive").iter().copied())
+            .collect();
+        debug_assert_eq!(got, concat, "rank {r} rotation mismatch");
+    }
+    (concat, sent.into_iter().max().unwrap_or(0))
 }
 
 /// AllGather: every rank receives every rank's payload. Returns the
@@ -137,6 +243,88 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// Satellite coverage: the degenerate splits called out in the issue —
+    /// uneven n % p, n < p, p = 1, and empty buffers.
+    #[test]
+    fn allreduce_degenerate_splits() {
+        for (p, n) in [(1usize, 0usize), (1, 5), (3, 0), (4, 1), (4, 3), (5, 7), (7, 257)] {
+            let mut rng = Rng::seed((p * 1000 + n) as u64);
+            let bufs: Vec<Vec<f32>> = (0..p).map(|_| prop::vec_f32(&mut rng, n, 1.0)).collect();
+            let want: Vec<f32> =
+                (0..n).map(|i| bufs.iter().map(|b| b[i]).sum()).collect();
+            let mut got = bufs.clone();
+            ring_allreduce(&mut got);
+            for b in &got {
+                for (g, w) in b.iter().zip(want.iter()) {
+                    assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "p={p} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_matches_naive_concat_property() {
+        prop::check("ring-ag==concat", 52, 60, |rng: &mut Rng| {
+            let p = 1 + rng.below(6);
+            // ragged sizes, including empty payloads
+            let payloads: Vec<Vec<f32>> = (0..p)
+                .map(|_| prop::vec_f32(rng, rng.below(64), 1.0))
+                .collect();
+            let want: Vec<f32> =
+                payloads.iter().flat_map(|v| v.iter().copied()).collect();
+            let (got, sent_max) = ring_allgather(&payloads);
+            assert_eq!(got, want);
+            let total: usize = payloads.iter().map(|v| v.len() * 4).sum();
+            assert!(sent_max <= total * p, "sent {sent_max} vs total {total}");
+        });
+    }
+
+    #[test]
+    fn ring_schedule_partitions_and_rotates() {
+        prop::check("ring-schedule", 53, 80, |rng: &mut Rng| {
+            let p = 1 + rng.below(8);
+            let n = rng.below(300);
+            let s = RingSchedule::new(p, n);
+            // chunks tile [0, n)
+            let mut end = 0usize;
+            for c in 0..p {
+                let r = s.chunk(c);
+                assert_eq!(r.start, end);
+                end = r.end;
+            }
+            assert_eq!(end, n);
+            // each reduce-scatter step sends p distinct chunks
+            for step in 0..p.saturating_sub(1) {
+                let mut seen = vec![false; p];
+                for r in 0..p {
+                    let c = s.rs_chunk(r, step);
+                    assert!(!seen[c]);
+                    seen[c] = true;
+                }
+            }
+            // ownership: rank r's owned chunk is the one it last accumulated
+            for r in 0..p {
+                assert!(s.owned_chunk(r) < p);
+            }
+        });
+    }
+
+    #[test]
+    fn schedule_traffic_matches_inplace_accounting() {
+        let p = 4;
+        let n = 1000;
+        let mut bufs: Vec<Vec<f32>> = (0..p).map(|_| vec![1.0f32; n]).collect();
+        let per_rank = ring_allreduce(&mut bufs);
+        let sched = RingSchedule::new(p, n);
+        // in-place accounting divides total by p; per-rank schedule sends
+        // the same volume up to chunk rounding
+        let sent = sched.allreduce_sent_bytes(0);
+        assert!(
+            (per_rank as i64 - sent as i64).unsigned_abs() as usize <= p * 8,
+            "{per_rank} vs {sent}"
+        );
     }
 
     #[test]

@@ -18,6 +18,7 @@ mod ef;
 mod fp16;
 mod oktopk;
 mod powersgd;
+pub mod rank;
 mod randomk;
 mod signsgd;
 mod topk;
@@ -28,6 +29,7 @@ pub use ef::EfState;
 pub use fp16::{f16_to_f32, f32_to_f16, Fp16};
 pub use oktopk::OkTopk;
 pub use powersgd::PowerSgd;
+pub use rank::{build_rank_pair, Payload, RankCombiner, RankCompressor, RankRound};
 pub use randomk::RandomK;
 pub use signsgd::EfSignSgd;
 pub use topk::{Dgc, TopK};

@@ -30,9 +30,22 @@ impl RandomK {
     /// Shared index set for (step, bucket) — identical on every worker, no
     /// coordination needed (seeded from training seed).
     fn indices(&self, bucket: usize, step: u64, n: usize, k: usize) -> Vec<usize> {
-        let mut rng = Rng::seed(self.seed ^ (step.wrapping_mul(0x9E37_79B9)) ^ (bucket as u64) << 32);
-        rng.sample_indices(n, k)
+        shared_indices(self.seed, bucket, step, n, k)
     }
+}
+
+/// The (seed, bucket, step) -> index-set rule, shared with the per-rank
+/// executor path so both backends select identical coordinates.
+pub(crate) fn shared_indices(
+    seed: u64,
+    bucket: usize,
+    step: u64,
+    n: usize,
+    k: usize,
+) -> Vec<usize> {
+    let mut rng =
+        Rng::seed(seed ^ (step.wrapping_mul(0x9E37_79B9)) ^ (bucket as u64) << 32);
+    rng.sample_indices(n, k)
 }
 
 impl Scheme for RandomK {

@@ -1,0 +1,637 @@
+//! Per-rank compression: one rank's half of a [`Scheme`] round.
+//!
+//! The replicated [`Scheme`] trait models a whole worker group in one
+//! object — fine for the analytic backend, impossible for the threaded
+//! executor where every rank runs on its own OS thread and owns only its
+//! own error-feedback state. This module splits a compression round into
+//! the two halves the cluster actually executes:
+//!
+//! * [`RankCompressor::compress`] — runs on the rank's *compute* thread,
+//!   right after the tensor's gradient is produced: error-feedback
+//!   accumulate + wire-format encode, touching only this rank's residuals.
+//! * [`RankCombiner::combine`] — runs on the rank's *comm* thread after
+//!   the payload exchange: decode every rank's payload (rank-major order)
+//!   into the dense update.
+//!
+//! **Parity contract**: driving P compressor/combiner pairs in lockstep
+//! over the same inputs produces *bitwise identical* updates to the
+//! replicated `Scheme::round` — every accumulate/select/mean loop below
+//! mirrors its `Scheme` counterpart's floating-point evaluation order
+//! exactly, and the property test at the bottom enforces this for every
+//! `SchemeKind`. This is what lets `ExecBackend::Threaded` reproduce the
+//! analytic loss trajectory bit-for-bit.
+//!
+//! Schemes whose round is inherently global (DGC's sampled thresholds
+//! drawn from one RNG stream, PowerSGD's dependent two-round power
+//! iteration, Ok-topk's global threshold) fall back to [`Replicated`]
+//! execution: each rank ships its raw gradient and runs an identical
+//! replica of the full scheme on the gathered set — deterministic, so
+//! still bitwise-parity, at the cost of dense in-process traffic (the
+//! CommRecord keeps charging the scheme's true wire volume; see
+//! DESIGN.md §4).
+
+use std::collections::HashMap;
+
+use super::fp16::{f16_to_f32, f32_to_f16};
+use super::randomk::shared_indices;
+use super::signsgd::pack_signs;
+use super::topk::{k_of, kth_magnitude, select_sparse};
+use super::{CommRecord, Collective, Scheme, SchemeKind};
+use crate::covap::{CoarseFilter, EfScheduler};
+
+/// A wire-format payload one rank contributes to the collective.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Nothing transmitted (COVAP dropped tensor).
+    Empty,
+    /// Dense f32 (baseline, COVAP kept tensors, replicated raw gradients).
+    Dense(Vec<f32>),
+    /// (index, value) pairs — worker-specific sparse selections.
+    Sparse { idx: Vec<u32>, val: Vec<f32> },
+    /// 1-bit signs + one scale (EFsignSGD).
+    Sign { scale: f32, bits: Vec<u64>, n: usize },
+    /// IEEE half-precision quantization.
+    Half(Vec<u16>),
+}
+
+impl Payload {
+    /// Bytes this payload occupies on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::Empty => 0,
+            Payload::Dense(v) => v.len() * 4,
+            Payload::Sparse { idx, .. } => idx.len() * 8,
+            Payload::Sign { n, .. } => n.div_ceil(8) + 4,
+            Payload::Half(v) => v.len() * 2,
+        }
+    }
+}
+
+/// One tensor round's outcome on a rank: the (replicated) dense update plus
+/// the accounting record the simulator prices.
+#[derive(Debug, Clone)]
+pub struct RankRound {
+    pub update: Vec<f32>,
+    pub record: CommRecord,
+}
+
+/// The compute-thread half: encode this rank's gradient.
+pub trait RankCompressor: Send {
+    fn name(&self) -> &'static str;
+    /// Compress `grad` for communication tensor `tensor` at `step`,
+    /// using only this rank's error-feedback residuals.
+    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload;
+    /// True when the backward pass must wait for this tensor's combine
+    /// result before continuing (Ok-topk rendezvous semantics).
+    fn data_dependency(&self) -> bool {
+        false
+    }
+    fn reset(&mut self);
+}
+
+/// The comm-thread half: fold all ranks' payloads into the dense update.
+/// Must be deterministic and produce identical bits on every rank.
+pub trait RankCombiner: Send {
+    fn name(&self) -> &'static str;
+    /// `payloads` is rank-major (index = rank id); `n` is the tensor's
+    /// element count; `compress_s` is the measured compression wall time
+    /// forwarded into the CommRecord.
+    fn combine(
+        &mut self,
+        tensor: usize,
+        step: u64,
+        n: usize,
+        payloads: &[Payload],
+        compress_s: f64,
+    ) -> RankRound;
+    fn reset(&mut self);
+}
+
+/// Build the (compressor, combiner) pair for ONE rank. Call once per rank
+/// with identical `(kind, workers, seed)` so the replicas agree.
+pub fn build_rank_pair(
+    kind: &SchemeKind,
+    workers: usize,
+    seed: u64,
+) -> (Box<dyn RankCompressor>, Box<dyn RankCombiner>) {
+    match kind.clone() {
+        SchemeKind::Baseline => {
+            (Box::new(DenseCompressor), Box::new(MeanCombiner { dense_bytes_per_elem: 4 }))
+        }
+        SchemeKind::Covap { interval, ef } => (
+            Box::new(CovapCompressor {
+                filter: CoarseFilter::new(interval),
+                scheduler: ef,
+                residuals: HashMap::new(),
+            }),
+            Box::new(MeanCombiner { dense_bytes_per_elem: 4 }),
+        ),
+        SchemeKind::Fp16 => {
+            (Box::new(HalfCompressor), Box::new(MeanCombiner { dense_bytes_per_elem: 2 }))
+        }
+        SchemeKind::TopK { ratio } => (
+            Box::new(TopKCompressor { ratio, residuals: HashMap::new() }),
+            Box::new(SparseCombiner),
+        ),
+        SchemeKind::RandomK { ratio } => (
+            Box::new(RandomKCompressor { ratio, seed, residuals: HashMap::new() }),
+            Box::new(SparseCombiner),
+        ),
+        SchemeKind::EfSignSgd => (
+            Box::new(SignCompressor { residuals: HashMap::new() }),
+            Box::new(SignCombiner),
+        ),
+        // Globally-coupled schemes: replicated full-scheme execution.
+        k @ (SchemeKind::Dgc { .. }
+        | SchemeKind::PowerSgd { .. }
+        | SchemeKind::OkTopk { .. }) => {
+            let dep = matches!(k, SchemeKind::OkTopk { .. });
+            (
+                Box::new(RawCompressor { dep }),
+                Box::new(Replicated { inner: k.build(workers, seed) }),
+            )
+        }
+    }
+}
+
+// ---- dense / COVAP --------------------------------------------------------
+
+struct DenseCompressor;
+
+impl RankCompressor for DenseCompressor {
+    fn name(&self) -> &'static str {
+        "DDPovlp"
+    }
+
+    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        Payload::Dense(grad.to_vec())
+    }
+
+    fn reset(&mut self) {}
+}
+
+struct CovapCompressor {
+    filter: CoarseFilter,
+    scheduler: EfScheduler,
+    /// This rank's residual per communication tensor — the EF state that
+    /// the replicated `CovapScheme` keeps for all workers at once.
+    residuals: HashMap<usize, Vec<f32>>,
+}
+
+impl RankCompressor for CovapCompressor {
+    fn name(&self) -> &'static str {
+        "COVAP"
+    }
+
+    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
+        let keep = self.filter.keep(tensor, step);
+        let coeff = self.scheduler.coeff(step);
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        if keep {
+            // same element expression as CovapScheme: gi + coeff * ri
+            let acc: Vec<f32> = grad
+                .iter()
+                .zip(res.iter_mut())
+                .map(|(&gi, ri)| {
+                    let a = gi + coeff * *ri;
+                    *ri = 0.0;
+                    a
+                })
+                .collect();
+            Payload::Dense(acc)
+        } else {
+            for (ri, &gi) in res.iter_mut().zip(grad.iter()) {
+                *ri = gi + coeff * *ri;
+            }
+            Payload::Empty
+        }
+    }
+
+    fn reset(&mut self) {
+        self.residuals.clear();
+    }
+}
+
+struct HalfCompressor;
+
+impl RankCompressor for HalfCompressor {
+    fn name(&self) -> &'static str {
+        "FP16"
+    }
+
+    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        Payload::Half(grad.iter().map(|&x| f32_to_f16(x)).collect())
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Mean over dense-decodable payloads in rank order — the exact accumulate
+/// order of `mean_of` / `CovapScheme` / `Fp16::round`.
+struct MeanCombiner {
+    dense_bytes_per_elem: usize,
+}
+
+impl RankCombiner for MeanCombiner {
+    fn name(&self) -> &'static str {
+        "mean"
+    }
+
+    fn combine(
+        &mut self,
+        _tensor: usize,
+        _step: u64,
+        n: usize,
+        payloads: &[Payload],
+        compress_s: f64,
+    ) -> RankRound {
+        if payloads.iter().all(|p| matches!(p, Payload::Empty)) {
+            // COVAP dropped tensor: empty update = "all zeros".
+            return RankRound {
+                update: Vec::new(),
+                record: CommRecord::dense(0, compress_s),
+            };
+        }
+        let mut update = vec![0.0f32; n];
+        for p in payloads {
+            match p {
+                Payload::Dense(g) => {
+                    for (u, &x) in update.iter_mut().zip(g.iter()) {
+                        *u += x;
+                    }
+                }
+                Payload::Half(h) => {
+                    for (u, &b) in update.iter_mut().zip(h.iter()) {
+                        *u += f16_to_f32(b);
+                    }
+                }
+                other => panic!("mean combiner got {other:?}"),
+            }
+        }
+        let inv = 1.0 / payloads.len() as f32;
+        for u in &mut update {
+            *u *= inv;
+        }
+        RankRound {
+            update,
+            record: CommRecord::dense(n * self.dense_bytes_per_elem, compress_s),
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+// ---- sparse (Top-k / Random-k) --------------------------------------------
+
+struct TopKCompressor {
+    ratio: f64,
+    residuals: HashMap<usize, Vec<f32>>,
+}
+
+impl RankCompressor for TopKCompressor {
+    fn name(&self) -> &'static str {
+        "Top-k"
+    }
+
+    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
+        let k = k_of(self.ratio, n);
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        // acc = g + 1.0 * r, the EfState::accumulate expression
+        let mut acc: Vec<f32> =
+            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
+        let thr = kth_magnitude(&acc, k);
+        let (idx, val) = select_sparse(&acc, thr, k);
+        for &i in &idx {
+            acc[i as usize] = 0.0;
+        }
+        *res = acc;
+        Payload::Sparse { idx, val }
+    }
+
+    fn reset(&mut self) {
+        self.residuals.clear();
+    }
+}
+
+struct RandomKCompressor {
+    ratio: f64,
+    seed: u64,
+    residuals: HashMap<usize, Vec<f32>>,
+}
+
+impl RankCompressor for RandomKCompressor {
+    fn name(&self) -> &'static str {
+        "Random-k"
+    }
+
+    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
+        let k = k_of(self.ratio, n);
+        let idx = shared_indices(self.seed, tensor, step, n, k);
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        let mut acc: Vec<f32> =
+            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
+        let mut iv = Vec::with_capacity(k);
+        let mut vv = Vec::with_capacity(k);
+        for &i in &idx {
+            iv.push(i as u32);
+            vv.push(acc[i]);
+            acc[i] = 0.0;
+        }
+        *res = acc;
+        Payload::Sparse { idx: iv, val: vv }
+    }
+
+    fn reset(&mut self) {
+        self.residuals.clear();
+    }
+}
+
+/// Rank-order mean over sparse selections — mirrors `sparse_round`'s
+/// `update[i] += v * inv` worker loop.
+struct SparseCombiner;
+
+impl RankCombiner for SparseCombiner {
+    fn name(&self) -> &'static str {
+        "sparse-gather"
+    }
+
+    fn combine(
+        &mut self,
+        _tensor: usize,
+        _step: u64,
+        n: usize,
+        payloads: &[Payload],
+        compress_s: f64,
+    ) -> RankRound {
+        let mut update = vec![0.0f32; n];
+        let inv = 1.0 / payloads.len() as f32;
+        let mut wire = 0usize;
+        for p in payloads {
+            let Payload::Sparse { idx, val } = p else {
+                panic!("sparse combiner got {p:?}")
+            };
+            wire = wire.max(p.wire_bytes());
+            for (&i, &v) in idx.iter().zip(val.iter()) {
+                update[i as usize] += v * inv;
+            }
+        }
+        RankRound {
+            update,
+            record: CommRecord {
+                wire_bytes: wire,
+                collective: Collective::AllGather,
+                rounds: 1,
+                sync_rounds: 0,
+                compress_s,
+                data_dependency: false,
+            },
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+// ---- EFsignSGD ------------------------------------------------------------
+
+struct SignCompressor {
+    residuals: HashMap<usize, Vec<f32>>,
+}
+
+impl RankCompressor for SignCompressor {
+    fn name(&self) -> &'static str {
+        "EFsignSGD"
+    }
+
+    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        let acc: Vec<f32> =
+            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
+        let scale = acc.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
+        let bits = pack_signs(&acc);
+        // residual = acc - transmitted, same expression as EfSignSgd
+        for (i, r) in res.iter_mut().enumerate() {
+            let neg = bits[i / 64] >> (i % 64) & 1 == 1;
+            let v = if neg { -scale } else { scale };
+            *r = acc[i] - v;
+        }
+        Payload::Sign { scale, bits, n }
+    }
+
+    fn reset(&mut self) {
+        self.residuals.clear();
+    }
+}
+
+struct SignCombiner;
+
+impl RankCombiner for SignCombiner {
+    fn name(&self) -> &'static str {
+        "sign-gather"
+    }
+
+    fn combine(
+        &mut self,
+        _tensor: usize,
+        _step: u64,
+        n: usize,
+        payloads: &[Payload],
+        compress_s: f64,
+    ) -> RankRound {
+        let mut update = vec![0.0f32; n];
+        let inv = 1.0 / payloads.len() as f32;
+        for p in payloads {
+            let Payload::Sign { scale, bits, n: pn } = p else {
+                panic!("sign combiner got {p:?}")
+            };
+            debug_assert_eq!(*pn, n);
+            for (i, u) in update.iter_mut().enumerate() {
+                let neg = bits[i / 64] >> (i % 64) & 1 == 1;
+                let v = if neg { -*scale } else { *scale };
+                *u += v * inv;
+            }
+        }
+        RankRound {
+            update,
+            record: CommRecord {
+                wire_bytes: n.div_ceil(8) + 4,
+                collective: Collective::AllGather,
+                rounds: 1,
+                sync_rounds: 0,
+                compress_s,
+                data_dependency: false,
+            },
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+// ---- replicated fallback (DGC / PowerSGD / Ok-topk) -----------------------
+
+struct RawCompressor {
+    dep: bool,
+}
+
+impl RankCompressor for RawCompressor {
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        Payload::Dense(grad.to_vec())
+    }
+
+    fn data_dependency(&self) -> bool {
+        self.dep
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Every rank holds an identical replica of the full scheme and feeds it
+/// the gathered raw gradients — deterministic, hence identical state and
+/// bitwise-identical output on every rank and vs the analytic backend.
+struct Replicated {
+    inner: Box<dyn Scheme>,
+}
+
+impl RankCombiner for Replicated {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn combine(
+        &mut self,
+        tensor: usize,
+        step: u64,
+        _n: usize,
+        payloads: &[Payload],
+        _compress_s: f64,
+    ) -> RankRound {
+        let grads: Vec<&[f32]> = payloads
+            .iter()
+            .map(|p| match p {
+                Payload::Dense(g) => g.as_slice(),
+                other => panic!("replicated combiner got {other:?}"),
+            })
+            .collect();
+        let (update, record) = self.inner.round(tensor, step, &grads);
+        RankRound { update, record }
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Drive P rank pairs in lockstep, exactly as the threaded executor
+    /// does across threads.
+    fn lockstep_round(
+        pairs: &mut [(Box<dyn RankCompressor>, Box<dyn RankCombiner>)],
+        tensor: usize,
+        step: u64,
+        grads: &[&[f32]],
+    ) -> Vec<RankRound> {
+        let payloads: Vec<Payload> = pairs
+            .iter_mut()
+            .zip(grads.iter())
+            .map(|((c, _), g)| c.compress(tensor, step, g))
+            .collect();
+        let n = grads[0].len();
+        pairs
+            .iter_mut()
+            .map(|(_, cb)| cb.combine(tensor, step, n, &payloads, 0.0))
+            .collect()
+    }
+
+    /// THE parity guarantee: for every scheme, the per-rank path matches
+    /// the replicated `Scheme::round` bit-for-bit across shapes, steps and
+    /// multiple tensors, and every rank agrees with every other.
+    #[test]
+    fn rank_path_bitwise_matches_scheme_round() {
+        for kind in SchemeKind::evaluation_set() {
+            prop::check(kind.label(), 0xEC5, 6, |rng: &mut Rng| {
+                let workers = 1 + rng.below(4);
+                let n = 16 + rng.below(512);
+                let seed = 0xABCD;
+                let mut scheme = kind.build(workers, seed);
+                let mut pairs: Vec<_> =
+                    (0..workers).map(|_| build_rank_pair(&kind, workers, seed)).collect();
+                for step in 0..6u64 {
+                    for tensor in 0..2usize {
+                        let gs: Vec<Vec<f32>> =
+                            (0..workers).map(|_| prop::vec_f32(rng, n, 1.0)).collect();
+                        let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
+                        let (want, want_rec) = scheme.round(tensor, step, &refs);
+                        let rounds = lockstep_round(&mut pairs, tensor, step, &refs);
+                        for (r, rr) in rounds.iter().enumerate() {
+                            assert_eq!(
+                                rr.update, want,
+                                "{} rank {r} diverged at step {step} tensor {tensor}",
+                                kind.label()
+                            );
+                            assert_eq!(
+                                rr.record.wire_bytes, want_rec.wire_bytes,
+                                "{} wire accounting rank {r}",
+                                kind.label()
+                            );
+                            assert_eq!(rr.record.collective, want_rec.collective);
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn covap_drop_rounds_are_empty_and_flush() {
+        let kind = SchemeKind::Covap { interval: 3, ef: EfScheduler::constant(1.0) };
+        let (mut c, mut cb) = build_rank_pair(&kind, 1, 7);
+        let g = vec![1.0f32; 8];
+        // tensor 0 kept at steps 0 and 3
+        let p0 = c.compress(0, 0, &g);
+        assert!(matches!(p0, Payload::Dense(_)));
+        for step in 1..3 {
+            let p = c.compress(0, step, &g);
+            assert!(matches!(p, Payload::Empty));
+            let r = cb.combine(0, step, 8, &[p], 0.0);
+            assert!(r.update.is_empty());
+            assert_eq!(r.record.wire_bytes, 0);
+        }
+        let p3 = c.compress(0, 3, &g);
+        let r3 = cb.combine(0, 3, 8, &[p3], 0.0);
+        // two dropped rounds of residual flush: 1 + 2 = 3
+        assert_eq!(r3.update, vec![3.0f32; 8]);
+    }
+
+    #[test]
+    fn payload_wire_bytes_match_formats() {
+        assert_eq!(Payload::Empty.wire_bytes(), 0);
+        assert_eq!(Payload::Dense(vec![0.0; 10]).wire_bytes(), 40);
+        assert_eq!(
+            Payload::Sparse { idx: vec![1, 2, 3], val: vec![0.0; 3] }.wire_bytes(),
+            24
+        );
+        assert_eq!(Payload::Half(vec![0; 10]).wire_bytes(), 20);
+        assert_eq!(Payload::Sign { scale: 1.0, bits: vec![0; 2], n: 100 }.wire_bytes(), 17);
+    }
+
+    #[test]
+    fn data_dependency_only_for_oktopk() {
+        for kind in SchemeKind::evaluation_set() {
+            let (c, _) = build_rank_pair(&kind, 2, 1);
+            let want = matches!(kind, SchemeKind::OkTopk { .. });
+            assert_eq!(c.data_dependency(), want, "{}", kind.label());
+        }
+    }
+}

@@ -21,7 +21,7 @@ impl EfSignSgd {
 }
 
 /// Pack the signs of xs into u64 words (1 = negative).
-fn pack_signs(xs: &[f32]) -> Vec<u64> {
+pub(crate) fn pack_signs(xs: &[f32]) -> Vec<u64> {
     let mut bits = vec![0u64; xs.len().div_ceil(64)];
     for (i, &x) in xs.iter().enumerate() {
         if x.is_sign_negative() {

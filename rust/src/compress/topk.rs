@@ -29,13 +29,13 @@ impl TopK {
 }
 
 /// k = max(1, ratio * n)
-fn k_of(ratio: f64, n: usize) -> usize {
+pub(crate) fn k_of(ratio: f64, n: usize) -> usize {
     ((ratio * n as f64).round() as usize).clamp(1, n)
 }
 
 /// |x| threshold such that >= k elements satisfy |x| >= t, via quickselect
 /// on a scratch copy. Returns the k-th largest magnitude.
-fn kth_magnitude(xs: &[f32], k: usize) -> f32 {
+pub(crate) fn kth_magnitude(xs: &[f32], k: usize) -> f32 {
     debug_assert!(k >= 1 && k <= xs.len());
     let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
     let idx = k - 1;
@@ -45,7 +45,7 @@ fn kth_magnitude(xs: &[f32], k: usize) -> f32 {
 
 /// One worker's sparse selection: indices with |acc| >= threshold, capped at
 /// k entries (ties broken by order).
-fn select_sparse(acc: &[f32], threshold: f32, k: usize) -> (Vec<u32>, Vec<f32>) {
+pub(crate) fn select_sparse(acc: &[f32], threshold: f32, k: usize) -> (Vec<u32>, Vec<f32>) {
     let mut idx = Vec::with_capacity(k);
     let mut val = Vec::with_capacity(k);
     for (i, &x) in acc.iter().enumerate() {

@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 use crate::compress::SchemeKind;
 use crate::covap::EfScheduler;
 use crate::network::{ClusterSpec, NetworkModel};
+use crate::sim::Policy;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -17,6 +18,44 @@ use crate::util::json::Json;
 pub enum Optimizer {
     Sgd,
     Adam,
+}
+
+/// Which execution backend runs the DP step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecBackend {
+    /// In-process lockstep workers + the discrete-event timeline simulator
+    /// (the original path; overlap is *predicted*).
+    #[default]
+    Analytic,
+    /// P ranks on real OS threads (compute + comm thread each), ring
+    /// collectives over channels; overlap is *measured*. Requires the
+    /// synthetic model backend (see runtime).
+    Threaded,
+}
+
+impl ExecBackend {
+    pub fn parse(s: &str) -> Option<ExecBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "analytic" | "sim" => Some(ExecBackend::Analytic),
+            "threaded" | "exec" => Some(ExecBackend::Threaded),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecBackend::Analytic => "analytic",
+            ExecBackend::Threaded => "threaded",
+        }
+    }
+}
+
+fn policy_parse(s: &str) -> Option<Policy> {
+    match s.to_ascii_lowercase().as_str() {
+        "overlap" | "ovlp" => Some(Policy::Overlap),
+        "sequential" | "seq" => Some(Policy::Sequential),
+        _ => None,
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -47,6 +86,19 @@ pub struct RunConfig {
     /// ~0.01 puts the small preset's step on a V100-like timescale so the
     /// CCR regime matches the paper's (see EXPERIMENTS.md "Calibration").
     pub compute_scale: f64,
+    /// Analytic (simulated) or threaded (measured) execution.
+    pub backend: ExecBackend,
+    /// Overlap (wait-free backprop) or sequential execution — drives both
+    /// the simulator timeline and the threaded executor's queueing.
+    pub policy: Policy,
+    /// Threaded backend: emulated wire bandwidth in Gbit/s for ring hops
+    /// (0 = move bytes at memcpy speed). Lets a fast in-process ring mimic
+    /// the modeled fabric so measured and simulated breakdowns share a
+    /// regime.
+    pub pace_gbps: f64,
+    /// Synthetic model: per-element compute inflation factor (>= 1). Does
+    /// not change any numeric result, only backward-pass cost.
+    pub synth_work: u32,
 }
 
 impl Default for RunConfig {
@@ -67,6 +119,10 @@ impl Default for RunConfig {
             profile_steps: 0,
             metrics_csv: None,
             compute_scale: 1.0,
+            backend: ExecBackend::Analytic,
+            policy: Policy::Overlap,
+            pace_gbps: 0.0,
+            synth_work: 1,
         }
     }
 }
@@ -128,6 +184,19 @@ impl RunConfig {
         cfg.profile_steps =
             j.get_or("profile_steps", &Json::from(d.profile_steps as usize)).as_usize()? as u64;
         cfg.compute_scale = j.get_or("compute_scale", &Json::from(1.0)).as_f64()?;
+        if let Ok(b) = j.get("backend") {
+            let s = b.as_str()?;
+            cfg.backend = ExecBackend::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}'"))?;
+        }
+        if let Ok(p) = j.get("policy") {
+            let s = p.as_str()?;
+            cfg.policy =
+                policy_parse(s).ok_or_else(|| anyhow::anyhow!("unknown policy '{s}'"))?;
+        }
+        cfg.pace_gbps = j.get_or("pace_gbps", &Json::from(0.0)).as_f64()?;
+        cfg.synth_work =
+            j.get_or("synth_work", &Json::from(1usize)).as_usize()? as u32;
         Ok(cfg)
     }
 
@@ -178,6 +247,16 @@ impl RunConfig {
             self.net.nic_gbps = bw.parse().context("--bandwidth-gbps")?;
         }
         self.compute_scale = a.get_parsed("compute-scale", self.compute_scale)?;
+        if let Some(b) = a.get("backend") {
+            self.backend = ExecBackend::parse(b)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{b}'"))?;
+        }
+        if let Some(p) = a.get("policy") {
+            self.policy =
+                policy_parse(p).ok_or_else(|| anyhow::anyhow!("unknown policy '{p}'"))?;
+        }
+        self.pace_gbps = a.get_parsed("pace-gbps", self.pace_gbps)?;
+        self.synth_work = a.get_parsed("synth-work", self.synth_work)?;
         Ok(())
     }
 
@@ -195,6 +274,12 @@ impl RunConfig {
             if *interval == 0 {
                 bail!("covap interval must be >= 1");
             }
+        }
+        if self.synth_work == 0 {
+            bail!("synth_work must be >= 1");
+        }
+        if self.pace_gbps < 0.0 || !self.pace_gbps.is_finite() {
+            bail!("pace_gbps must be finite and >= 0, got {}", self.pace_gbps);
         }
         Ok(())
     }
@@ -300,6 +385,33 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.apply_args(&args).unwrap();
         assert!(matches!(cfg.scheme, SchemeKind::Covap { interval: 5, .. }));
+    }
+
+    #[test]
+    fn backend_and_policy_flags_parse() {
+        let args = Args::parse(
+            ["--backend", "threaded", "--policy", "seq", "--pace-gbps", "2.5",
+             "--synth-work", "4"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.backend, ExecBackend::Threaded);
+        assert_eq!(cfg.policy, Policy::Sequential);
+        assert_eq!(cfg.pace_gbps, 2.5);
+        assert_eq!(cfg.synth_work, 4);
+        cfg.validate().unwrap();
+
+        let j = Json::parse(r#"{"backend": "analytic", "policy": "overlap"}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.backend, ExecBackend::Analytic);
+        assert_eq!(cfg.policy, Policy::Overlap);
+
+        let mut bad = RunConfig::default();
+        bad.synth_work = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! A reusable sense-reversing barrier with wait-time measurement.
+//!
+//! `std::sync::Barrier` works, but rendezvous *wait time* is exactly the
+//! quantity the distributed profiler cares about (fast ranks blocking for
+//! stragglers inflate naive communication measurements, §III.B), so this
+//! barrier returns how long each rank waited — the executor feeds that
+//! skew into its measured timeline.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct State {
+    count: usize,
+    generation: u64,
+    aborted: bool,
+}
+
+/// Reusable barrier for `parties` threads.
+pub struct Barrier {
+    parties: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Barrier {
+    pub fn new(parties: usize) -> Barrier {
+        assert!(parties >= 1);
+        Barrier {
+            parties,
+            state: Mutex::new(State { count: 0, generation: 0, aborted: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.parties
+    }
+
+    /// Block until all parties arrive; returns this thread's wait time.
+    /// The last arrival waits ~zero — the spread over ranks is the skew.
+    /// Returns immediately once the barrier is [`abort`](Barrier::abort)ed.
+    pub fn wait(&self) -> Duration {
+        let t0 = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        if st.aborted {
+            return t0.elapsed();
+        }
+        let gen = st.generation;
+        st.count += 1;
+        if st.count == self.parties {
+            st.count = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return t0.elapsed();
+        }
+        while st.generation == gen && !st.aborted {
+            st = self.cv.wait(st).unwrap();
+        }
+        t0.elapsed()
+    }
+
+    /// Poison the barrier: release every current waiter and make all
+    /// future waits return immediately. Used during executor teardown so
+    /// a dead rank can never strand its peers in the rendezvous — the
+    /// released ranks then fail fast on their broken channels instead of
+    /// hanging the process.
+    pub fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.aborted = true;
+        st.count = 0;
+        st.generation = st.generation.wrapping_add(1);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn releases_all_parties() {
+        let b = Arc::new(Barrier::new(4));
+        let hits = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let b = b.clone();
+                let hits = hits.clone();
+                s.spawn(move || {
+                    b.wait();
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn is_reusable_across_generations() {
+        let b = Arc::new(Barrier::new(3));
+        let sum = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let b = b.clone();
+                let sum = sum.clone();
+                s.spawn(move || {
+                    for round in 0..10usize {
+                        b.wait();
+                        sum.fetch_add(round, Ordering::SeqCst);
+                        b.wait(); // separate the rounds
+                    }
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 3 * (0..10).sum::<usize>());
+    }
+
+    #[test]
+    fn straggler_wait_is_measured() {
+        let b = Arc::new(Barrier::new(2));
+        let waits = std::thread::scope(|s| {
+            let b1 = b.clone();
+            let fast = s.spawn(move || b1.wait());
+            let b2 = b.clone();
+            let slow = s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                b2.wait()
+            });
+            (fast.join().unwrap(), slow.join().unwrap())
+        });
+        assert!(waits.0 >= Duration::from_millis(20), "fast rank waited {:?}", waits.0);
+        assert!(waits.1 < Duration::from_millis(20), "slow rank waited {:?}", waits.1);
+    }
+
+    #[test]
+    fn abort_releases_waiters_and_disables_barrier() {
+        let b = Arc::new(Barrier::new(2));
+        let waiter = {
+            let b = b.clone();
+            std::thread::spawn(move || b.wait())
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        b.abort();
+        waiter.join().expect("waiter released, not stuck");
+        // post-abort waits return immediately even with 2 parties
+        assert!(b.wait() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn single_party_never_blocks() {
+        let b = Barrier::new(1);
+        for _ in 0..5 {
+            assert!(b.wait() < Duration::from_millis(5));
+        }
+    }
+}

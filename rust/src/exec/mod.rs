@@ -1,0 +1,342 @@
+//! `exec` — the threaded rank executor: P ranks on real OS threads, each
+//! with its own gradient buffer, data shard and per-rank error-feedback
+//! state, exchanging compressed payloads over lock-free per-edge channels
+//! with the same chunk schedule as the in-place simulator path.
+//!
+//! This subsystem turns the repo's *simulated* overlap claims into
+//! *measured* ones: the analytic backend predicts a step's
+//! computation/compression/exposed-communication breakdown from the α–β
+//! network model, the threaded backend measures the same quantities from
+//! real two-thread-per-rank execution, and [`validate`] + the
+//! `exec_vs_sim` bench put the two side by side. Both backends are
+//! bitwise-identical in their numerics (same gradients, same per-rank
+//! compression arithmetic, same combine order — enforced live via
+//! checksum comparison across ranks and by the parity tests), so the only
+//! thing that differs is *time*.
+//!
+//! Module map:
+//! * [`ring`] — threaded ring collectives over per-edge channels
+//!   (bitwise-validated against `comm::ring_allreduce`) + wire pacing.
+//! * [`rank`] — the compute/comm thread pair of one rank.
+//! * [`barrier`] — reusable sense-reversing barrier with skew measurement.
+//! * [`timeline`] — measured spans -> breakdowns.
+//! * [`validate`] — sim-vs-exec cross-validation harness.
+
+pub mod barrier;
+pub mod rank;
+pub mod ring;
+pub mod timeline;
+pub mod validate;
+
+pub use barrier::Barrier;
+pub use rank::{fnv1a_f32, Cmd, RankStepResult, StepSpec};
+pub use ring::{allgather_payloads, make_links, ring_allreduce_threaded, Pacer, RingLink};
+pub use timeline::{aggregate, breakdown, MeasuredBreakdown, RankTimeline, Span, SpanKind};
+pub use validate::{compare_backends, BackendComparison};
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::compress::{CommRecord, SchemeKind};
+use crate::coordinator::CommTensor;
+use crate::data::DataShard;
+use crate::runtime::RankModel;
+use crate::sim::Policy;
+
+/// One step's outputs from the threaded executor.
+pub struct ExecStepOutput {
+    /// Per-rank losses (rank-major).
+    pub losses: Vec<f32>,
+    /// Per-rank gradient-computation wall times.
+    pub comp_walls: Vec<f64>,
+    /// Per-tensor accounting records (identical across ranks; rank 0's).
+    pub records: Vec<CommRecord>,
+    /// The dense reduced update (identical across ranks; rank 0's copy).
+    pub reduced: Vec<f32>,
+    /// Aggregate measured breakdown (mean busy times, worst-rank wall).
+    pub measured: MeasuredBreakdown,
+    pub per_rank: Vec<MeasuredBreakdown>,
+    pub timelines: Vec<RankTimeline>,
+}
+
+/// P persistent rank workers (2P OS threads).
+pub struct ThreadedExec {
+    world: usize,
+    cmd_tx: Vec<Sender<Cmd>>,
+    res_rx: Receiver<RankStepResult>,
+    barrier: Arc<Barrier>,
+    computes: Vec<JoinHandle<()>>,
+    comms: Vec<JoinHandle<()>>,
+}
+
+impl ThreadedExec {
+    /// Spawn the rank fleet. `models` and `shards` are rank-major; the
+    /// scheme pair is built per rank from identical `(kind, world, seed)`
+    /// so all replicas agree.
+    pub fn new(
+        kind: SchemeKind,
+        seed: u64,
+        models: Vec<Box<dyn RankModel>>,
+        shards: Vec<DataShard>,
+        pacer: Option<Pacer>,
+    ) -> ThreadedExec {
+        let world = models.len();
+        assert!(world >= 1);
+        assert_eq!(shards.len(), world);
+        let barrier = Arc::new(Barrier::new(world));
+        let links = make_links(world);
+        let (res_tx, res_rx) = channel::<RankStepResult>();
+        let mut cmd_tx = Vec::with_capacity(world);
+        let mut computes = Vec::with_capacity(world);
+        let mut comms = Vec::with_capacity(world);
+        let mut ranks: Vec<(Box<dyn RankModel>, DataShard, RingLink)> = models
+            .into_iter()
+            .zip(shards)
+            .zip(links)
+            .map(|((m, s), l)| (m, s, l))
+            .collect();
+        for (r, (model, shard, link)) in ranks.drain(..).enumerate() {
+            let (tx, rx) = channel::<Cmd>();
+            cmd_tx.push(tx);
+            let compute = rank::ComputeCtx {
+                rank: r,
+                workers: world,
+                seed,
+                kind: kind.clone(),
+                model,
+                shard,
+                cmd_rx: rx,
+                barrier: barrier.clone(),
+            };
+            let comm = rank::CommCtx {
+                rank: r,
+                workers: world,
+                seed,
+                kind: kind.clone(),
+                link,
+                pacer,
+                res_tx: res_tx.clone(),
+            };
+            let (th, ch) = rank::spawn_rank(compute, comm);
+            computes.push(th);
+            comms.push(ch);
+        }
+        ThreadedExec { world, cmd_tx, res_rx, barrier, computes, comms }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Swap every rank's scheme (adaptive-interval selection).
+    pub fn reconfigure(&self, kind: &SchemeKind) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Reconfigure(kind.clone()));
+        }
+    }
+
+    /// Run one synchronous step across all ranks.
+    pub fn step(
+        &mut self,
+        step: u64,
+        params: Arc<Vec<f32>>,
+        tensors: Arc<Vec<CommTensor>>,
+        policy: Policy,
+    ) -> Result<ExecStepOutput> {
+        let spec = StepSpec { step, params, tensors, policy, epoch: Instant::now() };
+        for tx in &self.cmd_tx {
+            if tx.send(Cmd::Step(spec.clone())).is_err() {
+                // A rank died. Ranks that already received the step would
+                // wait forever in the P-party rendezvous for the dead one;
+                // poisoning the barrier releases them onto their broken
+                // channels, where they fail fast instead of hanging Drop.
+                self.barrier.abort();
+                anyhow::bail!("rank thread died before step {step}");
+            }
+        }
+        let mut results: Vec<Option<RankStepResult>> =
+            (0..self.world).map(|_| None).collect();
+        for _ in 0..self.world {
+            let r = match self.res_rx.recv() {
+                Ok(r) => r,
+                Err(_) => {
+                    self.barrier.abort();
+                    anyhow::bail!("rank threads died during step {step}");
+                }
+            };
+            let idx = r.rank;
+            ensure!(results[idx].is_none(), "duplicate result from rank {idx}");
+            results[idx] = Some(r);
+        }
+        let results: Vec<RankStepResult> =
+            results.into_iter().map(|o| o.expect("all ranks reported")).collect();
+
+        // The live parity invariant: every rank must hold bit-identical
+        // reduced gradients.
+        let c0 = results[0].checksum;
+        for r in &results {
+            ensure!(
+                r.checksum == c0,
+                "rank {} reduced-gradient checksum diverged at step {step} \
+                 ({:#x} vs {:#x})",
+                r.rank,
+                r.checksum,
+                c0
+            );
+        }
+
+        let losses: Vec<f32> = results.iter().map(|r| r.loss).collect();
+        let comp_walls: Vec<f64> = results.iter().map(|r| r.comp_wall_s).collect();
+        let timelines: Vec<RankTimeline> =
+            results.iter().map(|r| r.timeline.clone()).collect();
+        let per_rank: Vec<MeasuredBreakdown> = timelines.iter().map(breakdown).collect();
+        let measured = aggregate(&per_rank);
+        let mut it = results.into_iter();
+        let first = it.next().expect("world >= 1");
+        let reduced = first.reduced.expect("rank 0 ships the reduced update");
+        let records = first.records;
+        Ok(ExecStepOutput {
+            losses,
+            comp_walls,
+            records,
+            reduced,
+            measured,
+            per_rank,
+            timelines,
+        })
+    }
+}
+
+impl Drop for ThreadedExec {
+    fn drop(&mut self) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        // release any rank stranded in the rendezvous by a dead peer
+        // (no-op when all ranks are idle at their command queues)
+        self.barrier.abort();
+        for h in self.computes.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.comms.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticCorpus;
+    use crate::runtime::{synthetic, SyntheticModel, SyntheticSpec};
+
+    fn setup(world: usize, kind: &SchemeKind, seed: u64) -> (ThreadedExec, usize) {
+        let n = 400usize;
+        let spec = SyntheticSpec::new(0xBEEF, 1);
+        let models: Vec<Box<dyn RankModel>> = (0..world)
+            .map(|_| Box::new(SyntheticModel::new(spec)) as Box<dyn RankModel>)
+            .collect();
+        let corpus = SyntheticCorpus::new(64);
+        let shards: Vec<DataShard> =
+            (0..world).map(|w| DataShard::new(corpus.clone(), seed, w, 2, 9)).collect();
+        (ThreadedExec::new(kind.clone(), seed, models, shards, None), n)
+    }
+
+    fn tensors_of(n: usize) -> Arc<Vec<CommTensor>> {
+        Arc::new(vec![
+            CommTensor { offset: 0, numel: n / 3, bucket: 0 },
+            CommTensor { offset: n / 3, numel: n - n / 3, bucket: 1 },
+        ])
+    }
+
+    /// The executor's reduced update must equal an in-process lockstep
+    /// replay: same shards, same models, same scheme arithmetic.
+    #[test]
+    fn threaded_step_matches_lockstep_replay() {
+        for kind in [
+            SchemeKind::Baseline,
+            SchemeKind::Covap { interval: 2, ef: crate::covap::EfScheduler::constant(1.0) },
+            SchemeKind::TopK { ratio: 0.05 },
+        ] {
+            let world = 3;
+            let seed = 11u64;
+            let (mut exec, n) = setup(world, &kind, seed);
+            let params = Arc::new(vec![0.05f32; n]);
+            let tensors = tensors_of(n);
+
+            // lockstep replay of the same streams
+            let spec = SyntheticSpec::new(0xBEEF, 1);
+            let corpus = SyntheticCorpus::new(64);
+            let mut shards: Vec<DataShard> =
+                (0..world).map(|w| DataShard::new(corpus.clone(), seed, w, 2, 9)).collect();
+            let mut scheme = kind.build(world, seed);
+
+            for step in 0..3u64 {
+                let out = exec
+                    .step(step, params.clone(), tensors.clone(), Policy::Overlap)
+                    .unwrap();
+
+                let grads: Vec<Vec<f32>> = shards
+                    .iter_mut()
+                    .map(|sh| {
+                        let batch = sh.next_batch();
+                        let mut m = SyntheticModel::new(spec);
+                        m.fwd_bwd(&params, &batch).1
+                    })
+                    .collect();
+                let mut want = vec![0.0f32; n];
+                for (idx, t) in tensors.iter().enumerate() {
+                    let refs: Vec<&[f32]> = grads
+                        .iter()
+                        .map(|g| &g[t.offset..t.offset + t.numel])
+                        .collect();
+                    let (u, _) = scheme.round(idx, step, &refs);
+                    if !u.is_empty() {
+                        want[t.offset..t.offset + t.numel].copy_from_slice(&u);
+                    }
+                }
+                assert_eq!(out.reduced, want, "{} step {step}", kind.label());
+                assert_eq!(out.losses.len(), world);
+                assert!(out.measured.wall_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_policy_also_agrees_bitwise() {
+        let kind = SchemeKind::Fp16;
+        let (mut exec, n) = setup(4, &kind, 3);
+        let params = Arc::new(vec![0.01f32; n]);
+        let tensors = tensors_of(n);
+        let a = exec
+            .step(0, params.clone(), tensors.clone(), Policy::Sequential)
+            .unwrap();
+        // same step inputs, fresh executor, overlap policy: same bits
+        let (mut exec2, _) = setup(4, &kind, 3);
+        let b = exec2.step(0, params, tensors, Policy::Overlap).unwrap();
+        assert_eq!(a.reduced, b.reduced, "policy must not change numerics");
+    }
+
+    #[test]
+    fn reconfigure_swaps_scheme() {
+        let (mut exec, n) = setup(2, &SchemeKind::Baseline, 5);
+        let params = Arc::new(vec![0.0f32; n]);
+        let tensors = tensors_of(n);
+        let dense = exec
+            .step(0, params.clone(), tensors.clone(), Policy::Overlap)
+            .unwrap();
+        assert!(dense.records.iter().all(|r| r.wire_bytes > 0));
+        exec.reconfigure(&SchemeKind::Covap {
+            interval: 2,
+            ef: crate::covap::EfScheduler::constant(1.0),
+        });
+        let covap = exec.step(1, params, tensors, Policy::Overlap).unwrap();
+        // with I=2 one of the two tensors is dropped at any step
+        assert!(covap.records.iter().any(|r| r.wire_bytes == 0));
+        let _ = synthetic::sgd_step(&covap.reduced, &covap.reduced, 0.0);
+    }
+}

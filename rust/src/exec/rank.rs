@@ -1,0 +1,317 @@
+//! The per-rank worker: one OS *compute* thread (data shard -> backward
+//! pass -> per-tensor compression, wait-free) feeding one OS *comm* thread
+//! (payload exchange over the ring + decode into the dense update) through
+//! a FIFO bucket queue — the executable form of the paper's Fig. 1b/1d
+//! two-stream picture.
+//!
+//! Under `Policy::Overlap` the compute thread enqueues each tensor the
+//! moment its gradient+payload is ready, so communication of early tensors
+//! genuinely overlaps computation of later ones; under `Policy::Sequential`
+//! it holds everything back until the full backward pass finished (Fig.
+//! 1a/1c). A scheme with `data_dependency` (Ok-topk) blocks the compute
+//! thread on the tensor's combine completion — the measured form of the
+//! simulator's dependency stall.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::compress::rank::{build_rank_pair, Payload, RankCombiner, RankCompressor};
+use crate::compress::{CommRecord, SchemeKind};
+use crate::coordinator::CommTensor;
+use crate::data::DataShard;
+use crate::exec::barrier::Barrier;
+use crate::exec::ring::{allgather_payloads, Pacer, RingLink};
+use crate::exec::timeline::{RankTimeline, Span, SpanKind};
+use crate::runtime::RankModel;
+use crate::sim::Policy;
+
+/// Commands from the engine to a rank's compute thread.
+pub enum Cmd {
+    Step(StepSpec),
+    /// Swap the compression scheme (adaptive-interval reshard).
+    Reconfigure(SchemeKind),
+    Shutdown,
+}
+
+/// One step's shared inputs (cheap to clone: Arcs + scalars).
+#[derive(Clone)]
+pub struct StepSpec {
+    pub step: u64,
+    pub params: Arc<Vec<f32>>,
+    pub tensors: Arc<Vec<CommTensor>>,
+    pub policy: Policy,
+    /// Shared time origin for all ranks' spans.
+    pub epoch: Instant,
+}
+
+/// What a rank reports back after one step.
+pub struct RankStepResult {
+    pub rank: usize,
+    pub loss: f32,
+    /// Gradient-computation wall time only (the analytic engine's
+    /// `comp_walls` analogue, feeding the simulator + profiler).
+    pub comp_wall_s: f64,
+    /// Per-tensor accounting records (identical across ranks).
+    pub records: Vec<CommRecord>,
+    /// FNV-1a over the reduced update's bit pattern — the engine checks
+    /// every rank agrees (the bitwise-parity invariant, enforced live).
+    pub checksum: u64,
+    /// The dense reduced update; shipped by rank 0 only.
+    pub reduced: Option<Vec<f32>>,
+    pub timeline: RankTimeline,
+}
+
+/// Queue items from a rank's compute thread to its comm thread.
+enum Work {
+    Begin { step: u64, epoch: Instant, param_len: usize },
+    Tensor { idx: usize, offset: usize, numel: usize, payload: Payload, compress_s: f64, dep: bool },
+    Finish { loss: f32, comp_wall_s: f64, spans: Vec<Span>, barrier_wait_s: f64 },
+    Reconfig(SchemeKind),
+    Stop,
+}
+
+pub(crate) struct ComputeCtx {
+    pub rank: usize,
+    pub workers: usize,
+    pub seed: u64,
+    pub kind: SchemeKind,
+    pub model: Box<dyn RankModel>,
+    pub shard: DataShard,
+    pub cmd_rx: Receiver<Cmd>,
+    pub barrier: Arc<Barrier>,
+}
+
+pub(crate) struct CommCtx {
+    pub rank: usize,
+    pub workers: usize,
+    pub seed: u64,
+    pub kind: SchemeKind,
+    pub link: RingLink,
+    pub pacer: Option<Pacer>,
+    pub res_tx: Sender<RankStepResult>,
+}
+
+/// Spawn one rank: returns (work queue sender for internal use is hidden;
+/// the engine talks via `Cmd`). Called by `ThreadedExec`.
+pub(crate) fn spawn_rank(
+    compute: ComputeCtx,
+    comm: CommCtx,
+) -> (std::thread::JoinHandle<()>, std::thread::JoinHandle<()>) {
+    let (work_tx, work_rx) = std::sync::mpsc::channel::<Work>();
+    let (dep_tx, dep_rx) = std::sync::mpsc::channel::<usize>();
+    let ch = std::thread::Builder::new()
+        .name(format!("covap-comm-{}", comm.rank))
+        .spawn(move || comm_main(comm, work_rx, dep_tx))
+        .expect("spawn comm thread");
+    let th = std::thread::Builder::new()
+        .name(format!("covap-rank-{}", compute.rank))
+        .spawn(move || compute_main(compute, work_tx, dep_rx))
+        .expect("spawn compute thread");
+    (th, ch)
+}
+
+fn compute_main(mut ctx: ComputeCtx, work_tx: Sender<Work>, dep_rx: Receiver<usize>) {
+    let (mut compressor, _) = build_rank_pair(&ctx.kind, ctx.workers, ctx.seed);
+    let mut gbuf: Vec<f32> = Vec::new();
+    while let Ok(cmd) = ctx.cmd_rx.recv() {
+        match cmd {
+            Cmd::Shutdown => {
+                let _ = work_tx.send(Work::Stop);
+                return;
+            }
+            Cmd::Reconfigure(kind) => {
+                let (c, _) = build_rank_pair(&kind, ctx.workers, ctx.seed);
+                compressor = c;
+                ctx.kind = kind.clone();
+                let _ = work_tx.send(Work::Reconfig(kind));
+            }
+            Cmd::Step(spec) => {
+                run_step(&mut ctx, &mut *compressor, &mut gbuf, &spec, &work_tx, &dep_rx);
+            }
+        }
+    }
+    // engine dropped: stop the comm thread too
+    let _ = work_tx.send(Work::Stop);
+}
+
+fn run_step(
+    ctx: &mut ComputeCtx,
+    compressor: &mut dyn RankCompressor,
+    gbuf: &mut Vec<f32>,
+    spec: &StepSpec,
+    work_tx: &Sender<Work>,
+    dep_rx: &Receiver<usize>,
+) {
+    let n = spec.params.len();
+    gbuf.clear();
+    gbuf.resize(n, 0.0);
+    let barrier_wait = ctx.barrier.wait().as_secs_f64();
+    work_tx
+        .send(Work::Begin { step: spec.step, epoch: spec.epoch, param_len: n })
+        .expect("comm thread alive");
+
+    let batch = ctx.shard.next_batch();
+    ctx.model.begin_step(&batch);
+
+    let mut spans: Vec<Span> = Vec::with_capacity(spec.tensors.len() * 2);
+    let mut comp_wall = 0.0f64;
+    let mut pending: Vec<Work> = Vec::new();
+    let overlap = spec.policy == Policy::Overlap;
+
+    for (idx, t) in spec.tensors.iter().enumerate() {
+        let t0 = spec.epoch.elapsed().as_secs_f64();
+        ctx.model.grad_range(&spec.params, t.offset, &mut gbuf[t.offset..t.offset + t.numel]);
+        let t1 = spec.epoch.elapsed().as_secs_f64();
+        let payload =
+            compressor.compress(idx, spec.step, &gbuf[t.offset..t.offset + t.numel]);
+        let t2 = spec.epoch.elapsed().as_secs_f64();
+        comp_wall += t1 - t0;
+        spans.push(Span { kind: SpanKind::Compute, tensor: idx, start_s: t0, end_s: t1 });
+        spans.push(Span { kind: SpanKind::Compress, tensor: idx, start_s: t1, end_s: t2 });
+
+        let dep = compressor.data_dependency() && overlap;
+        let item = Work::Tensor {
+            idx,
+            offset: t.offset,
+            numel: t.numel,
+            payload,
+            compress_s: t2 - t1,
+            dep,
+        };
+        if overlap {
+            work_tx.send(item).expect("comm thread alive");
+            if dep {
+                // synchronous collective: stall the backward pass until the
+                // comm thread confirms this tensor completed.
+                let done = dep_rx.recv().expect("comm thread alive");
+                debug_assert_eq!(done, idx);
+                let t3 = spec.epoch.elapsed().as_secs_f64();
+                spans.push(Span {
+                    kind: SpanKind::Compute,
+                    tensor: idx,
+                    start_s: t3,
+                    end_s: t3,
+                });
+            }
+        } else {
+            pending.push(item);
+        }
+    }
+    let loss = ctx.model.end_step(n);
+    // Sequential: communication starts only now (Fig. 1a/1c).
+    for item in pending {
+        work_tx.send(item).expect("comm thread alive");
+    }
+    work_tx
+        .send(Work::Finish { loss, comp_wall_s: comp_wall, spans, barrier_wait_s: barrier_wait })
+        .expect("comm thread alive");
+}
+
+fn comm_main(mut ctx: CommCtx, work_rx: Receiver<Work>, dep_tx: Sender<usize>) {
+    let (_, mut combiner) = build_rank_pair(&ctx.kind, ctx.workers, ctx.seed);
+    // per-step state
+    let mut step = 0u64;
+    let mut epoch = Instant::now();
+    let mut reduced: Vec<f32> = Vec::new();
+    let mut records: Vec<CommRecord> = Vec::new();
+    let mut comm_spans: Vec<Span> = Vec::new();
+    let mut moved = 0usize;
+
+    while let Ok(work) = work_rx.recv() {
+        match work {
+            Work::Stop => return,
+            Work::Reconfig(kind) => {
+                let (_, cb) = build_rank_pair(&kind, ctx.workers, ctx.seed);
+                combiner = cb;
+                ctx.kind = kind;
+            }
+            Work::Begin { step: s, epoch: e, param_len } => {
+                step = s;
+                epoch = e;
+                reduced.clear();
+                reduced.resize(param_len, 0.0);
+                records.clear();
+                comm_spans.clear();
+                moved = 0;
+            }
+            Work::Tensor { idx, offset, numel, payload, compress_s, dep } => {
+                let c0 = epoch.elapsed().as_secs_f64();
+                let (gathered, sent) = allgather_payloads(
+                    ctx.rank,
+                    ctx.workers,
+                    payload,
+                    &ctx.link,
+                    ctx.pacer.as_ref(),
+                );
+                let rr = combiner.combine(idx, step, numel, &gathered, compress_s);
+                if !rr.update.is_empty() {
+                    reduced[offset..offset + numel].copy_from_slice(&rr.update);
+                }
+                records.push(rr.record);
+                moved += sent;
+                let c1 = epoch.elapsed().as_secs_f64();
+                comm_spans.push(Span {
+                    kind: SpanKind::Comm,
+                    tensor: idx,
+                    start_s: c0,
+                    end_s: c1,
+                });
+                if dep {
+                    let _ = dep_tx.send(idx);
+                }
+            }
+            Work::Finish { loss, comp_wall_s, spans, barrier_wait_s } => {
+                let mut all_spans = spans;
+                all_spans.extend(comm_spans.iter().copied());
+                let timeline = RankTimeline {
+                    rank: ctx.rank,
+                    spans: all_spans,
+                    moved_bytes: moved,
+                    barrier_wait_s,
+                };
+                let checksum = fnv1a_f32(&reduced);
+                let result = RankStepResult {
+                    rank: ctx.rank,
+                    loss,
+                    comp_wall_s,
+                    records: std::mem::take(&mut records),
+                    checksum,
+                    reduced: if ctx.rank == 0 {
+                        Some(std::mem::take(&mut reduced))
+                    } else {
+                        None
+                    },
+                    timeline,
+                };
+                if ctx.res_tx.send(result).is_err() {
+                    return; // engine gone
+                }
+            }
+        }
+    }
+}
+
+/// FNV-1a over the f32 bit patterns — cheap bitwise fingerprint.
+pub fn fnv1a_f32(xs: &[f32]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_distinguishes_bit_patterns() {
+        assert_ne!(fnv1a_f32(&[0.0]), fnv1a_f32(&[-0.0]), "must see sign bits");
+        assert_eq!(fnv1a_f32(&[1.0, 2.0]), fnv1a_f32(&[1.0, 2.0]));
+        assert_ne!(fnv1a_f32(&[1.0, 2.0]), fnv1a_f32(&[2.0, 1.0]));
+    }
+}

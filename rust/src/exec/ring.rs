@@ -1,0 +1,312 @@
+//! Threaded ring collectives over per-edge FIFO channels.
+//!
+//! Each directed ring edge `r -> (r+1) % P` is one mpsc channel; a rank's
+//! [`RingLink`] bundles its outgoing sender and incoming receiver. The
+//! dense allreduce follows [`crate::comm::RingSchedule`] chunk-for-chunk —
+//! the same schedule the in-place [`crate::comm::ring_allreduce`] walks —
+//! so the two are **bitwise identical** (property-tested below): per chunk
+//! the sum is the same sequential chain, only executed by P real threads.
+//!
+//! [`allgather_payloads`] is the object-granular rotation used for
+//! compressed payload exchange (worker-specific sparse formats are not
+//! summable in-network), and [`Pacer`] optionally throttles every hop to a
+//! modeled wire bandwidth + latency so measured timelines can emulate a
+//! slow fabric on a fast testbed.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use crate::comm::RingSchedule;
+use crate::compress::Payload;
+
+/// One frame on a ring edge.
+pub enum Frame {
+    /// A chunk of a dense f32 collective.
+    Chunk(Vec<f32>),
+    /// A compressed payload rotation hop.
+    Pay(Payload),
+}
+
+/// One rank's pair of ring-edge endpoints.
+pub struct RingLink {
+    /// To rank (r + 1) % P.
+    pub tx: Sender<Frame>,
+    /// From rank (r - 1 + P) % P.
+    pub rx: Receiver<Frame>,
+}
+
+/// Build the P directed edges; element r is rank r's link.
+pub fn make_links(p: usize) -> Vec<RingLink> {
+    assert!(p >= 1);
+    let mut txs = Vec::with_capacity(p);
+    let mut rxs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel::<Frame>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    // rank r sends on edge r (into r+1) and receives on edge r-1.
+    rxs.rotate_right(1);
+    txs.into_iter()
+        .zip(rxs)
+        .map(|(tx, rx)| RingLink { tx, rx })
+        .collect()
+}
+
+/// Emulated wire pacing: every hop of `bytes` costs
+/// `bytes / bytes_per_s + latency_s` of sleep on the sending side.
+#[derive(Debug, Clone, Copy)]
+pub struct Pacer {
+    pub bytes_per_s: f64,
+    pub latency_s: f64,
+}
+
+impl Pacer {
+    /// Derive from a NIC line rate (Gbit/s) at the given efficiency.
+    pub fn from_gbps(gbps: f64, efficiency: f64, latency_s: f64) -> Pacer {
+        Pacer { bytes_per_s: (gbps * 1e9 / 8.0 * efficiency).max(1.0), latency_s }
+    }
+
+    pub fn pace(&self, bytes: usize) {
+        let s = bytes as f64 / self.bytes_per_s + self.latency_s;
+        if s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(s));
+        }
+    }
+}
+
+fn recv_chunk(link: &RingLink) -> Vec<f32> {
+    match link.rx.recv() {
+        Ok(Frame::Chunk(v)) => v,
+        Ok(Frame::Pay(_)) => panic!("protocol error: expected Chunk, got Payload"),
+        Err(_) => panic!("ring peer disconnected mid-collective"),
+    }
+}
+
+fn recv_payload(link: &RingLink) -> Payload {
+    match link.rx.recv() {
+        Ok(Frame::Pay(p)) => p,
+        Ok(Frame::Chunk(_)) => panic!("protocol error: expected Payload, got Chunk"),
+        Err(_) => panic!("ring peer disconnected mid-collective"),
+    }
+}
+
+/// Chunked ring AllReduce (sum), threaded: call from every rank's comm
+/// thread with its own buffer. Returns the bytes this rank sent.
+///
+/// Bitwise-identical to [`crate::comm::ring_allreduce`]: same
+/// [`RingSchedule`], same `own += incoming` accumulation order per chunk.
+pub fn ring_allreduce_threaded(
+    rank: usize,
+    world: usize,
+    buf: &mut [f32],
+    link: &RingLink,
+    pacer: Option<&Pacer>,
+) -> usize {
+    let n = buf.len();
+    if world <= 1 || n == 0 {
+        return 0;
+    }
+    let sched = RingSchedule::new(world, n);
+    let prev = (rank + world - 1) % world;
+    let mut sent = 0usize;
+
+    // Reduce-scatter.
+    for s in 0..world - 1 {
+        let c_out = sched.rs_chunk(rank, s);
+        let out: Vec<f32> = buf[sched.chunk(c_out)].to_vec();
+        let bytes = out.len() * 4;
+        if let Some(p) = pacer {
+            p.pace(bytes);
+        }
+        sent += bytes;
+        link.tx.send(Frame::Chunk(out)).expect("ring send");
+        let inc = recv_chunk(link);
+        let c_in = sched.rs_chunk(prev, s);
+        let range = sched.chunk(c_in);
+        debug_assert_eq!(inc.len(), range.len());
+        for (d, sv) in buf[range].iter_mut().zip(inc.iter()) {
+            *d += sv;
+        }
+    }
+    // Allgather.
+    for s in 0..world - 1 {
+        let c_out = sched.ag_chunk(rank, s);
+        let out: Vec<f32> = buf[sched.chunk(c_out)].to_vec();
+        let bytes = out.len() * 4;
+        if let Some(p) = pacer {
+            p.pace(bytes);
+        }
+        sent += bytes;
+        link.tx.send(Frame::Chunk(out)).expect("ring send");
+        let inc = recv_chunk(link);
+        let c_in = sched.ag_chunk(prev, s);
+        let range = sched.chunk(c_in);
+        debug_assert_eq!(inc.len(), range.len());
+        buf[range].copy_from_slice(&inc);
+    }
+    sent
+}
+
+/// Object-granular ring AllGather: every rank contributes one payload and
+/// receives the rank-major vector of all payloads after P-1 rotation hops.
+/// Returns (payloads rank-major, bytes this rank sent).
+pub fn allgather_payloads(
+    rank: usize,
+    world: usize,
+    mine: Payload,
+    link: &RingLink,
+    pacer: Option<&Pacer>,
+) -> (Vec<Payload>, usize) {
+    if world <= 1 {
+        return (vec![mine], 0);
+    }
+    let mut slots: Vec<Option<Payload>> = (0..world).map(|_| None).collect();
+    slots[rank] = Some(mine);
+    let prev = (rank + world - 1) % world;
+    let mut sent = 0usize;
+    for s in 0..world - 1 {
+        let c_out = (rank + world - s) % world;
+        let out = slots[c_out].clone().expect("rotation invariant");
+        let bytes = out.wire_bytes();
+        if let Some(p) = pacer {
+            p.pace(bytes);
+        }
+        sent += bytes;
+        link.tx.send(Frame::Pay(out)).expect("ring send");
+        let inc = recv_payload(link);
+        let c_in = (prev + world - s) % world;
+        debug_assert!(slots[c_in].is_none() || c_in == rank);
+        slots[c_in] = Some(inc);
+    }
+    let gathered = slots
+        .into_iter()
+        .map(|o| o.expect("all payloads arrive after P-1 hops"))
+        .collect();
+    (gathered, sent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ring_allreduce;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Run the threaded allreduce across P scoped threads.
+    fn run_threaded(bufs: &[Vec<f32>]) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let p = bufs.len();
+        let links = make_links(p);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = links
+                .into_iter()
+                .enumerate()
+                .map(|(r, link)| {
+                    let mut buf = bufs[r].clone();
+                    s.spawn(move || {
+                        let sent = ring_allreduce_threaded(r, p, &mut buf, &link, None);
+                        (buf, sent)
+                    })
+                })
+                .collect();
+            let mut out = Vec::with_capacity(p);
+            let mut sent = Vec::with_capacity(p);
+            for h in handles {
+                let (b, s) = h.join().expect("rank thread");
+                out.push(b);
+                sent.push(s);
+            }
+            (out, sent)
+        })
+    }
+
+    /// The cross-validation the issue pins down: the threaded ring must be
+    /// bitwise identical to the in-place simulator ring — uneven splits,
+    /// n < p, p = 1 and empty buffers included.
+    #[test]
+    fn threaded_ring_bitwise_matches_inplace() {
+        prop::check("exec-ring==comm-ring", 0x51D, 40, |rng: &mut Rng| {
+            let p = 1 + rng.below(6);
+            let n = rng.below(201); // 0, < p, uneven all covered
+            let bufs: Vec<Vec<f32>> =
+                (0..p).map(|_| prop::vec_f32(rng, n, 1.0)).collect();
+            let mut want = bufs.clone();
+            ring_allreduce(&mut want);
+            let (got, _) = run_threaded(&bufs);
+            for r in 0..p {
+                assert_eq!(
+                    got[r], want[r],
+                    "rank {r} diverged from in-place ring (p={p}, n={n})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn threaded_ring_degenerate_cases() {
+        for (p, n) in [(1usize, 0usize), (1, 7), (2, 0), (3, 1), (4, 3), (5, 17)] {
+            let mut rng = Rng::seed((p * 100 + n) as u64);
+            let bufs: Vec<Vec<f32>> =
+                (0..p).map(|_| prop::vec_f32(&mut rng, n, 1.0)).collect();
+            let mut want = bufs.clone();
+            ring_allreduce(&mut want);
+            let (got, _) = run_threaded(&bufs);
+            assert_eq!(got, want, "p={p} n={n}");
+        }
+    }
+
+    #[test]
+    fn threaded_traffic_matches_schedule() {
+        let p = 4;
+        let n = 1000;
+        let bufs: Vec<Vec<f32>> = (0..p).map(|_| vec![1.0f32; n]).collect();
+        let (_, sent) = run_threaded(&bufs);
+        let sched = crate::comm::RingSchedule::new(p, n);
+        for r in 0..p {
+            assert_eq!(sent[r], sched.allreduce_sent_bytes(r), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn payload_allgather_is_rank_major() {
+        let p = 4;
+        let links = make_links(p);
+        let gathered: Vec<Vec<Payload>> = std::thread::scope(|s| {
+            let handles: Vec<_> = links
+                .into_iter()
+                .enumerate()
+                .map(|(r, link)| {
+                    s.spawn(move || {
+                        let mine = Payload::Dense(vec![r as f32; 3]);
+                        allgather_payloads(r, p, mine, &link, None).0
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for row in &gathered {
+            assert_eq!(row.len(), p);
+            for (c, pay) in row.iter().enumerate() {
+                let Payload::Dense(v) = pay else { panic!("wrong variant") };
+                assert_eq!(v, &vec![c as f32; 3], "slot {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_allgather_is_identity() {
+        let (got, sent) =
+            allgather_payloads(0, 1, Payload::Dense(vec![1.0, 2.0]), &make_links(1).remove(0), None);
+        assert_eq!(got.len(), 1);
+        assert_eq!(sent, 0);
+    }
+
+    #[test]
+    fn pacer_slows_hops() {
+        use std::time::Instant;
+        let pacer = Pacer { bytes_per_s: 1e6, latency_s: 0.0 };
+        let t0 = Instant::now();
+        pacer.pace(50_000); // 50 ms at 1 MB/s
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+    }
+}

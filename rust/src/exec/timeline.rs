@@ -1,0 +1,212 @@
+//! Measured per-rank timelines and their reduction to the same breakdown
+//! shape the discrete-event simulator predicts ([`crate::sim::Breakdown`]),
+//! so measured and simulated numbers sit side by side in the trainer logs
+//! and the `exec_vs_sim` bench.
+//!
+//! All spans are seconds relative to the step's shared epoch (the main
+//! thread stamps one `Instant` per step and every rank reports offsets
+//! from it), so cross-rank alignment is free.
+
+/// What a span on a rank's streams represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Backward computation producing one tensor's gradient (compute thread).
+    Compute,
+    /// Local compression of one tensor (compute thread, serializes with
+    /// computation — Eq. 6).
+    Compress,
+    /// Collective exchange + decode of one tensor (comm thread).
+    Comm,
+}
+
+/// One measured span.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub tensor: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl Span {
+    pub fn duration(&self) -> f64 {
+        (self.end_s - self.start_s).max(0.0)
+    }
+}
+
+/// One rank's measured step timeline.
+#[derive(Debug, Clone, Default)]
+pub struct RankTimeline {
+    pub rank: usize,
+    pub spans: Vec<Span>,
+    /// Bytes this rank actually pushed through its ring link this step.
+    pub moved_bytes: usize,
+    /// Time spent blocked in the step-start barrier (skew indicator).
+    pub barrier_wait_s: f64,
+}
+
+/// The measured analogue of [`crate::sim::Breakdown`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeasuredBreakdown {
+    /// Total backward computation (busy time on the compute thread).
+    pub comp_s: f64,
+    /// Total local compression (busy time on the compute thread).
+    pub compress_s: f64,
+    /// Total collective busy time on the comm thread (includes peer
+    /// rendezvous wait, like a real NCCL stream).
+    pub comm_s: f64,
+    /// Exposed communication: how far the comm stream ran past the end of
+    /// the compute stream — the measured T_comm'.
+    pub exposed_s: f64,
+    /// End-to-end step wall time (max span end).
+    pub wall_s: f64,
+    /// Bytes moved through the ring link.
+    pub moved_bytes: usize,
+}
+
+/// Reduce one rank's spans to a breakdown.
+pub fn breakdown(t: &RankTimeline) -> MeasuredBreakdown {
+    let mut comp = 0.0;
+    let mut compress = 0.0;
+    let mut comm = 0.0;
+    let mut compute_end: f64 = 0.0;
+    let mut comm_end: f64 = 0.0;
+    let mut wall: f64 = 0.0;
+    for s in &t.spans {
+        wall = wall.max(s.end_s);
+        match s.kind {
+            SpanKind::Compute => {
+                comp += s.duration();
+                compute_end = compute_end.max(s.end_s);
+            }
+            SpanKind::Compress => {
+                compress += s.duration();
+                compute_end = compute_end.max(s.end_s);
+            }
+            SpanKind::Comm => {
+                comm += s.duration();
+                comm_end = comm_end.max(s.end_s);
+            }
+        }
+    }
+    MeasuredBreakdown {
+        comp_s: comp,
+        compress_s: compress,
+        comm_s: comm,
+        exposed_s: (comm_end - compute_end).max(0.0),
+        wall_s: wall,
+        moved_bytes: t.moved_bytes,
+    }
+}
+
+/// Cluster-level reduction: busy times average over ranks (per-worker
+/// means, like the profiler), wall and exposure take the slowest rank (the
+/// rendezvous semantics of a synchronous step).
+pub fn aggregate(per_rank: &[MeasuredBreakdown]) -> MeasuredBreakdown {
+    if per_rank.is_empty() {
+        return MeasuredBreakdown::default();
+    }
+    let n = per_rank.len() as f64;
+    MeasuredBreakdown {
+        comp_s: per_rank.iter().map(|b| b.comp_s).sum::<f64>() / n,
+        compress_s: per_rank.iter().map(|b| b.compress_s).sum::<f64>() / n,
+        comm_s: per_rank.iter().map(|b| b.comm_s).sum::<f64>() / n,
+        exposed_s: per_rank.iter().map(|b| b.exposed_s).fold(0.0, f64::max),
+        wall_s: per_rank.iter().map(|b| b.wall_s).fold(0.0, f64::max),
+        moved_bytes: per_rank.iter().map(|b| b.moved_bytes).max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, start_s: f64, end_s: f64) -> Span {
+        Span { kind, tensor: 0, start_s, end_s }
+    }
+
+    #[test]
+    fn sequential_shape_exposes_all_comm() {
+        // compute [0, 2], comm [2, 5]: exposed = 3
+        let t = RankTimeline {
+            rank: 0,
+            spans: vec![
+                span(SpanKind::Compute, 0.0, 2.0),
+                span(SpanKind::Comm, 2.0, 5.0),
+            ],
+            moved_bytes: 100,
+            barrier_wait_s: 0.0,
+        };
+        let b = breakdown(&t);
+        assert_eq!(b.comp_s, 2.0);
+        assert_eq!(b.comm_s, 3.0);
+        assert_eq!(b.exposed_s, 3.0);
+        assert_eq!(b.wall_s, 5.0);
+    }
+
+    #[test]
+    fn overlapped_shape_exposes_only_tail() {
+        // compute [0,1] [1,2] [2,3]; comm [1,2.5] [2.5,3.5]: tail = 0.5
+        let t = RankTimeline {
+            rank: 0,
+            spans: vec![
+                span(SpanKind::Compute, 0.0, 1.0),
+                span(SpanKind::Compute, 1.0, 2.0),
+                span(SpanKind::Compute, 2.0, 3.0),
+                span(SpanKind::Comm, 1.0, 2.5),
+                span(SpanKind::Comm, 2.5, 3.5),
+            ],
+            ..Default::default()
+        };
+        let b = breakdown(&t);
+        assert!((b.exposed_s - 0.5).abs() < 1e-12);
+        assert_eq!(b.comp_s, 3.0);
+        assert_eq!(b.comm_s, 2.5);
+    }
+
+    #[test]
+    fn fully_hidden_comm_is_zero_exposed() {
+        let t = RankTimeline {
+            rank: 0,
+            spans: vec![
+                span(SpanKind::Compute, 0.0, 4.0),
+                span(SpanKind::Comm, 1.0, 2.0),
+            ],
+            ..Default::default()
+        };
+        assert_eq!(breakdown(&t).exposed_s, 0.0);
+    }
+
+    #[test]
+    fn compress_counts_toward_compute_stream() {
+        let t = RankTimeline {
+            rank: 0,
+            spans: vec![
+                span(SpanKind::Compute, 0.0, 1.0),
+                span(SpanKind::Compress, 1.0, 1.5),
+                span(SpanKind::Comm, 1.0, 1.2),
+            ],
+            ..Default::default()
+        };
+        let b = breakdown(&t);
+        assert_eq!(b.compress_s, 0.5);
+        assert_eq!(b.exposed_s, 0.0, "comm ended before compress stream");
+    }
+
+    #[test]
+    fn aggregate_takes_worst_rank_walls() {
+        let a = MeasuredBreakdown {
+            comp_s: 1.0,
+            compress_s: 0.0,
+            comm_s: 2.0,
+            exposed_s: 0.5,
+            wall_s: 3.0,
+            moved_bytes: 10,
+        };
+        let b = MeasuredBreakdown { comp_s: 2.0, exposed_s: 1.5, wall_s: 4.0, ..a };
+        let agg = aggregate(&[a, b]);
+        assert_eq!(agg.comp_s, 1.5);
+        assert_eq!(agg.wall_s, 4.0);
+        assert_eq!(agg.exposed_s, 1.5);
+    }
+}

@@ -1,0 +1,167 @@
+//! Sim-vs-exec cross-validation: run the same configuration through the
+//! analytic backend (simulated timeline) and the threaded backend
+//! (measured timeline), check the two are numerically bit-identical, and
+//! report their breakdowns side by side.
+//!
+//! This is the repo's answer to "On the Utility of Gradient Compression"
+//! (Agarwal et al.): overlap/speedup claims from the model are only kept
+//! if real concurrent execution reproduces the numerics exactly and the
+//! measured exposed communication behaves the way the simulator says it
+//! should. Used by `tests/exec_parity.rs`, `benches/exec_vs_sim.rs` and
+//! the `covap exec` CLI subcommand.
+
+use anyhow::Result;
+
+use crate::config::{ExecBackend, RunConfig};
+use crate::coordinator::DpEngine;
+use crate::exec::timeline::MeasuredBreakdown;
+use crate::runtime::ModelArtifacts;
+use crate::sim::Breakdown;
+
+/// Outcome of one backend comparison.
+#[derive(Debug, Clone)]
+pub struct BackendComparison {
+    pub scheme: String,
+    pub world: usize,
+    pub steps: u64,
+    /// Losses bit-identical every step AND final params bit-identical.
+    pub bitwise_equal: bool,
+    pub loss_analytic: Vec<f32>,
+    pub loss_threaded: Vec<f32>,
+    /// Mean simulated breakdown over post-warmup steps (threaded run's
+    /// own simulation, so both columns describe the same execution).
+    pub sim: Breakdown,
+    /// Mean measured breakdown over post-warmup steps.
+    pub measured: MeasuredBreakdown,
+    /// Mean wire bytes per step (accounting volume).
+    pub wire_bytes: usize,
+    /// Mean threaded step wall time (whole step incl. optimizer).
+    pub step_wall_s: f64,
+}
+
+/// Run `base` through both backends on the synthetic model path and
+/// compare. `base.backend` is overridden per run; everything else (seed,
+/// scheme, workers, policy, pacing) is honored.
+pub fn compare_backends(base: &RunConfig, preset: &str, steps: u64) -> Result<BackendComparison> {
+    let mut cfg_a = base.clone();
+    cfg_a.backend = ExecBackend::Analytic;
+    cfg_a.steps = steps;
+    let mut cfg_t = base.clone();
+    cfg_t.backend = ExecBackend::Threaded;
+    cfg_t.steps = steps;
+
+    let mut eng_a = DpEngine::new(cfg_a, ModelArtifacts::synthetic(preset))?;
+    let mut eng_t = DpEngine::new(cfg_t, ModelArtifacts::synthetic(preset))?;
+
+    let mut loss_a = Vec::with_capacity(steps as usize);
+    let mut loss_t = Vec::with_capacity(steps as usize);
+    let mut bitwise = true;
+
+    let mut sim_acc: Option<Breakdown> = None;
+    let mut meas_acc = MeasuredBreakdown::default();
+    let mut wire_acc = 0usize;
+    let mut wall_acc = 0.0f64;
+    let mut tail = 0usize; // post-warmup step count
+
+    for s in 0..steps {
+        let oa = eng_a.step()?;
+        let ot = eng_t.step()?;
+        bitwise &= oa.loss.to_bits() == ot.loss.to_bits();
+        loss_a.push(oa.loss);
+        loss_t.push(ot.loss);
+        let m = ot.measured.expect("threaded backend reports measurements");
+        // skip step 0: thread-pool warmup, allocator effects
+        if s > 0 || steps == 1 {
+            tail += 1;
+            let b = ot.breakdown;
+            sim_acc = Some(match sim_acc {
+                None => b,
+                Some(a) => Breakdown {
+                    t_before_s: a.t_before_s + b.t_before_s,
+                    t_comp_s: a.t_comp_s + b.t_comp_s,
+                    t_compress_s: a.t_compress_s + b.t_compress_s,
+                    t_comm_s: a.t_comm_s + b.t_comm_s,
+                    t_comm_exposed_s: a.t_comm_exposed_s + b.t_comm_exposed_s,
+                    bubble_s: a.bubble_s + b.bubble_s,
+                    total_s: a.total_s + b.total_s,
+                },
+            });
+            meas_acc = MeasuredBreakdown {
+                comp_s: meas_acc.comp_s + m.comp_s,
+                compress_s: meas_acc.compress_s + m.compress_s,
+                comm_s: meas_acc.comm_s + m.comm_s,
+                exposed_s: meas_acc.exposed_s + m.exposed_s,
+                wall_s: meas_acc.wall_s + m.wall_s,
+                moved_bytes: meas_acc.moved_bytes + m.moved_bytes,
+            };
+            wire_acc += ot.wire_bytes;
+            wall_acc += ot.wall_s;
+        }
+    }
+    bitwise &= eng_a.params() == eng_t.params();
+
+    let inv = 1.0 / tail.max(1) as f64;
+    let mut sim = sim_acc.unwrap_or(Breakdown {
+        t_before_s: 0.0,
+        t_comp_s: 0.0,
+        t_compress_s: 0.0,
+        t_comm_s: 0.0,
+        t_comm_exposed_s: 0.0,
+        bubble_s: 0.0,
+        total_s: 0.0,
+    });
+    sim.t_before_s *= inv;
+    sim.t_comp_s *= inv;
+    sim.t_compress_s *= inv;
+    sim.t_comm_s *= inv;
+    sim.t_comm_exposed_s *= inv;
+    sim.bubble_s *= inv;
+    sim.total_s *= inv;
+    let measured = MeasuredBreakdown {
+        comp_s: meas_acc.comp_s * inv,
+        compress_s: meas_acc.compress_s * inv,
+        comm_s: meas_acc.comm_s * inv,
+        exposed_s: meas_acc.exposed_s * inv,
+        wall_s: meas_acc.wall_s * inv,
+        moved_bytes: (meas_acc.moved_bytes as f64 * inv) as usize,
+    };
+
+    Ok(BackendComparison {
+        scheme: base.scheme.label().to_string(),
+        world: base.workers,
+        steps,
+        bitwise_equal: bitwise,
+        loss_analytic: loss_a,
+        loss_threaded: loss_t,
+        sim,
+        measured,
+        wire_bytes: (wire_acc as f64 * inv) as usize,
+        step_wall_s: wall_acc * inv,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SchemeKind;
+    use crate::config::Optimizer;
+
+    #[test]
+    fn comparison_reports_parity_and_timings() {
+        let cfg = RunConfig {
+            workers: 2,
+            scheme: SchemeKind::Baseline,
+            optimizer: Optimizer::Sgd,
+            lr: 0.05,
+            seed: 9,
+            bucket_bytes: 32 * 1024,
+            ..RunConfig::default()
+        };
+        let c = compare_backends(&cfg, "tiny", 3).unwrap();
+        assert!(c.bitwise_equal, "backends diverged: {:?} vs {:?}", c.loss_analytic, c.loss_threaded);
+        assert_eq!(c.loss_analytic.len(), 3);
+        assert!(c.measured.wall_s > 0.0);
+        assert!(c.sim.total_s > 0.0);
+        assert!(c.wire_bytes > 0);
+    }
+}

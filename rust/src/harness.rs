@@ -1,9 +1,16 @@
 //! Evaluation harness shared by the paper-table benches and examples:
 //! per-scheme cost measurement (real compressor timings, extrapolated to
-//! workload scale), analytic wire volumes, and workload-level iteration
-//! breakdowns averaged over a COVAP interval.
+//! workload scale), analytic wire volumes, workload-level iteration
+//! breakdowns averaged over a COVAP interval, and the machine-readable
+//! `BENCH_*.json` emitter that gives the bench trajectory a stable format
+//! to accumulate in CI.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
 
 use crate::compress::{Collective, PowerSgd, SchemeKind};
+use crate::util::json::Json;
 use crate::coordinator::bucketize_layers;
 use crate::covap::{shard_buckets, CoarseFilter};
 use crate::network::{ClusterSpec, NetworkModel};
@@ -298,6 +305,72 @@ pub fn allgather_rank_memory(kind: &SchemeKind, model_params: usize, world: usiz
     }
 }
 
+/// One row of a `BENCH_*.json` artifact: a (scheme, world, policy) cell
+/// with measured and simulated timings side by side. Fields that a bench
+/// cannot fill (e.g. measured columns on a sim-only bench) stay NaN/0 and
+/// serialize as null/0.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub scheme: String,
+    pub world: usize,
+    pub policy: String,
+    /// Measured step wall time (threaded executor), seconds.
+    pub measured_wall_s: f64,
+    /// Simulated step wall time (timeline simulator), seconds.
+    pub sim_wall_s: f64,
+    /// Measured exposed communication (T_comm'), seconds.
+    pub measured_exposed_s: f64,
+    /// Simulated exposed communication, seconds.
+    pub sim_exposed_s: f64,
+    /// Accounting wire bytes per rank per step.
+    pub wire_bytes: usize,
+    /// Whether the threaded backend matched the analytic one bitwise.
+    pub bitwise_equal: Option<bool>,
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::from(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Write `BENCH_<name>.json` next to `dir` (typically the repo root): a
+/// stable, machine-readable artifact CI uploads so the bench trajectory
+/// accumulates across PRs.
+pub fn write_bench_json(path: &Path, bench: &str, rows: &[BenchRow]) -> Result<()> {
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("scheme", Json::from(r.scheme.as_str())),
+                ("world", Json::from(r.world)),
+                ("policy", Json::from(r.policy.as_str())),
+                ("measured_wall_s", num_or_null(r.measured_wall_s)),
+                ("sim_wall_s", num_or_null(r.sim_wall_s)),
+                ("measured_exposed_s", num_or_null(r.measured_exposed_s)),
+                ("sim_exposed_s", num_or_null(r.sim_exposed_s)),
+                ("wire_bytes", Json::from(r.wire_bytes)),
+                (
+                    "bitwise_equal",
+                    match r.bitwise_equal {
+                        Some(b) => Json::from(b),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::from(bench)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    std::fs::write(path, format!("{doc}\n"))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -357,6 +430,31 @@ mod tests {
         let s8 = speedup_at(8);
         assert!(s4 > s2 * 1.15, "rising region: {s2} -> {s4}");
         assert!(s8 < s4 * 1.10, "saturation: {s4} -> {s8}");
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        let dir = std::env::temp_dir().join("covap_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let rows = vec![BenchRow {
+            scheme: "COVAP".into(),
+            world: 4,
+            policy: "overlap".into(),
+            measured_wall_s: 0.01,
+            sim_wall_s: 0.02,
+            measured_exposed_s: 0.001,
+            sim_exposed_s: f64::NAN, // -> null
+            wire_bytes: 1234,
+            bitwise_equal: Some(true),
+        }];
+        write_bench_json(&path, "test", &rows).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "test");
+        let arr = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("world").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(arr[0].get("sim_exposed_s").unwrap(), &Json::Null);
     }
 
     #[test]

@@ -12,7 +12,25 @@
 //!
 //! Python never runs on the training path: `make artifacts` emits
 //! `artifacts/<preset>/*.hlo.txt` + `manifest.json` once, and the rust binary
-//! is self-contained afterwards.
+//! is self-contained afterwards. Without the `pjrt` cargo feature the
+//! synthetic-gradient backend (`runtime::synthetic`) stands in for the
+//! artifacts, so every path below builds and runs everywhere.
+//!
+//! Execution backends (`config::ExecBackend`): the *analytic* path runs
+//! workers in lockstep and predicts the overlap timeline with the
+//! discrete-event simulator (`sim`); the *threaded* path (`exec`) runs P
+//! ranks on real OS threads with ring collectives over channels and
+//! measures it. Both are numerically bit-identical; `benches/exec_vs_sim`
+//! cross-validates their timings.
+
+// The paper-faithful numeric kernels favor explicit index loops that
+// mirror the equations; keep clippy's style lints from fighting that.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::field_reassign_with_default,
+    clippy::type_complexity
+)]
 
 pub mod comm;
 pub mod compress;
@@ -21,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod covap;
 pub mod data;
+pub mod exec;
 pub mod metrics;
 pub mod network;
 pub mod profiler;

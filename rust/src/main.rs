@@ -10,7 +10,15 @@
 //!             measure CCR with the distributed profiler, print chosen I
 //!   simulate  [--dnn NAME] [--gpus N] [--bandwidth-gbps F]
 //!             one-iteration timeline breakdown for a paper workload
+//!   exec      [--workers N] [--scheme S] [--steps N] [--pace-gbps F]
+//!             [--synth-work N] [--preset tiny|small]
+//!             run the threaded rank executor against the analytic
+//!             backend: bitwise parity check + measured-vs-simulated
+//!             breakdown for both policies
 //!   schemes   list available GC schemes
+//!
+//! train also accepts --backend analytic|threaded, --policy overlap|seq,
+//! --pace-gbps F and --synth-work N (see config).
 
 use std::path::{Path, PathBuf};
 
@@ -33,6 +41,7 @@ fn main() -> Result<()> {
         Some("train") => train(&args),
         Some("profile") => profile(&args),
         Some("simulate") => simulate(&args),
+        Some("exec") => exec_cmd(&args),
         Some("schemes") => {
             for k in SchemeKind::evaluation_set() {
                 println!("{}", k.label());
@@ -43,7 +52,7 @@ fn main() -> Result<()> {
             if let Some(o) = other {
                 eprintln!("unknown subcommand '{o}'");
             }
-            eprintln!("usage: covap <smoke|train|profile|simulate|schemes> [flags]");
+            eprintln!("usage: covap <smoke|train|profile|simulate|exec|schemes> [flags]");
             std::process::exit(2);
         }
     }
@@ -122,6 +131,50 @@ fn profile(args: &Args) -> Result<()> {
     println!("  CCR naive     = {:.2}", r.naive_ccr);
     println!("  CCR aligned   = {:.2}", r.ccr);
     println!("  interval I    = {}", covap::covap::interval_from_ccr(r.ccr));
+    Ok(())
+}
+
+fn exec_cmd(args: &Args) -> Result<()> {
+    use covap::exec::compare_backends;
+    use covap::util::bench::Table;
+
+    let workers: usize = args.get_parsed("workers", 4usize)?;
+    let steps: u64 = args.get_parsed("steps", 4u64)?;
+    let preset = args.get_or("preset", "tiny");
+    let scheme = SchemeKind::paper_default(&args.get_or("scheme", "covap"))
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme"))?;
+    let mut cfg = RunConfig {
+        workers,
+        scheme,
+        ..RunConfig::default()
+    };
+    cfg.pace_gbps = args.get_parsed("pace-gbps", 1.0)?;
+    cfg.synth_work = args.get_parsed("synth-work", 6u32)?;
+    cfg.bucket_bytes = 16 * 1024;
+    cfg.optimizer = covap::config::Optimizer::Sgd;
+
+    let mut t = Table::new(&[
+        "policy", "bitwise", "meas wall", "sim wall", "meas exp'", "sim exp'",
+    ]);
+    for policy in [Policy::Overlap, Policy::Sequential] {
+        let mut c = cfg.clone();
+        c.policy = policy;
+        let r = compare_backends(&c, &preset, steps)?;
+        t.row(&[
+            format!("{policy:?}"),
+            if r.bitwise_equal { "yes".into() } else { "NO".into() },
+            fmt_secs(r.measured.wall_s),
+            fmt_secs(r.sim.total_s),
+            fmt_secs(r.measured.exposed_s),
+            fmt_secs(r.sim.t_comm_exposed_s),
+        ]);
+    }
+    t.print(&format!(
+        "{} on {} threaded ranks (paced {} Gbps) — measured vs simulated",
+        cfg.scheme.label(),
+        workers,
+        cfg.pace_gbps
+    ));
     Ok(())
 }
 

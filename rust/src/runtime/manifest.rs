@@ -137,6 +137,78 @@ impl Manifest {
     pub fn param_bytes(&self) -> usize {
         self.param_count * 4
     }
+
+    /// A synthetic transformer-shaped manifest for the given preset name —
+    /// used by the synthetic-gradient backend when no `artifacts/<preset>/`
+    /// bundle exists (default, no-`pjrt` builds). The layer table mirrors
+    /// the python model's parameter layout so bucketization, sharding and
+    /// init-class rules behave like the real artifact path.
+    pub fn synthetic(preset: &str) -> Manifest {
+        let dims = match preset {
+            "small" => ModelDims {
+                vocab: 1024,
+                d_model: 128,
+                n_heads: 8,
+                n_layers: 4,
+                d_ff: 256,
+                seq_len: 64,
+                batch: 4,
+            },
+            // "tiny" and anything unknown
+            _ => ModelDims {
+                vocab: 256,
+                d_model: 64,
+                n_heads: 4,
+                n_layers: 2,
+                d_ff: 128,
+                seq_len: 32,
+                batch: 2,
+            },
+        };
+        Manifest::synthetic_with_dims(preset, dims)
+    }
+
+    /// Synthetic manifest from explicit dims (benches use this to scale the
+    /// model independently of the preset names).
+    pub fn synthetic_with_dims(preset: &str, dims: ModelDims) -> Manifest {
+        let d = dims.d_model;
+        let ff = dims.d_ff;
+        let mut params = Vec::new();
+        let mut off = 0usize;
+        let mut push = |name: String, shape: Vec<usize>| {
+            let numel: usize = shape.iter().product();
+            params.push(ParamEntry { name, offset: off, numel, shape });
+            off += numel;
+        };
+        push("tok_embed".into(), vec![dims.vocab, d]);
+        push("pos_embed".into(), vec![dims.seq_len, d]);
+        for l in 0..dims.n_layers {
+            push(format!("h{l}.w_qkv"), vec![d, 3 * d]);
+            push(format!("h{l}.b_qkv"), vec![3 * d]);
+            push(format!("h{l}.w_o"), vec![d, d]);
+            push(format!("h{l}.b_o"), vec![d]);
+            push(format!("h{l}.ln1_scale"), vec![d]);
+            push(format!("h{l}.ln1_bias"), vec![d]);
+            push(format!("h{l}.w_ff1"), vec![d, ff]);
+            push(format!("h{l}.b_ff1"), vec![ff]);
+            push(format!("h{l}.w_ff2"), vec![ff, d]);
+            push(format!("h{l}.b_ff2"), vec![d]);
+            push(format!("h{l}.ln2_scale"), vec![d]);
+            push(format!("h{l}.ln2_bias"), vec![d]);
+        }
+        push("lnf_scale".into(), vec![d]);
+        push("lnf_bias".into(), vec![d]);
+        let m = Manifest {
+            preset: preset.to_string(),
+            dims,
+            param_count: off,
+            ef_block: 64,
+            params,
+            artifacts: BTreeMap::new(),
+        };
+        m.validate().expect("synthetic manifest is contiguous by construction");
+        m
+    }
 }
 
 #[cfg(test)]

@@ -1,38 +1,74 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
-//! client (`xla` crate 0.1.6 over xla_extension 0.5.1).
+//! Model runtime: the host-level contract the coordinator trains against.
 //!
-//! Interchange is HLO *text* — jax >= 0.5 serialized protos carry 64-bit
-//! instruction ids that this XLA rejects; `HloModuleProto::from_text_file`
-//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//! Two interchangeable backends sit behind [`ModelArtifacts`]:
+//! * **pjrt** (cargo feature `pjrt`, default off) — load AOT HLO-text
+//!   artifacts and execute them on the PJRT CPU client (`xla` crate 0.1.6
+//!   over xla_extension 0.5.1). Interchange is HLO *text* — jax >= 0.5
+//!   serialized protos carry 64-bit instruction ids that this XLA rejects;
+//!   `HloModuleProto::from_text_file` reassigns ids (see
+//!   /opt/xla-example/README.md and python/compile/aot.py).
+//! * **synthetic** (always available) — a deterministic pure-rust
+//!   least-squares model ([`synthetic`]) with the same host API, so the
+//!   crate builds and the full training/executor path runs on machines
+//!   without `xla_extension`. This is also the only backend the threaded
+//!   rank executor can use: PJRT executables are not `Send`.
+//!
+//! The coordinator only calls the backend-agnostic methods
+//! ([`ModelArtifacts::run_fwd_bwd`], [`ModelArtifacts::run_sgd`],
+//! [`ModelArtifacts::run_adam`], [`ModelArtifacts::rank_models`]); nothing
+//! above this module mentions `xla`.
 
+#[cfg(feature = "pjrt")]
 mod executable;
 mod manifest;
+pub mod synthetic;
 
+#[cfg(feature = "pjrt")]
 pub use executable::Executable;
 pub use manifest::{ArtifactSig, Manifest, ModelDims, ParamEntry};
+pub use synthetic::{RankModel, SyntheticModel, SyntheticSpec};
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
-/// Shared PJRT client. Cheap to clone (Arc); one per process.
+/// Shared runtime handle. With `pjrt` this wraps the PJRT CPU client (Arc;
+/// one per process); without it, a zero-cost tag for the synthetic backend.
 #[derive(Clone)]
 pub struct Runtime {
-    client: Arc<xla::PjRtClient>,
+    #[cfg(feature = "pjrt")]
+    client: std::sync::Arc<xla::PjRtClient>,
+    #[cfg(not(feature = "pjrt"))]
+    _synthetic: (),
 }
 
 impl Runtime {
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client: Arc::new(client) })
+        Ok(Runtime { client: std::sync::Arc::new(client) })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { _synthetic: () })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "synthetic (pjrt feature disabled)".to_string()
+        }
     }
 
-    /// Load + compile one HLO-text artifact.
+    /// Load + compile one HLO-text artifact (pjrt only).
+    #[cfg(feature = "pjrt")]
     pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
@@ -48,64 +84,275 @@ impl Runtime {
     }
 }
 
-/// The full artifact bundle for one model preset: manifest + compiled
-/// executables. This is everything the L3 training path needs.
+#[cfg(feature = "pjrt")]
+struct PjrtArts {
+    fwd_bwd: Executable,
+    sgd_update: Executable,
+    adam_update: Executable,
+    ef_compress: Executable,
+    quantize: Executable,
+}
+
+enum ArtsBackend {
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtArts),
+    Synthetic(SyntheticSpec),
+}
+
+/// The full model bundle for one preset: manifest + executable backend.
+/// This is everything the L3 training path needs.
 pub struct ModelArtifacts {
     pub dir: PathBuf,
     pub manifest: Manifest,
-    pub fwd_bwd: Executable,
-    pub sgd_update: Executable,
-    pub adam_update: Executable,
-    pub ef_compress: Executable,
-    pub quantize: Executable,
+    backend: ArtsBackend,
 }
 
 impl ModelArtifacts {
-    /// Load `artifacts/<preset>/` produced by `make artifacts`.
+    /// Load `artifacts/<preset>/`.
+    ///
+    /// With `pjrt`: the directory must hold `manifest.json` + compiled
+    /// HLO-text artifacts (`make artifacts`). Without `pjrt`: an existing
+    /// `manifest.json` is honored (and must parse), otherwise a synthetic
+    /// manifest is derived from the directory's preset name and the
+    /// synthetic-gradient backend is used.
     pub fn load(rt: &Runtime, dir: &Path) -> Result<ModelArtifacts> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let load = |name: &str| rt.load_hlo(&dir.join(format!("{name}.hlo.txt")));
-        Ok(ModelArtifacts {
-            dir: dir.to_path_buf(),
-            manifest,
-            fwd_bwd: load("fwd_bwd")?,
-            sgd_update: load("sgd_update")?,
-            adam_update: load("adam_update")?,
-            ef_compress: load("ef_compress")?,
-            quantize: load("quantize")?,
-        })
+        #[cfg(feature = "pjrt")]
+        {
+            let manifest = Manifest::load(&dir.join("manifest.json"))?;
+            let load = |name: &str| rt.load_hlo(&dir.join(format!("{name}.hlo.txt")));
+            let arts = PjrtArts {
+                fwd_bwd: load("fwd_bwd")?,
+                sgd_update: load("sgd_update")?,
+                adam_update: load("adam_update")?,
+                ef_compress: load("ef_compress")?,
+                quantize: load("quantize")?,
+            };
+            Ok(ModelArtifacts {
+                dir: dir.to_path_buf(),
+                manifest,
+                backend: ArtsBackend::Pjrt(arts),
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = rt;
+            let manifest_path = dir.join("manifest.json");
+            let manifest = if manifest_path.exists() {
+                Manifest::load(&manifest_path)?
+            } else {
+                let preset = dir
+                    .file_name()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "tiny".to_string());
+                Manifest::synthetic(&preset)
+            };
+            Ok(Self::synthetic_from_manifest(dir.to_path_buf(), manifest))
+        }
+    }
+
+    /// A fully in-memory synthetic bundle (no filesystem) — tests/benches.
+    pub fn synthetic(preset: &str) -> ModelArtifacts {
+        let manifest = Manifest::synthetic(preset);
+        Self::synthetic_from_manifest(PathBuf::from(format!("synthetic/{preset}")), manifest)
+    }
+
+    /// Synthetic bundle around an explicit manifest.
+    pub fn synthetic_from_manifest(dir: PathBuf, manifest: Manifest) -> ModelArtifacts {
+        let spec = SyntheticSpec::new(synthetic_base_seed(&manifest), 1);
+        ModelArtifacts { dir, manifest, backend: ArtsBackend::Synthetic(spec) }
+    }
+
+    /// True when the synthetic-gradient backend is active.
+    pub fn is_synthetic(&self) -> bool {
+        matches!(self.backend, ArtsBackend::Synthetic(_))
+    }
+
+    /// Set the synthetic compute-inflation factor (no-op on pjrt).
+    pub fn set_synth_work(&mut self, work: u32) {
+        if let ArtsBackend::Synthetic(spec) = &mut self.backend {
+            spec.work = work.max(1);
+        }
+    }
+
+    /// Forward/backward for one worker's batch: (loss, flat gradient).
+    pub fn run_fwd_bwd(
+        &self,
+        params: &[f32],
+        tokens: &[i32],
+        batch: usize,
+        seq_plus1: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(tokens.len() == batch * seq_plus1, "batch shape mismatch");
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            ArtsBackend::Pjrt(a) => {
+                let toks = lit_i32_2d(tokens, batch, seq_plus1)?;
+                let out = a.fwd_bwd.run(&[lit_f32(params), toks])?;
+                Ok((to_f32_scalar(&out[0])?, to_f32_vec(&out[1])?))
+            }
+            ArtsBackend::Synthetic(spec) => {
+                Ok(synthetic::host_fwd_bwd(*spec, params, tokens))
+            }
+        }
+    }
+
+    /// One SGD step: returns the new parameter vector.
+    pub fn run_sgd(&self, params: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            ArtsBackend::Pjrt(a) => {
+                let out = a.sgd_update.run(&[
+                    lit_f32(params),
+                    lit_f32(grads),
+                    lit_scalar_f32(lr),
+                ])?;
+                to_f32_vec(&out[0])
+            }
+            ArtsBackend::Synthetic(_) => Ok(synthetic::sgd_step(params, grads, lr)),
+        }
+    }
+
+    /// One Adam step (step counter `t >= 1`): (params', m', v').
+    pub fn run_adam(
+        &self,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        grads: &[f32],
+        t: i32,
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            ArtsBackend::Pjrt(a) => {
+                let out = a.adam_update.run(&[
+                    lit_f32(params),
+                    lit_f32(m),
+                    lit_f32(v),
+                    lit_f32(grads),
+                    lit_scalar_i32(t),
+                    lit_scalar_f32(lr),
+                ])?;
+                Ok((to_f32_vec(&out[0])?, to_f32_vec(&out[1])?, to_f32_vec(&out[2])?))
+            }
+            ArtsBackend::Synthetic(_) => {
+                Ok(synthetic::adam_step(params, m, v, grads, t, lr))
+            }
+        }
+    }
+
+    /// One movable model instance per rank for the threaded executor.
+    /// Errors on the pjrt backend (executables are not `Send`); the engine
+    /// reports this cleanly when `ExecBackend::Threaded` is requested.
+    pub fn rank_models(&self, workers: usize) -> Result<Vec<Box<dyn RankModel>>> {
+        match &self.backend {
+            #[cfg(feature = "pjrt")]
+            ArtsBackend::Pjrt(_) => anyhow::bail!(
+                "ExecBackend::Threaded requires the synthetic model backend \
+                 (PJRT executables cannot move onto rank threads); rerun \
+                 without --features pjrt or use the analytic backend"
+            ),
+            ArtsBackend::Synthetic(spec) => Ok((0..workers)
+                .map(|_| Box::new(SyntheticModel::new(*spec)) as Box<dyn RankModel>)
+                .collect()),
+        }
+    }
+
+    /// Raw executables (pjrt builds only; integration tests use these).
+    #[cfg(feature = "pjrt")]
+    pub fn ef_compress(&self) -> &Executable {
+        match &self.backend {
+            ArtsBackend::Pjrt(a) => &a.ef_compress,
+            _ => unreachable!("ef_compress on non-pjrt backend"),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    pub fn quantize(&self) -> &Executable {
+        match &self.backend {
+            ArtsBackend::Pjrt(a) => &a.quantize,
+            _ => unreachable!("quantize on non-pjrt backend"),
+        }
     }
 }
 
-// ---- literal helpers -------------------------------------------------------
+/// Stable seed for the synthetic objective, derived from the model shape so
+/// every backend/run of the same preset optimizes the same target.
+fn synthetic_base_seed(m: &Manifest) -> u64 {
+    let mut h = 0x5EED_C0DE_u64;
+    h = h.wrapping_mul(31).wrapping_add(m.param_count as u64);
+    h = h.wrapping_mul(31).wrapping_add(m.dims.vocab as u64);
+    h = h.wrapping_mul(31).wrapping_add(m.dims.d_model as u64);
+    h
+}
 
-/// f32 slice -> rank-1 literal.
+// ---- literal helpers (pjrt only) ------------------------------------------
+
+#[cfg(feature = "pjrt")]
 pub fn lit_f32(xs: &[f32]) -> xla::Literal {
     xla::Literal::vec1(xs)
 }
 
-/// f32 scalar literal (shape f32[]).
+#[cfg(feature = "pjrt")]
 pub fn lit_scalar_f32(x: f32) -> xla::Literal {
     xla::Literal::scalar(x)
 }
 
-/// i32 scalar literal (shape s32[]).
+#[cfg(feature = "pjrt")]
 pub fn lit_scalar_i32(x: i32) -> xla::Literal {
     xla::Literal::scalar(x)
 }
 
-/// i32 matrix literal (shape s32[rows, cols], row-major data).
+#[cfg(feature = "pjrt")]
 pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
     anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
     Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
 }
 
-/// Literal -> Vec<f32> (flattened).
+#[cfg(feature = "pjrt")]
 pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
-/// Literal -> f32 scalar.
+#[cfg(feature = "pjrt")]
 pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_bundle_runs_fwd_bwd() {
+        let arts = ModelArtifacts::synthetic("tiny");
+        assert!(arts.is_synthetic() || cfg!(feature = "pjrt"));
+        let n = arts.manifest.param_count;
+        let params = vec![0.0f32; n];
+        let dims = &arts.manifest.dims;
+        let tokens = vec![1i32; dims.batch * (dims.seq_len + 1)];
+        let (loss, g) = arts
+            .run_fwd_bwd(&params, &tokens, dims.batch, dims.seq_len + 1)
+            .unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(g.len(), n);
+        assert!(g.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn synthetic_manifest_presets_differ() {
+        let t = Manifest::synthetic("tiny");
+        let s = Manifest::synthetic("small");
+        assert!(s.param_count > t.param_count);
+        t.validate().unwrap();
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn rank_models_available_on_synthetic() {
+        let arts = ModelArtifacts::synthetic("tiny");
+        if arts.is_synthetic() {
+            assert_eq!(arts.rank_models(4).unwrap().len(), 4);
+        }
+    }
 }

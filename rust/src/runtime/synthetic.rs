@@ -1,0 +1,263 @@
+//! Synthetic-gradient model backend: a deterministic, pure-rust stand-in
+//! for the PJRT `fwd_bwd` / optimizer artifacts, so the crate builds and
+//! every training path runs on machines without `xla_extension`.
+//!
+//! The objective is a least-squares pull toward a per-batch target vector
+//! `t = base(seed, i) + 0.1 * noise(batch, i)`: the fixed `base` component
+//! makes loss genuinely descend under SGD/Adam, the batch-dependent `noise`
+//! component makes per-worker gradients differ so compression, error
+//! feedback and collectives have real work to do. Every value is a pure
+//! function of `(seed, batch tokens, parameter index)` — bit-identical
+//! regardless of how the gradient is sliced — which is what lets the
+//! threaded executor compute gradients tensor-by-tensor on P rank threads
+//! and still match the analytic backend bitwise.
+
+/// One rank's model instance: owns per-step state, safe to move onto a
+/// rank thread. The PJRT path cannot implement this (executables are not
+/// `Send`), which is why `ExecBackend::Threaded` requires the synthetic
+/// backend; see DESIGN.md §4.
+pub trait RankModel: Send {
+    /// Begin a step: absorb the batch (tokens drive the noise component).
+    fn begin_step(&mut self, tokens: &[i32]);
+    /// Write the gradient for `params[offset .. offset + out.len()]` into
+    /// `out`. Called in tensor order; slicing must not change values.
+    fn grad_range(&mut self, params: &[f32], offset: usize, out: &mut [f32]);
+    /// Finish the step: mean loss over the `n` parameters covered.
+    fn end_step(&mut self, n: usize) -> f32;
+}
+
+/// Specification shared by all ranks of one run (cheap to copy).
+#[derive(Debug, Clone, Copy)]
+pub struct SyntheticSpec {
+    /// Seed of the fixed target component (derived from the manifest, not
+    /// the run seed: the optimum is a property of the "model").
+    pub base_seed: u64,
+    /// Compute inflation factor: the per-element target is recomputed
+    /// `work` times (black-boxed) so benches can scale backward-pass cost
+    /// relative to communication without changing any numeric result.
+    pub work: u32,
+}
+
+impl SyntheticSpec {
+    pub fn new(base_seed: u64, work: u32) -> SyntheticSpec {
+        SyntheticSpec { base_seed, work: work.max(1) }
+    }
+}
+
+/// The synthetic model; implements [`RankModel`].
+#[derive(Debug, Clone)]
+pub struct SyntheticModel {
+    spec: SyntheticSpec,
+    batch_hash: u64,
+    sq_sum: f64,
+}
+
+impl SyntheticModel {
+    pub fn new(spec: SyntheticSpec) -> SyntheticModel {
+        SyntheticModel { spec, batch_hash: 0, sq_sum: 0.0 }
+    }
+
+    /// Whole-model forward/backward in one call (the analytic engine path).
+    pub fn fwd_bwd(&mut self, params: &[f32], tokens: &[i32]) -> (f32, Vec<f32>) {
+        self.begin_step(tokens);
+        let mut grads = vec![0.0f32; params.len()];
+        self.grad_range(params, 0, &mut grads);
+        let loss = self.end_step(params.len());
+        (loss, grads)
+    }
+}
+
+#[inline]
+fn mix(mut x: u64) -> u64 {
+    // splitmix64 finalizer — cheap, well-distributed.
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Map a hash to [-1, 1).
+#[inline]
+fn unit(h: u64) -> f32 {
+    ((h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) * 2.0 - 1.0) as f32
+}
+
+/// Fold a token batch into the noise seed.
+pub fn hash_tokens(tokens: &[i32]) -> u64 {
+    let mut h = 0xA076_1D64_78BD_642Fu64;
+    for &t in tokens {
+        h = mix(h ^ t as u64);
+    }
+    h
+}
+
+/// The per-element target: fixed base + batch-dependent noise.
+#[inline]
+fn target(base_seed: u64, batch_hash: u64, i: u64) -> f32 {
+    let b = unit(mix(base_seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+    let n = unit(mix(batch_hash ^ i.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)));
+    b + 0.1 * n
+}
+
+impl RankModel for SyntheticModel {
+    fn begin_step(&mut self, tokens: &[i32]) {
+        self.batch_hash = hash_tokens(tokens);
+        self.sq_sum = 0.0;
+    }
+
+    fn grad_range(&mut self, params: &[f32], offset: usize, out: &mut [f32]) {
+        let (seed, bh, work) = (self.spec.base_seed, self.batch_hash, self.spec.work);
+        for (j, o) in out.iter_mut().enumerate() {
+            let i = (offset + j) as u64;
+            let mut t = target(seed, bh, i);
+            // compute inflation: recompute the identical value `work - 1`
+            // extra times; black_box stops the optimizer eliding the loop.
+            for _ in 1..work {
+                t = std::hint::black_box(target(seed, bh, i));
+            }
+            let g = params[offset + j] - t;
+            *o = g;
+            self.sq_sum += (g as f64) * (g as f64);
+        }
+    }
+
+    fn end_step(&mut self, n: usize) -> f32 {
+        (0.5 * self.sq_sum / n.max(1) as f64) as f32
+    }
+}
+
+// ---- host-side optimizer steps (mirror the AOT artifact semantics) -------
+
+/// SGD: p <- p - lr * g.
+pub fn sgd_step(params: &[f32], grads: &[f32], lr: f32) -> Vec<f32> {
+    params.iter().zip(grads.iter()).map(|(p, g)| p - lr * g).collect()
+}
+
+/// Adam with bias correction (betas 0.9/0.999, eps 1e-8), step `t >= 1`.
+/// Returns (params', m', v').
+pub fn adam_step(
+    params: &[f32],
+    m: &[f32],
+    v: &[f32],
+    grads: &[f32],
+    t: i32,
+    lr: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let n = params.len();
+    let bc1 = 1.0 - B1.powi(t);
+    let bc2 = 1.0 - B2.powi(t);
+    let mut p2 = Vec::with_capacity(n);
+    let mut m2 = Vec::with_capacity(n);
+    let mut v2 = Vec::with_capacity(n);
+    for i in 0..n {
+        let g = grads[i];
+        let mi = B1 * m[i] + (1.0 - B1) * g;
+        let vi = B2 * v[i] + (1.0 - B2) * g * g;
+        let mh = mi / bc1;
+        let vh = vi / bc2;
+        p2.push(params[i] - lr * mh / (vh.sqrt() + EPS));
+        m2.push(mi);
+        v2.push(vi);
+    }
+    (p2, m2, v2)
+}
+
+/// Run-shared model handle for the analytic path (not `Send`-constrained).
+pub fn host_fwd_bwd(
+    spec: SyntheticSpec,
+    params: &[f32],
+    tokens: &[i32],
+) -> (f32, Vec<f32>) {
+    SyntheticModel::new(spec).fwd_bwd(params, tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec::new(0xC0FFEE, 1)
+    }
+
+    #[test]
+    fn gradient_is_slice_invariant() {
+        let params: Vec<f32> = (0..97).map(|i| (i as f32) * 0.01 - 0.3).collect();
+        let tokens = [3i32, 1, 4, 1, 5, 9];
+        let mut whole = SyntheticModel::new(spec());
+        let (loss_a, g_whole) = whole.fwd_bwd(&params, &tokens);
+
+        let mut sliced = SyntheticModel::new(spec());
+        sliced.begin_step(&tokens);
+        let mut g_parts = vec![0.0f32; 97];
+        for (off, len) in [(0usize, 13usize), (13, 1), (14, 50), (64, 33)] {
+            let mut buf = vec![0.0f32; len];
+            sliced.grad_range(&params, off, &mut buf);
+            g_parts[off..off + len].copy_from_slice(&buf);
+        }
+        let loss_b = sliced.end_step(97);
+        assert_eq!(g_whole, g_parts, "slicing changed gradient bits");
+        assert_eq!(loss_a, loss_b);
+    }
+
+    #[test]
+    fn work_factor_does_not_change_values() {
+        let params: Vec<f32> = (0..64).map(|i| (i as f32) * 0.02).collect();
+        let tokens = [7i32; 16];
+        let (l1, g1) =
+            SyntheticModel::new(SyntheticSpec::new(5, 1)).fwd_bwd(&params, &tokens);
+        let (l8, g8) =
+            SyntheticModel::new(SyntheticSpec::new(5, 8)).fwd_bwd(&params, &tokens);
+        assert_eq!(l1, l8);
+        assert_eq!(g1, g8);
+    }
+
+    #[test]
+    fn different_batches_different_grads() {
+        let params = vec![0.0f32; 32];
+        let (_, ga) = SyntheticModel::new(spec()).fwd_bwd(&params, &[1, 2, 3]);
+        let (_, gb) = SyntheticModel::new(spec()).fwd_bwd(&params, &[4, 5, 6]);
+        assert_ne!(ga, gb);
+    }
+
+    #[test]
+    fn sgd_descends_loss() {
+        let tokens = [11i32; 8];
+        let mut params = vec![0.0f32; 128];
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for s in 0..50 {
+            let (loss, g) = SyntheticModel::new(spec()).fwd_bwd(&params, &tokens);
+            if s == 0 {
+                first = loss;
+            }
+            last = loss;
+            params = sgd_step(&params, &g, 0.2);
+        }
+        assert!(last < first * 0.2, "no descent: {first} -> {last}");
+    }
+
+    #[test]
+    fn adam_descends_loss() {
+        let tokens = [2i32; 8];
+        let mut params = vec![0.0f32; 128];
+        let mut m = vec![0.0f32; 128];
+        let mut v = vec![0.0f32; 128];
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for s in 0..80 {
+            let (loss, g) = SyntheticModel::new(spec()).fwd_bwd(&params, &tokens);
+            if s == 0 {
+                first = loss;
+            }
+            last = loss;
+            let (p2, m2, v2) = adam_step(&params, &m, &v, &g, s + 1, 0.05);
+            params = p2;
+            m = m2;
+            v = v2;
+        }
+        assert!(last < first * 0.5, "no descent: {first} -> {last}");
+    }
+}

@@ -1,5 +1,8 @@
 //! End-to-end training driver: wraps the DP engine with metrics, logging
-//! and time-to-solution accounting.
+//! and time-to-solution accounting. Under `ExecBackend::Threaded` the
+//! per-step log and the report carry the *measured* exposed-communication
+//! time next to the simulator's prediction — the sim-vs-exec validation
+//! loop in its smallest form.
 
 use anyhow::Result;
 
@@ -14,6 +17,12 @@ pub struct TrainReport {
     /// Simulated cluster speedup (Eq. 2), averaged over post-warmup steps.
     pub mean_speedup: f64,
     pub chosen_interval: Option<usize>,
+    /// Mean simulated exposed communication (T_comm'), post-warmup.
+    pub sim_exposed_s: f64,
+    /// Mean measured exposed communication (threaded backend only).
+    pub measured_exposed_s: Option<f64>,
+    /// Mean measured step wall (threaded backend only).
+    pub measured_wall_s: Option<f64>,
 }
 
 /// Run `cfg.steps` steps of synchronous DP training; prints a progress line
@@ -33,6 +42,9 @@ pub fn train_with(cfg: RunConfig, arts: ModelArtifacts, verbose: bool) -> Result
     let mut engine = DpEngine::new(cfg, arts)?;
     let mut metrics = RunMetrics::new();
     let mut speedups = Vec::new();
+    let mut sim_exposed = Vec::new();
+    let mut meas_exposed: Vec<f64> = Vec::new();
+    let mut meas_wall: Vec<f64> = Vec::new();
     let log_every = (steps / 20).max(1);
 
     for s in 0..steps {
@@ -40,10 +52,23 @@ pub fn train_with(cfg: RunConfig, arts: ModelArtifacts, verbose: bool) -> Result
         let speedup = out.breakdown.speedup(world);
         if s >= steps / 5 {
             speedups.push(speedup);
+            sim_exposed.push(out.breakdown.t_comm_exposed_s);
+            if let Some(m) = &out.measured {
+                meas_exposed.push(m.exposed_s);
+                meas_wall.push(m.wall_s);
+            }
         }
         if verbose && (s % log_every == 0 || s + 1 == steps) {
+            let measured = match &out.measured {
+                Some(m) => format!(
+                    "  meas {:>9} (exp' {})",
+                    crate::util::fmt_secs(m.wall_s),
+                    crate::util::fmt_secs(m.exposed_s)
+                ),
+                None => String::new(),
+            };
             println!(
-                "step {:>5}  loss {:>8.4}  sim {:>9}  wall {:>9}  speedup {:>6.2}x/{world}",
+                "step {:>5}  loss {:>8.4}  sim {:>9}  wall {:>9}  speedup {:>6.2}x/{world}{measured}",
                 out.step,
                 out.loss,
                 crate::util::fmt_secs(out.breakdown.total_s),
@@ -67,10 +92,24 @@ pub fn train_with(cfg: RunConfig, arts: ModelArtifacts, verbose: bool) -> Result
             println!("metrics -> {}", path.display());
         }
     }
+    let mean = |xs: &[f64]| -> f64 {
+        if xs.is_empty() {
+            f64::NAN
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    };
     let mean_speedup = if speedups.is_empty() {
         f64::NAN
     } else {
         speedups.iter().sum::<f64>() / speedups.len() as f64
     };
-    Ok(TrainReport { metrics, mean_speedup, chosen_interval: engine.chosen_interval })
+    Ok(TrainReport {
+        metrics,
+        mean_speedup,
+        chosen_interval: engine.chosen_interval,
+        sim_exposed_s: mean(&sim_exposed),
+        measured_exposed_s: if meas_exposed.is_empty() { None } else { Some(mean(&meas_exposed)) },
+        measured_wall_s: if meas_wall.is_empty() { None } else { Some(mean(&meas_wall)) },
+    })
 }

@@ -2,6 +2,7 @@
 //! configurations, and hostile manifest/HLO files must fail cleanly (no
 //! panics, no partial state).
 
+#[cfg(feature = "pjrt")]
 use std::io::Write;
 use std::path::PathBuf;
 
@@ -24,6 +25,7 @@ fn corrupt_manifest_rejected() {
     assert!(ModelArtifacts::load(&rt, &d).is_err());
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn truncated_hlo_rejected() {
     let d = tmpdir("hlo");

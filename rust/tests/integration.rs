@@ -1,6 +1,10 @@
 //! Integration tests over the real artifact bundle (artifacts/tiny must
 //! exist — `make artifacts`). These exercise the full three-layer path:
 //! rust coordinator -> PJRT CPU -> AOT HLO (JAX model + Pallas kernels).
+//!
+//! pjrt-feature only: default builds use the synthetic backend and are
+//! covered by `exec_parity.rs` + the in-crate unit tests instead.
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 
@@ -152,7 +156,7 @@ fn ef_compress_artifact_matches_rust_math() {
     for keep in [0.0f32, 1.0] {
         let coeff = 0.4f32;
         let out = arts
-            .ef_compress
+            .ef_compress()
             .run(&[
                 lit_f32(&g),
                 lit_f32(&r),
@@ -178,7 +182,7 @@ fn quantize_artifact_matches_rust_f16() {
     let n = arts.manifest.ef_block;
     let mut rng = Rng::seed(6);
     let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 100.0).collect();
-    let out = arts.quantize.run(&[lit_f32(&x)]).unwrap();
+    let out = arts.quantize().run(&[lit_f32(&x)]).unwrap();
     let got = to_f32_vec(&out[0]).unwrap();
     for i in (0..n).step_by(n / 131) {
         let want = f16_to_f32(f32_to_f16(x[i]));
