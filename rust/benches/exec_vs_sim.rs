@@ -96,12 +96,41 @@ fn main() -> anyhow::Result<()> {
                 measured_exposed_s: c.measured.exposed_s,
                 sim_exposed_s: c.sim.t_comm_exposed_s,
                 wire_bytes: c.wire_bytes,
+                moved_bytes: c.measured.moved_bytes,
                 bitwise_equal: Some(c.bitwise_equal),
             });
         }
     }
     t.print("exec vs sim — backend parity and timings");
     assert!(all_bitwise, "threaded backend diverged from analytic backend");
+
+    // ---- compression-ratio ordering from measured frames ----
+    // The recorded wire bytes are encoded frame lengths (what the ring
+    // moved), not a size model: the paper's Table II ordering
+    // COVAP/Top-k/DGC << FP16 < baseline must hold on them directly.
+    let biggest = *worlds.last().unwrap();
+    let wire_of = |label: &str| -> Option<usize> {
+        rows.iter()
+            .find(|r| r.world == biggest && r.policy == "overlap" && r.scheme == label)
+            .map(|r| r.wire_bytes)
+    };
+    if let (Some(base), Some(fp16)) = (wire_of("DDPovlp"), wire_of("FP16")) {
+        assert!(fp16 < base, "FP16 ({fp16} B/step) must beat dense ({base} B/step)");
+        if let Some(w) = wire_of("COVAP") {
+            assert!(
+                w * 3 < fp16 * 2,
+                "COVAP measured wire ({w} B/step) must sit well below FP16 ({fp16} B)"
+            );
+        }
+        for sparse in ["Top-k", "DGC"] {
+            if let Some(w) = wire_of(sparse) {
+                assert!(
+                    w * 2 < fp16,
+                    "{sparse} measured wire ({w} B/step) must sit well below FP16 ({fp16} B)"
+                );
+            }
+        }
+    }
 
     // ---- part 2: COVAP measured overlap vs sequential ----
     let mut t2 = Table::new(&[
@@ -138,6 +167,7 @@ fn main() -> anyhow::Result<()> {
                 measured_exposed_s: c.measured.exposed_s,
                 sim_exposed_s: c.sim.t_comm_exposed_s,
                 wire_bytes: c.wire_bytes,
+                moved_bytes: c.measured.moved_bytes,
                 bitwise_equal: Some(c.bitwise_equal),
             });
         }

@@ -1,36 +1,37 @@
 //! DDPovlp baseline: no compression — dense f32 AllReduce per bucket.
+//!
+//! The per-rank half is trivial: ship the raw gradient as a dense frame;
+//! the shared [`MeanCombiner`](super::rank) folds all ranks' frames into
+//! the mean. Replicated execution is `LockstepDriver` over this pair, like
+//! every other scheme.
 
+use super::rank::{Payload, RankCompressor};
 
-use super::{mean_of, CommRecord, Scheme};
+/// Ships this rank's gradient uncompressed.
+pub(crate) struct DenseCompressor;
 
-pub struct Baseline {
-    _private: (),
-}
-
-impl Baseline {
-    pub fn new() -> Baseline {
-        Baseline { _private: () }
-    }
-}
-
-impl Default for Baseline {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Scheme for Baseline {
+impl RankCompressor for DenseCompressor {
     fn name(&self) -> &'static str {
         "DDPovlp"
     }
 
-    fn round(&mut self, _bucket: usize, _step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
-        let update = mean_of(grads);
-        // The mean IS the collective (no local compression stage), so the
-        // scheme's T_compress is exactly zero by construction.
-        let rec = CommRecord::dense(grads[0].len() * 4, 0.0);
-        (update, rec)
+    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        Payload::Dense(grad.to_vec())
     }
 
     fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_payload_preserves_bits() {
+        let mut c = DenseCompressor;
+        let g = vec![1.0f32, -0.0, f32::MIN_POSITIVE];
+        let p = c.compress(0, 0, &g);
+        let Payload::Dense(v) = p else { panic!("wrong variant") };
+        assert!(v.iter().zip(g.iter()).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
 }

@@ -1,48 +1,43 @@
-//! COVAP as a [`Scheme`]: coarse filter + error feedback with the
+//! COVAP's per-rank compressor: coarse filter + error feedback with the
 //! compensation scheduler (§III.A + §III.D).
 //!
 //! The filter decision is O(1) per tensor and value-independent, so
 //! T_compress is only the EF accumulate/store pass — and on dropped tensors
-//! nothing at all goes on the wire. Sharding (§III.C) happens upstream in
-//! the coordinator: by the time a "bucket" reaches this scheme it is a
-//! shard-granular tensor.
+//! nothing at all goes on the wire (a zero-length frame). Sharding (§III.C)
+//! happens upstream in the coordinator: by the time a "tensor" reaches this
+//! compressor it is a shard-granular tensor. The combine half is the shared
+//! [`MeanCombiner`](super::rank): kept tensors are dense frames averaged in
+//! rank order.
 
 use std::collections::HashMap;
-use std::time::Instant;
 
-use super::{CommRecord, Collective, Scheme};
+use super::rank::{Payload, RankCompressor};
 use crate::covap::{CoarseFilter, EfScheduler};
 
-pub struct CovapScheme {
+/// One rank's COVAP compute half: filter decision + this rank's residuals.
+pub(crate) struct CovapCompressor {
     filter: CoarseFilter,
     scheduler: EfScheduler,
-    workers: usize,
-    /// Per-bucket, per-worker residuals, updated in place (§Perf: the
-    /// original EfState path materialized `acc` vectors and fresh zero
-    /// residuals every round — three allocations + three passes per bucket;
-    /// this fused version is one pass, zero steady-state allocations).
-    residuals: HashMap<usize, Vec<Vec<f32>>>,
+    /// This rank's residual per communication tensor (Algorithm 1's e_w).
+    residuals: HashMap<usize, Vec<f32>>,
 }
 
-impl CovapScheme {
-    pub fn new(interval: usize, scheduler: EfScheduler, workers: usize) -> CovapScheme {
-        CovapScheme {
+impl CovapCompressor {
+    pub(crate) fn new(interval: usize, scheduler: EfScheduler) -> CovapCompressor {
+        CovapCompressor {
             filter: CoarseFilter::new(interval),
             scheduler,
-            workers,
             residuals: HashMap::new(),
         }
     }
+}
 
-    pub fn interval(&self) -> usize {
-        self.filter.interval()
-    }
-
-    /// Residual diagnostics for tests/metrics.
-    pub fn residual_norm(&self) -> f64 {
+#[cfg(test)]
+impl CovapCompressor {
+    /// L2 mass currently parked in this rank's residuals (test diagnostics).
+    fn residual_norm(&self) -> f64 {
         self.residuals
             .values()
-            .flat_map(|ws| ws.iter())
             .flat_map(|r| r.iter())
             .map(|x| (*x as f64) * (*x as f64))
             .sum::<f64>()
@@ -50,57 +45,36 @@ impl CovapScheme {
     }
 }
 
-impl Scheme for CovapScheme {
+impl RankCompressor for CovapCompressor {
     fn name(&self) -> &'static str {
         "COVAP"
     }
 
-    fn round(&mut self, bucket: usize, step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
-        assert_eq!(grads.len(), self.workers);
-        let n = grads[0].len();
-        let keep = self.filter.keep(bucket, step);
+    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
+        let keep = self.filter.keep(tensor, step);
         let coeff = self.scheduler.coeff(step);
-        let t0 = Instant::now();
-        let res = self
-            .residuals
-            .entry(bucket)
-            .or_insert_with(|| vec![vec![0.0; n]; grads.len()]);
-
-        let update = if keep {
-            // transmit: update = mean_w(g_w + c*r_w); residuals reset.
-            let mut update = vec![0.0f32; n];
-            for (g, r) in grads.iter().zip(res.iter_mut()) {
-                for ((u, &gi), ri) in update.iter_mut().zip(g.iter()).zip(r.iter_mut()) {
-                    *u += gi + coeff * *ri;
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        if keep {
+            // transmit acc = g + c*r; residual resets (one fused pass)
+            let acc: Vec<f32> = grad
+                .iter()
+                .zip(res.iter_mut())
+                .map(|(&gi, ri)| {
+                    let a = gi + coeff * *ri;
                     *ri = 0.0;
-                }
-            }
-            let inv = 1.0 / grads.len() as f32;
-            for u in &mut update {
-                *u *= inv;
-            }
-            update
+                    a
+                })
+                .collect();
+            Payload::Dense(acc)
         } else {
-            // drop: fold the gradient into the residual in place; an empty
-            // update vector means "all zeros" to the coordinator (nothing
-            // was transmitted).
-            for (g, r) in grads.iter().zip(res.iter_mut()) {
-                for (ri, &gi) in r.iter_mut().zip(g.iter()) {
-                    *ri = gi + coeff * *ri;
-                }
+            // drop: fold the gradient into the residual in place; the empty
+            // frame tells every combiner "this tensor moved zero bytes".
+            for (ri, &gi) in res.iter_mut().zip(grad.iter()) {
+                *ri = gi + coeff * *ri;
             }
-            Vec::new()
-        };
-        let compress_s = t0.elapsed().as_secs_f64();
-        let rec = CommRecord {
-            wire_bytes: if keep { n * 4 } else { 0 },
-            collective: Collective::AllReduce,
-            rounds: 1,
-            sync_rounds: 0,
-            compress_s,
-            data_dependency: false,
-        };
-        (update, rec)
+            Payload::Empty
+        }
     }
 
     fn reset(&mut self) {
@@ -110,11 +84,14 @@ impl Scheme for CovapScheme {
 
 #[cfg(test)]
 mod tests {
+    use super::super::rank::{dense_frame_len, MeanCombiner, RankCombiner};
+    use super::super::SchemeKind;
     use super::*;
 
     fn run(interval: usize, steps: u64, grads: &[Vec<f32>]) -> Vec<Vec<f32>> {
         let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let mut s = CovapScheme::new(interval, EfScheduler::constant(1.0), grads.len());
+        let kind = SchemeKind::Covap { interval, ef: EfScheduler::constant(1.0) };
+        let mut s = kind.build(grads.len(), 0);
         (0..steps).map(|t| s.round(0, t, &refs).0).collect()
     }
 
@@ -128,10 +105,9 @@ mod tests {
 
     #[test]
     fn dropped_steps_accumulate_then_flush() {
-        // interval 4, bucket 0: kept at steps 0, 4. With constant gradient g
-        // and full compensation, step 4 transmits g + 3g (three dropped
-        // rounds of residual) + ... wait: step 0 transmits g (residual 0);
-        // steps 1-3 accumulate g each; step 4 transmits g + residual(3g) = 4g.
+        // interval 4, tensor 0: kept at steps 0, 4. With constant gradient g
+        // and full compensation: step 0 transmits g (residual 0); steps 1-3
+        // accumulate g each; step 4 transmits g + residual(3g) = 4g.
         let g = vec![1.0f32; 8];
         let updates = run(4, 5, std::slice::from_ref(&g));
         assert_eq!(updates[0], vec![1.0; 8]);
@@ -143,17 +119,25 @@ mod tests {
     #[test]
     fn no_mass_lost_over_interval() {
         // Sum of updates over a full interval == sum of gradients fed
-        // (full-compensation EF conservation).
-        let mut s = CovapScheme::new(3, EfScheduler::constant(1.0), 2);
+        // (full-compensation EF conservation). Driven as two independent
+        // rank compressors + the shared combiner — the canonical path.
         let g0 = vec![0.5f32, -1.5, 2.0];
         let g1 = vec![1.5f32, 0.5, -1.0];
-        let refs: Vec<&[f32]> = vec![&g0, &g1];
-        // bucket 0 with I=3 is kept at steps 0 and 3; the window [0, 3]
+        let grads: [&[f32]; 2] = [&g0, &g1];
+        let mut cs: Vec<CovapCompressor> =
+            (0..2).map(|_| CovapCompressor::new(3, EfScheduler::constant(1.0))).collect();
+        let mut cb = MeanCombiner;
+        // tensor 0 with I=3 is kept at steps 0 and 3; the window [0, 3]
         // includes the flush of the two dropped rounds.
         let mut total = vec![0.0f64; 3];
         for step in 0..4 {
-            let (u, _) = s.round(0, step, &refs);
-            for (t, x) in total.iter_mut().zip(u.iter()) {
+            let payloads: Vec<Payload> = cs
+                .iter_mut()
+                .zip(grads.iter())
+                .map(|(c, g)| c.compress(0, step, g))
+                .collect();
+            let rr = cb.combine(0, step, 3, &payloads, 0.0);
+            for (t, x) in total.iter_mut().zip(rr.update.iter()) {
                 *t += *x as f64;
             }
             // empty = dropped round, contributes zero
@@ -163,17 +147,19 @@ mod tests {
         for (t, e) in total.iter().zip(expected.iter()) {
             assert!((t - e).abs() < 1e-5, "{total:?} vs {expected:?}");
         }
-        assert!(s.residual_norm() < 1e-6, "all residual flushed after full cycle");
+        let residual: f64 = cs.iter().map(|c| c.residual_norm()).sum();
+        assert!(residual < 1e-6, "all residual flushed after full cycle");
     }
 
     #[test]
     fn wire_bytes_zero_on_drop() {
         let g = vec![1.0f32; 128];
         let refs: Vec<&[f32]> = vec![&g];
-        let mut s = CovapScheme::new(4, EfScheduler::default(), 1);
+        let kind = SchemeKind::Covap { interval: 4, ef: EfScheduler::default() };
+        let mut s = kind.build(1, 0);
         let (_, rec_keep) = s.round(0, 0, &refs);
         let (_, rec_drop) = s.round(0, 1, &refs);
-        assert_eq!(rec_keep.wire_bytes, 512);
+        assert_eq!(rec_keep.wire_bytes, dense_frame_len(128));
         assert_eq!(rec_drop.wire_bytes, 0);
         assert!(!rec_keep.data_dependency);
     }
@@ -184,11 +170,11 @@ mod tests {
         // lost: flush at step I transmits only the current gradient.
         let g = vec![1.0f32; 4];
         let refs: Vec<&[f32]> = vec![&g];
-        let mut s = CovapScheme::new(
-            2,
-            EfScheduler { init_value: 0.0, ascend_steps: u64::MAX, ascend_range: 0.0 },
-            1,
-        );
+        let kind = SchemeKind::Covap {
+            interval: 2,
+            ef: EfScheduler { init_value: 0.0, ascend_steps: u64::MAX, ascend_range: 0.0 },
+        };
+        let mut s = kind.build(1, 0);
         let (u0, _) = s.round(0, 0, &refs); // kept
         let (_u1, _) = s.round(0, 1, &refs); // dropped
         let (u2, _) = s.round(0, 2, &refs); // kept: coeff 0 -> residual ignored
@@ -200,7 +186,8 @@ mod tests {
     fn different_buckets_rotate() {
         let g = vec![1.0f32; 4];
         let refs: Vec<&[f32]> = vec![&g];
-        let mut s = CovapScheme::new(2, EfScheduler::constant(1.0), 1);
+        let kind = SchemeKind::Covap { interval: 2, ef: EfScheduler::constant(1.0) };
+        let mut s = kind.build(1, 0);
         let (_, r0) = s.round(0, 0, &refs); // (0+0)%2==0 keep
         let (_, r1) = s.round(1, 0, &refs); // (1+0)%2==1 drop
         assert!(r0.wire_bytes > 0);

@@ -2,13 +2,14 @@
 //! to IEEE half precision. AllReduce-compatible (halves are summable);
 //! no error feedback in the paper's configuration.
 //!
+//! The per-rank half quantizes into a `Payload::Half` frame; the shared
+//! [`MeanCombiner`](super::rank) dequantizes and averages in rank order.
+//!
 //! The f32<->f16 conversion is implemented from scratch (no `half` crate on
 //! the offline testbed) with round-to-nearest-even, matching hardware
 //! semantics — the same rounding the Pallas quantize kernel performs.
 
-use std::time::Instant;
-
-use super::{CommRecord, Scheme};
+use super::rank::{Payload, RankCompressor};
 
 /// f32 -> f16 bits, round-to-nearest-even, with overflow->inf and
 /// subnormal handling.
@@ -84,47 +85,16 @@ pub fn f16_to_f32(h: u16) -> f32 {
     }
 }
 
-pub struct Fp16 {
-    _private: (),
-}
+/// Quantizes this rank's gradient to a half-precision frame.
+pub(crate) struct HalfCompressor;
 
-impl Fp16 {
-    pub fn new() -> Fp16 {
-        Fp16 { _private: () }
-    }
-}
-
-impl Default for Fp16 {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Scheme for Fp16 {
+impl RankCompressor for HalfCompressor {
     fn name(&self) -> &'static str {
         "FP16"
     }
 
-    fn round(&mut self, _bucket: usize, _step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
-        let n = grads[0].len();
-        let t0 = Instant::now();
-        // Each worker quantizes; the reduction happens over the quantized
-        // values (NCCL fp16 allreduce sums halves; we sum the dequantized
-        // f32s, which matches fp16-accumulate to within one rounding).
-        // fused quantize + reduce: one pass per worker, no scratch buffer
-        // (§Perf: the original staged through a Vec<u16>, doubling traffic)
-        let mut sum = vec![0.0f32; n];
-        for g in grads {
-            for (s, &x) in sum.iter_mut().zip(g.iter()) {
-                *s += f16_to_f32(f32_to_f16(x));
-            }
-        }
-        let inv = 1.0 / grads.len() as f32;
-        for s in &mut sum {
-            *s *= inv;
-        }
-        let compress_s = t0.elapsed().as_secs_f64() / grads.len() as f64;
-        (sum, CommRecord::dense(n * 2, compress_s))
+    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        Payload::Half(grad.iter().map(|&x| f32_to_f16(x)).collect())
     }
 
     fn reset(&mut self) {}
@@ -132,6 +102,8 @@ impl Scheme for Fp16 {
 
 #[cfg(test)]
 mod tests {
+    use super::super::rank::half_frame_len;
+    use super::super::SchemeKind;
     use super::*;
     use crate::util::prop;
     use crate::util::rng::Rng;
@@ -184,8 +156,11 @@ mod tests {
     fn scheme_halves_wire() {
         let g = vec![0.5f32; 64];
         let refs: Vec<&[f32]> = vec![&g, &g];
-        let (u, rec) = Fp16::new().round(0, 0, &refs);
-        assert_eq!(rec.wire_bytes, 128);
+        let mut s = SchemeKind::Fp16.build(2, 0);
+        let (u, rec) = s.round(0, 0, &refs);
+        // the measured half frame: tag + varint + 2 bytes per element
+        assert_eq!(rec.wire_bytes, half_frame_len(64));
+        assert!(rec.wire_bytes < 64 * 4 / 2 + 8, "must be ~half the dense volume");
         assert_eq!(u, g); // 0.5 is f16-exact
     }
 }

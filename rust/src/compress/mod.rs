@@ -1,16 +1,26 @@
 //! Gradient compression schemes: COVAP plus the paper's seven comparison
 //! baselines (Table II / VII).
 //!
-//! A [`Scheme`] models one *communication bucket round* exactly as the
-//! cluster would execute it: per-worker local compression (with per-worker
-//! error-feedback state), the collective exchange, and decompression into
-//! the averaged dense update. The numeric path is bit-faithful; the *wire*
-//! cost is returned as a [`CommRecord`] that the timeline simulator prices
-//! with the network model.
+//! The **canonical API is per-rank**: every scheme natively implements
+//! [`RankCompressor`] / [`RankCombiner`] (see [`rank`]) — one rank's
+//! error-feedback accumulate + wire encode, and the deterministic decode of
+//! all ranks' payloads into the dense update. That is the interface real
+//! transports plug into, and the one the threaded executor drives.
 //!
-//! `compress_s` in the record is the measured wall time of the local
-//! compression work (the paper's `T_compress`) — this is what Table II and
-//! the Fig. 7–10 breakdowns report.
+//! The replicated [`Scheme`] trait — one object modeling a whole worker
+//! group, which the analytic backend and the paper-table harnesses consume
+//! — is a thin adapter: [`LockstepDriver`] drives P compressor/combiner
+//! pairs in sequence over the per-worker gradients. There is exactly one
+//! compress/combine implementation per scheme; the two backends differ only
+//! in *who drives it*, so their bitwise parity is structural.
+//!
+//! Wire accounting is a **measurement, not a model**: each round's
+//! [`CommRecord::wire_bytes`] is the byte length of the encoded payload
+//! frame ([`Payload::encode`]) that `exec::ring` actually moves, and the
+//! timeline simulator prices those same measured sizes. `compress_s` in the
+//! record is the measured wall time of the local compression work (the
+//! paper's `T_compress`) — what Table II and the Fig. 7–10 breakdowns
+//! report.
 
 mod baseline;
 mod covap;
@@ -23,16 +33,18 @@ mod randomk;
 mod signsgd;
 mod topk;
 
-pub use baseline::Baseline;
-pub use covap::CovapScheme;
 pub use ef::EfState;
-pub use fp16::{f16_to_f32, f32_to_f16, Fp16};
-pub use oktopk::OkTopk;
+pub use fp16::{f16_to_f32, f32_to_f16};
 pub use powersgd::PowerSgd;
-pub use rank::{build_rank_pair, Payload, RankCombiner, RankCompressor, RankRound};
-pub use randomk::RandomK;
-pub use signsgd::EfSignSgd;
-pub use topk::{Dgc, TopK};
+pub use rank::{
+    build_rank_pair, dense_frame_len, half_frame_len, sign_frame_len, sparse_frame_len,
+    varint_len, DecodeError, Payload, RankCombiner, RankCompressor, RankRound,
+    ReplicatedScheme,
+};
+
+pub(crate) use topk::k_of;
+
+use std::time::Instant;
 
 use crate::covap::EfScheduler;
 
@@ -48,7 +60,8 @@ pub enum Collective {
 /// Wire + overhead accounting for one bucket round.
 #[derive(Debug, Clone, Copy)]
 pub struct CommRecord {
-    /// Bytes each rank puts on the wire for this bucket (0 = skipped).
+    /// Bytes of this rank's encoded payload frame for this bucket — the
+    /// measured `Payload::encode().len()`, 0 = nothing transmitted.
     pub wire_bytes: usize,
     pub collective: Collective,
     /// Number of dependent collective rounds (PowerSGD = 2).
@@ -75,12 +88,14 @@ impl CommRecord {
     }
 }
 
-/// One gradient-compression scheme, holding all per-worker state.
+/// One gradient-compression scheme modeling a whole worker group.
 ///
 /// `round` receives the per-worker raw bucket gradients and returns the
-/// averaged dense update the optimizer applies, plus the comm record. The
-/// scheme owns per-(worker, bucket) error-feedback residuals where the
-/// algorithm uses them.
+/// averaged dense update the optimizer applies, plus the comm record.
+///
+/// The sole implementation is [`LockstepDriver`]: the per-rank API
+/// ([`rank`]) is canonical, and this trait is the lockstep adapter over it
+/// for in-process (analytic-backend) execution.
 pub trait Scheme: Send {
     fn name(&self) -> &'static str;
 
@@ -88,6 +103,74 @@ pub trait Scheme: Send {
 
     /// Reset all error-feedback / iteration state (new training run).
     fn reset(&mut self);
+}
+
+/// The generic replicated-path adapter: P per-rank compressors (each owning
+/// its own rank's error-feedback state) plus one shared combiner, driven in
+/// rank order over the per-worker gradients — exactly the sequence the
+/// threaded executor runs concurrently, executed in lockstep on one thread.
+pub struct LockstepDriver {
+    label: &'static str,
+    workers: usize,
+    compressors: Vec<Box<dyn RankCompressor>>,
+    /// Combiners are deterministic and bit-identical across ranks, so the
+    /// driver holds a single replica (rank 0's).
+    combiner: Box<dyn RankCombiner>,
+}
+
+impl LockstepDriver {
+    pub fn new(kind: &SchemeKind, workers: usize, seed: u64) -> LockstepDriver {
+        assert!(workers >= 1, "lockstep driver needs at least one rank");
+        let mut compressors: Vec<Box<dyn RankCompressor>> = Vec::with_capacity(workers);
+        let mut combiner: Option<Box<dyn RankCombiner>> = None;
+        for _ in 0..workers {
+            let (c, cb) = build_rank_pair(kind, workers, seed);
+            compressors.push(c);
+            if combiner.is_none() {
+                combiner = Some(cb);
+            }
+        }
+        LockstepDriver {
+            label: kind.label(),
+            workers,
+            compressors,
+            combiner: combiner.expect("workers >= 1"),
+        }
+    }
+}
+
+impl Scheme for LockstepDriver {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn round(&mut self, bucket: usize, step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
+        assert_eq!(grads.len(), self.workers, "grads must be rank-major over all workers");
+        let n = grads[0].len();
+        let t0 = Instant::now();
+        let payloads: Vec<Payload> = self
+            .compressors
+            .iter_mut()
+            .zip(grads.iter())
+            .map(|(c, g)| c.compress(bucket, step, g))
+            .collect();
+        // Per-worker wall time of the compression halves. Combiners add
+        // their own measured *decompression* (sparse scatter, sign unpack,
+        // half dequantize) on top; a plain dense mean is the collective's
+        // arithmetic and charges nothing — so the baseline's T_compress
+        // stays ~zero and nothing is double-counted against the network
+        // model's collective pricing.
+        let compress_s = t0.elapsed().as_secs_f64() / self.workers as f64;
+        let rr = self.combiner.combine(bucket, step, n, &payloads, compress_s);
+        (rr.update, rr.record)
+    }
+
+    fn reset(&mut self) {
+        for c in &mut self.compressors {
+            c.reset();
+        }
+        self.combiner.reset();
+    }
 }
 
 /// Scheme selector + hyperparameters (mirrors the paper's Table II column).
@@ -124,6 +207,55 @@ impl SchemeKind {
         })
     }
 
+    /// Parse a scheme spec string: a paper-default name, optionally with a
+    /// `@hyperparameter` suffix — `topk@0.05` (ratio), `powersgd@2` (rank),
+    /// `covap@8` (interval), `dgc@0.001`, `randomk@0.02`, `oktopk@0.01`.
+    /// Schemes without a hyperparameter (`baseline`, `fp16`, `efsignsgd`)
+    /// reject a suffix. Inverse of [`SchemeKind::spec`].
+    pub fn parse(spec: &str) -> Option<SchemeKind> {
+        let (name, param) = match spec.split_once('@') {
+            Some((n, p)) => (n, Some(p)),
+            None => (spec, None),
+        };
+        let mut kind = Self::paper_default(name)?;
+        if let Some(p) = param {
+            match &mut kind {
+                SchemeKind::TopK { ratio }
+                | SchemeKind::Dgc { ratio }
+                | SchemeKind::RandomK { ratio }
+                | SchemeKind::OkTopk { ratio } => {
+                    *ratio = p.parse().ok().filter(|r| *r > 0.0 && *r <= 1.0)?;
+                }
+                SchemeKind::PowerSgd { rank } => {
+                    *rank = p.parse().ok().filter(|r| *r >= 1)?;
+                }
+                SchemeKind::Covap { interval, .. } => {
+                    *interval = p.parse().ok().filter(|i| *i >= 1)?;
+                }
+                SchemeKind::Baseline | SchemeKind::Fp16 | SchemeKind::EfSignSgd => {
+                    return None;
+                }
+            }
+        }
+        Some(kind)
+    }
+
+    /// Canonical spec string; `SchemeKind::parse(&k.spec())` round-trips
+    /// (the COVAP EF scheduler keeps its default — it is config-file-only).
+    pub fn spec(&self) -> String {
+        match self {
+            SchemeKind::Baseline => "baseline".into(),
+            SchemeKind::Covap { interval, .. } => format!("covap@{interval}"),
+            SchemeKind::TopK { ratio } => format!("topk@{ratio}"),
+            SchemeKind::Dgc { ratio } => format!("dgc@{ratio}"),
+            SchemeKind::RandomK { ratio } => format!("randomk@{ratio}"),
+            SchemeKind::Fp16 => "fp16".into(),
+            SchemeKind::EfSignSgd => "efsignsgd".into(),
+            SchemeKind::PowerSgd { rank } => format!("powersgd@{rank}"),
+            SchemeKind::OkTopk { ratio } => format!("oktopk@{ratio}"),
+        }
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             SchemeKind::Baseline => "DDPovlp",
@@ -138,21 +270,10 @@ impl SchemeKind {
         }
     }
 
-    /// Instantiate for `workers` ranks with a deterministic seed.
+    /// Instantiate the replicated-path adapter for `workers` ranks with a
+    /// deterministic seed.
     pub fn build(&self, workers: usize, seed: u64) -> Box<dyn Scheme> {
-        match self.clone() {
-            SchemeKind::Baseline => Box::new(Baseline::new()),
-            SchemeKind::Covap { interval, ef } => {
-                Box::new(CovapScheme::new(interval, ef, workers))
-            }
-            SchemeKind::TopK { ratio } => Box::new(TopK::new(ratio, workers)),
-            SchemeKind::Dgc { ratio } => Box::new(Dgc::new(ratio, workers, seed)),
-            SchemeKind::RandomK { ratio } => Box::new(RandomK::new(ratio, workers, seed)),
-            SchemeKind::Fp16 => Box::new(Fp16::new()),
-            SchemeKind::EfSignSgd => Box::new(EfSignSgd::new(workers)),
-            SchemeKind::PowerSgd { rank } => Box::new(PowerSgd::new(rank, workers, seed)),
-            SchemeKind::OkTopk { ratio } => Box::new(OkTopk::new(ratio, workers)),
-        }
+        Box::new(LockstepDriver::new(self, workers, seed))
     }
 
     /// All schemes of the paper's evaluation, with paper hyperparameters.
@@ -171,23 +292,6 @@ impl SchemeKind {
     }
 }
 
-/// Mean of per-worker dense vectors (the collective's arithmetic result).
-pub(crate) fn mean_of(grads: &[&[f32]]) -> Vec<f32> {
-    let n = grads[0].len();
-    let inv = 1.0 / grads.len() as f32;
-    let mut out = vec![0.0f32; n];
-    for g in grads {
-        debug_assert_eq!(g.len(), n);
-        for (o, x) in out.iter_mut().zip(g.iter()) {
-            *o += x;
-        }
-    }
-    for o in &mut out {
-        *o *= inv;
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,7 +300,8 @@ mod tests {
 
     /// All schemes must be unbiased-ish on identical inputs: if every worker
     /// holds the same gradient g, the aggregated update of a dense-complete
-    /// scheme equals g (baseline, fp16~, covap-kept buckets).
+    /// scheme equals g (baseline, fp16~, covap-kept buckets). The wire
+    /// volume is the measured encoded frame, not `4 * n`.
     #[test]
     fn baseline_identity_on_identical_grads() {
         let mut s = SchemeKind::Baseline.build(4, 0);
@@ -204,14 +309,8 @@ mod tests {
         let refs: Vec<&[f32]> = (0..4).map(|_| g.as_slice()).collect();
         let (u, rec) = s.round(0, 0, &refs);
         assert_eq!(u, g);
-        assert_eq!(rec.wire_bytes, 400);
-    }
-
-    #[test]
-    fn mean_of_averages() {
-        let a = vec![1.0f32, 2.0];
-        let b = vec![3.0f32, 6.0];
-        assert_eq!(mean_of(&[&a, &b]), vec![2.0, 4.0]);
+        assert_eq!(rec.wire_bytes, dense_frame_len(100));
+        assert_eq!(rec.wire_bytes, Payload::Dense(g).encode().len());
     }
 
     #[test]
@@ -219,6 +318,68 @@ mod tests {
         assert!(SchemeKind::paper_default("covap").is_some());
         assert!(SchemeKind::paper_default("PowerSGD").is_some());
         assert!(SchemeKind::paper_default("nope").is_none());
+    }
+
+    #[test]
+    fn spec_parsing_applies_hyperparameters() {
+        assert_eq!(
+            SchemeKind::parse("topk@0.05"),
+            Some(SchemeKind::TopK { ratio: 0.05 })
+        );
+        assert_eq!(
+            SchemeKind::parse("powersgd@2"),
+            Some(SchemeKind::PowerSgd { rank: 2 })
+        );
+        assert_eq!(
+            SchemeKind::parse("dgc@0.001"),
+            Some(SchemeKind::Dgc { ratio: 0.001 })
+        );
+        match SchemeKind::parse("covap@8") {
+            Some(SchemeKind::Covap { interval: 8, .. }) => {}
+            other => panic!("covap@8 parsed to {other:?}"),
+        }
+        // bare names keep working
+        assert_eq!(SchemeKind::parse("fp16"), Some(SchemeKind::Fp16));
+        assert_eq!(
+            SchemeKind::parse("oktopk@0.02"),
+            Some(SchemeKind::OkTopk { ratio: 0.02 })
+        );
+    }
+
+    #[test]
+    fn spec_parsing_rejects_bad_hyperparameters() {
+        for bad in [
+            "fp16@2",       // no hyperparameter on fp16
+            "baseline@1",   // ... or baseline
+            "efsignsgd@3",  // ... or efsignsgd
+            "topk@0",       // ratio out of range
+            "topk@1.5",     // ratio out of range
+            "topk@abc",     // not a number
+            "powersgd@0",   // rank must be >= 1
+            "covap@0",      // interval must be >= 1
+            "nope@1",       // unknown scheme
+        ] {
+            assert!(SchemeKind::parse(bad).is_none(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_for_evaluation_set() {
+        for kind in SchemeKind::evaluation_set() {
+            let spec = kind.spec();
+            let back = SchemeKind::parse(&spec)
+                .unwrap_or_else(|| panic!("spec '{spec}' failed to parse"));
+            assert_eq!(back, kind, "spec '{spec}' did not round-trip");
+        }
+        // non-default hyperparameters round-trip too
+        for kind in [
+            SchemeKind::TopK { ratio: 0.05 },
+            SchemeKind::Dgc { ratio: 0.0025 },
+            SchemeKind::PowerSgd { rank: 4 },
+            SchemeKind::Covap { interval: 7, ef: EfScheduler::default() },
+        ] {
+            assert_eq!(SchemeKind::parse(&kind.spec()), Some(kind));
+        }
     }
 
     /// Property: every scheme preserves "signal mass" over repeated rounds —
@@ -248,5 +409,18 @@ mod tests {
                 }
             });
         }
+    }
+
+    #[test]
+    fn driver_reset_clears_error_feedback() {
+        let kind = SchemeKind::TopK { ratio: 0.25 };
+        let g = vec![1.0f32, 0.4, 0.0, 0.0];
+        let refs: Vec<&[f32]> = vec![&g];
+        let mut s = kind.build(1, 3);
+        let (first, _) = s.round(0, 0, &refs);
+        let (_second, _) = s.round(0, 1, &refs); // residuals now nonzero
+        s.reset();
+        let (after_reset, _) = s.round(0, 0, &refs);
+        assert_eq!(first, after_reset, "reset must restore the initial EF state");
     }
 }

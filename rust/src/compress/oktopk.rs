@@ -4,14 +4,17 @@
 //! The real algorithm splits the gradient across ranks, exchanges threshold
 //! estimates, and reduces only ~O(k) values per rank. We reproduce the
 //! numeric semantics (global top-k over the summed gradient, per-worker
-//! error feedback on unselected coordinates) and the cost shape (O(k) wire
-//! per rank on an AllReduce-style pattern, plus synchronous threshold
-//! rendezvous rounds that serialize against computation — the paper's
-//! "incompatible with Overlapping" point in §IV.C.1).
+//! error feedback on unselected coordinates) and the cost shape (an O(k)
+//! sparse frame per rank on an AllReduce-style pattern, plus synchronous
+//! threshold rendezvous rounds that serialize against computation — the
+//! paper's "incompatible with Overlapping" point in §IV.C.1). The global
+//! threshold makes the round inherently coupled, so Ok-topk runs as a
+//! [`ReplicatedScheme`](super::rank) with `data_dependency` set.
 
 use std::time::Instant;
 
-use super::{CommRecord, Collective, EfState, Scheme};
+use super::rank::{sparse_frame_len, ReplicatedScheme};
+use super::{CommRecord, Collective, EfState};
 
 pub struct OkTopk {
     ratio: f64,
@@ -30,7 +33,7 @@ impl OkTopk {
     }
 }
 
-impl Scheme for OkTopk {
+impl ReplicatedScheme for OkTopk {
     fn name(&self) -> &'static str {
         "Ok-topk"
     }
@@ -85,7 +88,8 @@ impl Scheme for OkTopk {
 
         let compress_s = t0.elapsed().as_secs_f64() / grads.len() as f64;
         let rec = CommRecord {
-            wire_bytes: selected.len() * 8,
+            // the encoded sparse frame of the selected coordinates
+            wire_bytes: sparse_frame_len(selected.len()),
             collective: Collective::AllReduce,
             rounds: 1,
             sync_rounds: 2, // split + threshold rendezvous

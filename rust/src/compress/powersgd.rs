@@ -8,12 +8,16 @@
 //! Error feedback per worker: r_w = acc_w - P̂ Qᵀ.
 //!
 //! Two dependent AllReduce rounds: the Q matmul needs the *result* of the P
-//! allreduce — the "data dependency" the paper shows breaks overlapping
-//! (Fig. 1e), even though the wire volume r*(rows+cols) is tiny.
+//! allreduce — inherently global, so PowerSGD runs as a
+//! [`ReplicatedScheme`](super::rank): every rank holds an identical replica
+//! fed the gathered raw gradients (see DESIGN.md §4). The wire accounting
+//! charges the encoded frames of the P and Q factors the real algorithm
+//! would move — tiny, even though overlapping is limited (Fig. 1e).
 
 use std::time::Instant;
 
-use super::{CommRecord, Collective, EfState, Scheme};
+use super::rank::{dense_frame_len, ReplicatedScheme};
+use super::{CommRecord, Collective, EfState};
 use crate::util::rng::Rng;
 
 pub struct PowerSgd {
@@ -36,6 +40,15 @@ impl PowerSgd {
         let cols = ((n as f64).sqrt() as usize).clamp(1, 4096);
         let rows = n.div_ceil(cols);
         (rows, cols)
+    }
+
+    /// Encoded wire bytes of one round's factor frames for a bucket of `n`
+    /// elements at rank `r`: the Dense frames of P [rows x r] and
+    /// Q [cols x r] the algorithm exchanges.
+    pub fn factor_frame_bytes(n: usize, r: usize) -> usize {
+        let (rows, cols) = Self::shape(n);
+        let r = r.clamp(1, cols.min(rows));
+        dense_frame_len(rows * r) + dense_frame_len(cols * r)
     }
 }
 
@@ -96,7 +109,7 @@ fn orthonormalize(p: &mut [f32], rows: usize, r: usize) {
     }
 }
 
-impl Scheme for PowerSgd {
+impl ReplicatedScheme for PowerSgd {
     fn name(&self) -> &'static str {
         "PowerSGD"
     }
@@ -161,7 +174,8 @@ impl Scheme for PowerSgd {
 
         let compress_s = t0.elapsed().as_secs_f64() / grads.len() as f64;
         let rec = CommRecord {
-            wire_bytes: (rows + cols) * r * 4,
+            // the encoded P and Q frames the two collective rounds move
+            wire_bytes: dense_frame_len(rows * r) + dense_frame_len(cols * r),
             collective: Collective::AllReduce,
             rounds: 2,
             sync_rounds: 0,
@@ -229,12 +243,13 @@ mod tests {
     }
 
     #[test]
-    fn wire_volume_is_tiny() {
+    fn wire_volume_is_tiny_and_matches_factor_frames() {
         let g = vec![1.0f32; 1_000_000];
         let refs: Vec<&[f32]> = vec![&g];
         let mut s = PowerSgd::new(1, 1, 7);
         let (_, rec) = s.round(0, 0, &refs);
         assert!(rec.wire_bytes < 20_000, "{}", rec.wire_bytes); // vs 4 MB dense
+        assert_eq!(rec.wire_bytes, PowerSgd::factor_frame_bytes(1_000_000, 1));
     }
 
     #[test]

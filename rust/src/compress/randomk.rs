@@ -1,104 +1,90 @@
 //! Random-k sparsification (Stich et al. 2018) with error feedback.
 //!
-//! All workers draw the *same* k indices from a shared (step, bucket)-seeded
-//! stream, so values are summable and an AllReduce of k values suffices —
-//! but the scheme is wired as AllGather here, matching the GRACE
-//! implementation the paper benchmarks (worker payloads gathered, then
-//! averaged; this is what makes Random-k scale poorly in Fig. 11).
+//! All ranks draw the *same* k indices from a shared (step, tensor)-seeded
+//! stream, so no coordination is needed — but the scheme is wired as an
+//! AllGather of sparse frames here, matching the GRACE implementation the
+//! paper benchmarks (worker payloads gathered, then averaged; this is what
+//! makes Random-k scale poorly in Fig. 11). The combine half is the shared
+//! [`SparseCombiner`](super::rank).
 //!
 //! The paper notes Random-k diverged in most of their runs; we reproduce
 //! the mechanism faithfully and observe the same instability in the
 //! convergence harness.
 
-use std::time::Instant;
+use std::collections::HashMap;
 
-use super::{CommRecord, Collective, EfState, Scheme};
+use super::rank::{Payload, RankCompressor};
+use super::topk::k_of;
 use crate::util::rng::Rng;
 
-pub struct RandomK {
-    ratio: f64,
-    ef: EfState,
-    seed: u64,
-}
-
-impl RandomK {
-    pub fn new(ratio: f64, workers: usize, seed: u64) -> RandomK {
-        assert!(ratio > 0.0 && ratio <= 1.0);
-        RandomK { ratio, ef: EfState::new(workers), seed }
-    }
-
-    /// Shared index set for (step, bucket) — identical on every worker, no
-    /// coordination needed (seeded from training seed).
-    fn indices(&self, bucket: usize, step: u64, n: usize, k: usize) -> Vec<usize> {
-        shared_indices(self.seed, bucket, step, n, k)
-    }
-}
-
-/// The (seed, bucket, step) -> index-set rule, shared with the per-rank
-/// executor path so both backends select identical coordinates.
+/// The (seed, tensor, step) -> index-set rule. Identical on every rank, so
+/// each draws the same coordinates locally with zero synchronization.
 pub(crate) fn shared_indices(
     seed: u64,
-    bucket: usize,
+    tensor: usize,
     step: u64,
     n: usize,
     k: usize,
 ) -> Vec<usize> {
     let mut rng =
-        Rng::seed(seed ^ (step.wrapping_mul(0x9E37_79B9)) ^ (bucket as u64) << 32);
+        Rng::seed(seed ^ (step.wrapping_mul(0x9E37_79B9)) ^ (tensor as u64) << 32);
     rng.sample_indices(n, k)
 }
 
-impl Scheme for RandomK {
+/// One rank's random-k half: shared index draw + this rank's residuals.
+pub(crate) struct RandomKCompressor {
+    ratio: f64,
+    seed: u64,
+    residuals: HashMap<usize, Vec<f32>>,
+}
+
+impl RandomKCompressor {
+    pub(crate) fn new(ratio: f64, seed: u64) -> RandomKCompressor {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        RandomKCompressor { ratio, seed, residuals: HashMap::new() }
+    }
+}
+
+impl RankCompressor for RandomKCompressor {
     fn name(&self) -> &'static str {
         "Random-k"
     }
 
-    fn round(&mut self, bucket: usize, step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
-        let n = grads[0].len();
-        let k = ((self.ratio * n as f64).round() as usize).clamp(1, n);
-        let t0 = Instant::now();
-        let idx = self.indices(bucket, step, n, k);
-        let acc = self.ef.accumulate(bucket, 1.0, grads);
-        let mut update = vec![0.0f32; n];
-        let inv = 1.0 / grads.len() as f32;
-        let mut residuals = Vec::with_capacity(acc.len());
-        for a in &acc {
-            let mut r = a.clone();
-            for &i in &idx {
-                update[i] += a[i] * inv;
-                r[i] = 0.0;
-            }
-            residuals.push(r);
+    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
+        let k = k_of(self.ratio, n);
+        let idx = shared_indices(self.seed, tensor, step, n, k);
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        let mut acc: Vec<f32> =
+            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
+        let mut iv = Vec::with_capacity(k);
+        let mut vv = Vec::with_capacity(k);
+        for &i in &idx {
+            iv.push(i as u32);
+            vv.push(acc[i]);
+            acc[i] = 0.0;
         }
-        self.ef.store(bucket, residuals);
-        let compress_s = t0.elapsed().as_secs_f64() / grads.len() as f64;
-        let rec = CommRecord {
-            wire_bytes: k * 8,
-            collective: Collective::AllGather,
-            rounds: 1,
-            sync_rounds: 0,
-            compress_s,
-            data_dependency: false,
-        };
-        (update, rec)
+        *res = acc;
+        Payload::Sparse { idx: iv, val: vv }
     }
 
     fn reset(&mut self) {
-        self.ef.clear();
+        self.residuals.clear();
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::rank::sparse_frame_len;
+    use super::super::SchemeKind;
     use super::*;
 
     #[test]
     fn same_indices_for_all_workers_same_step() {
-        let s = RandomK::new(0.1, 2, 42);
-        let a = s.indices(3, 7, 1000, 100);
-        let b = s.indices(3, 7, 1000, 100);
+        let a = shared_indices(42, 3, 7, 1000, 100);
+        let b = shared_indices(42, 3, 7, 1000, 100);
         assert_eq!(a, b);
-        let c = s.indices(3, 8, 1000, 100);
+        let c = shared_indices(42, 3, 8, 1000, 100);
         assert_ne!(a, c, "different step -> different indices");
     }
 
@@ -107,12 +93,12 @@ mod tests {
         let g0 = vec![2.0f32; 100];
         let g1 = vec![4.0f32; 100];
         let refs: Vec<&[f32]> = vec![&g0, &g1];
-        let mut s = RandomK::new(0.2, 2, 1);
+        let mut s = SchemeKind::RandomK { ratio: 0.2 }.build(2, 1);
         let (u, rec) = s.round(0, 0, &refs);
         let nz: Vec<f32> = u.iter().copied().filter(|&x| x != 0.0).collect();
         assert_eq!(nz.len(), 20);
         assert!(nz.iter().all(|&x| x == 3.0));
-        assert_eq!(rec.wire_bytes, 20 * 8);
+        assert_eq!(rec.wire_bytes, sparse_frame_len(20));
     }
 
     #[test]
@@ -121,7 +107,7 @@ mod tests {
         // update mass approaches total gradient mass.
         let g = vec![1.0f32; 50];
         let refs: Vec<&[f32]> = vec![&g];
-        let mut s = RandomK::new(0.2, 1, 9);
+        let mut s = SchemeKind::RandomK { ratio: 0.2 }.build(1, 9);
         let steps = 200u64;
         let mut total = 0.0f64;
         for step in 0..steps {

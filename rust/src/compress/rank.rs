@@ -1,43 +1,54 @@
-//! Per-rank compression: one rank's half of a [`Scheme`] round.
+//! The canonical per-rank compression API and the wire codec.
 //!
-//! The replicated [`Scheme`] trait models a whole worker group in one
-//! object — fine for the analytic backend, impossible for the threaded
-//! executor where every rank runs on its own OS thread and owns only its
-//! own error-feedback state. This module splits a compression round into
-//! the two halves the cluster actually executes:
+//! Every scheme is implemented *once*, as the two halves a cluster rank
+//! actually executes:
 //!
 //! * [`RankCompressor::compress`] — runs on the rank's *compute* thread,
 //!   right after the tensor's gradient is produced: error-feedback
 //!   accumulate + wire-format encode, touching only this rank's residuals.
 //! * [`RankCombiner::combine`] — runs on the rank's *comm* thread after
 //!   the payload exchange: decode every rank's payload (rank-major order)
-//!   into the dense update.
+//!   into the dense update. Deterministic, identical bits on every rank.
 //!
-//! **Parity contract**: driving P compressor/combiner pairs in lockstep
-//! over the same inputs produces *bitwise identical* updates to the
-//! replicated `Scheme::round` — every accumulate/select/mean loop below
-//! mirrors its `Scheme` counterpart's floating-point evaluation order
-//! exactly, and the property test at the bottom enforces this for every
-//! `SchemeKind`. This is what lets `ExecBackend::Threaded` reproduce the
-//! analytic loss trajectory bit-for-bit.
+//! The replicated [`Scheme`](super::Scheme) trait the analytic backend
+//! consumes is *not* a second implementation: it is the generic
+//! [`LockstepDriver`](super::LockstepDriver) adapter, which drives P
+//! compressor/combiner pairs in sequence over the per-worker gradients.
+//! One implementation, two drivers — bitwise parity between the analytic
+//! and threaded backends is structural, not a property-tested convention.
 //!
-//! Schemes whose round is inherently global (DGC's sampled thresholds
-//! drawn from one RNG stream, PowerSGD's dependent two-round power
-//! iteration, Ok-topk's global threshold) fall back to [`Replicated`]
-//! execution: each rank ships its raw gradient and runs an identical
-//! replica of the full scheme on the gathered set — deterministic, so
-//! still bitwise-parity, at the cost of dense in-process traffic (the
-//! CommRecord keeps charging the scheme's true wire volume; see
-//! DESIGN.md §4).
+//! Schemes whose round is inherently global (PowerSGD's dependent
+//! two-round power iteration, Ok-topk's global threshold) implement
+//! [`ReplicatedScheme`] instead: each rank ships its raw gradient and runs
+//! an identical replica of the full scheme on the gathered set via
+//! `ReplicaCombiner` — deterministic, hence still bitwise-identical
+//! across ranks, at the cost of dense in-process traffic (the CommRecord
+//! keeps charging the scheme's true encoded wire volume; see DESIGN.md §4).
+//!
+//! # Wire format
+//!
+//! [`Payload::encode`] / [`Payload::decode`] give every payload a real
+//! byte-level frame — the thing `exec::ring` moves and the thing
+//! `CommRecord::wire_bytes` measures. All integers are little-endian;
+//! `varint` is LEB128 (7 data bits per byte, low group first):
+//!
+//! ```text
+//! Empty  -> zero-length frame          (a dropped tensor sends nothing)
+//! Dense  -> [0x01][varint n][n x f32]
+//! Sparse -> [0x02][varint k][k x u32 idx][k x f32 val]
+//! Sign   -> [0x03][varint n][f32 scale][ceil(n/8) sign bytes, bit i = i-th sign]
+//! Half   -> [0x04][varint n][n x u16]
+//! ```
+//!
+//! `decode(encode(p)) == p` bitwise for every variant (property-tested
+//! below, including `n % 64 != 0` sign bitmaps and zero-length payloads),
+//! and [`Payload::encoded_len`] — the arithmetic the accounting uses —
+//! always equals `encode().len()`.
 
-use std::collections::HashMap;
+use std::time::Instant;
 
-use super::fp16::{f16_to_f32, f32_to_f16};
-use super::randomk::shared_indices;
-use super::signsgd::pack_signs;
-use super::topk::{k_of, kth_magnitude, select_sparse};
-use super::{CommRecord, Collective, Scheme, SchemeKind};
-use crate::covap::{CoarseFilter, EfScheduler};
+use super::{CommRecord, Collective, SchemeKind};
+use crate::compress::{baseline, covap, fp16, oktopk, powersgd, randomk, signsgd, topk};
 
 /// A wire-format payload one rank contributes to the collective.
 #[derive(Debug, Clone)]
@@ -54,15 +65,253 @@ pub enum Payload {
     Half(Vec<u16>),
 }
 
+const TAG_DENSE: u8 = 0x01;
+const TAG_SPARSE: u8 = 0x02;
+const TAG_SIGN: u8 = 0x03;
+const TAG_HALF: u8 = 0x04;
+
+/// Codec failure (truncated, oversized or malformed frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeError(pub &'static str);
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "payload decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Encoded size of a LEB128 varint.
+pub fn varint_len(mut x: u64) -> usize {
+    let mut len = 1;
+    while x >= 0x80 {
+        x >>= 7;
+        len += 1;
+    }
+    len
+}
+
+fn write_varint(out: &mut Vec<u8>, mut x: u64) {
+    while x >= 0x80 {
+        out.push((x as u8 & 0x7f) | 0x80);
+        x >>= 7;
+    }
+    out.push(x as u8);
+}
+
+/// Frame length of a dense f32 payload of `n` elements.
+pub fn dense_frame_len(n: usize) -> usize {
+    1 + varint_len(n as u64) + 4 * n
+}
+
+/// Frame length of a sparse payload of `k` (index, value) pairs.
+pub fn sparse_frame_len(k: usize) -> usize {
+    1 + varint_len(k as u64) + 8 * k
+}
+
+/// Frame length of a sign payload over `n` elements.
+pub fn sign_frame_len(n: usize) -> usize {
+    1 + varint_len(n as u64) + 4 + n.div_ceil(8)
+}
+
+/// Frame length of a half-precision payload of `n` elements.
+pub fn half_frame_len(n: usize) -> usize {
+    1 + varint_len(n as u64) + 2 * n
+}
+
+/// Sequential little-endian reader over a frame.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        let end = self.pos.checked_add(n).ok_or(DecodeError("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(DecodeError("truncated frame"));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn varint(&mut self) -> Result<u64, DecodeError> {
+        let mut x = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = *self.take(1)?.first().unwrap();
+            if shift >= 64 || (shift == 63 && b > 1) {
+                return Err(DecodeError("varint overflow"));
+            }
+            x |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(x);
+            }
+            shift += 7;
+        }
+    }
+
+    /// A varint element count, sanity-checked against the bytes that must
+    /// still follow (`stride` bytes per element) so a corrupt frame cannot
+    /// trigger a huge allocation.
+    fn count(&mut self, stride: usize) -> Result<usize, DecodeError> {
+        let n = self.varint()? as usize;
+        let need = n.checked_mul(stride).ok_or(DecodeError("length overflow"))?;
+        if need > self.buf.len() - self.pos {
+            return Err(DecodeError("count exceeds frame"));
+        }
+        Ok(n)
+    }
+}
+
 impl Payload {
-    /// Bytes this payload occupies on the wire.
-    pub fn wire_bytes(&self) -> usize {
+    /// Serialize to the framed wire format (see module docs). The returned
+    /// frame's length always equals [`Payload::encoded_len`].
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        match self {
+            Payload::Empty => {}
+            Payload::Dense(v) => {
+                out.push(TAG_DENSE);
+                write_varint(&mut out, v.len() as u64);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::Sparse { idx, val } => {
+                debug_assert_eq!(idx.len(), val.len());
+                out.push(TAG_SPARSE);
+                write_varint(&mut out, idx.len() as u64);
+                for i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for x in val {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::Sign { scale, bits, n } => {
+                out.push(TAG_SIGN);
+                write_varint(&mut out, *n as u64);
+                out.extend_from_slice(&scale.to_le_bytes());
+                for b in 0..n.div_ceil(8) {
+                    out.push((bits[b / 8] >> ((b % 8) * 8)) as u8);
+                }
+            }
+            Payload::Half(v) => {
+                out.push(TAG_HALF);
+                write_varint(&mut out, v.len() as u64);
+                for h in v {
+                    out.extend_from_slice(&h.to_le_bytes());
+                }
+            }
+        }
+        debug_assert_eq!(out.len(), self.encoded_len());
+        out
+    }
+
+    /// Parse a frame produced by [`Payload::encode`]. Bitwise-exact inverse.
+    pub fn decode(buf: &[u8]) -> Result<Payload, DecodeError> {
+        if buf.is_empty() {
+            return Ok(Payload::Empty);
+        }
+        let tag = buf[0];
+        let mut r = Reader { buf, pos: 1 };
+        let p = match tag {
+            TAG_DENSE => {
+                let n = r.count(4)?;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let b: [u8; 4] = r.take(4)?.try_into().unwrap();
+                    v.push(f32::from_le_bytes(b));
+                }
+                Payload::Dense(v)
+            }
+            TAG_SPARSE => {
+                let k = r.count(8)?;
+                let mut idx = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let b: [u8; 4] = r.take(4)?.try_into().unwrap();
+                    idx.push(u32::from_le_bytes(b));
+                }
+                let mut val = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let b: [u8; 4] = r.take(4)?.try_into().unwrap();
+                    val.push(f32::from_le_bytes(b));
+                }
+                Payload::Sparse { idx, val }
+            }
+            TAG_SIGN => {
+                let n = r.varint()? as usize;
+                let b: [u8; 4] = r.take(4)?.try_into().unwrap();
+                let scale = f32::from_le_bytes(b);
+                let bytes = r.take(n.div_ceil(8))?;
+                let mut bits = vec![0u64; n.div_ceil(64)];
+                for (b, &byte) in bytes.iter().enumerate() {
+                    bits[b / 8] |= (byte as u64) << ((b % 8) * 8);
+                }
+                // clear padding bits beyond n (a well-formed encoder never
+                // sets them; a corrupt frame must not smuggle them in)
+                if n % 64 != 0 {
+                    if let Some(last) = bits.last_mut() {
+                        *last &= (1u64 << (n % 64)) - 1;
+                    }
+                }
+                Payload::Sign { scale, bits, n }
+            }
+            TAG_HALF => {
+                let n = r.count(2)?;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let b: [u8; 2] = r.take(2)?.try_into().unwrap();
+                    v.push(u16::from_le_bytes(b));
+                }
+                Payload::Half(v)
+            }
+            _ => return Err(DecodeError("unknown variant tag")),
+        };
+        if r.pos != buf.len() {
+            return Err(DecodeError("trailing bytes"));
+        }
+        Ok(p)
+    }
+
+    /// Bytes this payload occupies on the wire — exactly
+    /// `self.encode().len()`, computed without materializing the frame.
+    pub fn encoded_len(&self) -> usize {
         match self {
             Payload::Empty => 0,
-            Payload::Dense(v) => v.len() * 4,
-            Payload::Sparse { idx, .. } => idx.len() * 8,
-            Payload::Sign { n, .. } => n.div_ceil(8) + 4,
-            Payload::Half(v) => v.len() * 2,
+            Payload::Dense(v) => dense_frame_len(v.len()),
+            Payload::Sparse { idx, .. } => sparse_frame_len(idx.len()),
+            Payload::Sign { n, .. } => sign_frame_len(*n),
+            Payload::Half(v) => half_frame_len(v.len()),
+        }
+    }
+}
+
+/// Bitwise equality (f32s compared by bit pattern, so `-0.0 != 0.0` and
+/// NaN payloads compare equal to themselves — what the codec round-trip
+/// property needs).
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        fn f32s_eq(a: &[f32], b: &[f32]) -> bool {
+            a.len() == b.len()
+                && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        match (self, other) {
+            (Payload::Empty, Payload::Empty) => true,
+            (Payload::Dense(a), Payload::Dense(b)) => f32s_eq(a, b),
+            (
+                Payload::Sparse { idx: ia, val: va },
+                Payload::Sparse { idx: ib, val: vb },
+            ) => ia == ib && f32s_eq(va, vb),
+            (
+                Payload::Sign { scale: sa, bits: ba, n: na },
+                Payload::Sign { scale: sb, bits: bb, n: nb },
+            ) => sa.to_bits() == sb.to_bits() && ba == bb && na == nb,
+            (Payload::Half(a), Payload::Half(b)) => a == b,
+            _ => false,
         }
     }
 }
@@ -107,6 +356,16 @@ pub trait RankCombiner: Send {
     fn reset(&mut self);
 }
 
+/// A globally-coupled scheme that cannot be split into independent rank
+/// halves: one deterministic round over the gathered per-worker gradients.
+/// Run as an identical replica on every rank by `ReplicaCombiner` —
+/// replication *is* its execution strategy, not a second implementation.
+pub trait ReplicatedScheme: Send {
+    fn name(&self) -> &'static str;
+    fn round(&mut self, tensor: usize, step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord);
+    fn reset(&mut self);
+}
+
 /// Build the (compressor, combiner) pair for ONE rank. Call once per rank
 /// with identical `(kind, workers, seed)` so the replicas agree.
 pub fn build_rank_pair(
@@ -115,123 +374,54 @@ pub fn build_rank_pair(
     seed: u64,
 ) -> (Box<dyn RankCompressor>, Box<dyn RankCombiner>) {
     match kind.clone() {
-        SchemeKind::Baseline => {
-            (Box::new(DenseCompressor), Box::new(MeanCombiner { dense_bytes_per_elem: 4 }))
+        SchemeKind::Baseline => (Box::new(baseline::DenseCompressor), Box::new(MeanCombiner)),
+        SchemeKind::Covap { interval, ef } => {
+            (Box::new(covap::CovapCompressor::new(interval, ef)), Box::new(MeanCombiner))
         }
-        SchemeKind::Covap { interval, ef } => (
-            Box::new(CovapCompressor {
-                filter: CoarseFilter::new(interval),
-                scheduler: ef,
-                residuals: HashMap::new(),
+        SchemeKind::Fp16 => (Box::new(fp16::HalfCompressor), Box::new(MeanCombiner)),
+        SchemeKind::TopK { ratio } => {
+            (Box::new(topk::TopKCompressor::new(ratio)), Box::new(SparseCombiner))
+        }
+        SchemeKind::Dgc { ratio } => {
+            (Box::new(topk::DgcCompressor::new(ratio, seed)), Box::new(SparseCombiner))
+        }
+        SchemeKind::RandomK { ratio } => {
+            (Box::new(randomk::RandomKCompressor::new(ratio, seed)), Box::new(SparseCombiner))
+        }
+        SchemeKind::EfSignSgd => {
+            (Box::new(signsgd::SignCompressor::new()), Box::new(SignCombiner))
+        }
+        SchemeKind::PowerSgd { rank } => (
+            Box::new(RawCompressor { dep: false }),
+            Box::new(ReplicaCombiner {
+                inner: Box::new(powersgd::PowerSgd::new(rank, workers, seed)),
             }),
-            Box::new(MeanCombiner { dense_bytes_per_elem: 4 }),
         ),
-        SchemeKind::Fp16 => {
-            (Box::new(HalfCompressor), Box::new(MeanCombiner { dense_bytes_per_elem: 2 }))
-        }
-        SchemeKind::TopK { ratio } => (
-            Box::new(TopKCompressor { ratio, residuals: HashMap::new() }),
-            Box::new(SparseCombiner),
+        SchemeKind::OkTopk { ratio } => (
+            Box::new(RawCompressor { dep: true }),
+            Box::new(ReplicaCombiner { inner: Box::new(oktopk::OkTopk::new(ratio, workers)) }),
         ),
-        SchemeKind::RandomK { ratio } => (
-            Box::new(RandomKCompressor { ratio, seed, residuals: HashMap::new() }),
-            Box::new(SparseCombiner),
-        ),
-        SchemeKind::EfSignSgd => (
-            Box::new(SignCompressor { residuals: HashMap::new() }),
-            Box::new(SignCombiner),
-        ),
-        // Globally-coupled schemes: replicated full-scheme execution.
-        k @ (SchemeKind::Dgc { .. }
-        | SchemeKind::PowerSgd { .. }
-        | SchemeKind::OkTopk { .. }) => {
-            let dep = matches!(k, SchemeKind::OkTopk { .. });
-            (
-                Box::new(RawCompressor { dep }),
-                Box::new(Replicated { inner: k.build(workers, seed) }),
-            )
-        }
     }
 }
 
-// ---- dense / COVAP --------------------------------------------------------
-
-struct DenseCompressor;
-
-impl RankCompressor for DenseCompressor {
-    fn name(&self) -> &'static str {
-        "DDPovlp"
-    }
-
-    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
-        Payload::Dense(grad.to_vec())
-    }
-
-    fn reset(&mut self) {}
+/// Max encoded frame length over the gathered payloads — the per-rank wire
+/// volume the accounting charges (payload frames are identical sizes for
+/// dense/half/sign schemes; sparse selections may differ per rank, where
+/// the max is the conservative per-rank bound the old model also used).
+fn max_frame_len(payloads: &[Payload]) -> usize {
+    payloads.iter().map(|p| p.encoded_len()).max().unwrap_or(0)
 }
 
-struct CovapCompressor {
-    filter: CoarseFilter,
-    scheduler: EfScheduler,
-    /// This rank's residual per communication tensor — the EF state that
-    /// the replicated `CovapScheme` keeps for all workers at once.
-    residuals: HashMap<usize, Vec<f32>>,
-}
+// ---- shared wire-format combiners -----------------------------------------
 
-impl RankCompressor for CovapCompressor {
-    fn name(&self) -> &'static str {
-        "COVAP"
-    }
-
-    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
-        let n = grad.len();
-        let keep = self.filter.keep(tensor, step);
-        let coeff = self.scheduler.coeff(step);
-        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
-        if keep {
-            // same element expression as CovapScheme: gi + coeff * ri
-            let acc: Vec<f32> = grad
-                .iter()
-                .zip(res.iter_mut())
-                .map(|(&gi, ri)| {
-                    let a = gi + coeff * *ri;
-                    *ri = 0.0;
-                    a
-                })
-                .collect();
-            Payload::Dense(acc)
-        } else {
-            for (ri, &gi) in res.iter_mut().zip(grad.iter()) {
-                *ri = gi + coeff * *ri;
-            }
-            Payload::Empty
-        }
-    }
-
-    fn reset(&mut self) {
-        self.residuals.clear();
-    }
-}
-
-struct HalfCompressor;
-
-impl RankCompressor for HalfCompressor {
-    fn name(&self) -> &'static str {
-        "FP16"
-    }
-
-    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
-        Payload::Half(grad.iter().map(|&x| f32_to_f16(x)).collect())
-    }
-
-    fn reset(&mut self) {}
-}
-
-/// Mean over dense-decodable payloads in rank order — the exact accumulate
-/// order of `mean_of` / `CovapScheme` / `Fp16::round`.
-struct MeanCombiner {
-    dense_bytes_per_elem: usize,
-}
+/// Mean over dense-decodable payloads in rank order (Dense and Half frames).
+/// Serves every AllReduce-style mean scheme: baseline, COVAP, FP16.
+///
+/// `compress_s` accounting: a pure Dense mean is the collective's own
+/// arithmetic (in-network on real hardware) and charges nothing extra; a
+/// fold involving Half frames is dequantization, so its measured wall time
+/// is added to the record as the scheme's decompression cost.
+pub(crate) struct MeanCombiner;
 
 impl RankCombiner for MeanCombiner {
     fn name(&self) -> &'static str {
@@ -253,6 +443,7 @@ impl RankCombiner for MeanCombiner {
                 record: CommRecord::dense(0, compress_s),
             };
         }
+        let t0 = Instant::now();
         let mut update = vec![0.0f32; n];
         for p in payloads {
             match p {
@@ -263,7 +454,7 @@ impl RankCombiner for MeanCombiner {
                 }
                 Payload::Half(h) => {
                     for (u, &b) in update.iter_mut().zip(h.iter()) {
-                        *u += f16_to_f32(b);
+                        *u += fp16::f16_to_f32(b);
                     }
                 }
                 other => panic!("mean combiner got {other:?}"),
@@ -273,85 +464,24 @@ impl RankCombiner for MeanCombiner {
         for u in &mut update {
             *u *= inv;
         }
+        let decode_s = if payloads.iter().any(|p| matches!(p, Payload::Half(_))) {
+            t0.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
         RankRound {
             update,
-            record: CommRecord::dense(n * self.dense_bytes_per_elem, compress_s),
+            record: CommRecord::dense(max_frame_len(payloads), compress_s + decode_s),
         }
     }
 
     fn reset(&mut self) {}
 }
 
-// ---- sparse (Top-k / Random-k) --------------------------------------------
-
-struct TopKCompressor {
-    ratio: f64,
-    residuals: HashMap<usize, Vec<f32>>,
-}
-
-impl RankCompressor for TopKCompressor {
-    fn name(&self) -> &'static str {
-        "Top-k"
-    }
-
-    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
-        let n = grad.len();
-        let k = k_of(self.ratio, n);
-        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
-        // acc = g + 1.0 * r, the EfState::accumulate expression
-        let mut acc: Vec<f32> =
-            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
-        let thr = kth_magnitude(&acc, k);
-        let (idx, val) = select_sparse(&acc, thr, k);
-        for &i in &idx {
-            acc[i as usize] = 0.0;
-        }
-        *res = acc;
-        Payload::Sparse { idx, val }
-    }
-
-    fn reset(&mut self) {
-        self.residuals.clear();
-    }
-}
-
-struct RandomKCompressor {
-    ratio: f64,
-    seed: u64,
-    residuals: HashMap<usize, Vec<f32>>,
-}
-
-impl RankCompressor for RandomKCompressor {
-    fn name(&self) -> &'static str {
-        "Random-k"
-    }
-
-    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
-        let n = grad.len();
-        let k = k_of(self.ratio, n);
-        let idx = shared_indices(self.seed, tensor, step, n, k);
-        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
-        let mut acc: Vec<f32> =
-            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
-        let mut iv = Vec::with_capacity(k);
-        let mut vv = Vec::with_capacity(k);
-        for &i in &idx {
-            iv.push(i as u32);
-            vv.push(acc[i]);
-            acc[i] = 0.0;
-        }
-        *res = acc;
-        Payload::Sparse { idx: iv, val: vv }
-    }
-
-    fn reset(&mut self) {
-        self.residuals.clear();
-    }
-}
-
-/// Rank-order mean over sparse selections — mirrors `sparse_round`'s
-/// `update[i] += v * inv` worker loop.
-struct SparseCombiner;
+/// Rank-order mean over sparse selections: `update[i] += v / P` per worker
+/// payload. Serves Top-k, DGC and Random-k. The scatter-add is the sparse
+/// format's decompression, so its measured wall time joins `compress_s`.
+pub(crate) struct SparseCombiner;
 
 impl RankCombiner for SparseCombiner {
     fn name(&self) -> &'static str {
@@ -366,22 +496,22 @@ impl RankCombiner for SparseCombiner {
         payloads: &[Payload],
         compress_s: f64,
     ) -> RankRound {
+        let t0 = Instant::now();
         let mut update = vec![0.0f32; n];
         let inv = 1.0 / payloads.len() as f32;
-        let mut wire = 0usize;
         for p in payloads {
             let Payload::Sparse { idx, val } = p else {
                 panic!("sparse combiner got {p:?}")
             };
-            wire = wire.max(p.wire_bytes());
             for (&i, &v) in idx.iter().zip(val.iter()) {
                 update[i as usize] += v * inv;
             }
         }
+        let compress_s = compress_s + t0.elapsed().as_secs_f64();
         RankRound {
             update,
             record: CommRecord {
-                wire_bytes: wire,
+                wire_bytes: max_frame_len(payloads),
                 collective: Collective::AllGather,
                 rounds: 1,
                 sync_rounds: 0,
@@ -394,39 +524,10 @@ impl RankCombiner for SparseCombiner {
     fn reset(&mut self) {}
 }
 
-// ---- EFsignSGD ------------------------------------------------------------
-
-struct SignCompressor {
-    residuals: HashMap<usize, Vec<f32>>,
-}
-
-impl RankCompressor for SignCompressor {
-    fn name(&self) -> &'static str {
-        "EFsignSGD"
-    }
-
-    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
-        let n = grad.len();
-        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
-        let acc: Vec<f32> =
-            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
-        let scale = acc.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
-        let bits = pack_signs(&acc);
-        // residual = acc - transmitted, same expression as EfSignSgd
-        for (i, r) in res.iter_mut().enumerate() {
-            let neg = bits[i / 64] >> (i % 64) & 1 == 1;
-            let v = if neg { -scale } else { scale };
-            *r = acc[i] - v;
-        }
-        Payload::Sign { scale, bits, n }
-    }
-
-    fn reset(&mut self) {
-        self.residuals.clear();
-    }
-}
-
-struct SignCombiner;
+/// Rank-order mean over sign payloads (EFsignSGD). The per-element unpack
+/// is this scheme's decompression — the cost the paper's Table VII blames —
+/// so its measured wall time joins `compress_s`.
+pub(crate) struct SignCombiner;
 
 impl RankCombiner for SignCombiner {
     fn name(&self) -> &'static str {
@@ -441,6 +542,7 @@ impl RankCombiner for SignCombiner {
         payloads: &[Payload],
         compress_s: f64,
     ) -> RankRound {
+        let t0 = Instant::now();
         let mut update = vec![0.0f32; n];
         let inv = 1.0 / payloads.len() as f32;
         for p in payloads {
@@ -454,10 +556,11 @@ impl RankCombiner for SignCombiner {
                 *u += v * inv;
             }
         }
+        let compress_s = compress_s + t0.elapsed().as_secs_f64();
         RankRound {
             update,
             record: CommRecord {
-                wire_bytes: n.div_ceil(8) + 4,
+                wire_bytes: max_frame_len(payloads),
                 collective: Collective::AllGather,
                 rounds: 1,
                 sync_rounds: 0,
@@ -470,10 +573,11 @@ impl RankCombiner for SignCombiner {
     fn reset(&mut self) {}
 }
 
-// ---- replicated fallback (DGC / PowerSGD / Ok-topk) -----------------------
+// ---- replicated execution (PowerSGD / Ok-topk) ----------------------------
 
-struct RawCompressor {
-    dep: bool,
+/// Ships the raw gradient for replicated execution.
+pub(crate) struct RawCompressor {
+    pub(crate) dep: bool,
 }
 
 impl RankCompressor for RawCompressor {
@@ -492,14 +596,15 @@ impl RankCompressor for RawCompressor {
     fn reset(&mut self) {}
 }
 
-/// Every rank holds an identical replica of the full scheme and feeds it
-/// the gathered raw gradients — deterministic, hence identical state and
-/// bitwise-identical output on every rank and vs the analytic backend.
-struct Replicated {
-    inner: Box<dyn Scheme>,
+/// Every rank holds an identical replica of a [`ReplicatedScheme`] and
+/// feeds it the gathered raw gradients — deterministic, hence identical
+/// state and bitwise-identical output on every rank and vs the analytic
+/// backend. The record keeps the scheme's own (encoded) wire accounting.
+pub(crate) struct ReplicaCombiner {
+    pub(crate) inner: Box<dyn ReplicatedScheme>,
 }
 
-impl RankCombiner for Replicated {
+impl RankCombiner for ReplicaCombiner {
     fn name(&self) -> &'static str {
         self.inner.name()
     }
@@ -516,7 +621,7 @@ impl RankCombiner for Replicated {
             .iter()
             .map(|p| match p {
                 Payload::Dense(g) => g.as_slice(),
-                other => panic!("replicated combiner got {other:?}"),
+                other => panic!("replica combiner got {other:?}"),
             })
             .collect();
         let (update, record) = self.inner.round(tensor, step, &grads);
@@ -531,6 +636,7 @@ impl RankCombiner for Replicated {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::covap::EfScheduler;
     use crate::util::prop;
     use crate::util::rng::Rng;
 
@@ -554,9 +660,10 @@ mod tests {
             .collect()
     }
 
-    /// THE parity guarantee: for every scheme, the per-rank path matches
-    /// the replicated `Scheme::round` bit-for-bit across shapes, steps and
-    /// multiple tensors, and every rank agrees with every other.
+    /// THE parity guarantee: for every scheme, independently-driven rank
+    /// pairs match the replicated `Scheme::round` (now the lockstep driver)
+    /// bit-for-bit across shapes, steps and multiple tensors, and every
+    /// rank agrees with every other.
     #[test]
     fn rank_path_bitwise_matches_scheme_round() {
         for kind in SchemeKind::evaluation_set() {
@@ -615,23 +722,141 @@ mod tests {
     }
 
     #[test]
-    fn payload_wire_bytes_match_formats() {
-        assert_eq!(Payload::Empty.wire_bytes(), 0);
-        assert_eq!(Payload::Dense(vec![0.0; 10]).wire_bytes(), 40);
-        assert_eq!(
-            Payload::Sparse { idx: vec![1, 2, 3], val: vec![0.0; 3] }.wire_bytes(),
-            24
-        );
-        assert_eq!(Payload::Half(vec![0; 10]).wire_bytes(), 20);
-        assert_eq!(Payload::Sign { scale: 1.0, bits: vec![0; 2], n: 100 }.wire_bytes(), 17);
-    }
-
-    #[test]
     fn data_dependency_only_for_oktopk() {
         for kind in SchemeKind::evaluation_set() {
             let (c, _) = build_rank_pair(&kind, 2, 1);
             let want = matches!(kind, SchemeKind::OkTopk { .. });
             assert_eq!(c.data_dependency(), want, "{}", kind.label());
+        }
+    }
+
+    // ---- wire codec -------------------------------------------------------
+
+    #[test]
+    fn frame_lengths_match_formats() {
+        assert_eq!(Payload::Empty.encoded_len(), 0);
+        assert_eq!(Payload::Dense(vec![0.0; 10]).encoded_len(), 42);
+        assert_eq!(
+            Payload::Sparse { idx: vec![1, 2, 3], val: vec![0.0; 3] }.encoded_len(),
+            26
+        );
+        assert_eq!(Payload::Half(vec![0; 10]).encoded_len(), 22);
+        assert_eq!(
+            Payload::Sign { scale: 1.0, bits: vec![0; 2], n: 100 }.encoded_len(),
+            19
+        );
+        // the arithmetic helpers agree with the enum
+        assert_eq!(dense_frame_len(10), 42);
+        assert_eq!(sparse_frame_len(3), 26);
+        assert_eq!(half_frame_len(10), 22);
+        assert_eq!(sign_frame_len(100), 19);
+    }
+
+    #[test]
+    fn varint_boundaries_roundtrip() {
+        for x in [0u64, 1, 127, 128, 129, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, x);
+            assert_eq!(buf.len(), varint_len(x), "{x}");
+            let mut r = Reader { buf: &buf, pos: 0 };
+            assert_eq!(r.varint().unwrap(), x);
+            assert_eq!(r.pos, buf.len());
+        }
+    }
+
+    fn roundtrip(p: &Payload) {
+        let frame = p.encode();
+        assert_eq!(frame.len(), p.encoded_len(), "{p:?}");
+        let back = Payload::decode(&frame).unwrap();
+        assert_eq!(&back, p, "codec round-trip");
+        // re-encode is byte-identical (canonical form)
+        assert_eq!(back.encode(), frame);
+    }
+
+    /// Satellite: decode(encode(p)) == p bitwise across all variants,
+    /// including degenerate shapes.
+    #[test]
+    fn codec_roundtrips_degenerate_shapes() {
+        roundtrip(&Payload::Empty);
+        roundtrip(&Payload::Dense(Vec::new())); // zero-length dense
+        roundtrip(&Payload::Dense(vec![0.0, -0.0, f32::NAN, f32::INFINITY, 1.5e-42]));
+        roundtrip(&Payload::Sparse { idx: vec![7], val: vec![-3.25] }); // single-element
+        roundtrip(&Payload::Sparse { idx: Vec::new(), val: Vec::new() });
+        roundtrip(&Payload::Half(Vec::new()));
+        roundtrip(&Payload::Half(vec![0x3c00, 0x8000, 0x7fff]));
+        // sign bitmaps with n % 64 != 0 (and n % 8 != 0)
+        for n in [0usize, 1, 7, 8, 63, 64, 65, 100, 128, 129] {
+            let g: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+            let bits = crate::compress::signsgd::pack_signs(&g);
+            roundtrip(&Payload::Sign { scale: 0.5, bits, n });
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_random_payloads() {
+        prop::check("codec-roundtrip", 0xC0DEC, 60, |rng: &mut Rng| {
+            let n = rng.below(300);
+            let p = match rng.below(5) {
+                0 => Payload::Empty,
+                1 => Payload::Dense(prop::vec_f32(rng, n, 10.0)),
+                2 => {
+                    let k = rng.below(n + 1);
+                    let idx: Vec<u32> = (0..k).map(|_| rng.below(1 << 20) as u32).collect();
+                    Payload::Sparse { idx, val: prop::vec_f32(rng, k, 10.0) }
+                }
+                3 => {
+                    let g = prop::vec_f32(rng, n, 1.0);
+                    let bits = crate::compress::signsgd::pack_signs(&g);
+                    Payload::Sign { scale: rng.next_f32(), bits, n }
+                }
+                _ => Payload::Half((0..n).map(|_| rng.below(1 << 16) as u16).collect()),
+            };
+            let frame = p.encode();
+            assert_eq!(frame.len(), p.encoded_len());
+            assert_eq!(&Payload::decode(&frame).unwrap(), &p);
+        });
+    }
+
+    #[test]
+    fn decode_rejects_malformed_frames() {
+        // unknown tag
+        assert!(Payload::decode(&[0x7f]).is_err());
+        // truncated dense: claims 10 elements, carries none
+        assert!(Payload::decode(&[TAG_DENSE, 10]).is_err());
+        // trailing bytes after a complete frame
+        let mut frame = Payload::Dense(vec![1.0]).encode();
+        frame.push(0);
+        assert!(Payload::decode(&frame).is_err());
+        // varint overflow (10 continuation bytes)
+        let frame = [TAG_DENSE, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff];
+        assert!(Payload::decode(&frame).is_err());
+        // absurd count cannot allocate: claims 2^40 elements in 3 bytes
+        let mut frame = vec![TAG_DENSE];
+        frame.extend_from_slice(&[0x80, 0x80, 0x80, 0x80, 0x80, 0x40]);
+        assert!(Payload::decode(&frame).is_err());
+    }
+
+    #[test]
+    fn sign_padding_bits_are_masked() {
+        // a corrupt frame with padding bits set beyond n must decode to the
+        // same payload as the clean frame (EF arithmetic indexes < n only,
+        // but Vec<u64> equality in the parity checksums must hold).
+        let clean = Payload::Sign { scale: 1.0, bits: vec![0b101], n: 3 };
+        let mut frame = clean.encode();
+        let last = frame.len() - 1;
+        frame[last] |= 0xf0; // bits 4..8 are padding for n=3
+        assert_eq!(&Payload::decode(&frame).unwrap(), &clean);
+    }
+
+    #[test]
+    fn compressor_payloads_roundtrip_through_codec() {
+        // every scheme's real payload survives the wire bitwise
+        let mut rng = Rng::seed(0x91E);
+        let g = prop::vec_f32(&mut rng, 257, 1.0); // odd size on purpose
+        for kind in SchemeKind::evaluation_set() {
+            let (mut c, _) = build_rank_pair(&kind, 2, 5);
+            let p = c.compress(0, 0, &g);
+            roundtrip(&p);
         }
     }
 }

@@ -1,24 +1,15 @@
 //! EFsignSGD (Karimireddy et al. 2019): transmit sign(acc) packed 1 bit per
-//! gradient plus a single per-bucket scale (mean |acc|); error feedback
+//! gradient plus a single per-tensor scale (mean |acc|); error feedback
 //! stores acc - transmitted.
 //!
-//! Signs are not summable, so the collective is AllGather — combined with
-//! the per-element unpack cost this is why EFsignSGD lands at the bottom of
-//! the paper's Table VII despite its 32x volume reduction.
+//! Signs are not summable, so the collective is an AllGather of sign frames
+//! folded by the shared [`SignCombiner`](super::rank) — combined with the
+//! per-element unpack cost this is why EFsignSGD lands at the bottom of the
+//! paper's Table VII despite its 32x volume reduction.
 
-use std::time::Instant;
+use std::collections::HashMap;
 
-use super::{CommRecord, Collective, EfState, Scheme};
-
-pub struct EfSignSgd {
-    ef: EfState,
-}
-
-impl EfSignSgd {
-    pub fn new(workers: usize) -> EfSignSgd {
-        EfSignSgd { ef: EfState::new(workers) }
-    }
-}
+use super::rank::{Payload, RankCompressor};
 
 /// Pack the signs of xs into u64 words (1 = negative).
 pub(crate) fn pack_signs(xs: &[f32]) -> Vec<u64> {
@@ -31,82 +22,79 @@ pub(crate) fn pack_signs(xs: &[f32]) -> Vec<u64> {
     bits
 }
 
-impl Scheme for EfSignSgd {
+/// One rank's EFsignSGD half: sign packing + this rank's residuals.
+pub(crate) struct SignCompressor {
+    residuals: HashMap<usize, Vec<f32>>,
+}
+
+impl SignCompressor {
+    pub(crate) fn new() -> SignCompressor {
+        SignCompressor { residuals: HashMap::new() }
+    }
+}
+
+impl RankCompressor for SignCompressor {
     fn name(&self) -> &'static str {
         "EFsignSGD"
     }
 
-    fn round(&mut self, bucket: usize, _step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
-        let n = grads[0].len();
-        let t0 = Instant::now();
-        let acc = self.ef.accumulate(bucket, 1.0, grads);
-        let mut update = vec![0.0f32; n];
-        let inv = 1.0 / grads.len() as f32;
-        let mut residuals = Vec::with_capacity(acc.len());
-        for a in &acc {
-            let scale = a.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
-            let bits = pack_signs(a);
-            // decompress: sign * scale; accumulate mean across workers
-            let mut r = a.clone();
-            for i in 0..n {
-                let neg = bits[i / 64] >> (i % 64) & 1 == 1;
-                let v = if neg { -scale } else { scale };
-                update[i] += v * inv;
-                r[i] -= v;
-            }
-            residuals.push(r);
+    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        let acc: Vec<f32> =
+            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
+        let scale = acc.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
+        let bits = pack_signs(&acc);
+        // residual = acc - transmitted
+        for (i, r) in res.iter_mut().enumerate() {
+            let neg = bits[i / 64] >> (i % 64) & 1 == 1;
+            let v = if neg { -scale } else { scale };
+            *r = acc[i] - v;
         }
-        self.ef.store(bucket, residuals);
-        let compress_s = t0.elapsed().as_secs_f64() / grads.len() as f64;
-        let rec = CommRecord {
-            wire_bytes: n.div_ceil(8) + 4,
-            collective: Collective::AllGather,
-            rounds: 1,
-            sync_rounds: 0,
-            compress_s,
-            data_dependency: false,
-        };
-        (update, rec)
+        Payload::Sign { scale, bits, n }
     }
 
     fn reset(&mut self) {
-        self.ef.clear();
+        self.residuals.clear();
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::rank::sign_frame_len;
+    use super::super::SchemeKind;
     use super::*;
-    use crate::util::prop;
-    use crate::util::rng::Rng;
 
     #[test]
     fn sign_and_scale_roundtrip() {
         let g = vec![1.0f32, -1.0, 1.0, -1.0];
         let refs: Vec<&[f32]> = vec![&g];
-        let mut s = EfSignSgd::new(1);
+        let mut s = SchemeKind::EfSignSgd.build(1, 0);
         let (u, rec) = s.round(0, 0, &refs);
         // |g| uniform: scale = 1, update = exact signs
         assert_eq!(u, g);
-        assert_eq!(rec.wire_bytes, 1 + 4);
+        assert_eq!(rec.wire_bytes, sign_frame_len(4));
     }
 
     #[test]
     fn packs_32x_denser_than_f32() {
         let g = vec![0.5f32; 6400];
         let refs: Vec<&[f32]> = vec![&g];
-        let (_, rec) = EfSignSgd::new(1).round(0, 0, &refs);
-        assert_eq!(rec.wire_bytes, 800 + 4);
+        let mut s = SchemeKind::EfSignSgd.build(1, 0);
+        let (_, rec) = s.round(0, 0, &refs);
+        assert_eq!(rec.wire_bytes, sign_frame_len(6400));
         assert!(rec.wire_bytes * 30 < 6400 * 4);
     }
 
     #[test]
     fn residual_holds_magnitude_error() {
+        use crate::util::prop;
+        use crate::util::rng::Rng;
         prop::check("efsign-residual", 33, 30, |rng: &mut Rng| {
             let n = 32 + rng.below(256);
             let g = prop::vec_f32(rng, n, 1.0);
             let refs: Vec<&[f32]> = vec![&g];
-            let mut s = EfSignSgd::new(1);
+            let mut s = SchemeKind::EfSignSgd.build(1, 0);
             let (u, _) = s.round(0, 0, &refs);
             // transmitted + residual == original (EF identity)
             // residual = g - u (single worker), checked via second round:
@@ -123,7 +111,7 @@ mod tests {
         // tracks the true gradient despite 1-bit quantization.
         let g = vec![0.3f32, -1.7, 0.9, -0.2, 1.1, -0.6, 0.05, -2.2];
         let refs: Vec<&[f32]> = vec![&g];
-        let mut s = EfSignSgd::new(1);
+        let mut s = SchemeKind::EfSignSgd.build(1, 0);
         let steps = 400;
         let mut sum = vec![0.0f64; g.len()];
         for step in 0..steps {

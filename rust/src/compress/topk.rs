@@ -1,32 +1,22 @@
 //! Top-k (Aji & Heafield 2017) and DGC (Lin et al. 2018) sparsification.
 //!
 //! Both transmit the k largest-magnitude gradients per bucket with error
-//! feedback; worker index sets differ, so the wire format is AllGather
-//! (idx, val) pairs. The difference the paper measures (Table II):
+//! feedback; worker index sets differ, so the wire format is an AllGather
+//! of sparse (idx, val) frames folded by the shared
+//! [`SparseCombiner`](super::rank). The difference the paper measures
+//! (Table II):
 //! * Top-k does an exact selection — O(n) quickselect here, but the GPU
 //!   `topk()` operator the paper times is far worse; either way it is the
 //!   most expensive compressor.
 //! * DGC estimates the threshold from a random sample (default 1%), then
-//!   does one filter pass — cheaper by an order of magnitude.
+//!   does one filter pass — cheaper by an order of magnitude. The sample
+//!   is drawn from this rank's own accumulated gradient (local selection,
+//!   as in GRACE), so DGC is a native per-rank scheme.
 
-use std::time::Instant;
+use std::collections::HashMap;
 
-use super::{CommRecord, Collective, EfState, Scheme};
+use super::rank::{Payload, RankCompressor};
 use crate::util::rng::Rng;
-
-/// Exact per-worker top-k with error feedback.
-pub struct TopK {
-    ratio: f64,
-    ef: EfState,
-    workers: usize,
-}
-
-impl TopK {
-    pub fn new(ratio: f64, workers: usize) -> TopK {
-        assert!(ratio > 0.0 && ratio <= 1.0);
-        TopK { ratio, ef: EfState::new(workers), workers }
-    }
-}
 
 /// k = max(1, ratio * n)
 pub(crate) fn k_of(ratio: f64, n: usize) -> usize {
@@ -57,139 +47,107 @@ pub(crate) fn select_sparse(acc: &[f32], threshold: f32, k: usize) -> (Vec<u32>,
     (idx, val)
 }
 
-/// Shared round logic for Top-k / DGC given each worker's threshold rule.
-fn sparse_round(
-    ef: &mut EfState,
-    bucket: usize,
-    grads: &[&[f32]],
-    thresh_of: impl Fn(&[f32], usize) -> f32,
+/// Exact per-rank top-k with error feedback.
+pub(crate) struct TopKCompressor {
     ratio: f64,
-) -> (Vec<f32>, usize, f64) {
-    let n = grads[0].len();
-    let k = k_of(ratio, n);
-    let t0 = Instant::now();
-    let acc = ef.accumulate(bucket, 1.0, grads);
-    let mut update = vec![0.0f32; n];
-    let mut residuals = Vec::with_capacity(acc.len());
-    let inv = 1.0 / grads.len() as f32;
-    for a in &acc {
-        let thr = thresh_of(a, k);
-        let (idx, val) = select_sparse(a, thr, k);
-        let mut r = a.clone();
-        for (&i, &v) in idx.iter().zip(val.iter()) {
-            update[i as usize] += v * inv;
-            r[i as usize] = 0.0;
-        }
-        residuals.push(r);
-    }
-    ef.store(bucket, residuals);
-    let compress_s = t0.elapsed().as_secs_f64() / grads.len() as f64;
-    // wire: k (idx u32 + val f32) pairs per rank
-    (update, k * 8, compress_s)
+    residuals: HashMap<usize, Vec<f32>>,
 }
 
-impl Scheme for TopK {
+impl TopKCompressor {
+    pub(crate) fn new(ratio: f64) -> TopKCompressor {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        TopKCompressor { ratio, residuals: HashMap::new() }
+    }
+}
+
+impl RankCompressor for TopKCompressor {
     fn name(&self) -> &'static str {
         "Top-k"
     }
 
-    fn round(&mut self, bucket: usize, _step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
-        let _ = self.workers;
-        let (update, wire, compress_s) =
-            sparse_round(&mut self.ef, bucket, grads, kth_magnitude, self.ratio);
-        let rec = CommRecord {
-            wire_bytes: wire,
-            collective: Collective::AllGather,
-            rounds: 1,
-            sync_rounds: 0,
-            compress_s,
-            data_dependency: false,
-        };
-        (update, rec)
+    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
+        let k = k_of(self.ratio, n);
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        // acc = g + 1.0 * r, the EF accumulate expression
+        let mut acc: Vec<f32> =
+            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
+        let thr = kth_magnitude(&acc, k);
+        let (idx, val) = select_sparse(&acc, thr, k);
+        for &i in &idx {
+            acc[i as usize] = 0.0;
+        }
+        *res = acc;
+        Payload::Sparse { idx, val }
     }
 
     fn reset(&mut self) {
-        self.ef.clear();
+        self.residuals.clear();
     }
 }
 
-/// DGC: sampled-threshold top-k + error feedback.
-pub struct Dgc {
+/// Threshold from a 1% uniform sample of |xs| (min 256 elements): the k-th
+/// largest in the sample, scaled to the sample fraction.
+fn sampled_threshold(rng: &mut Rng, xs: &[f32], k: usize) -> f32 {
+    let n = xs.len();
+    let sample_n = (n / 100).clamp(256.min(n), n);
+    let mut sample: Vec<f32> = (0..sample_n).map(|_| xs[rng.below(n)].abs()).collect();
+    let ks = ((k as f64) * (sample_n as f64) / (n as f64)).round() as usize;
+    let ks = ks.clamp(1, sample_n);
+    sample.select_nth_unstable_by(ks - 1, |a, b| b.partial_cmp(a).unwrap());
+    sample[ks - 1]
+}
+
+/// DGC: sampled-threshold top-k + error feedback, local to this rank.
+pub(crate) struct DgcCompressor {
     ratio: f64,
-    ef: EfState,
+    /// Rank-local sampling stream. Seeded identically on every rank (the
+    /// draw *count* per round is shape-determined, so streams stay aligned
+    /// across ranks), but thresholds come from each rank's own values.
     rng: Rng,
+    residuals: HashMap<usize, Vec<f32>>,
 }
 
-impl Dgc {
-    pub fn new(ratio: f64, workers: usize, seed: u64) -> Dgc {
+impl DgcCompressor {
+    pub(crate) fn new(ratio: f64, seed: u64) -> DgcCompressor {
         assert!(ratio > 0.0 && ratio <= 1.0);
-        Dgc { ratio, ef: EfState::new(workers), rng: Rng::seed(seed ^ 0xD6C) }
-    }
-
-    /// Threshold from a 1% uniform sample (min 256 elements).
-    fn sampled_threshold(&mut self, xs: &[f32], k: usize) -> f32 {
-        let n = xs.len();
-        let sample_n = (n / 100).clamp(256.min(n), n);
-        let mut sample: Vec<f32> = (0..sample_n)
-            .map(|_| xs[self.rng.below(n)].abs())
-            .collect();
-        // k-th largest in the sample, scaled to the sample fraction.
-        let ks = ((k as f64) * (sample_n as f64) / (n as f64)).round() as usize;
-        let ks = ks.clamp(1, sample_n);
-        sample.select_nth_unstable_by(ks - 1, |a, b| b.partial_cmp(a).unwrap());
-        sample[ks - 1]
+        DgcCompressor { ratio, rng: Rng::seed(seed ^ 0xD6C), residuals: HashMap::new() }
     }
 }
 
-impl Scheme for Dgc {
+impl RankCompressor for DgcCompressor {
     fn name(&self) -> &'static str {
         "DGC"
     }
 
-    fn round(&mut self, bucket: usize, _step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord) {
-        // Pre-draw thresholds (borrow checker: rng is &mut self).
-        let n = grads[0].len();
+    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+        let n = grad.len();
         let k = k_of(self.ratio, n);
-        let t0 = Instant::now();
-        let acc = self.ef.accumulate(bucket, 1.0, grads);
-        let mut update = vec![0.0f32; n];
-        let mut residuals = Vec::with_capacity(acc.len());
-        let inv = 1.0 / grads.len() as f32;
-        let mut sent_max = 0usize;
-        for a in &acc {
-            let thr = self.sampled_threshold(a, k);
-            // DGC sends everything above the estimated threshold (count may
-            // exceed k slightly — that is the algorithm's behaviour).
-            let cap = 2 * k; // hierarchical re-selection bound
-            let (idx, val) = select_sparse(a, thr, cap);
-            sent_max = sent_max.max(idx.len());
-            let mut r = a.clone();
-            for (&i, &v) in idx.iter().zip(val.iter()) {
-                update[i as usize] += v * inv;
-                r[i as usize] = 0.0;
-            }
-            residuals.push(r);
+        let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
+        let mut acc: Vec<f32> =
+            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
+        let thr = sampled_threshold(&mut self.rng, &acc, k);
+        // DGC sends everything above the estimated threshold (count may
+        // exceed k slightly — that is the algorithm's behaviour), capped at
+        // the hierarchical re-selection bound.
+        let cap = 2 * k;
+        let (idx, val) = select_sparse(&acc, thr, cap);
+        for &i in &idx {
+            acc[i as usize] = 0.0;
         }
-        self.ef.store(bucket, residuals);
-        let compress_s = t0.elapsed().as_secs_f64() / grads.len() as f64;
-        let rec = CommRecord {
-            wire_bytes: sent_max * 8,
-            collective: Collective::AllGather,
-            rounds: 1,
-            sync_rounds: 0,
-            compress_s,
-            data_dependency: false,
-        };
-        (update, rec)
+        *res = acc;
+        Payload::Sparse { idx, val }
     }
 
     fn reset(&mut self) {
-        self.ef.clear();
+        self.residuals.clear();
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::rank::sparse_frame_len;
+    use super::super::{Collective, SchemeKind};
     use super::*;
     use crate::util::prop;
     use crate::util::rng::Rng as TRng;
@@ -206,10 +164,10 @@ mod tests {
     fn topk_transmits_largest_only() {
         let g = vec![0.0f32, 10.0, 0.1, -20.0, 0.2, 0.3];
         let refs: Vec<&[f32]> = vec![&g];
-        let mut s = TopK::new(2.0 / 6.0, 1);
+        let mut s = SchemeKind::TopK { ratio: 2.0 / 6.0 }.build(1, 0);
         let (u, rec) = s.round(0, 0, &refs);
         assert_eq!(u, vec![0.0, 10.0, 0.0, -20.0, 0.0, 0.0]);
-        assert_eq!(rec.wire_bytes, 2 * 8);
+        assert_eq!(rec.wire_bytes, sparse_frame_len(2));
         assert_eq!(rec.collective, Collective::AllGather);
     }
 
@@ -217,7 +175,7 @@ mod tests {
     fn topk_error_feedback_recovers_small_values() {
         // A small gradient never selected still reaches the update through
         // residual accumulation once it grows past the top-k threshold.
-        let mut s = TopK::new(0.25, 1); // k=1 of 4
+        let mut s = SchemeKind::TopK { ratio: 0.25 }.build(1, 0); // k=1 of 4
         let g = vec![1.0f32, 0.4, 0.0, 0.0];
         let refs: Vec<&[f32]> = vec![&g];
         let mut second_slot_total = 0.0;
@@ -235,7 +193,7 @@ mod tests {
             let workers = 1 + rng.below(3);
             let gs: Vec<Vec<f32>> = (0..workers).map(|_| prop::vec_f32(rng, n, 1.0)).collect();
             let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
-            let mut s = TopK::new(0.1, workers);
+            let mut s = SchemeKind::TopK { ratio: 0.1 }.build(workers, 0);
             let (u, _) = s.round(0, 0, &refs);
             let nz = u.iter().filter(|&&x| x != 0.0).count();
             // union of per-worker top-k: at most workers * k nonzeros
@@ -248,12 +206,12 @@ mod tests {
         let mut rng = TRng::seed(5);
         let g: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32).collect();
         let refs: Vec<&[f32]> = vec![&g];
-        let mut s = Dgc::new(0.01, 1, 3);
+        let mut s = SchemeKind::Dgc { ratio: 0.01 }.build(1, 3);
         let (u, rec) = s.round(0, 0, &refs);
         let nz = u.iter().filter(|&&x| x != 0.0).count();
         // sampled threshold: within 4x of nominal k, well below n
         assert!(nz >= 25 && nz <= 400, "nz={nz}");
-        assert!(rec.wire_bytes <= 2 * 100 * 8);
+        assert!(rec.wire_bytes <= sparse_frame_len(2 * 100));
     }
 
     #[test]
@@ -261,8 +219,8 @@ mod tests {
         let mut rng = TRng::seed(6);
         let g: Vec<f32> = (0..2_000_000).map(|_| rng.normal() as f32).collect();
         let refs: Vec<&[f32]> = vec![&g];
-        let mut topk = TopK::new(0.01, 1);
-        let mut dgc = Dgc::new(0.01, 1, 3);
+        let mut topk = SchemeKind::TopK { ratio: 0.01 }.build(1, 3);
+        let mut dgc = SchemeKind::Dgc { ratio: 0.01 }.build(1, 3);
         let (_, r_top) = topk.round(0, 0, &refs);
         let (_, r_dgc) = dgc.round(0, 0, &refs);
         assert!(

@@ -218,8 +218,11 @@ impl RunConfig {
             };
         }
         if let Some(s) = a.get("scheme") {
-            self.scheme = SchemeKind::paper_default(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown scheme '{s}'"))?;
+            self.scheme = SchemeKind::parse(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scheme spec '{s}' (try e.g. covap, topk@0.05, powersgd@2)"
+                )
+            })?;
         }
         if let Some(i) = a.get("interval") {
             let interval: usize = i.parse().context("--interval")?;
@@ -297,8 +300,13 @@ pub fn default_cluster(workers: usize) -> ClusterSpec {
 }
 
 fn scheme_from_json(j: &Json) -> Result<SchemeKind> {
+    // String form: a spec like "topk@0.05" (same grammar as --scheme).
+    if let Json::Str(spec) = j {
+        return SchemeKind::parse(spec)
+            .ok_or_else(|| anyhow::anyhow!("unknown scheme spec '{spec}'"));
+    }
     let name = j.get("name")?.as_str()?;
-    let mut kind = SchemeKind::paper_default(name)
+    let mut kind = SchemeKind::parse(name)
         .ok_or_else(|| anyhow::anyhow!("unknown scheme '{name}'"))?;
     match &mut kind {
         SchemeKind::Covap { interval, ef } => {
@@ -376,6 +384,39 @@ mod tests {
         assert_eq!(cfg.steps, 7);
         assert_eq!(cfg.bucket_bytes, 1024 * 1024);
         assert!(matches!(cfg.scheme, SchemeKind::PowerSgd { rank: 1 }));
+    }
+
+    #[test]
+    fn scheme_spec_with_hyperparameters_parses_everywhere() {
+        // CLI form
+        let args = Args::parse(
+            ["--scheme", "topk@0.05"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.scheme, SchemeKind::TopK { ratio: 0.05 });
+
+        let args = Args::parse(
+            ["--scheme", "powersgd@2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.scheme, SchemeKind::PowerSgd { rank: 2 });
+
+        // JSON string form
+        let j = Json::parse(r#"{"scheme": "dgc@0.002"}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.scheme, SchemeKind::Dgc { ratio: 0.002 });
+
+        // bad specs are rejected with an error, not silently defaulted
+        let args = Args::parse(
+            ["--scheme", "topk@nope"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_args(&args).is_err());
     }
 
     #[test]

@@ -9,11 +9,13 @@
 //! [`ExecBackend::Threaded`], the *measured* breakdown from the threaded
 //! rank executor, so predictions and reality sit side by side.
 //!
-//! The two backends are numerically bit-identical by construction: the
-//! threaded path runs the same per-rank compression arithmetic
-//! (`compress::rank`) and the same rank-major combine order, and the
-//! executor cross-checks every rank's reduced gradient by checksum each
-//! step.
+//! The two backends are numerically bit-identical *structurally*: the
+//! per-rank compressor/combiner pairs (`compress::rank`) are the single
+//! implementation of every scheme — the analytic path drives them in
+//! lockstep through `compress::LockstepDriver`, the threaded path drives
+//! the same pairs concurrently — and the executor still cross-checks every
+//! rank's reduced gradient by checksum each step. Wire accounting in both
+//! backends is the measured encoded-frame length of each payload.
 
 use std::sync::Arc;
 use std::time::Instant;

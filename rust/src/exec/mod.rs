@@ -1,7 +1,9 @@
 //! `exec` — the threaded rank executor: P ranks on real OS threads, each
 //! with its own gradient buffer, data shard and per-rank error-feedback
-//! state, exchanging compressed payloads over lock-free per-edge channels
-//! with the same chunk schedule as the in-place simulator path.
+//! state, exchanging *serialized* compressed-payload frames
+//! (`Payload::encode` byte buffers) over per-edge channels with the same
+//! chunk schedule as the in-place simulator path. Wire accounting is the
+//! measured frame length, shared with the analytic backend's records.
 //!
 //! This subsystem turns the repo's *simulated* overlap claims into
 //! *measured* ones: the analytic backend predicts a step's
@@ -319,6 +321,64 @@ mod tests {
         let (mut exec2, _) = setup(4, &kind, 3);
         let b = exec2.step(0, params, tensors, Policy::Overlap).unwrap();
         assert_eq!(a.reduced, b.reduced, "policy must not change numerics");
+    }
+
+    /// The issue's wire-measurement criterion: every CommRecord.wire_bytes
+    /// the threaded backend reports equals the byte length of the largest
+    /// encoded payload frame the ranks exchanged for that tensor (== each
+    /// rank's own frame for size-uniform schemes).
+    #[test]
+    fn records_charge_encoded_frame_lengths() {
+        use crate::compress::build_rank_pair;
+        for kind in [
+            SchemeKind::Baseline,
+            SchemeKind::Fp16,
+            SchemeKind::TopK { ratio: 0.05 },
+            SchemeKind::EfSignSgd,
+        ] {
+            let world = 2;
+            let seed = 13u64;
+            let (mut exec, n) = setup(world, &kind, seed);
+            let params = Arc::new(vec![0.05f32; n]);
+            let tensors = tensors_of(n);
+            let out = exec
+                .step(0, params.clone(), tensors.clone(), Policy::Overlap)
+                .unwrap();
+
+            // replay the per-rank compression to materialize the frames
+            let spec = SyntheticSpec::new(0xBEEF, 1);
+            let corpus = SyntheticCorpus::new(64);
+            let mut shards: Vec<DataShard> =
+                (0..world).map(|w| DataShard::new(corpus.clone(), seed, w, 2, 9)).collect();
+            let mut cs: Vec<_> =
+                (0..world).map(|_| build_rank_pair(&kind, world, seed).0).collect();
+            let grads: Vec<Vec<f32>> = shards
+                .iter_mut()
+                .map(|sh| {
+                    let batch = sh.next_batch();
+                    let mut m = SyntheticModel::new(spec);
+                    m.fwd_bwd(&params, &batch).1
+                })
+                .collect();
+            for (idx, t) in tensors.iter().enumerate() {
+                let frames: Vec<usize> = cs
+                    .iter_mut()
+                    .zip(grads.iter())
+                    .map(|(c, g)| {
+                        let p = c.compress(idx, 0, &g[t.offset..t.offset + t.numel]);
+                        let frame = p.encode();
+                        assert_eq!(frame.len(), p.encoded_len());
+                        frame.len()
+                    })
+                    .collect();
+                let want = frames.iter().copied().max().unwrap();
+                assert_eq!(
+                    out.records[idx].wire_bytes, want,
+                    "{} tensor {idx}: record must charge the measured frame",
+                    kind.label()
+                );
+            }
+        }
     }
 
     #[test]

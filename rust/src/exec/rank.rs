@@ -1,8 +1,10 @@
 //! The per-rank worker: one OS *compute* thread (data shard -> backward
 //! pass -> per-tensor compression, wait-free) feeding one OS *comm* thread
-//! (payload exchange over the ring + decode into the dense update) through
-//! a FIFO bucket queue — the executable form of the paper's Fig. 1b/1d
-//! two-stream picture.
+//! (serialized-frame exchange over the ring + decode into the dense
+//! update) through a FIFO bucket queue — the executable form of the
+//! paper's Fig. 1b/1d two-stream picture. The ring moves
+//! `Payload::encode` byte frames, so the timeline's moved-bytes and the
+//! records' wire accounting are measurements of real serialized volume.
 //!
 //! Under `Policy::Overlap` the compute thread enqueues each tensor the
 //! moment its gradient+payload is ready, so communication of early tensors

@@ -7,11 +7,14 @@
 //! so the two are **bitwise identical** (property-tested below): per chunk
 //! the sum is the same sequential chain, only executed by P real threads.
 //!
-//! [`allgather_payloads`] is the object-granular rotation used for
-//! compressed payload exchange (worker-specific sparse formats are not
-//! summable in-network), and [`Pacer`] optionally throttles every hop to a
-//! modeled wire bandwidth + latency so measured timelines can emulate a
-//! slow fabric on a fast testbed.
+//! [`allgather_payloads`] is the compressed-payload rotation: every rank
+//! **serializes** its payload with [`Payload::encode`] and the ring moves
+//! the raw byte frames — what a real transport would see — decoding the
+//! gathered rank-major set only at the end. Hop pacing and the `sent`
+//! accounting both use the measured `frame.len()`, so the bytes charged are
+//! the bytes a rank actually put on the wire, not a size model. [`Pacer`]
+//! optionally throttles every hop to a modeled wire bandwidth + latency so
+//! measured timelines can emulate a slow fabric on a fast testbed.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
@@ -23,8 +26,8 @@ use crate::compress::Payload;
 pub enum Frame {
     /// A chunk of a dense f32 collective.
     Chunk(Vec<f32>),
-    /// A compressed payload rotation hop.
-    Pay(Payload),
+    /// A serialized compressed-payload frame ([`Payload::encode`]).
+    Bytes(Vec<u8>),
 }
 
 /// One rank's pair of ring-edge endpoints.
@@ -78,15 +81,15 @@ impl Pacer {
 fn recv_chunk(link: &RingLink) -> Vec<f32> {
     match link.rx.recv() {
         Ok(Frame::Chunk(v)) => v,
-        Ok(Frame::Pay(_)) => panic!("protocol error: expected Chunk, got Payload"),
+        Ok(Frame::Bytes(_)) => panic!("protocol error: expected Chunk, got Bytes"),
         Err(_) => panic!("ring peer disconnected mid-collective"),
     }
 }
 
-fn recv_payload(link: &RingLink) -> Payload {
+fn recv_bytes(link: &RingLink) -> Vec<u8> {
     match link.rx.recv() {
-        Ok(Frame::Pay(p)) => p,
-        Ok(Frame::Chunk(_)) => panic!("protocol error: expected Payload, got Chunk"),
+        Ok(Frame::Bytes(b)) => b,
+        Ok(Frame::Chunk(_)) => panic!("protocol error: expected Bytes, got Chunk"),
         Err(_) => panic!("ring peer disconnected mid-collective"),
     }
 }
@@ -148,9 +151,10 @@ pub fn ring_allreduce_threaded(
     sent
 }
 
-/// Object-granular ring AllGather: every rank contributes one payload and
-/// receives the rank-major vector of all payloads after P-1 rotation hops.
-/// Returns (payloads rank-major, bytes this rank sent).
+/// Serialized ring AllGather: every rank contributes one payload, encoded
+/// to its byte frame, and receives the rank-major vector of all payloads
+/// after P-1 rotation hops of raw frames. Returns (payloads rank-major,
+/// frame bytes this rank sent — the measured wire traffic).
 pub fn allgather_payloads(
     rank: usize,
     world: usize,
@@ -161,28 +165,36 @@ pub fn allgather_payloads(
     if world <= 1 {
         return (vec![mine], 0);
     }
-    let mut slots: Vec<Option<Payload>> = (0..world).map(|_| None).collect();
-    slots[rank] = Some(mine);
+    let mut frames: Vec<Option<Vec<u8>>> = (0..world).map(|_| None).collect();
+    frames[rank] = Some(mine.encode());
+    let mut own = Some(mine);
     let prev = (rank + world - 1) % world;
     let mut sent = 0usize;
     for s in 0..world - 1 {
         let c_out = (rank + world - s) % world;
-        let out = slots[c_out].clone().expect("rotation invariant");
-        let bytes = out.wire_bytes();
+        let out = frames[c_out].clone().expect("rotation invariant");
+        let bytes = out.len();
         if let Some(p) = pacer {
             p.pace(bytes);
         }
         sent += bytes;
-        link.tx.send(Frame::Pay(out)).expect("ring send");
-        let inc = recv_payload(link);
+        link.tx.send(Frame::Bytes(out)).expect("ring send");
+        let inc = recv_bytes(link);
         let c_in = (prev + world - s) % world;
-        debug_assert!(slots[c_in].is_none() || c_in == rank);
-        slots[c_in] = Some(inc);
+        debug_assert!(frames[c_in].is_none() || c_in == rank);
+        frames[c_in] = Some(inc);
     }
-    let gathered = slots
-        .into_iter()
-        .map(|o| o.expect("all payloads arrive after P-1 hops"))
-        .collect();
+    let mut gathered = Vec::with_capacity(world);
+    for (i, f) in frames.into_iter().enumerate() {
+        let frame = f.expect("all frames arrive after P-1 hops");
+        if i == rank {
+            // this rank's own payload needs no decode round-trip (the
+            // codec's exactness is property-tested; peers decoded it)
+            gathered.push(own.take().expect("own payload"));
+        } else {
+            gathered.push(Payload::decode(&frame).expect("corrupt ring frame"));
+        }
+    }
     (gathered, sent)
 }
 
@@ -267,29 +279,70 @@ mod tests {
         }
     }
 
+    /// Run a payload allgather across P scoped threads; returns the
+    /// rank-major gathered payloads and per-rank sent bytes.
+    fn run_allgather(payloads: Vec<Payload>) -> (Vec<Vec<Payload>>, Vec<usize>) {
+        let p = payloads.len();
+        let links = make_links(p);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = links
+                .into_iter()
+                .zip(payloads)
+                .enumerate()
+                .map(|(r, (link, mine))| {
+                    s.spawn(move || allgather_payloads(r, p, mine, &link, None))
+                })
+                .collect();
+            let mut out = Vec::with_capacity(p);
+            let mut sent = Vec::with_capacity(p);
+            for h in handles {
+                let (g, s) = h.join().expect("rank thread");
+                out.push(g);
+                sent.push(s);
+            }
+            (out, sent)
+        })
+    }
+
     #[test]
     fn payload_allgather_is_rank_major() {
         let p = 4;
-        let links = make_links(p);
-        let gathered: Vec<Vec<Payload>> = std::thread::scope(|s| {
-            let handles: Vec<_> = links
-                .into_iter()
-                .enumerate()
-                .map(|(r, link)| {
-                    s.spawn(move || {
-                        let mine = Payload::Dense(vec![r as f32; 3]);
-                        allgather_payloads(r, p, mine, &link, None).0
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
+        let payloads: Vec<Payload> =
+            (0..p).map(|r| Payload::Dense(vec![r as f32; 3])).collect();
+        let (gathered, _) = run_allgather(payloads);
         for row in &gathered {
             assert_eq!(row.len(), p);
             for (c, pay) in row.iter().enumerate() {
                 let Payload::Dense(v) = pay else { panic!("wrong variant") };
                 assert_eq!(v, &vec![c as f32; 3], "slot {c}");
             }
+        }
+    }
+
+    /// Frames survive the wire bitwise for every variant, and the measured
+    /// sent bytes are exactly (P-1) hops of encoded frame lengths.
+    #[test]
+    fn payload_allgather_moves_encoded_frames() {
+        let payloads = vec![
+            Payload::Dense(vec![1.0, -0.0, f32::NAN]),
+            Payload::Empty,
+            Payload::Sparse { idx: vec![3, 9], val: vec![0.5, -0.25] },
+            Payload::Sign { scale: 0.75, bits: vec![0b1011], n: 5 },
+        ];
+        let p = payloads.len();
+        let (gathered, sent) = run_allgather(payloads.clone());
+        for row in &gathered {
+            for (want, got) in payloads.iter().zip(row.iter()) {
+                assert_eq!(got, want, "payload must survive the wire bitwise");
+            }
+        }
+        // rank r forwards every frame except its successor's: total sent =
+        // sum of all frames' encoded lengths minus the one it never sends.
+        let lens: Vec<usize> = payloads.iter().map(|p| p.encoded_len()).collect();
+        let total: usize = lens.iter().sum();
+        for (r, &s) in sent.iter().enumerate() {
+            let skipped = lens[(r + 1) % p];
+            assert_eq!(s, total - skipped, "rank {r} sent bytes");
         }
     }
 

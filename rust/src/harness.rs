@@ -9,7 +9,10 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::compress::{Collective, PowerSgd, SchemeKind};
+use crate::compress::{
+    dense_frame_len, half_frame_len, k_of, sign_frame_len, sparse_frame_len, Collective,
+    PowerSgd, SchemeKind,
+};
 use crate::util::json::Json;
 use crate::coordinator::bucketize_layers;
 use crate::covap::{shard_buckets, CoarseFilter};
@@ -103,22 +106,23 @@ pub fn paper_profile(kind: &SchemeKind) -> CompressProfile {
     CompressProfile { s_per_elem: total_s / N, sample_elems: 143_652_544 }
 }
 
-/// Analytic wire bytes for one tensor of `n` elements under a scheme
-/// (matches the CommRecord each scheme emits; see compress/*.rs).
+/// Wire bytes for one tensor of `n` elements under a scheme: the encoded
+/// frame length of the payload the scheme's compressor emits — the codec's
+/// own framing arithmetic (`Payload::encoded_len`), not a hand-maintained
+/// size model. `wire_bytes_equal_encoded_representative_frames` pins this
+/// against actually encoding representative payloads, so the benches price
+/// the same measured sizes the executor moves.
 pub fn wire_bytes(kind: &SchemeKind, n: usize) -> usize {
     match kind {
-        SchemeKind::Baseline => n * 4,
-        SchemeKind::Covap { .. } => n * 4, // when kept; filter handled upstream
-        SchemeKind::TopK { ratio } | SchemeKind::RandomK { ratio } | SchemeKind::OkTopk { ratio } => {
-            (((ratio * n as f64).round() as usize).clamp(1, n)) * 8
-        }
-        SchemeKind::Dgc { ratio } => (((ratio * n as f64).round() as usize).clamp(1, n)) * 8,
-        SchemeKind::Fp16 => n * 2,
-        SchemeKind::EfSignSgd => n.div_ceil(8) + 4,
-        SchemeKind::PowerSgd { rank } => {
-            let (rows, cols) = PowerSgd::shape(n);
-            (rows + cols) * (*rank).min(rows).min(cols) * 4
-        }
+        SchemeKind::Baseline => dense_frame_len(n),
+        SchemeKind::Covap { .. } => dense_frame_len(n), // when kept; filter is upstream
+        SchemeKind::TopK { ratio }
+        | SchemeKind::RandomK { ratio }
+        | SchemeKind::OkTopk { ratio }
+        | SchemeKind::Dgc { ratio } => sparse_frame_len(k_of(*ratio, n)),
+        SchemeKind::Fp16 => half_frame_len(n),
+        SchemeKind::EfSignSgd => sign_frame_len(n),
+        SchemeKind::PowerSgd { rank } => PowerSgd::factor_frame_bytes(n, *rank),
     }
 }
 
@@ -322,8 +326,11 @@ pub struct BenchRow {
     pub measured_exposed_s: f64,
     /// Simulated exposed communication, seconds.
     pub sim_exposed_s: f64,
-    /// Accounting wire bytes per rank per step.
+    /// Accounting wire bytes per rank per step (encoded frame lengths).
     pub wire_bytes: usize,
+    /// Measured ring traffic per step: bytes of serialized frames the
+    /// worst rank actually moved (threaded backend; 0 on sim-only rows).
+    pub moved_bytes: usize,
     /// Whether the threaded backend matched the analytic one bitwise.
     pub bitwise_equal: Option<bool>,
 }
@@ -352,6 +359,7 @@ pub fn write_bench_json(path: &Path, bench: &str, rows: &[BenchRow]) -> Result<(
                 ("measured_exposed_s", num_or_null(r.measured_exposed_s)),
                 ("sim_exposed_s", num_or_null(r.sim_exposed_s)),
                 ("wire_bytes", Json::from(r.wire_bytes)),
+                ("moved_bytes", Json::from(r.moved_bytes)),
                 (
                     "bitwise_equal",
                     match r.bitwise_equal {
@@ -383,11 +391,78 @@ mod tests {
     #[test]
     fn wire_bytes_shapes() {
         let n = 1_000_000;
-        assert_eq!(wire_bytes(&SchemeKind::Baseline, n), 4 * n);
-        assert_eq!(wire_bytes(&SchemeKind::Fp16, n), 2 * n);
-        assert_eq!(wire_bytes(&SchemeKind::TopK { ratio: 0.01 }, n), 10_000 * 8);
-        assert_eq!(wire_bytes(&SchemeKind::EfSignSgd, n), 125_000 + 4);
+        assert_eq!(wire_bytes(&SchemeKind::Baseline, n), dense_frame_len(n));
+        assert_eq!(wire_bytes(&SchemeKind::Fp16, n), half_frame_len(n));
+        assert_eq!(
+            wire_bytes(&SchemeKind::TopK { ratio: 0.01 }, n),
+            sparse_frame_len(10_000)
+        );
+        assert_eq!(wire_bytes(&SchemeKind::EfSignSgd, n), sign_frame_len(n));
         assert!(wire_bytes(&SchemeKind::PowerSgd { rank: 1 }, n) < 20_000);
+    }
+
+    /// The size "model" is the codec itself: for every deterministic-size
+    /// scheme, `wire_bytes(kind, n)` equals the byte length of actually
+    /// encoding the payload a rank compressor emits on a representative
+    /// gradient. Variable-size schemes (DGC's over-selection, Ok-topk's
+    /// stale thresholds) are bounded by their caps.
+    #[test]
+    fn wire_bytes_equal_encoded_representative_frames() {
+        use crate::compress::build_rank_pair;
+        let mut rng = Rng::seed(0xF7A);
+        for n in [64usize, 1000, 4097] {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            for kind in SchemeKind::evaluation_set() {
+                let expect = wire_bytes(&kind, n);
+                match kind {
+                    SchemeKind::Dgc { ratio } => {
+                        let (mut c, _) = build_rank_pair(&kind, 1, 1);
+                        let frame = c.compress(0, 0, &g).encode().len();
+                        let cap = sparse_frame_len(2 * k_of(ratio, n));
+                        assert!(frame <= cap, "DGC n={n}: frame {frame} > cap {cap}");
+                    }
+                    SchemeKind::OkTopk { ratio } => {
+                        let refs: Vec<&[f32]> = vec![&g];
+                        let (_, rec) = kind.build(1, 1).round(0, 0, &refs);
+                        let cap = sparse_frame_len(2 * k_of(ratio, n));
+                        assert!(rec.wire_bytes <= cap, "Ok-topk n={n}");
+                    }
+                    SchemeKind::PowerSgd { .. } => {
+                        let refs: Vec<&[f32]> = vec![&g];
+                        let (_, rec) = kind.build(1, 1).round(0, 0, &refs);
+                        assert_eq!(expect, rec.wire_bytes, "PowerSGD n={n}");
+                    }
+                    _ => {
+                        let (mut c, _) = build_rank_pair(&kind, 1, 1);
+                        let frame = c.compress(0, 0, &g).encode().len();
+                        assert_eq!(expect, frame, "{} n={n}", kind.label());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Regression pin: the codec's framing must not drift the old Table II
+    /// compression ratios (dense 4n / scheme bytes) at bucket scale.
+    #[test]
+    fn table2_wire_ratio_regression() {
+        let n = 25 * 1024 * 1024 / 4; // one 25 MiB DDP bucket of f32s
+        let dense = 4.0 * n as f64;
+        let cases: [(SchemeKind, f64); 5] = [
+            (SchemeKind::Baseline, 1.0),
+            (SchemeKind::Fp16, 2.0),
+            (SchemeKind::TopK { ratio: 0.01 }, 50.0),
+            (SchemeKind::Dgc { ratio: 0.001 }, 500.0),
+            (SchemeKind::EfSignSgd, 32.0),
+        ];
+        for (kind, want) in cases {
+            let ratio = dense / wire_bytes(&kind, n) as f64;
+            assert!(
+                (ratio / want - 1.0).abs() < 1e-3,
+                "{}: compression ratio {ratio:.3} drifted from {want}",
+                kind.label()
+            );
+        }
     }
 
     #[test]
@@ -446,6 +521,7 @@ mod tests {
             measured_exposed_s: 0.001,
             sim_exposed_s: f64::NAN, // -> null
             wire_bytes: 1234,
+            moved_bytes: 5678,
             bitwise_equal: Some(true),
         }];
         write_bench_json(&path, "test", &rows).unwrap();
@@ -454,6 +530,7 @@ mod tests {
         let arr = j.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("world").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(arr[0].get("moved_bytes").unwrap().as_usize().unwrap(), 5678);
         assert_eq!(arr[0].get("sim_exposed_s").unwrap(), &Json::Null);
     }
 

@@ -141,8 +141,8 @@ fn exec_cmd(args: &Args) -> Result<()> {
     let workers: usize = args.get_parsed("workers", 4usize)?;
     let steps: u64 = args.get_parsed("steps", 4u64)?;
     let preset = args.get_or("preset", "tiny");
-    let scheme = SchemeKind::paper_default(&args.get_or("scheme", "covap"))
-        .ok_or_else(|| anyhow::anyhow!("unknown scheme"))?;
+    let scheme = SchemeKind::parse(&args.get_or("scheme", "covap"))
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme spec (e.g. covap, topk@0.05)"))?;
     let mut cfg = RunConfig {
         workers,
         scheme,

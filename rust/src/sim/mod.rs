@@ -18,7 +18,9 @@ pub struct TensorCost {
     pub comp_s: f64,
     /// Local compression overhead (serializes with computation, Eq. 6).
     pub compress_s: f64,
-    /// Wire bytes per rank for this tensor (0 = skipped by the filter).
+    /// Encoded payload-frame bytes per rank for this tensor — the same
+    /// measured `Payload::encode().len()` the executor moves (0 = skipped
+    /// by the filter), so sim and exec price identical volumes.
     pub wire_bytes: usize,
     pub collective: Collective,
     /// Dependent collective rounds (PowerSGD: 2).
