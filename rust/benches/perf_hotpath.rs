@@ -1,14 +1,271 @@
 //! §Perf — L3 hot-path micro-benchmarks (the data behind EXPERIMENTS.md
-//! §Perf): compressor throughputs, filter decision cost, EF accumulate
-//! bandwidth, ring allreduce bandwidth, f16 pack/unpack.
+//! §Perf), now centred on the zero-allocation steady-state claim:
+//!
+//! * per-scheme **compress+encode throughput** (GB/s of gradient input
+//!   turned into wire frames through `RankCompressor::compress_into`);
+//! * per-scheme **total overhead per element** (compress + combine), the
+//!   measured analogue of the paper's Table II column — COVAP must be the
+//!   cheapest of all compression schemes;
+//! * **steady-state allocations per step**, counted by a global counting
+//!   allocator across the compress→encode→combine hot path after warmup —
+//!   asserted to be exactly zero for covap / topk / signsgd / fp16 (the
+//!   issue's mandatory set) plus the dense baseline; DGC/Random-k have
+//!   data-dependent selection sizes and the replicated schemes allocate
+//!   internally, so they are reported, not asserted.
+//!
+//!     cargo bench --bench perf_hotpath -- [--quick]
+//!         [--json BENCH_perf_hotpath.json]
+//!
+//! Emits a machine-readable BENCH_perf_hotpath.json through the harness
+//! emitter so CI tracks the perf trajectory across PRs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 use covap::comm::ring_allreduce;
-use covap::compress::{f16_to_f32, f32_to_f16, SchemeKind};
+use covap::compress::{
+    build_rank_pair, f16_to_f32, f32_to_f16, RankCombiner, RankCompressor, SchemeKind,
+    Scratch,
+};
 use covap::covap::CoarseFilter;
+use covap::harness::write_bench_doc;
 use covap::util::bench::{sink, time_fn, Table};
+use covap::util::cli::Args;
+use covap::util::json::Json;
 use covap::util::rng::Rng;
 
-fn main() {
+/// Counts every heap allocation (alloc / alloc_zeroed / realloc) made
+/// through the global allocator — the instrument behind the
+/// allocations-per-step column.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// One rank's (compressor, combiner) pair.
+type Pair = (Box<dyn RankCompressor>, Box<dyn RankCombiner>);
+
+/// One scheme's measured hot-path profile.
+struct HotPath {
+    label: &'static str,
+    /// GB/s of raw gradient input through compress_into (incl. encode).
+    compress_gbps: f64,
+    /// Seconds of (compress + combine) per gradient element per worker.
+    s_per_elem: f64,
+    /// Total heap allocations over the steady-state measured window
+    /// (compress + combine, all workers, all tensors).
+    steady_allocs: u64,
+    /// Steps in the measured window (for the per-step report).
+    measured_steps: u64,
+    /// Allocations observed during the cold first step (sanity: the
+    /// counter sees the warmup).
+    warmup_allocs: u64,
+}
+
+impl HotPath {
+    fn allocs_per_step(&self) -> f64 {
+        self.steady_allocs as f64 / self.measured_steps as f64
+    }
+}
+
+/// Drive `world` rank compressors + one combiner over `tensors` tensors
+/// through the frame-level hot path, with persistent buffers — exactly the
+/// per-rank steady state the executor runs.
+fn measure_scheme(kind: &SchemeKind, n: usize, world: usize, tensors: usize) -> HotPath {
+    let seed = 0xBE7C;
+    let mut pairs: Vec<Pair> = (0..world).map(|_| build_rank_pair(kind, world, seed)).collect();
+    let mut scratch = Scratch::new();
+    let mut frames: Vec<Vec<u8>> = (0..world).map(|_| Vec::new()).collect();
+    let mut update: Vec<f32> = Vec::new();
+
+    // per-worker gradients, distinct but fixed across steps
+    let mut rng = Rng::seed(0x9E7);
+    let grads: Vec<Vec<f32>> =
+        (0..world).map(|_| (0..n).map(|_| rng.normal() as f32).collect()).collect();
+
+    let mut step = 0u64;
+    let mut compress_s = 0.0f64;
+    let mut combine_s = 0.0f64;
+    let mut run_step = |pairs: &mut [Pair],
+                        scratch: &mut Scratch,
+                        frames: &mut Vec<Vec<u8>>,
+                        update: &mut Vec<f32>,
+                        compress_s: &mut f64,
+                        combine_s: &mut f64| {
+        for tensor in 0..tensors {
+            let t0 = Instant::now();
+            for ((c, _), (g, frame)) in
+                pairs.iter_mut().zip(grads.iter().zip(frames.iter_mut()))
+            {
+                c.compress_into(tensor, step, g, scratch, frame);
+            }
+            let t1 = Instant::now();
+            // one combiner replica (identical across ranks)
+            let record = pairs[0].1.combine_into(tensor, step, n, frames, scratch, update, 0.0);
+            let t2 = Instant::now();
+            *compress_s += (t1 - t0).as_secs_f64();
+            *combine_s += (t2 - t1).as_secs_f64();
+            sink(record.wire_bytes);
+            sink(update.last().copied());
+        }
+        step += 1;
+    };
+
+    // cold first step: warms every buffer; the counter must see it
+    let before_cold = allocs();
+    run_step(&mut pairs, &mut scratch, &mut frames, &mut update, &mut compress_s, &mut combine_s);
+    let warmup_allocs = allocs() - before_cold;
+    // finish warmup: two full COVAP intervals so every (tensor, phase)
+    // combination has run at least once
+    for _ in 0..7 {
+        run_step(&mut pairs, &mut scratch, &mut frames, &mut update, &mut compress_s, &mut combine_s);
+    }
+
+    // measured window
+    compress_s = 0.0;
+    combine_s = 0.0;
+    let measured_steps = 8u64;
+    let before = allocs();
+    for _ in 0..measured_steps {
+        run_step(&mut pairs, &mut scratch, &mut frames, &mut update, &mut compress_s, &mut combine_s);
+    }
+    let steady_allocs = allocs() - before;
+
+    let in_bytes = measured_steps as f64 * tensors as f64 * world as f64 * n as f64 * 4.0;
+    let elems = measured_steps as f64 * tensors as f64 * world as f64 * n as f64;
+    HotPath {
+        label: kind.label(),
+        compress_gbps: in_bytes / compress_s / 1e9,
+        s_per_elem: (compress_s + combine_s) / elems,
+        steady_allocs,
+        measured_steps,
+        warmup_allocs,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let quick = args.has("quick");
+    let json_path = PathBuf::from(args.get_or("json", "BENCH_perf_hotpath.json"));
+    let n: usize = if quick { 1 << 16 } else { 1 << 20 };
+    let world = 2usize;
+    let tensors = 4usize;
+
+    let kinds = SchemeKind::evaluation_set();
+    let mut profiles: Vec<HotPath> = Vec::new();
+    let mut t = Table::new(&[
+        "scheme",
+        "compress+encode",
+        "overhead/elem",
+        "allocs/step (steady)",
+    ]);
+    for kind in &kinds {
+        let p = measure_scheme(kind, n, world, tensors);
+        assert!(
+            p.warmup_allocs > 0,
+            "{}: the counting allocator saw no warmup allocations — instrument broken",
+            p.label
+        );
+        t.row(&[
+            p.label.into(),
+            format!("{:.2} GB/s", p.compress_gbps),
+            format!("{:.3}ns", p.s_per_elem * 1e9),
+            format!("{:.1}", p.allocs_per_step()),
+        ]);
+        profiles.push(p);
+    }
+    t.print(&format!(
+        "perf — per-rank hot path ({world} workers x {tensors} tensors x {n} elems)"
+    ));
+
+    // The issue's acceptance: zero steady-state heap allocations on the
+    // compress→encode→combine path for at least covap/topk/signsgd/fp16
+    // (the dense baseline rides along for free; DGC/Random-k have
+    // data-dependent selection sizes and the replicated schemes allocate
+    // internally — reported above, not asserted).
+    for must_be_zero in ["COVAP", "Top-k", "EFsignSGD", "FP16", "DDPovlp"] {
+        let p = profiles.iter().find(|p| p.label == must_be_zero).expect("scheme present");
+        assert!(
+            p.steady_allocs == 0,
+            "{}: {} allocations over {} steady-state steps (must be 0)",
+            p.label,
+            p.steady_allocs,
+            p.measured_steps
+        );
+    }
+
+    // Table II ordering: COVAP's measured per-element overhead is the
+    // lowest of all compression schemes (the uncompressed baseline is the
+    // no-op row the paper reports as 0).
+    let covap = profiles.iter().find(|p| p.label == "COVAP").expect("covap present");
+    for p in profiles.iter().filter(|p| p.label != "COVAP" && p.label != "DDPovlp") {
+        assert!(
+            covap.s_per_elem < p.s_per_elem,
+            "COVAP {:.3}ns/elem must undercut {} {:.3}ns/elem (Table II ordering)",
+            covap.s_per_elem * 1e9,
+            p.label,
+            p.s_per_elem * 1e9
+        );
+    }
+    println!(
+        "\nzero-alloc steady state: OK (covap/topk/signsgd/fp16 + baseline); \
+         COVAP overhead lowest: OK"
+    );
+
+    // machine-readable artifact for the CI trajectory
+    let rows: Vec<Json> = profiles
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("scheme", Json::from(p.label)),
+                ("elems", Json::from(n)),
+                ("world", Json::from(world)),
+                ("tensors", Json::from(tensors)),
+                ("compress_gbps", Json::from(p.compress_gbps)),
+                ("s_per_elem", Json::from(p.s_per_elem)),
+                ("allocs_per_step", Json::from(p.allocs_per_step())),
+                ("warmup_allocs", Json::from(p.warmup_allocs as usize)),
+            ])
+        })
+        .collect();
+    write_bench_doc(&json_path, "perf_hotpath", rows)?;
+    println!("wrote {}", json_path.display());
+
+    if !quick {
+        legacy_micro_benches();
+    }
+    Ok(())
+}
+
+/// The original L3 micro-benchmarks (filter decision, f16 conversion,
+/// in-place ring) — full mode only.
+fn legacy_micro_benches() {
     let n = 1 << 22; // 4 Mi elements = 16 MiB
     let mut rng = Rng::seed(0xBE7C);
     let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
@@ -29,32 +286,6 @@ fn main() {
         format!("{:.2}µs", s.median_s * 1e6),
         format!("{:.1}ns/tensor", s.median_s * 1e9 / 1024.0),
     ]);
-
-    // scheme round throughput (1 worker, includes EF where applicable)
-    for kind in [
-        SchemeKind::Covap { interval: 1, ef: Default::default() },
-        SchemeKind::Fp16,
-        SchemeKind::TopK { ratio: 0.01 },
-        SchemeKind::Dgc { ratio: 0.001 },
-        SchemeKind::RandomK { ratio: 0.01 },
-        SchemeKind::EfSignSgd,
-        SchemeKind::PowerSgd { rank: 1 },
-        SchemeKind::OkTopk { ratio: 0.01 },
-    ] {
-        let mut scheme = kind.build(1, 1);
-        let refs: Vec<&[f32]> = vec![&g];
-        let mut step = 0u64;
-        let s = time_fn(1, 5, || {
-            let (u, _) = scheme.round(0, step, &refs);
-            step += 1;
-            u[0]
-        });
-        t.row(&[
-            format!("{} round (4Mi elems)", kind.label()),
-            format!("{:.2}ms", s.median_s * 1e3),
-            format!("{:.2} GB/s", s.gbps(n * 4)),
-        ]);
-    }
 
     // f16 pack+unpack
     let s = time_fn(2, 10, || {
@@ -83,5 +314,5 @@ fn main() {
         format!("{:.2} GB/s", s.gbps(4 * n * 4)),
     ]);
 
-    t.print("perf — L3 hot paths (1-core testbed)");
+    t.print("perf — L3 legacy hot paths (1-core testbed)");
 }

@@ -83,6 +83,20 @@ impl RingSchedule {
     }
 }
 
+/// Slot a rank forwards at hop `s` of a P-1-hop object-granular ring
+/// rotation (allgather of one object per rank): rank `r` starts by sending
+/// its own slot (`s = 0`), then forwards whatever it received last hop.
+/// Shared by the in-place [`ring_allgather`] and the threaded
+/// `exec::ring::allgather_frames`, so both walk the identical rotation.
+pub fn rot_send(p: usize, r: usize, s: usize) -> usize {
+    (r + p - s % p) % p
+}
+
+/// Slot rank `r` receives at hop `s` — its predecessor's [`rot_send`].
+pub fn rot_recv(p: usize, r: usize, s: usize) -> usize {
+    rot_send(p, (r + p - 1) % p, s)
+}
+
 /// In-place ring AllReduce (sum) over per-rank buffers.
 ///
 /// Implements reduce-scatter + allgather with P-1 steps each over P chunks.
@@ -162,7 +176,7 @@ pub fn ring_allgather(payloads: &[Vec<f32>]) -> (Vec<f32>, usize) {
         // snapshot the outgoing slot ids first (simultaneous exchange)
         let moves: Vec<(usize, usize, Vec<f32>)> = (0..p)
             .map(|r| {
-                let c = (r + p - s) % p;
+                let c = rot_send(p, r, s);
                 let payload =
                     slots[r][c].clone().expect("rotation invariant: slot present");
                 sent[r] += payload.len() * 4;
@@ -279,6 +293,26 @@ mod tests {
             let total: usize = payloads.iter().map(|v| v.len() * 4).sum();
             assert!(sent_max <= total * p, "sent {sent_max} vs total {total}");
         });
+    }
+
+    #[test]
+    fn rotation_delivers_every_slot_once() {
+        for p in 1..=6usize {
+            for r in 0..p {
+                // receives are the predecessor's sends
+                for s in 0..p - 1 {
+                    assert_eq!(rot_recv(p, r, s), rot_send(p, (r + p - 1) % p, s));
+                }
+                // after P-1 hops rank r has received every slot except its own
+                let mut have: Vec<bool> = (0..p).map(|c| c == r).collect();
+                for s in 0..p - 1 {
+                    let c = rot_recv(p, r, s);
+                    assert!(!have[c], "p={p} r={r} s={s}: duplicate slot {c}");
+                    have[c] = true;
+                }
+                assert!(have.iter().all(|&h| h), "p={p} r={r}: missing slots");
+            }
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! the mean. Replicated execution is `LockstepDriver` over this pair, like
 //! every other scheme.
 
-use super::rank::{Payload, RankCompressor};
+use super::rank::{encode_dense_into, RankCompressor, Scratch};
 
 /// Ships this rank's gradient uncompressed.
 pub(crate) struct DenseCompressor;
@@ -15,8 +15,15 @@ impl RankCompressor for DenseCompressor {
         "DDPovlp"
     }
 
-    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
-        Payload::Dense(grad.to_vec())
+    fn compress_into(
+        &mut self,
+        _tensor: usize,
+        _step: u64,
+        grad: &[f32],
+        _scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    ) {
+        encode_dense_into(grad, frame);
     }
 
     fn reset(&mut self) {}
@@ -24,6 +31,7 @@ impl RankCompressor for DenseCompressor {
 
 #[cfg(test)]
 mod tests {
+    use super::super::rank::Payload;
     use super::*;
 
     #[test]

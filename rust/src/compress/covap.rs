@@ -11,7 +11,7 @@
 
 use std::collections::HashMap;
 
-use super::rank::{Payload, RankCompressor};
+use super::rank::{dense_frame_len, frame_header, RankCompressor, Scratch, TAG_DENSE};
 use crate::covap::{CoarseFilter, EfScheduler};
 
 /// One rank's COVAP compute half: filter decision + this rank's residuals.
@@ -50,30 +50,34 @@ impl RankCompressor for CovapCompressor {
         "COVAP"
     }
 
-    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
+    fn compress_into(
+        &mut self,
+        tensor: usize,
+        step: u64,
+        grad: &[f32],
+        _scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    ) {
         let n = grad.len();
         let keep = self.filter.keep(tensor, step);
         let coeff = self.scheduler.coeff(step);
         let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
         if keep {
-            // transmit acc = g + c*r; residual resets (one fused pass)
-            let acc: Vec<f32> = grad
-                .iter()
-                .zip(res.iter_mut())
-                .map(|(&gi, ri)| {
-                    let a = gi + coeff * *ri;
-                    *ri = 0.0;
-                    a
-                })
-                .collect();
-            Payload::Dense(acc)
+            // transmit acc = g + c*r; residual resets; the EF accumulate
+            // fuses with the wire encode into one allocation-free pass
+            frame_header(frame, TAG_DENSE, n, dense_frame_len(n));
+            for (&gi, ri) in grad.iter().zip(res.iter_mut()) {
+                let a = gi + coeff * *ri;
+                *ri = 0.0;
+                frame.extend_from_slice(&a.to_le_bytes());
+            }
         } else {
             // drop: fold the gradient into the residual in place; the empty
             // frame tells every combiner "this tensor moved zero bytes".
+            frame.clear();
             for (ri, &gi) in res.iter_mut().zip(grad.iter()) {
                 *ri = gi + coeff * *ri;
             }
-            Payload::Empty
         }
     }
 
@@ -84,7 +88,7 @@ impl RankCompressor for CovapCompressor {
 
 #[cfg(test)]
 mod tests {
-    use super::super::rank::{dense_frame_len, MeanCombiner, RankCombiner};
+    use super::super::rank::{MeanCombiner, Payload, RankCombiner};
     use super::super::SchemeKind;
     use super::*;
 

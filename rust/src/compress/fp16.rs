@@ -9,7 +9,7 @@
 //! the offline testbed) with round-to-nearest-even, matching hardware
 //! semantics — the same rounding the Pallas quantize kernel performs.
 
-use super::rank::{Payload, RankCompressor};
+use super::rank::{frame_header, half_frame_len, RankCompressor, Scratch, TAG_HALF};
 
 /// f32 -> f16 bits, round-to-nearest-even, with overflow->inf and
 /// subnormal handling.
@@ -85,7 +85,8 @@ pub fn f16_to_f32(h: u16) -> f32 {
     }
 }
 
-/// Quantizes this rank's gradient to a half-precision frame.
+/// Quantizes this rank's gradient to a half-precision frame — the
+/// quantize and the wire encode are one fused, allocation-free pass.
 pub(crate) struct HalfCompressor;
 
 impl RankCompressor for HalfCompressor {
@@ -93,8 +94,18 @@ impl RankCompressor for HalfCompressor {
         "FP16"
     }
 
-    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
-        Payload::Half(grad.iter().map(|&x| f32_to_f16(x)).collect())
+    fn compress_into(
+        &mut self,
+        _tensor: usize,
+        _step: u64,
+        grad: &[f32],
+        _scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    ) {
+        frame_header(frame, TAG_HALF, grad.len(), half_frame_len(grad.len()));
+        for &x in grad {
+            frame.extend_from_slice(&f32_to_f16(x).to_le_bytes());
+        }
     }
 
     fn reset(&mut self) {}

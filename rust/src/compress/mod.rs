@@ -39,7 +39,7 @@ pub use powersgd::PowerSgd;
 pub use rank::{
     build_rank_pair, dense_frame_len, half_frame_len, sign_frame_len, sparse_frame_len,
     varint_len, DecodeError, Payload, RankCombiner, RankCompressor, RankRound,
-    ReplicatedScheme,
+    ReplicatedScheme, Scratch,
 };
 
 pub(crate) use topk::k_of;
@@ -109,6 +109,13 @@ pub trait Scheme: Send {
 /// its own rank's error-feedback state) plus one shared combiner, driven in
 /// rank order over the per-worker gradients — exactly the sequence the
 /// threaded executor runs concurrently, executed in lockstep on one thread.
+///
+/// The driver owns the same steady-state buffers a rank pair does — one
+/// [`Scratch`] arena, P wire-frame buffers, one update buffer — so the
+/// analytic backend's compress→encode→combine path is allocation-free
+/// after warmup, exactly like the threaded executor's (the `Vec` handed
+/// back by [`Scheme::round`] is the one remaining copy, owed to the
+/// replicated trait's by-value signature).
 pub struct LockstepDriver {
     label: &'static str,
     workers: usize,
@@ -116,6 +123,12 @@ pub struct LockstepDriver {
     /// Combiners are deterministic and bit-identical across ranks, so the
     /// driver holds a single replica (rank 0's).
     combiner: Box<dyn RankCombiner>,
+    /// Reusable temporaries shared by the (sequentially-driven) halves.
+    scratch: Scratch,
+    /// Per-worker encoded wire frames, rank-major.
+    frames: Vec<Vec<u8>>,
+    /// Reusable combine output.
+    update: Vec<f32>,
 }
 
 impl LockstepDriver {
@@ -135,6 +148,9 @@ impl LockstepDriver {
             workers,
             compressors,
             combiner: combiner.expect("workers >= 1"),
+            scratch: Scratch::new(),
+            frames: (0..workers).map(|_| Vec::new()).collect(),
+            update: Vec::new(),
         }
     }
 }
@@ -148,12 +164,14 @@ impl Scheme for LockstepDriver {
         assert_eq!(grads.len(), self.workers, "grads must be rank-major over all workers");
         let n = grads[0].len();
         let t0 = Instant::now();
-        let payloads: Vec<Payload> = self
+        for ((c, g), frame) in self
             .compressors
             .iter_mut()
             .zip(grads.iter())
-            .map(|(c, g)| c.compress(bucket, step, g))
-            .collect();
+            .zip(self.frames.iter_mut())
+        {
+            c.compress_into(bucket, step, g, &mut self.scratch, frame);
+        }
         // Per-worker wall time of the compression halves. Combiners add
         // their own measured *decompression* (sparse scatter, sign unpack,
         // half dequantize) on top; a plain dense mean is the collective's
@@ -161,8 +179,16 @@ impl Scheme for LockstepDriver {
         // stays ~zero and nothing is double-counted against the network
         // model's collective pricing.
         let compress_s = t0.elapsed().as_secs_f64() / self.workers as f64;
-        let rr = self.combiner.combine(bucket, step, n, &payloads, compress_s);
-        (rr.update, rr.record)
+        let record = self.combiner.combine_into(
+            bucket,
+            step,
+            n,
+            &self.frames,
+            &mut self.scratch,
+            &mut self.update,
+            compress_s,
+        );
+        (self.update.clone(), record)
     }
 
     fn reset(&mut self) {

@@ -57,8 +57,11 @@ impl ReplicatedScheme for OkTopk {
         // Threshold: exact global k-th magnitude every REESTIMATE steps,
         // carried over otherwise (Ok-topk's amortized estimation).
         let thr = if step % REESTIMATE == 0 || !self.threshold.contains_key(&bucket) {
+            // total_cmp: NaN-safe (a poisoned gradient cannot panic the
+            // replica) and branch-cheaper than partial_cmp(..).unwrap();
+            // identical order on the non-negative magnitudes.
             let mut mags: Vec<f32> = mean.iter().map(|x| x.abs()).collect();
-            mags.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+            mags.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
             let t = mags[k - 1];
             self.threshold.insert(bucket, t);
             t

@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 
-use super::rank::{Payload, RankCompressor};
+use super::rank::{encode_sparse_into, RankCompressor, Scratch};
 use super::topk::k_of;
 use crate::util::rng::Rng;
 
@@ -50,22 +50,36 @@ impl RankCompressor for RandomKCompressor {
         "Random-k"
     }
 
-    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
+    fn compress_into(
+        &mut self,
+        tensor: usize,
+        step: u64,
+        grad: &[f32],
+        scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    ) {
         let n = grad.len();
         let k = k_of(self.ratio, n);
-        let idx = shared_indices(self.seed, tensor, step, n, k);
+        // the shared draw itself still allocates (O(k) swap table) — the
+        // mandatory zero-alloc set is covap/topk/signsgd/fp16; Random-k's
+        // selection and encode reuse scratch like everyone else.
+        scratch.sample.clear();
+        scratch.sample.extend(shared_indices(self.seed, tensor, step, n, k));
         let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
-        let mut acc: Vec<f32> =
-            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
-        let mut iv = Vec::with_capacity(k);
-        let mut vv = Vec::with_capacity(k);
-        for &i in &idx {
-            iv.push(i as u32);
-            vv.push(acc[i]);
-            acc[i] = 0.0;
+        scratch.acc.clear();
+        scratch
+            .acc
+            .extend(grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri));
+        scratch.idx.clear();
+        scratch.val.clear();
+        for &i in &scratch.sample {
+            scratch.idx.push(i as u32);
+            scratch.val.push(scratch.acc[i]);
+            scratch.acc[i] = 0.0;
         }
-        *res = acc;
-        Payload::Sparse { idx: iv, val: vv }
+        res.clear();
+        res.extend_from_slice(&scratch.acc);
+        encode_sparse_into(&scratch.idx, &scratch.val, frame);
     }
 
     fn reset(&mut self) {

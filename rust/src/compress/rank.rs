@@ -3,12 +3,27 @@
 //! Every scheme is implemented *once*, as the two halves a cluster rank
 //! actually executes:
 //!
-//! * [`RankCompressor::compress`] — runs on the rank's *compute* thread,
-//!   right after the tensor's gradient is produced: error-feedback
-//!   accumulate + wire-format encode, touching only this rank's residuals.
-//! * [`RankCombiner::combine`] — runs on the rank's *comm* thread after
-//!   the payload exchange: decode every rank's payload (rank-major order)
-//!   into the dense update. Deterministic, identical bits on every rank.
+//! * [`RankCompressor::compress_into`] — runs on the rank's *compute*
+//!   thread, right after the tensor's gradient is produced: error-feedback
+//!   accumulate + wire-format encode, written **directly into the
+//!   caller-provided frame buffer** (no intermediate `Payload`), touching
+//!   only this rank's residuals.
+//! * [`RankCombiner::combine_into`] — runs on the rank's *comm* thread
+//!   after the frame exchange: fold every rank's encoded frame (rank-major
+//!   order) into the caller-provided dense update. Deterministic, identical
+//!   bits on every rank. Dense / half / sign / sparse frames are combined
+//!   **decode-free**: the fold reads `f32::from_le_bytes` (etc.) straight
+//!   off the frame bytes without materializing a `Payload`.
+//!
+//! Both halves borrow a per-rank [`Scratch`] arena for temporaries, so the
+//! steady-state hot path (after the first full step has warmed every
+//! buffer to its high-water capacity) performs **zero heap allocations**
+//! for covap / topk / signsgd / fp16 and the dense baseline — asserted by
+//! the allocation-counting `perf_hotpath` bench. (DGC and Random-k reuse
+//! the same scratch but have data-dependent selection sizes that can grow
+//! past the high-water mark, and the replicated schemes allocate
+//! internally — the bench reports them without asserting.) See DESIGN.md
+//! §7 "Buffer lifecycle" for the ownership rules.
 //!
 //! The replicated [`Scheme`](super::Scheme) trait the analytic backend
 //! consumes is *not* a second implementation: it is the generic
@@ -27,7 +42,7 @@
 //!
 //! # Wire format
 //!
-//! [`Payload::encode`] / [`Payload::decode`] give every payload a real
+//! [`Payload::encode_into`] / [`Payload::decode`] give every payload a real
 //! byte-level frame — the thing `exec::ring` moves and the thing
 //! `CommRecord::wire_bytes` measures. All integers are little-endian;
 //! `varint` is LEB128 (7 data bits per byte, low group first):
@@ -43,7 +58,11 @@
 //! `decode(encode(p)) == p` bitwise for every variant (property-tested
 //! below, including `n % 64 != 0` sign bitmaps and zero-length payloads),
 //! and [`Payload::encoded_len`] — the arithmetic the accounting uses —
-//! always equals `encode().len()`.
+//! always equals the frame length `encode_into` produces. The
+//! `Payload`-level `compress`/`combine` wrappers (provided trait methods)
+//! are retained as the **property-test oracle** for the frame-level hot
+//! path: they route through the same codec, so the lockstep parity test
+//! pins decode-free combining against decode-then-fold bit for bit.
 
 use std::time::Instant;
 
@@ -65,10 +84,10 @@ pub enum Payload {
     Half(Vec<u16>),
 }
 
-const TAG_DENSE: u8 = 0x01;
-const TAG_SPARSE: u8 = 0x02;
-const TAG_SIGN: u8 = 0x03;
-const TAG_HALF: u8 = 0x04;
+pub(crate) const TAG_DENSE: u8 = 0x01;
+pub(crate) const TAG_SPARSE: u8 = 0x02;
+pub(crate) const TAG_SIGN: u8 = 0x03;
+pub(crate) const TAG_HALF: u8 = 0x04;
 
 /// Codec failure (truncated, oversized or malformed frame).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,7 +111,7 @@ pub fn varint_len(mut x: u64) -> usize {
     len
 }
 
-fn write_varint(out: &mut Vec<u8>, mut x: u64) {
+pub(crate) fn write_varint(out: &mut Vec<u8>, mut x: u64) {
     while x >= 0x80 {
         out.push((x as u8 & 0x7f) | 0x80);
         x >>= 7;
@@ -118,6 +137,65 @@ pub fn sign_frame_len(n: usize) -> usize {
 /// Frame length of a half-precision payload of `n` elements.
 pub fn half_frame_len(n: usize) -> usize {
     1 + varint_len(n as u64) + 2 * n
+}
+
+// ---- encode-into helpers (shared by Payload and the scheme compressors) ----
+
+/// Clear `out`, reserve the exact frame length and write `[tag][varint n]`.
+/// Scheme compressors stream their body bytes directly after this header,
+/// so the whole compress+encode is one pass with no intermediate `Payload`.
+pub(crate) fn frame_header(out: &mut Vec<u8>, tag: u8, n: usize, frame_len: usize) {
+    out.clear();
+    out.reserve(frame_len);
+    out.push(tag);
+    write_varint(out, n as u64);
+}
+
+/// Encode a dense f32 frame into `out` (cleared first).
+pub(crate) fn encode_dense_into(v: &[f32], out: &mut Vec<u8>) {
+    frame_header(out, TAG_DENSE, v.len(), dense_frame_len(v.len()));
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a sparse (idx, val) frame into `out` (cleared first).
+pub(crate) fn encode_sparse_into(idx: &[u32], val: &[f32], out: &mut Vec<u8>) {
+    debug_assert_eq!(idx.len(), val.len());
+    frame_header(out, TAG_SPARSE, idx.len(), sparse_frame_len(idx.len()));
+    for i in idx {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for x in val {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a sign frame into `out` (cleared first).
+///
+/// Word-width note (the packing audit): `bits` packs sign `i` into u64
+/// word `i / 64` at bit `i % 64`, LSB-first. The wire bitmap is
+/// byte-granular, and byte `b` of the bitmap is byte `b % 8` of word
+/// `b / 8` — hence the shift `(b % 8) * 8` below, which extracts a *byte*
+/// (8-bit group), not a bit. Both layouts are little-endian LSB-first, so
+/// sign `i` lands in frame byte `i / 8` at bit `i % 8`; decode rebuilds
+/// the identical u64 words. The expression is only correct for 64-bit
+/// bitmap words (8 bytes per word); `sign_packing_crosses_word_boundaries`
+/// pins the cross-word layout at n = 63, 64, 65.
+pub(crate) fn encode_sign_into(scale: f32, bits: &[u64], n: usize, out: &mut Vec<u8>) {
+    frame_header(out, TAG_SIGN, n, sign_frame_len(n));
+    out.extend_from_slice(&scale.to_le_bytes());
+    for b in 0..n.div_ceil(8) {
+        out.push((bits[b / 8] >> ((b % 8) * 8)) as u8);
+    }
+}
+
+/// Encode a half-precision frame into `out` (cleared first).
+pub(crate) fn encode_half_into(v: &[u16], out: &mut Vec<u8>) {
+    frame_header(out, TAG_HALF, v.len(), half_frame_len(v.len()));
+    for h in v {
+        out.extend_from_slice(&h.to_le_bytes());
+    }
 }
 
 /// Sequential little-endian reader over a frame.
@@ -166,52 +244,45 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Split a non-empty encoded frame into `(tag, element count, body)`
+/// without materializing a `Payload` — the entry point of decode-free
+/// combining. Panics on malformed frames: ring frames come from our own
+/// codec ([`Payload::decode`] is the lenient path for untrusted input).
+fn split_frame(frame: &[u8]) -> (u8, usize, &[u8]) {
+    assert!(!frame.is_empty(), "cannot split an Empty frame");
+    let tag = frame[0];
+    let mut r = Reader { buf: frame, pos: 1 };
+    let n = r.varint().expect("corrupt ring frame: bad varint") as usize;
+    (tag, n, &frame[r.pos..])
+}
+
 impl Payload {
-    /// Serialize to the framed wire format (see module docs). The returned
-    /// frame's length always equals [`Payload::encoded_len`].
-    pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.encoded_len());
+    /// Serialize into `out` (cleared first; capacity is reused across
+    /// calls, so steady-state re-encodes allocate nothing once the buffer
+    /// reached its high-water size). The resulting frame length always
+    /// equals [`Payload::encoded_len`].
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
-            Payload::Empty => {}
-            Payload::Dense(v) => {
-                out.push(TAG_DENSE);
-                write_varint(&mut out, v.len() as u64);
-                for x in v {
-                    out.extend_from_slice(&x.to_le_bytes());
-                }
-            }
-            Payload::Sparse { idx, val } => {
-                debug_assert_eq!(idx.len(), val.len());
-                out.push(TAG_SPARSE);
-                write_varint(&mut out, idx.len() as u64);
-                for i in idx {
-                    out.extend_from_slice(&i.to_le_bytes());
-                }
-                for x in val {
-                    out.extend_from_slice(&x.to_le_bytes());
-                }
-            }
-            Payload::Sign { scale, bits, n } => {
-                out.push(TAG_SIGN);
-                write_varint(&mut out, *n as u64);
-                out.extend_from_slice(&scale.to_le_bytes());
-                for b in 0..n.div_ceil(8) {
-                    out.push((bits[b / 8] >> ((b % 8) * 8)) as u8);
-                }
-            }
-            Payload::Half(v) => {
-                out.push(TAG_HALF);
-                write_varint(&mut out, v.len() as u64);
-                for h in v {
-                    out.extend_from_slice(&h.to_le_bytes());
-                }
-            }
+            Payload::Empty => out.clear(),
+            Payload::Dense(v) => encode_dense_into(v, out),
+            Payload::Sparse { idx, val } => encode_sparse_into(idx, val, out),
+            Payload::Sign { scale, bits, n } => encode_sign_into(*scale, bits, *n, out),
+            Payload::Half(v) => encode_half_into(v, out),
         }
         debug_assert_eq!(out.len(), self.encoded_len());
+    }
+
+    /// Serialize to a fresh frame — [`Payload::encode_into`] into a new
+    /// buffer. Convenience for tests and one-shot callers; the hot path
+    /// encodes into reusable buffers.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
         out
     }
 
-    /// Parse a frame produced by [`Payload::encode`]. Bitwise-exact inverse.
+    /// Parse a frame produced by [`Payload::encode_into`]. Bitwise-exact
+    /// inverse.
     pub fn decode(buf: &[u8]) -> Result<Payload, DecodeError> {
         if buf.is_empty() {
             return Ok(Payload::Empty);
@@ -277,8 +348,9 @@ impl Payload {
         Ok(p)
     }
 
-    /// Bytes this payload occupies on the wire — exactly
-    /// `self.encode().len()`, computed without materializing the frame.
+    /// Bytes this payload occupies on the wire — exactly the frame length
+    /// [`Payload::encode_into`] produces, computed without materializing
+    /// the frame.
     pub fn encoded_len(&self) -> usize {
         match self {
             Payload::Empty => 0,
@@ -316,8 +388,47 @@ impl PartialEq for Payload {
     }
 }
 
+// ---- the per-rank scratch arena --------------------------------------------
+
+/// Reusable per-rank temporaries for the compress/combine hot path.
+///
+/// One `Scratch` belongs to one driver thread (a rank's compute thread, a
+/// rank's comm thread, or the lockstep driver); it is threaded into
+/// [`RankCompressor::compress_into`] / [`RankCombiner::combine_into`] by
+/// the caller. Buffers carry **no state between calls** — every method
+/// clears what it uses — they only carry *capacity*, which grows to the
+/// largest tensor seen and then stays put, making the steady state
+/// allocation-free. Long-lived per-tensor state (EF residuals, warm-started
+/// factors) lives inside the compressor/combiner objects instead, keyed by
+/// tensor slot.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Error-feedback accumulate buffer (`g + c·r`).
+    pub(crate) acc: Vec<f32>,
+    /// Magnitude buffer for top-k selection / DGC threshold sampling.
+    pub(crate) mags: Vec<f32>,
+    /// Sparse selection indices.
+    pub(crate) idx: Vec<u32>,
+    /// Sparse selection values.
+    pub(crate) val: Vec<f32>,
+    /// Sign bitmap words.
+    pub(crate) bits: Vec<u64>,
+    /// Random-k shared index draw.
+    pub(crate) sample: Vec<usize>,
+    /// Per-worker dense gradients decoded for replicated schemes.
+    pub(crate) grads: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
 /// One tensor round's outcome on a rank: the (replicated) dense update plus
-/// the accounting record the simulator prices.
+/// the accounting record the simulator prices. Produced by the
+/// `Payload`-level [`RankCombiner::combine`] oracle wrapper; the hot path
+/// writes into caller-provided buffers instead.
 #[derive(Debug, Clone)]
 pub struct RankRound {
     pub update: Vec<f32>,
@@ -327,24 +438,71 @@ pub struct RankRound {
 /// The compute-thread half: encode this rank's gradient.
 pub trait RankCompressor: Send {
     fn name(&self) -> &'static str;
-    /// Compress `grad` for communication tensor `tensor` at `step`,
-    /// using only this rank's error-feedback residuals.
-    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload;
+
+    /// Compress `grad` for communication tensor `tensor` at `step` and
+    /// write the encoded wire frame into `frame` (cleared first; a frame
+    /// left empty means `Payload::Empty` — nothing transmitted). Uses only
+    /// this rank's error-feedback residuals plus `scratch` temporaries;
+    /// steady state allocates nothing once buffers are warm.
+    // &mut Vec (not &mut [u8]): implementors resize the frame.
+    #[allow(clippy::ptr_arg)]
+    fn compress_into(
+        &mut self,
+        tensor: usize,
+        step: u64,
+        grad: &[f32],
+        scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    );
+
+    /// `Payload`-level convenience (tests, one-shot callers): run
+    /// [`RankCompressor::compress_into`] with throwaway buffers and decode
+    /// the frame back. Bitwise-identical to the frame the hot path ships
+    /// (`decode ∘ encode = id` is property-tested).
+    fn compress(&mut self, tensor: usize, step: u64, grad: &[f32]) -> Payload {
+        let mut scratch = Scratch::new();
+        let mut frame = Vec::new();
+        self.compress_into(tensor, step, grad, &mut scratch, &mut frame);
+        Payload::decode(&frame).expect("self-encoded frame must decode")
+    }
+
     /// True when the backward pass must wait for this tensor's combine
     /// result before continuing (Ok-topk rendezvous semantics).
     fn data_dependency(&self) -> bool {
         false
     }
+
     fn reset(&mut self);
 }
 
-/// The comm-thread half: fold all ranks' payloads into the dense update.
+/// The comm-thread half: fold all ranks' frames into the dense update.
 /// Must be deterministic and produce identical bits on every rank.
 pub trait RankCombiner: Send {
     fn name(&self) -> &'static str;
-    /// `payloads` is rank-major (index = rank id); `n` is the tensor's
-    /// element count; `compress_s` is the measured compression wall time
-    /// forwarded into the CommRecord.
+
+    /// Fold the rank-major encoded `frames` (index = rank id) into
+    /// `update` (cleared first; resized to `n`, or left empty for a
+    /// dropped tensor = "all zeros"). `n` is the tensor's element count;
+    /// `compress_s` is the measured compression wall time forwarded into
+    /// the returned CommRecord. Dense/half/sign/sparse frames are folded
+    /// decode-free; steady state allocates nothing once `update` and
+    /// `scratch` are warm.
+    // &mut Vec (not &mut [f32]): implementors resize the update.
+    #[allow(clippy::too_many_arguments, clippy::ptr_arg)]
+    fn combine_into(
+        &mut self,
+        tensor: usize,
+        step: u64,
+        n: usize,
+        frames: &[Vec<u8>],
+        scratch: &mut Scratch,
+        update: &mut Vec<f32>,
+        compress_s: f64,
+    ) -> CommRecord;
+
+    /// `Payload`-level oracle wrapper: encode `payloads` through the codec
+    /// and fold the frames. The parity tests drive this against the
+    /// frame-level path, pinning decode-free combining bit for bit.
     fn combine(
         &mut self,
         tensor: usize,
@@ -352,7 +510,15 @@ pub trait RankCombiner: Send {
         n: usize,
         payloads: &[Payload],
         compress_s: f64,
-    ) -> RankRound;
+    ) -> RankRound {
+        let frames: Vec<Vec<u8>> = payloads.iter().map(|p| p.encode()).collect();
+        let mut scratch = Scratch::new();
+        let mut update = Vec::new();
+        let record =
+            self.combine_into(tensor, step, n, &frames, &mut scratch, &mut update, compress_s);
+        RankRound { update, record }
+    }
+
     fn reset(&mut self);
 }
 
@@ -404,18 +570,19 @@ pub fn build_rank_pair(
     }
 }
 
-/// Max encoded frame length over the gathered payloads — the per-rank wire
-/// volume the accounting charges (payload frames are identical sizes for
+/// Max encoded frame length over the gathered frames — the per-rank wire
+/// volume the accounting charges (frames are identical sizes for
 /// dense/half/sign schemes; sparse selections may differ per rank, where
 /// the max is the conservative per-rank bound the old model also used).
-fn max_frame_len(payloads: &[Payload]) -> usize {
-    payloads.iter().map(|p| p.encoded_len()).max().unwrap_or(0)
+fn max_frame_len(frames: &[Vec<u8>]) -> usize {
+    frames.iter().map(|f| f.len()).max().unwrap_or(0)
 }
 
 // ---- shared wire-format combiners -----------------------------------------
 
-/// Mean over dense-decodable payloads in rank order (Dense and Half frames).
-/// Serves every AllReduce-style mean scheme: baseline, COVAP, FP16.
+/// Mean over dense-decodable frames in rank order (Dense and Half frames),
+/// folded straight off the frame bytes. Serves every AllReduce-style mean
+/// scheme: baseline, COVAP, FP16.
 ///
 /// `compress_s` accounting: a pure Dense mean is the collective's own
 /// arithmetic (in-network on real hardware) and charges nothing extra; a
@@ -428,59 +595,60 @@ impl RankCombiner for MeanCombiner {
         "mean"
     }
 
-    fn combine(
+    #[allow(clippy::too_many_arguments)]
+    fn combine_into(
         &mut self,
         _tensor: usize,
         _step: u64,
         n: usize,
-        payloads: &[Payload],
+        frames: &[Vec<u8>],
+        _scratch: &mut Scratch,
+        update: &mut Vec<f32>,
         compress_s: f64,
-    ) -> RankRound {
-        if payloads.iter().all(|p| matches!(p, Payload::Empty)) {
+    ) -> CommRecord {
+        if frames.iter().all(|f| f.is_empty()) {
             // COVAP dropped tensor: empty update = "all zeros".
-            return RankRound {
-                update: Vec::new(),
-                record: CommRecord::dense(0, compress_s),
-            };
+            update.clear();
+            return CommRecord::dense(0, compress_s);
         }
         let t0 = Instant::now();
-        let mut update = vec![0.0f32; n];
-        for p in payloads {
-            match p {
-                Payload::Dense(g) => {
-                    for (u, &x) in update.iter_mut().zip(g.iter()) {
-                        *u += x;
+        update.clear();
+        update.resize(n, 0.0);
+        let mut any_half = false;
+        for f in frames {
+            let (tag, fe, body) = split_frame(f);
+            match tag {
+                TAG_DENSE => {
+                    debug_assert_eq!(fe, n);
+                    for (u, b) in update.iter_mut().zip(body.chunks_exact(4)) {
+                        *u += f32::from_le_bytes(b.try_into().unwrap());
                     }
                 }
-                Payload::Half(h) => {
-                    for (u, &b) in update.iter_mut().zip(h.iter()) {
-                        *u += fp16::f16_to_f32(b);
+                TAG_HALF => {
+                    debug_assert_eq!(fe, n);
+                    any_half = true;
+                    for (u, b) in update.iter_mut().zip(body.chunks_exact(2)) {
+                        *u += fp16::f16_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
                     }
                 }
-                other => panic!("mean combiner got {other:?}"),
+                t => panic!("mean combiner got frame tag {t:#04x}"),
             }
         }
-        let inv = 1.0 / payloads.len() as f32;
-        for u in &mut update {
+        let inv = 1.0 / frames.len() as f32;
+        for u in update.iter_mut() {
             *u *= inv;
         }
-        let decode_s = if payloads.iter().any(|p| matches!(p, Payload::Half(_))) {
-            t0.elapsed().as_secs_f64()
-        } else {
-            0.0
-        };
-        RankRound {
-            update,
-            record: CommRecord::dense(max_frame_len(payloads), compress_s + decode_s),
-        }
+        let decode_s = if any_half { t0.elapsed().as_secs_f64() } else { 0.0 };
+        CommRecord::dense(max_frame_len(frames), compress_s + decode_s)
     }
 
     fn reset(&mut self) {}
 }
 
-/// Rank-order mean over sparse selections: `update[i] += v / P` per worker
-/// payload. Serves Top-k, DGC and Random-k. The scatter-add is the sparse
-/// format's decompression, so its measured wall time joins `compress_s`.
+/// Rank-order mean over sparse frames: `update[i] += v / P` per worker
+/// frame, reading the (idx, val) sections straight off the bytes. Serves
+/// Top-k, DGC and Random-k. The scatter-add is the sparse format's
+/// decompression, so its measured wall time joins `compress_s`.
 pub(crate) struct SparseCombiner;
 
 impl RankCombiner for SparseCombiner {
@@ -488,45 +656,50 @@ impl RankCombiner for SparseCombiner {
         "sparse-gather"
     }
 
-    fn combine(
+    #[allow(clippy::too_many_arguments)]
+    fn combine_into(
         &mut self,
         _tensor: usize,
         _step: u64,
         n: usize,
-        payloads: &[Payload],
+        frames: &[Vec<u8>],
+        _scratch: &mut Scratch,
+        update: &mut Vec<f32>,
         compress_s: f64,
-    ) -> RankRound {
+    ) -> CommRecord {
         let t0 = Instant::now();
-        let mut update = vec![0.0f32; n];
-        let inv = 1.0 / payloads.len() as f32;
-        for p in payloads {
-            let Payload::Sparse { idx, val } = p else {
-                panic!("sparse combiner got {p:?}")
-            };
-            for (&i, &v) in idx.iter().zip(val.iter()) {
-                update[i as usize] += v * inv;
+        update.clear();
+        update.resize(n, 0.0);
+        let inv = 1.0 / frames.len() as f32;
+        for f in frames {
+            let (tag, k, body) = split_frame(f);
+            assert_eq!(tag, TAG_SPARSE, "sparse combiner got frame tag {tag:#04x}");
+            debug_assert_eq!(body.len(), 8 * k);
+            let (idx_b, val_b) = body.split_at(4 * k);
+            for (ib, vb) in idx_b.chunks_exact(4).zip(val_b.chunks_exact(4)) {
+                let i = u32::from_le_bytes(ib.try_into().unwrap()) as usize;
+                let v = f32::from_le_bytes(vb.try_into().unwrap());
+                update[i] += v * inv;
             }
         }
         let compress_s = compress_s + t0.elapsed().as_secs_f64();
-        RankRound {
-            update,
-            record: CommRecord {
-                wire_bytes: max_frame_len(payloads),
-                collective: Collective::AllGather,
-                rounds: 1,
-                sync_rounds: 0,
-                compress_s,
-                data_dependency: false,
-            },
+        CommRecord {
+            wire_bytes: max_frame_len(frames),
+            collective: Collective::AllGather,
+            rounds: 1,
+            sync_rounds: 0,
+            compress_s,
+            data_dependency: false,
         }
     }
 
     fn reset(&mut self) {}
 }
 
-/// Rank-order mean over sign payloads (EFsignSGD). The per-element unpack
-/// is this scheme's decompression — the cost the paper's Table VII blames —
-/// so its measured wall time joins `compress_s`.
+/// Rank-order mean over sign frames (EFsignSGD), reading the per-element
+/// sign bits straight off the frame bitmap. The per-element unpack is this
+/// scheme's decompression — the cost the paper's Table VII blames — so its
+/// measured wall time joins `compress_s`.
 pub(crate) struct SignCombiner;
 
 impl RankCombiner for SignCombiner {
@@ -534,39 +707,41 @@ impl RankCombiner for SignCombiner {
         "sign-gather"
     }
 
-    fn combine(
+    #[allow(clippy::too_many_arguments)]
+    fn combine_into(
         &mut self,
         _tensor: usize,
         _step: u64,
         n: usize,
-        payloads: &[Payload],
+        frames: &[Vec<u8>],
+        _scratch: &mut Scratch,
+        update: &mut Vec<f32>,
         compress_s: f64,
-    ) -> RankRound {
+    ) -> CommRecord {
         let t0 = Instant::now();
-        let mut update = vec![0.0f32; n];
-        let inv = 1.0 / payloads.len() as f32;
-        for p in payloads {
-            let Payload::Sign { scale, bits, n: pn } = p else {
-                panic!("sign combiner got {p:?}")
-            };
-            debug_assert_eq!(*pn, n);
+        update.clear();
+        update.resize(n, 0.0);
+        let inv = 1.0 / frames.len() as f32;
+        for f in frames {
+            let (tag, pn, body) = split_frame(f);
+            assert_eq!(tag, TAG_SIGN, "sign combiner got frame tag {tag:#04x}");
+            debug_assert_eq!(pn, n);
+            let scale = f32::from_le_bytes(body[..4].try_into().unwrap());
+            let bitmap = &body[4..];
             for (i, u) in update.iter_mut().enumerate() {
-                let neg = bits[i / 64] >> (i % 64) & 1 == 1;
-                let v = if neg { -*scale } else { *scale };
+                let neg = bitmap[i / 8] >> (i % 8) & 1 == 1;
+                let v = if neg { -scale } else { scale };
                 *u += v * inv;
             }
         }
         let compress_s = compress_s + t0.elapsed().as_secs_f64();
-        RankRound {
-            update,
-            record: CommRecord {
-                wire_bytes: max_frame_len(payloads),
-                collective: Collective::AllGather,
-                rounds: 1,
-                sync_rounds: 0,
-                compress_s,
-                data_dependency: false,
-            },
+        CommRecord {
+            wire_bytes: max_frame_len(frames),
+            collective: Collective::AllGather,
+            rounds: 1,
+            sync_rounds: 0,
+            compress_s,
+            data_dependency: false,
         }
     }
 
@@ -585,8 +760,15 @@ impl RankCompressor for RawCompressor {
         "raw"
     }
 
-    fn compress(&mut self, _tensor: usize, _step: u64, grad: &[f32]) -> Payload {
-        Payload::Dense(grad.to_vec())
+    fn compress_into(
+        &mut self,
+        _tensor: usize,
+        _step: u64,
+        grad: &[f32],
+        _scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    ) {
+        encode_dense_into(grad, frame);
     }
 
     fn data_dependency(&self) -> bool {
@@ -597,9 +779,10 @@ impl RankCompressor for RawCompressor {
 }
 
 /// Every rank holds an identical replica of a [`ReplicatedScheme`] and
-/// feeds it the gathered raw gradients — deterministic, hence identical
-/// state and bitwise-identical output on every rank and vs the analytic
-/// backend. The record keeps the scheme's own (encoded) wire accounting.
+/// feeds it the gathered raw gradients (decoded into scratch buffers) —
+/// deterministic, hence identical state and bitwise-identical output on
+/// every rank and vs the analytic backend. The record keeps the scheme's
+/// own (encoded) wire accounting.
 pub(crate) struct ReplicaCombiner {
     pub(crate) inner: Box<dyn ReplicatedScheme>,
 }
@@ -609,23 +792,35 @@ impl RankCombiner for ReplicaCombiner {
         self.inner.name()
     }
 
-    fn combine(
+    #[allow(clippy::too_many_arguments)]
+    fn combine_into(
         &mut self,
         tensor: usize,
         step: u64,
         _n: usize,
-        payloads: &[Payload],
+        frames: &[Vec<u8>],
+        scratch: &mut Scratch,
+        update: &mut Vec<f32>,
         _compress_s: f64,
-    ) -> RankRound {
-        let grads: Vec<&[f32]> = payloads
-            .iter()
-            .map(|p| match p {
-                Payload::Dense(g) => g.as_slice(),
-                other => panic!("replica combiner got {other:?}"),
-            })
-            .collect();
-        let (update, record) = self.inner.round(tensor, step, &grads);
-        RankRound { update, record }
+    ) -> CommRecord {
+        let w = frames.len();
+        if scratch.grads.len() < w {
+            scratch.grads.resize_with(w, Vec::new);
+        }
+        for (g, f) in scratch.grads.iter_mut().zip(frames.iter()) {
+            let (tag, fe, body) = split_frame(f);
+            assert_eq!(tag, TAG_DENSE, "replica combiner got frame tag {tag:#04x}");
+            debug_assert_eq!(body.len(), 4 * fe);
+            g.clear();
+            g.extend(
+                body.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+            );
+        }
+        let refs: Vec<&[f32]> = scratch.grads[..w].iter().map(|g| g.as_slice()).collect();
+        let (u, record) = self.inner.round(tensor, step, &refs);
+        update.clear();
+        update.extend_from_slice(&u);
+        record
     }
 
     fn reset(&mut self) {
@@ -640,30 +835,39 @@ mod tests {
     use crate::util::prop;
     use crate::util::rng::Rng;
 
-    /// Drive P rank pairs in lockstep, exactly as the threaded executor
-    /// does across threads.
+    /// Drive P rank pairs in lockstep through the **frame-level** hot path,
+    /// exactly as the threaded executor does across threads: persistent
+    /// scratch + frame buffers, `compress_into` / `combine_into`.
     fn lockstep_round(
         pairs: &mut [(Box<dyn RankCompressor>, Box<dyn RankCombiner>)],
+        scratch: &mut Scratch,
+        frames: &mut Vec<Vec<u8>>,
         tensor: usize,
         step: u64,
         grads: &[&[f32]],
     ) -> Vec<RankRound> {
-        let payloads: Vec<Payload> = pairs
-            .iter_mut()
-            .zip(grads.iter())
-            .map(|((c, _), g)| c.compress(tensor, step, g))
-            .collect();
+        frames.resize_with(grads.len(), Vec::new);
+        for (((c, _), g), frame) in
+            pairs.iter_mut().zip(grads.iter()).zip(frames.iter_mut())
+        {
+            c.compress_into(tensor, step, g, scratch, frame);
+        }
         let n = grads[0].len();
         pairs
             .iter_mut()
-            .map(|(_, cb)| cb.combine(tensor, step, n, &payloads, 0.0))
+            .map(|(_, cb)| {
+                let mut update = Vec::new();
+                let record =
+                    cb.combine_into(tensor, step, n, frames, scratch, &mut update, 0.0);
+                RankRound { update, record }
+            })
             .collect()
     }
 
     /// THE parity guarantee: for every scheme, independently-driven rank
-    /// pairs match the replicated `Scheme::round` (now the lockstep driver)
-    /// bit-for-bit across shapes, steps and multiple tensors, and every
-    /// rank agrees with every other.
+    /// pairs (frame-level hot path) match the replicated `Scheme::round`
+    /// (the lockstep driver) bit-for-bit across shapes, steps and multiple
+    /// tensors, and every rank agrees with every other.
     #[test]
     fn rank_path_bitwise_matches_scheme_round() {
         for kind in SchemeKind::evaluation_set() {
@@ -674,13 +878,22 @@ mod tests {
                 let mut scheme = kind.build(workers, seed);
                 let mut pairs: Vec<_> =
                     (0..workers).map(|_| build_rank_pair(&kind, workers, seed)).collect();
+                let mut scratch = Scratch::new();
+                let mut frames: Vec<Vec<u8>> = Vec::new();
                 for step in 0..6u64 {
                     for tensor in 0..2usize {
                         let gs: Vec<Vec<f32>> =
                             (0..workers).map(|_| prop::vec_f32(rng, n, 1.0)).collect();
                         let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
                         let (want, want_rec) = scheme.round(tensor, step, &refs);
-                        let rounds = lockstep_round(&mut pairs, tensor, step, &refs);
+                        let rounds = lockstep_round(
+                            &mut pairs,
+                            &mut scratch,
+                            &mut frames,
+                            tensor,
+                            step,
+                            &refs,
+                        );
                         for (r, rr) in rounds.iter().enumerate() {
                             assert_eq!(
                                 rr.update, want,
@@ -698,6 +911,87 @@ mod tests {
                 }
             });
         }
+    }
+
+    /// Decode-free combining vs the decoded oracle: folding the frame
+    /// bytes directly must equal decoding every payload and folding the
+    /// decoded values with the same arithmetic — bit for bit.
+    #[test]
+    fn decode_free_combining_matches_decoded_oracle() {
+        let mut rng = Rng::seed(0xDECF);
+        let n = 97usize; // odd, n % 8 != 0, n % 64 != 0
+        let workers = 3;
+
+        // Mean over dense + half frames.
+        let dense: Vec<Payload> = (0..workers)
+            .map(|_| Payload::Dense(prop::vec_f32(&mut rng, n, 1.0)))
+            .collect();
+        let halves: Vec<Payload> = (0..workers)
+            .map(|_| Payload::Half((0..n).map(|_| rng.below(1 << 16) as u16).collect()))
+            .collect();
+        for payloads in [dense, halves] {
+            let got = MeanCombiner.combine(0, 0, n, &payloads, 0.0);
+            let mut want = vec![0.0f32; n];
+            for p in &payloads {
+                match p {
+                    Payload::Dense(g) => {
+                        for (u, &x) in want.iter_mut().zip(g.iter()) {
+                            *u += x;
+                        }
+                    }
+                    Payload::Half(h) => {
+                        for (u, &b) in want.iter_mut().zip(h.iter()) {
+                            *u += fp16::f16_to_f32(b);
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            let inv = 1.0 / workers as f32;
+            for u in &mut want {
+                *u *= inv;
+            }
+            assert_eq!(got.update, want);
+        }
+
+        // Sparse scatter-add.
+        let sparse: Vec<Payload> = (0..workers)
+            .map(|_| {
+                let k = 1 + rng.below(n);
+                let idx: Vec<u32> = (0..k).map(|_| rng.below(n) as u32).collect();
+                Payload::Sparse { idx, val: prop::vec_f32(&mut rng, k, 1.0) }
+            })
+            .collect();
+        let got = SparseCombiner.combine(0, 0, n, &sparse, 0.0);
+        let mut want = vec![0.0f32; n];
+        let inv = 1.0 / workers as f32;
+        for p in &sparse {
+            let Payload::Sparse { idx, val } = p else { unreachable!() };
+            for (&i, &v) in idx.iter().zip(val.iter()) {
+                want[i as usize] += v * inv;
+            }
+        }
+        assert_eq!(got.update, want);
+
+        // Sign unpack.
+        let signs: Vec<Payload> = (0..workers)
+            .map(|_| {
+                let g = prop::vec_f32(&mut rng, n, 1.0);
+                let bits = crate::compress::signsgd::pack_signs(&g);
+                Payload::Sign { scale: rng.next_f32(), bits, n }
+            })
+            .collect();
+        let got = SignCombiner.combine(0, 0, n, &signs, 0.0);
+        let mut want = vec![0.0f32; n];
+        for p in &signs {
+            let Payload::Sign { scale, bits, .. } = p else { unreachable!() };
+            for (i, u) in want.iter_mut().enumerate() {
+                let neg = bits[i / 64] >> (i % 64) & 1 == 1;
+                let v = if neg { -*scale } else { *scale };
+                *u += v * inv;
+            }
+        }
+        assert_eq!(got.update, want);
     }
 
     #[test]
@@ -767,6 +1061,12 @@ mod tests {
     fn roundtrip(p: &Payload) {
         let frame = p.encode();
         assert_eq!(frame.len(), p.encoded_len(), "{p:?}");
+        // encode_into a dirty, differently-sized reused buffer must produce
+        // the identical frame (the reservation/clear contract)
+        let mut reused = vec![0xAAu8; 7];
+        p.encode_into(&mut reused);
+        assert_eq!(reused, frame, "encode_into must match encode bitwise");
+        assert_eq!(reused.len(), p.encoded_len(), "encoded_len drift: {p:?}");
         let back = Payload::decode(&frame).unwrap();
         assert_eq!(&back, p, "codec round-trip");
         // re-encode is byte-identical (canonical form)
@@ -774,15 +1074,18 @@ mod tests {
     }
 
     /// Satellite: decode(encode(p)) == p bitwise across all variants,
-    /// including degenerate shapes.
+    /// including degenerate shapes, and `encoded_len()` equals the
+    /// post-`encode_into` buffer length for every one of them.
     #[test]
     fn codec_roundtrips_degenerate_shapes() {
         roundtrip(&Payload::Empty);
         roundtrip(&Payload::Dense(Vec::new())); // zero-length dense
+        roundtrip(&Payload::Dense(vec![7.25])); // n = 1
         roundtrip(&Payload::Dense(vec![0.0, -0.0, f32::NAN, f32::INFINITY, 1.5e-42]));
         roundtrip(&Payload::Sparse { idx: vec![7], val: vec![-3.25] }); // single-element
         roundtrip(&Payload::Sparse { idx: Vec::new(), val: Vec::new() });
         roundtrip(&Payload::Half(Vec::new()));
+        roundtrip(&Payload::Half(vec![0x3c00])); // n = 1
         roundtrip(&Payload::Half(vec![0x3c00, 0x8000, 0x7fff]));
         // sign bitmaps with n % 64 != 0 (and n % 8 != 0)
         for n in [0usize, 1, 7, 8, 63, 64, 65, 100, 128, 129] {
@@ -792,6 +1095,10 @@ mod tests {
         }
     }
 
+    /// Property form of the reservation contract: for random payloads of
+    /// every variant, `encoded_len()` == the buffer length after
+    /// `encode_into`, so the accounting arithmetic can never drift from
+    /// the codec.
     #[test]
     fn codec_roundtrips_random_payloads() {
         prop::check("codec-roundtrip", 0xC0DEC, 60, |rng: &mut Rng| {
@@ -811,7 +1118,8 @@ mod tests {
                 }
                 _ => Payload::Half((0..n).map(|_| rng.below(1 << 16) as u16).collect()),
             };
-            let frame = p.encode();
+            let mut frame = Vec::new();
+            p.encode_into(&mut frame);
             assert_eq!(frame.len(), p.encoded_len());
             assert_eq!(&Payload::decode(&frame).unwrap(), &p);
         });
@@ -848,15 +1156,68 @@ mod tests {
         assert_eq!(&Payload::decode(&frame).unwrap(), &clean);
     }
 
+    /// Satellite (packing audit): the sign bitmap crosses u64 word
+    /// boundaries correctly — sign `i` is bit `i % 8` of wire byte `i / 8`
+    /// for n straddling the 64-bit word edge (63, 64, 65), and the frame
+    /// round-trips to identical bitmap words.
+    #[test]
+    fn sign_packing_crosses_word_boundaries() {
+        for n in [63usize, 64, 65] {
+            // negatives at word-boundary-sensitive positions
+            let g: Vec<f32> = (0..n)
+                .map(|i| if i % 5 == 0 || i >= 62 { -1.0 } else { 1.0 })
+                .collect();
+            let bits = crate::compress::signsgd::pack_signs(&g);
+            let p = Payload::Sign { scale: 1.0, bits, n };
+            let frame = p.encode();
+            let bitmap = &frame[frame.len() - n.div_ceil(8)..];
+            for (i, x) in g.iter().enumerate() {
+                let bit = bitmap[i / 8] >> (i % 8) & 1;
+                assert_eq!(
+                    bit == 1,
+                    x.is_sign_negative(),
+                    "n={n} i={i}: wire bit must be the i-th sign"
+                );
+            }
+            roundtrip(&p);
+        }
+    }
+
     #[test]
     fn compressor_payloads_roundtrip_through_codec() {
-        // every scheme's real payload survives the wire bitwise
+        // every scheme's real frame survives the wire bitwise
         let mut rng = Rng::seed(0x91E);
         let g = prop::vec_f32(&mut rng, 257, 1.0); // odd size on purpose
+        let mut scratch = Scratch::new();
         for kind in SchemeKind::evaluation_set() {
             let (mut c, _) = build_rank_pair(&kind, 2, 5);
-            let p = c.compress(0, 0, &g);
+            let mut frame = Vec::new();
+            c.compress_into(0, 0, &g, &mut scratch, &mut frame);
+            let p = Payload::decode(&frame).expect("compressor frame must decode");
             roundtrip(&p);
+            assert_eq!(p.encoded_len(), frame.len(), "{}", kind.label());
+        }
+    }
+
+    /// Compressing the same gradient into a reused frame buffer (and with a
+    /// reused scratch) yields bitwise-identical frames to fresh buffers —
+    /// the hot path's reuse cannot leak state between tensors.
+    #[test]
+    fn reused_buffers_produce_identical_frames() {
+        let mut rng = Rng::seed(0x5EED);
+        let g1 = prop::vec_f32(&mut rng, 300, 1.0);
+        let g2 = prop::vec_f32(&mut rng, 123, 1.0); // shrinking tensor
+        for kind in SchemeKind::evaluation_set() {
+            let (mut warm, _) = build_rank_pair(&kind, 1, 3);
+            let (mut cold, _) = build_rank_pair(&kind, 1, 3);
+            let mut scratch = Scratch::new();
+            let mut frame = Vec::new();
+            for (t, g) in [(0usize, &g1), (1, &g2), (0, &g1)] {
+                warm.compress_into(t, 0, g, &mut scratch, &mut frame);
+                let mut fresh = Vec::new();
+                cold.compress_into(t, 0, g, &mut Scratch::new(), &mut fresh);
+                assert_eq!(frame, fresh, "{} tensor {t}", kind.label());
+            }
         }
     }
 }

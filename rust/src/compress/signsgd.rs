@@ -9,16 +9,24 @@
 
 use std::collections::HashMap;
 
-use super::rank::{Payload, RankCompressor};
+use super::rank::{encode_sign_into, RankCompressor, Scratch};
 
-/// Pack the signs of xs into u64 words (1 = negative).
-pub(crate) fn pack_signs(xs: &[f32]) -> Vec<u64> {
-    let mut bits = vec![0u64; xs.len().div_ceil(64)];
+/// Pack the signs of xs into the caller's u64 word buffer (1 = negative),
+/// cleared and resized first.
+pub(crate) fn pack_signs_into(xs: &[f32], bits: &mut Vec<u64>) {
+    bits.clear();
+    bits.resize(xs.len().div_ceil(64), 0);
     for (i, &x) in xs.iter().enumerate() {
         if x.is_sign_negative() {
             bits[i / 64] |= 1u64 << (i % 64);
         }
     }
+}
+
+/// Allocating wrapper (tests and codec property helpers).
+pub(crate) fn pack_signs(xs: &[f32]) -> Vec<u64> {
+    let mut bits = Vec::new();
+    pack_signs_into(xs, &mut bits);
     bits
 }
 
@@ -38,20 +46,29 @@ impl RankCompressor for SignCompressor {
         "EFsignSGD"
     }
 
-    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+    fn compress_into(
+        &mut self,
+        tensor: usize,
+        _step: u64,
+        grad: &[f32],
+        scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    ) {
         let n = grad.len();
         let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
-        let acc: Vec<f32> =
-            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
-        let scale = acc.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
-        let bits = pack_signs(&acc);
+        scratch.acc.clear();
+        scratch
+            .acc
+            .extend(grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri));
+        let scale = scratch.acc.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
+        pack_signs_into(&scratch.acc, &mut scratch.bits);
         // residual = acc - transmitted
         for (i, r) in res.iter_mut().enumerate() {
-            let neg = bits[i / 64] >> (i % 64) & 1 == 1;
+            let neg = scratch.bits[i / 64] >> (i % 64) & 1 == 1;
             let v = if neg { -scale } else { scale };
-            *r = acc[i] - v;
+            *r = scratch.acc[i] - v;
         }
-        Payload::Sign { scale, bits, n }
+        encode_sign_into(scale, &scratch.bits, n, frame);
     }
 
     fn reset(&mut self) {

@@ -12,10 +12,17 @@
 //!   does one filter pass — cheaper by an order of magnitude. The sample
 //!   is drawn from this rank's own accumulated gradient (local selection,
 //!   as in GRACE), so DGC is a native per-rank scheme.
+//!
+//! Selection comparators use [`f32::total_cmp`], not
+//! `partial_cmp(..).unwrap()`: magnitudes are non-negative, where the two
+//! orders agree bit for bit, but `total_cmp` is branch-cheaper and cannot
+//! panic on a NaN gradient (NaNs sort above +inf and simply fail the
+//! `|x| >= threshold` filter, so a poisoned gradient degrades gracefully
+//! instead of killing the rank thread — pinned by the NaN regression test).
 
 use std::collections::HashMap;
 
-use super::rank::{Payload, RankCompressor};
+use super::rank::{encode_sparse_into, RankCompressor, Scratch};
 use crate::util::rng::Rng;
 
 /// k = max(1, ratio * n)
@@ -24,27 +31,40 @@ pub(crate) fn k_of(ratio: f64, n: usize) -> usize {
 }
 
 /// |x| threshold such that >= k elements satisfy |x| >= t, via quickselect
-/// on a scratch copy. Returns the k-th largest magnitude.
-pub(crate) fn kth_magnitude(xs: &[f32], k: usize) -> f32 {
+/// on the caller's magnitude scratch. Returns the k-th largest magnitude.
+pub(crate) fn kth_magnitude_into(xs: &[f32], k: usize, mags: &mut Vec<f32>) -> f32 {
     debug_assert!(k >= 1 && k <= xs.len());
-    let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    mags.clear();
+    mags.extend(xs.iter().map(|x| x.abs()));
     let idx = k - 1;
-    mags.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+    mags.select_nth_unstable_by(idx, |a, b| b.total_cmp(a));
     mags[idx]
 }
 
-/// One worker's sparse selection: indices with |acc| >= threshold, capped at
-/// k entries (ties broken by order).
-pub(crate) fn select_sparse(acc: &[f32], threshold: f32, k: usize) -> (Vec<u32>, Vec<f32>) {
-    let mut idx = Vec::with_capacity(k);
-    let mut val = Vec::with_capacity(k);
+/// One worker's sparse selection into the caller's (idx, val) scratch:
+/// indices with |acc| >= threshold, capped at `k` entries (ties broken by
+/// order).
+pub(crate) fn select_sparse_into(
+    acc: &[f32],
+    threshold: f32,
+    k: usize,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+) {
+    idx.clear();
+    val.clear();
     for (i, &x) in acc.iter().enumerate() {
         if x.abs() >= threshold && idx.len() < k {
             idx.push(i as u32);
             val.push(x);
         }
     }
-    (idx, val)
+}
+
+/// EF accumulate into the caller's scratch: `acc = g + 1.0 * r`.
+fn accumulate_into(grad: &[f32], res: &[f32], acc: &mut Vec<f32>) {
+    acc.clear();
+    acc.extend(grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri));
 }
 
 /// Exact per-rank top-k with error feedback.
@@ -65,20 +85,29 @@ impl RankCompressor for TopKCompressor {
         "Top-k"
     }
 
-    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+    fn compress_into(
+        &mut self,
+        tensor: usize,
+        _step: u64,
+        grad: &[f32],
+        scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    ) {
         let n = grad.len();
         let k = k_of(self.ratio, n);
         let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
-        // acc = g + 1.0 * r, the EF accumulate expression
-        let mut acc: Vec<f32> =
-            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
-        let thr = kth_magnitude(&acc, k);
-        let (idx, val) = select_sparse(&acc, thr, k);
-        for &i in &idx {
-            acc[i as usize] = 0.0;
+        accumulate_into(grad, res, &mut scratch.acc);
+        let thr = kth_magnitude_into(&scratch.acc, k, &mut scratch.mags);
+        select_sparse_into(&scratch.acc, thr, k, &mut scratch.idx, &mut scratch.val);
+        for &i in &scratch.idx {
+            scratch.acc[i as usize] = 0.0;
         }
-        *res = acc;
-        Payload::Sparse { idx, val }
+        // clear + extend (not copy_from_slice): adapts the residual length
+        // if a tensor slot is reused with a different shape, like the old
+        // `*res = acc` did; equally allocation-free once capacity is warm
+        res.clear();
+        res.extend_from_slice(&scratch.acc);
+        encode_sparse_into(&scratch.idx, &scratch.val, frame);
     }
 
     fn reset(&mut self) {
@@ -87,14 +116,16 @@ impl RankCompressor for TopKCompressor {
 }
 
 /// Threshold from a 1% uniform sample of |xs| (min 256 elements): the k-th
-/// largest in the sample, scaled to the sample fraction.
-fn sampled_threshold(rng: &mut Rng, xs: &[f32], k: usize) -> f32 {
+/// largest in the sample, scaled to the sample fraction. Draws into the
+/// caller's sample scratch.
+fn sampled_threshold(rng: &mut Rng, xs: &[f32], k: usize, sample: &mut Vec<f32>) -> f32 {
     let n = xs.len();
     let sample_n = (n / 100).clamp(256.min(n), n);
-    let mut sample: Vec<f32> = (0..sample_n).map(|_| xs[rng.below(n)].abs()).collect();
+    sample.clear();
+    sample.extend((0..sample_n).map(|_| xs[rng.below(n)].abs()));
     let ks = ((k as f64) * (sample_n as f64) / (n as f64)).round() as usize;
     let ks = ks.clamp(1, sample_n);
-    sample.select_nth_unstable_by(ks - 1, |a, b| b.partial_cmp(a).unwrap());
+    sample.select_nth_unstable_by(ks - 1, |a, b| b.total_cmp(a));
     sample[ks - 1]
 }
 
@@ -120,23 +151,30 @@ impl RankCompressor for DgcCompressor {
         "DGC"
     }
 
-    fn compress(&mut self, tensor: usize, _step: u64, grad: &[f32]) -> Payload {
+    fn compress_into(
+        &mut self,
+        tensor: usize,
+        _step: u64,
+        grad: &[f32],
+        scratch: &mut Scratch,
+        frame: &mut Vec<u8>,
+    ) {
         let n = grad.len();
         let k = k_of(self.ratio, n);
         let res = self.residuals.entry(tensor).or_insert_with(|| vec![0.0; n]);
-        let mut acc: Vec<f32> =
-            grad.iter().zip(res.iter()).map(|(&gi, &ri)| gi + 1.0 * ri).collect();
-        let thr = sampled_threshold(&mut self.rng, &acc, k);
+        accumulate_into(grad, res, &mut scratch.acc);
+        let thr = sampled_threshold(&mut self.rng, &scratch.acc, k, &mut scratch.mags);
         // DGC sends everything above the estimated threshold (count may
         // exceed k slightly — that is the algorithm's behaviour), capped at
         // the hierarchical re-selection bound.
         let cap = 2 * k;
-        let (idx, val) = select_sparse(&acc, thr, cap);
-        for &i in &idx {
-            acc[i as usize] = 0.0;
+        select_sparse_into(&scratch.acc, thr, cap, &mut scratch.idx, &mut scratch.val);
+        for &i in &scratch.idx {
+            scratch.acc[i as usize] = 0.0;
         }
-        *res = acc;
-        Payload::Sparse { idx, val }
+        res.clear();
+        res.extend_from_slice(&scratch.acc);
+        encode_sparse_into(&scratch.idx, &scratch.val, frame);
     }
 
     fn reset(&mut self) {
@@ -147,10 +185,15 @@ impl RankCompressor for DgcCompressor {
 #[cfg(test)]
 mod tests {
     use super::super::rank::sparse_frame_len;
-    use super::super::{Collective, SchemeKind};
+    use super::super::{Collective, Payload, SchemeKind};
     use super::*;
     use crate::util::prop;
     use crate::util::rng::Rng as TRng;
+
+    /// Allocating wrapper for the assertions below.
+    fn kth_magnitude(xs: &[f32], k: usize) -> f32 {
+        kth_magnitude_into(xs, k, &mut Vec::new())
+    }
 
     #[test]
     fn kth_magnitude_exact() {
@@ -199,6 +242,78 @@ mod tests {
             // union of per-worker top-k: at most workers * k nonzeros
             assert!(nz <= workers * k_of(0.1, n) + 1);
         });
+    }
+
+    /// Satellite regression: a NaN gradient must flow through selection
+    /// without panicking (`total_cmp` is total; the old
+    /// `partial_cmp(..).unwrap()` comparators aborted the rank thread).
+    #[test]
+    fn nan_gradient_does_not_panic() {
+        let mut g = vec![0.0f32; 512];
+        for (i, x) in g.iter_mut().enumerate() {
+            *x = (i as f32 * 0.37).sin();
+        }
+        g[13] = f32::NAN;
+        g[200] = f32::NAN;
+        let refs: Vec<&[f32]> = vec![&g];
+        for kind in [
+            SchemeKind::TopK { ratio: 0.05 },
+            SchemeKind::Dgc { ratio: 0.05 },
+            SchemeKind::OkTopk { ratio: 0.05 },
+        ] {
+            let mut s = kind.build(1, 9);
+            for step in 0..3 {
+                let (u, _) = s.round(0, step, &refs); // must not panic
+                assert_eq!(u.len(), g.len(), "{}", kind.label());
+            }
+        }
+        // the raw selection helpers, at NaN-dominated k
+        let all_nan = vec![f32::NAN; 8];
+        let thr = kth_magnitude(&all_nan, 4);
+        assert!(thr.is_nan());
+        let (mut idx, mut val) = (Vec::new(), Vec::new());
+        select_sparse_into(&all_nan, thr, 4, &mut idx, &mut val);
+        assert!(idx.is_empty(), "NaN threshold selects nothing (|x| >= NaN is false)");
+    }
+
+    /// With NaNs in the gradient, selection stays well-formed: NaN sorts
+    /// above +inf in the total order, so the k-th magnitude may be NaN-free
+    /// or NaN, but either way the emitted frame is a valid sparse frame of
+    /// finite count that round-trips bitwise.
+    #[test]
+    fn nan_values_keep_frames_well_formed() {
+        let mut c = TopKCompressor::new(0.5);
+        let g = vec![f32::NAN, 10.0, 0.0, 0.1];
+        let p = c.compress(0, 0, &g); // k=2: NaN outranks 10.0, thr = 10.0
+        let Payload::Sparse { idx, val } = &p else { panic!("wrong variant") };
+        // NaN fails |x| >= thr, so only the finite 10.0 is selected
+        assert_eq!(idx, &[1]);
+        assert_eq!(val.len(), 1);
+        assert_eq!(val[0], 10.0);
+        let frame = p.encode();
+        assert_eq!(&Payload::decode(&frame).unwrap(), &p);
+    }
+
+    /// Reusing a tensor slot with a smaller gradient must adapt the
+    /// residual length instead of panicking — the behaviour the old
+    /// `*res = acc` assignment had (`copy_from_slice` would abort on the
+    /// length mismatch).
+    #[test]
+    fn tensor_slot_shrink_does_not_panic() {
+        let mut scratch = crate::compress::Scratch::new();
+        let mut frame = Vec::new();
+        for kind in [
+            SchemeKind::TopK { ratio: 0.1 },
+            SchemeKind::Dgc { ratio: 0.1 },
+            SchemeKind::RandomK { ratio: 0.1 },
+        ] {
+            let (mut c, _) = super::super::rank::build_rank_pair(&kind, 1, 3);
+            let big = vec![1.0f32; 100];
+            let small = vec![2.0f32; 50];
+            c.compress_into(0, 0, &big, &mut scratch, &mut frame);
+            c.compress_into(0, 1, &small, &mut scratch, &mut frame); // shrink
+            assert!(Payload::decode(&frame).is_ok(), "{}", kind.label());
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! `exec` — the threaded rank executor: P ranks on real OS threads, each
 //! with its own gradient buffer, data shard and per-rank error-feedback
-//! state, exchanging *serialized* compressed-payload frames
-//! (`Payload::encode` byte buffers) over per-edge channels with the same
-//! chunk schedule as the in-place simulator path. Wire accounting is the
-//! measured frame length, shared with the analytic backend's records.
+//! state, exchanging *serialized* compressed-payload frames (encoded
+//! in place by `RankCompressor::compress_into`, rotated through reusable
+//! slot buffers) over per-edge channels with the same chunk schedule as
+//! the in-place simulator path. Wire accounting is the measured frame
+//! length, shared with the analytic backend's records; the steady-state
+//! compress→encode→ring path is allocation-free (DESIGN.md §7).
 //!
 //! This subsystem turns the repo's *simulated* overlap claims into
 //! *measured* ones: the analytic backend predicts a step's
@@ -32,7 +34,9 @@ pub mod validate;
 
 pub use barrier::Barrier;
 pub use rank::{fnv1a_f32, Cmd, RankStepResult, StepSpec};
-pub use ring::{allgather_payloads, make_links, ring_allreduce_threaded, Pacer, RingLink};
+pub use ring::{
+    allgather_frames, allgather_payloads, make_links, ring_allreduce_threaded, Pacer, RingLink,
+};
 pub use timeline::{aggregate, breakdown, MeasuredBreakdown, RankTimeline, Span, SpanKind};
 pub use validate::{compare_backends, BackendComparison};
 

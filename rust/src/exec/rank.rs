@@ -1,13 +1,22 @@
 //! The per-rank worker: one OS *compute* thread (data shard -> backward
 //! pass -> per-tensor compression, wait-free) feeding one OS *comm* thread
-//! (serialized-frame exchange over the ring + decode into the dense
-//! update) through a FIFO bucket queue — the executable form of the
-//! paper's Fig. 1b/1d two-stream picture. The ring moves
-//! `Payload::encode` byte frames, so the timeline's moved-bytes and the
-//! records' wire accounting are measurements of real serialized volume.
+//! (serialized-frame exchange over the ring + decode-free combine into the
+//! dense update) through a FIFO bucket queue — the executable form of the
+//! paper's Fig. 1b/1d two-stream picture. The ring moves encoded byte
+//! frames (`RankCompressor::compress_into` writes them directly), so the
+//! timeline's moved-bytes and the records' wire accounting are
+//! measurements of real serialized volume.
+//!
+//! Buffer lifecycle (DESIGN.md §7): the compute thread compresses into
+//! frame buffers recycled from the comm thread (a return channel of spent
+//! `Vec<u8>`s), the ring rotates frames through the comm thread's
+//! persistent rank-major slots, and the combiner folds the slot bytes into
+//! a persistent update buffer — so a steady-state step allocates nothing
+//! on the compress→encode→ring path beyond the mpsc channel's internal
+//! queue blocks.
 //!
 //! Under `Policy::Overlap` the compute thread enqueues each tensor the
-//! moment its gradient+payload is ready, so communication of early tensors
+//! moment its gradient+frame is ready, so communication of early tensors
 //! genuinely overlaps computation of later ones; under `Policy::Sequential`
 //! it holds everything back until the full backward pass finished (Fig.
 //! 1a/1c). A scheme with `data_dependency` (Ok-topk) blocks the compute
@@ -18,12 +27,12 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::compress::rank::{build_rank_pair, Payload, RankCombiner, RankCompressor};
+use crate::compress::rank::{build_rank_pair, RankCombiner, RankCompressor, Scratch};
 use crate::compress::{CommRecord, SchemeKind};
 use crate::coordinator::CommTensor;
 use crate::data::DataShard;
 use crate::exec::barrier::Barrier;
-use crate::exec::ring::{allgather_payloads, Pacer, RingLink};
+use crate::exec::ring::{allgather_frames, Pacer, RingLink};
 use crate::exec::timeline::{RankTimeline, Span, SpanKind};
 use crate::runtime::RankModel;
 use crate::sim::Policy;
@@ -67,7 +76,18 @@ pub struct RankStepResult {
 /// Queue items from a rank's compute thread to its comm thread.
 enum Work {
     Begin { step: u64, epoch: Instant, param_len: usize },
-    Tensor { idx: usize, offset: usize, numel: usize, payload: Payload, compress_s: f64, dep: bool },
+    Tensor {
+        idx: usize,
+        offset: usize,
+        numel: usize,
+        /// This rank's encoded wire frame (empty = nothing transmitted).
+        /// The buffer returns to the compute thread via the recycle
+        /// channel after the combine, so steady-state steps reuse a fixed
+        /// pool instead of allocating per tensor.
+        frame: Vec<u8>,
+        compress_s: f64,
+        dep: bool,
+    },
     Finish { loss: f32, comp_wall_s: f64, spans: Vec<Span>, barrier_wait_s: f64 },
     Reconfig(SchemeKind),
     Stop,
@@ -102,20 +122,28 @@ pub(crate) fn spawn_rank(
 ) -> (std::thread::JoinHandle<()>, std::thread::JoinHandle<()>) {
     let (work_tx, work_rx) = std::sync::mpsc::channel::<Work>();
     let (dep_tx, dep_rx) = std::sync::mpsc::channel::<usize>();
+    // spent frame buffers flow back compute-ward for reuse
+    let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<Vec<u8>>();
     let ch = std::thread::Builder::new()
         .name(format!("covap-comm-{}", comm.rank))
-        .spawn(move || comm_main(comm, work_rx, dep_tx))
+        .spawn(move || comm_main(comm, work_rx, dep_tx, recycle_tx))
         .expect("spawn comm thread");
     let th = std::thread::Builder::new()
         .name(format!("covap-rank-{}", compute.rank))
-        .spawn(move || compute_main(compute, work_tx, dep_rx))
+        .spawn(move || compute_main(compute, work_tx, dep_rx, recycle_rx))
         .expect("spawn compute thread");
     (th, ch)
 }
 
-fn compute_main(mut ctx: ComputeCtx, work_tx: Sender<Work>, dep_rx: Receiver<usize>) {
+fn compute_main(
+    mut ctx: ComputeCtx,
+    work_tx: Sender<Work>,
+    dep_rx: Receiver<usize>,
+    recycle_rx: Receiver<Vec<u8>>,
+) {
     let (mut compressor, _) = build_rank_pair(&ctx.kind, ctx.workers, ctx.seed);
     let mut gbuf: Vec<f32> = Vec::new();
+    let mut scratch = Scratch::new();
     while let Ok(cmd) = ctx.cmd_rx.recv() {
         match cmd {
             Cmd::Shutdown => {
@@ -129,7 +157,16 @@ fn compute_main(mut ctx: ComputeCtx, work_tx: Sender<Work>, dep_rx: Receiver<usi
                 let _ = work_tx.send(Work::Reconfig(kind));
             }
             Cmd::Step(spec) => {
-                run_step(&mut ctx, &mut *compressor, &mut gbuf, &spec, &work_tx, &dep_rx);
+                run_step(
+                    &mut ctx,
+                    &mut *compressor,
+                    &mut gbuf,
+                    &mut scratch,
+                    &spec,
+                    &work_tx,
+                    &dep_rx,
+                    &recycle_rx,
+                );
             }
         }
     }
@@ -137,13 +174,16 @@ fn compute_main(mut ctx: ComputeCtx, work_tx: Sender<Work>, dep_rx: Receiver<usi
     let _ = work_tx.send(Work::Stop);
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_step(
     ctx: &mut ComputeCtx,
     compressor: &mut dyn RankCompressor,
     gbuf: &mut Vec<f32>,
+    scratch: &mut Scratch,
     spec: &StepSpec,
     work_tx: &Sender<Work>,
     dep_rx: &Receiver<usize>,
+    recycle_rx: &Receiver<Vec<u8>>,
 ) {
     let n = spec.params.len();
     gbuf.clear();
@@ -165,8 +205,16 @@ fn run_step(
         let t0 = spec.epoch.elapsed().as_secs_f64();
         ctx.model.grad_range(&spec.params, t.offset, &mut gbuf[t.offset..t.offset + t.numel]);
         let t1 = spec.epoch.elapsed().as_secs_f64();
-        let payload =
-            compressor.compress(idx, spec.step, &gbuf[t.offset..t.offset + t.numel]);
+        // a spent buffer from the comm thread if one is ready (steady
+        // state), a fresh empty Vec only during warmup
+        let mut frame = recycle_rx.try_recv().unwrap_or_default();
+        compressor.compress_into(
+            idx,
+            spec.step,
+            &gbuf[t.offset..t.offset + t.numel],
+            scratch,
+            &mut frame,
+        );
         let t2 = spec.epoch.elapsed().as_secs_f64();
         comp_wall += t1 - t0;
         spans.push(Span { kind: SpanKind::Compute, tensor: idx, start_s: t0, end_s: t1 });
@@ -177,7 +225,7 @@ fn run_step(
             idx,
             offset: t.offset,
             numel: t.numel,
-            payload,
+            frame,
             compress_s: t2 - t1,
             dep,
         };
@@ -210,8 +258,19 @@ fn run_step(
         .expect("comm thread alive");
 }
 
-fn comm_main(mut ctx: CommCtx, work_rx: Receiver<Work>, dep_tx: Sender<usize>) {
+fn comm_main(
+    mut ctx: CommCtx,
+    work_rx: Receiver<Work>,
+    dep_tx: Sender<usize>,
+    recycle_tx: Sender<Vec<u8>>,
+) {
     let (_, mut combiner) = build_rank_pair(&ctx.kind, ctx.workers, ctx.seed);
+    // persistent hot-path buffers (capacities grow to the largest tensor,
+    // then every later step reuses them)
+    let mut slots: Vec<Vec<u8>> = (0..ctx.workers).map(|_| Vec::new()).collect();
+    let mut spare: Vec<u8> = Vec::new();
+    let mut scratch = Scratch::new();
+    let mut update: Vec<f32> = Vec::new();
     // per-step state
     let mut step = 0u64;
     let mut epoch = Instant::now();
@@ -237,21 +296,34 @@ fn comm_main(mut ctx: CommCtx, work_rx: Receiver<Work>, dep_tx: Sender<usize>) {
                 comm_spans.clear();
                 moved = 0;
             }
-            Work::Tensor { idx, offset, numel, payload, compress_s, dep } => {
+            Work::Tensor { idx, offset, numel, frame, compress_s, dep } => {
                 let c0 = epoch.elapsed().as_secs_f64();
-                let (gathered, sent) = allgather_payloads(
+                let sent = allgather_frames(
                     ctx.rank,
                     ctx.workers,
-                    payload,
+                    &frame,
+                    &mut slots,
+                    &mut spare,
                     &ctx.link,
                     ctx.pacer.as_ref(),
                 );
-                let rr = combiner.combine(idx, step, numel, &gathered, compress_s);
-                if !rr.update.is_empty() {
-                    reduced[offset..offset + numel].copy_from_slice(&rr.update);
+                let record = combiner.combine_into(
+                    idx,
+                    step,
+                    numel,
+                    &slots,
+                    &mut scratch,
+                    &mut update,
+                    compress_s,
+                );
+                if !update.is_empty() {
+                    reduced[offset..offset + numel].copy_from_slice(&update);
                 }
-                records.push(rr.record);
+                records.push(record);
                 moved += sent;
+                // the spent frame buffer flows back for reuse (receiver
+                // may be gone during shutdown — then it just drops)
+                let _ = recycle_tx.send(frame);
                 let c1 = epoch.elapsed().as_secs_f64();
                 comm_spans.push(Span {
                     kind: SpanKind::Comm,

@@ -7,26 +7,39 @@
 //! so the two are **bitwise identical** (property-tested below): per chunk
 //! the sum is the same sequential chain, only executed by P real threads.
 //!
-//! [`allgather_payloads`] is the compressed-payload rotation: every rank
-//! **serializes** its payload with [`Payload::encode`] and the ring moves
-//! the raw byte frames — what a real transport would see — decoding the
-//! gathered rank-major set only at the end. Hop pacing and the `sent`
-//! accounting both use the measured `frame.len()`, so the bytes charged are
-//! the bytes a rank actually put on the wire, not a size model. [`Pacer`]
-//! optionally throttles every hop to a modeled wire bandwidth + latency so
-//! measured timelines can emulate a slow fabric on a fast testbed.
+//! [`allgather_frames`] is the compressed-frame rotation: every rank
+//! contributes one encoded wire frame and the ring moves the raw bytes —
+//! what a real transport would see — into the caller's **persistent slot
+//! buffers** (rank-major). Buffer discipline is allocation-free in steady
+//! state: each hop copies the outgoing slot into a `spare` send buffer
+//! (the one unavoidable copy — the slot must be retained for combining
+//! while its bytes ship), sends the spare's allocation through the
+//! channel, adopts the incoming frame's allocation as the slot
+//! (zero-copy receive via swap) and keeps the displaced slot buffer as
+//! the next spare — so `Vec` capacities circulate around the ring and,
+//! once every buffer has grown to the largest frame seen, no hop
+//! allocates. (The mpsc channel's internal
+//! block allocation is the one remaining transport-layer cost; see
+//! DESIGN.md §7.) Hop pacing and the `sent` accounting both use the
+//! measured frame length, so the bytes charged are the bytes a rank
+//! actually put on the wire, not a size model. [`Pacer`] optionally
+//! throttles every hop to a modeled wire bandwidth + latency so measured
+//! timelines can emulate a slow fabric on a fast testbed.
+//!
+//! [`allgather_payloads`] — the `Payload`-level wrapper over
+//! [`allgather_frames`] — is retained as the property-test oracle.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
-use crate::comm::RingSchedule;
+use crate::comm::{rot_recv, rot_send, RingSchedule};
 use crate::compress::Payload;
 
 /// One frame on a ring edge.
 pub enum Frame {
     /// A chunk of a dense f32 collective.
     Chunk(Vec<f32>),
-    /// A serialized compressed-payload frame ([`Payload::encode`]).
+    /// A serialized compressed-payload frame ([`Payload::encode_into`]).
     Bytes(Vec<u8>),
 }
 
@@ -94,11 +107,34 @@ fn recv_bytes(link: &RingLink) -> Vec<u8> {
     }
 }
 
+/// One byte-frame hop: copy `src` into `spare`, ship the spare's
+/// allocation down the ring edge (pacing on the sender side), and return
+/// the incoming frame. The caller copies the incoming bytes into its slot
+/// and adopts the returned buffer as the next spare — the allocation
+/// circulates instead of being dropped.
+fn hop_bytes(
+    link: &RingLink,
+    pacer: Option<&Pacer>,
+    src: &[u8],
+    spare: &mut Vec<u8>,
+) -> Vec<u8> {
+    spare.clear();
+    spare.extend_from_slice(src);
+    if let Some(p) = pacer {
+        p.pace(src.len());
+    }
+    link.tx.send(Frame::Bytes(std::mem::take(spare))).expect("ring send");
+    recv_bytes(link)
+}
+
 /// Chunked ring AllReduce (sum), threaded: call from every rank's comm
 /// thread with its own buffer. Returns the bytes this rank sent.
 ///
 /// Bitwise-identical to [`crate::comm::ring_allreduce`]: same
 /// [`RingSchedule`], same `own += incoming` accumulation order per chunk.
+/// Chunk buffers are recycled hop-to-hop (one spare per call, refilled
+/// with the incoming chunk's allocation), so a 2(P-1)-hop collective
+/// allocates O(1) buffers instead of O(P).
 pub fn ring_allreduce_threaded(
     rank: usize,
     world: usize,
@@ -113,17 +149,19 @@ pub fn ring_allreduce_threaded(
     let sched = RingSchedule::new(world, n);
     let prev = (rank + world - 1) % world;
     let mut sent = 0usize;
+    let mut spare: Vec<f32> = Vec::new();
 
     // Reduce-scatter.
     for s in 0..world - 1 {
         let c_out = sched.rs_chunk(rank, s);
-        let out: Vec<f32> = buf[sched.chunk(c_out)].to_vec();
-        let bytes = out.len() * 4;
+        spare.clear();
+        spare.extend_from_slice(&buf[sched.chunk(c_out)]);
+        let bytes = spare.len() * 4;
         if let Some(p) = pacer {
             p.pace(bytes);
         }
         sent += bytes;
-        link.tx.send(Frame::Chunk(out)).expect("ring send");
+        link.tx.send(Frame::Chunk(std::mem::take(&mut spare))).expect("ring send");
         let inc = recv_chunk(link);
         let c_in = sched.rs_chunk(prev, s);
         let range = sched.chunk(c_in);
@@ -131,30 +169,70 @@ pub fn ring_allreduce_threaded(
         for (d, sv) in buf[range].iter_mut().zip(inc.iter()) {
             *d += sv;
         }
+        spare = inc;
     }
     // Allgather.
     for s in 0..world - 1 {
         let c_out = sched.ag_chunk(rank, s);
-        let out: Vec<f32> = buf[sched.chunk(c_out)].to_vec();
-        let bytes = out.len() * 4;
+        spare.clear();
+        spare.extend_from_slice(&buf[sched.chunk(c_out)]);
+        let bytes = spare.len() * 4;
         if let Some(p) = pacer {
             p.pace(bytes);
         }
         sent += bytes;
-        link.tx.send(Frame::Chunk(out)).expect("ring send");
+        link.tx.send(Frame::Chunk(std::mem::take(&mut spare))).expect("ring send");
         let inc = recv_chunk(link);
         let c_in = sched.ag_chunk(prev, s);
         let range = sched.chunk(c_in);
         debug_assert_eq!(inc.len(), range.len());
         buf[range].copy_from_slice(&inc);
+        spare = inc;
     }
     sent
 }
 
-/// Serialized ring AllGather: every rank contributes one payload, encoded
-/// to its byte frame, and receives the rank-major vector of all payloads
-/// after P-1 rotation hops of raw frames. Returns (payloads rank-major,
-/// frame bytes this rank sent — the measured wire traffic).
+/// Serialized ring AllGather over **reusable frame buffers**: every rank
+/// contributes its encoded wire frame `mine`; after P-1 rotation hops the
+/// caller's `slots` hold the rank-major frames of all ranks (including a
+/// copy of `mine` at `slots[rank]`). `spare` is the persistent send
+/// buffer; its allocation is shipped each hop and replaced by the
+/// incoming frame's (capacities circulate — see module docs). Returns the
+/// frame bytes this rank sent — the measured wire traffic.
+pub fn allgather_frames(
+    rank: usize,
+    world: usize,
+    mine: &[u8],
+    slots: &mut [Vec<u8>],
+    spare: &mut Vec<u8>,
+    link: &RingLink,
+    pacer: Option<&Pacer>,
+) -> usize {
+    assert_eq!(slots.len(), world, "one slot per rank");
+    slots[rank].clear();
+    slots[rank].extend_from_slice(mine);
+    if world <= 1 {
+        return 0;
+    }
+    let mut sent = 0usize;
+    for s in 0..world - 1 {
+        let c_out = rot_send(world, rank, s);
+        sent += slots[c_out].len();
+        let mut inc = hop_bytes(link, pacer, &slots[c_out], spare);
+        let c_in = rot_recv(world, rank, s);
+        debug_assert_ne!(c_in, rank, "rotation must never overwrite our own slot");
+        // adopt the incoming buffer as the slot (zero-copy receive); the
+        // displaced slot buffer becomes the next hop's spare
+        std::mem::swap(&mut slots[c_in], &mut inc);
+        *spare = inc;
+    }
+    sent
+}
+
+/// `Payload`-level oracle wrapper over [`allgather_frames`]: encode,
+/// rotate, decode every slot. Returns (payloads rank-major, frame bytes
+/// this rank sent). The hot path keeps the frames and combines them
+/// decode-free; this wrapper exists for tests and one-shot callers.
 pub fn allgather_payloads(
     rank: usize,
     world: usize,
@@ -162,39 +240,14 @@ pub fn allgather_payloads(
     link: &RingLink,
     pacer: Option<&Pacer>,
 ) -> (Vec<Payload>, usize) {
-    if world <= 1 {
-        return (vec![mine], 0);
-    }
-    let mut frames: Vec<Option<Vec<u8>>> = (0..world).map(|_| None).collect();
-    frames[rank] = Some(mine.encode());
-    let mut own = Some(mine);
-    let prev = (rank + world - 1) % world;
-    let mut sent = 0usize;
-    for s in 0..world - 1 {
-        let c_out = (rank + world - s) % world;
-        let out = frames[c_out].clone().expect("rotation invariant");
-        let bytes = out.len();
-        if let Some(p) = pacer {
-            p.pace(bytes);
-        }
-        sent += bytes;
-        link.tx.send(Frame::Bytes(out)).expect("ring send");
-        let inc = recv_bytes(link);
-        let c_in = (prev + world - s) % world;
-        debug_assert!(frames[c_in].is_none() || c_in == rank);
-        frames[c_in] = Some(inc);
-    }
-    let mut gathered = Vec::with_capacity(world);
-    for (i, f) in frames.into_iter().enumerate() {
-        let frame = f.expect("all frames arrive after P-1 hops");
-        if i == rank {
-            // this rank's own payload needs no decode round-trip (the
-            // codec's exactness is property-tested; peers decoded it)
-            gathered.push(own.take().expect("own payload"));
-        } else {
-            gathered.push(Payload::decode(&frame).expect("corrupt ring frame"));
-        }
-    }
+    let frame = mine.encode();
+    let mut slots: Vec<Vec<u8>> = (0..world).map(|_| Vec::new()).collect();
+    let mut spare = Vec::new();
+    let sent = allgather_frames(rank, world, &frame, &mut slots, &mut spare, link, pacer);
+    let gathered = slots
+        .iter()
+        .map(|f| Payload::decode(f).expect("corrupt ring frame"))
+        .collect();
     (gathered, sent)
 }
 
@@ -343,6 +396,53 @@ mod tests {
         for (r, &s) in sent.iter().enumerate() {
             let skipped = lens[(r + 1) % p];
             assert_eq!(s, total - skipped, "rank {r} sent bytes");
+        }
+    }
+
+    /// The reuse contract: calling `allgather_frames` repeatedly with the
+    /// same persistent slots/spare buffers yields the identical gathered
+    /// bytes every round — stale bytes from a previous (larger) round can
+    /// never leak into a later one.
+    #[test]
+    fn frame_slots_are_reusable_across_rounds() {
+        let p = 3;
+        // round 1: big frames; round 2: smaller, different frames
+        let rounds: Vec<Vec<Vec<u8>>> = vec![
+            (0..p).map(|r| vec![r as u8 + 1; 64]).collect(),
+            (0..p).map(|r| vec![0xF0 | r as u8; 5]).collect(),
+            (0..p).map(|_| Vec::new()).collect(), // empty frames rotate too
+        ];
+        let links = make_links(p);
+        let results: Vec<Vec<Vec<Vec<u8>>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = links
+                .into_iter()
+                .enumerate()
+                .map(|(r, link)| {
+                    let rounds = rounds.clone();
+                    s.spawn(move || {
+                        let mut slots: Vec<Vec<u8>> =
+                            (0..p).map(|_| Vec::new()).collect();
+                        let mut spare = Vec::new();
+                        let mut got = Vec::new();
+                        for frames in &rounds {
+                            allgather_frames(
+                                r, p, &frames[r], &mut slots, &mut spare, &link, None,
+                            );
+                            got.push(slots.clone());
+                        }
+                        got
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+        });
+        for (r, per_round) in results.iter().enumerate() {
+            for (round, got) in per_round.iter().enumerate() {
+                assert_eq!(
+                    got, &rounds[round],
+                    "rank {r} round {round}: slots must be exactly this round's frames"
+                );
+            }
         }
     }
 

@@ -343,6 +343,20 @@ fn num_or_null(x: f64) -> Json {
     }
 }
 
+/// Write a `BENCH_<name>.json` artifact with caller-shaped rows — the
+/// generic form of [`write_bench_json`] for benches whose rows are not
+/// (scheme, world, policy) cells (e.g. `perf_hotpath`'s throughput +
+/// allocation counts). Same stable envelope: `{"bench": ..., "rows": [..]}`.
+pub fn write_bench_doc(path: &Path, bench: &str, rows: Vec<Json>) -> Result<()> {
+    let doc = Json::obj(vec![
+        ("bench", Json::from(bench)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(path, format!("{doc}\n"))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
 /// Write `BENCH_<name>.json` next to `dir` (typically the repo root): a
 /// stable, machine-readable artifact CI uploads so the bench trajectory
 /// accumulates across PRs.
@@ -370,13 +384,7 @@ pub fn write_bench_json(path: &Path, bench: &str, rows: &[BenchRow]) -> Result<(
             ])
         })
         .collect();
-    let doc = Json::obj(vec![
-        ("bench", Json::from(bench)),
-        ("rows", Json::Arr(rows_json)),
-    ]);
-    std::fs::write(path, format!("{doc}\n"))
-        .with_context(|| format!("writing {}", path.display()))?;
-    Ok(())
+    write_bench_doc(path, bench, rows_json)
 }
 
 #[cfg(test)]
