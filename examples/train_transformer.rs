@@ -60,8 +60,16 @@ fn main() -> anyhow::Result<()> {
         ..RunConfig::default()
     };
     if args.has("adaptive") {
-        // profile the first steps, then switch to COVAP with I = ceil(CCR)
+        // closed-loop adaptive mode: profile the first steps, switch to
+        // COVAP with I = ceil(CCR), keep re-profiling in windows. Only
+        // covap@auto re-shards — any other requested scheme keeps running.
         cfg.profile_steps = 3;
+        cfg.scheme = match cfg.scheme.clone() {
+            SchemeKind::Covap { ef, .. } | SchemeKind::CovapAuto { ef } => {
+                SchemeKind::CovapAuto { ef }
+            }
+            other => other,
+        };
     }
 
     println!(

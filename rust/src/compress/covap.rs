@@ -12,6 +12,7 @@
 use std::collections::HashMap;
 
 use super::rank::{dense_frame_len, frame_header, RankCompressor, Scratch, TAG_DENSE};
+use super::SchemeKind;
 use crate::covap::{CoarseFilter, EfScheduler};
 
 /// One rank's COVAP compute half: filter decision + this rank's residuals.
@@ -79,6 +80,43 @@ impl RankCompressor for CovapCompressor {
                 *ri = gi + coeff * *ri;
             }
         }
+    }
+
+    /// Interval re-shard with **residual preservation** (§III.D): residuals
+    /// are keyed by communication-tensor slot, but the accumulated error
+    /// lives at flat parameter offsets — so scatter every old slot's
+    /// residual into flat space and slice the new layout back out. Pure
+    /// copies: the error mass survives the re-shard bitwise, instead of
+    /// being dropped the way a rebuild would (the old adaptive path's
+    /// leak). Only COVAP-family kinds are migratable; anything else tells
+    /// the caller to rebuild.
+    fn reconfigure(
+        &mut self,
+        kind: &SchemeKind,
+        old: &[(usize, usize)],
+        new: &[(usize, usize)],
+    ) -> bool {
+        let (interval, scheduler) = match kind {
+            SchemeKind::Covap { interval, ef } => (*interval, *ef),
+            SchemeKind::CovapAuto { ef } => (1, *ef),
+            _ => return false,
+        };
+        let span = old.iter().chain(new.iter()).map(|&(o, n)| o + n).max().unwrap_or(0);
+        let mut flat = vec![0.0f32; span];
+        for (slot, &(off, numel)) in old.iter().enumerate() {
+            if let Some(r) = self.residuals.get(&slot) {
+                debug_assert_eq!(r.len(), numel, "slot {slot} residual length");
+                let n = r.len().min(numel);
+                flat[off..off + n].copy_from_slice(&r[..n]);
+            }
+        }
+        self.residuals.clear();
+        for (slot, &(off, numel)) in new.iter().enumerate() {
+            self.residuals.insert(slot, flat[off..off + numel].to_vec());
+        }
+        self.filter = CoarseFilter::new(interval);
+        self.scheduler = scheduler;
+        true
     }
 
     fn reset(&mut self) {
@@ -184,6 +222,84 @@ mod tests {
         let (u2, _) = s.round(0, 2, &refs); // kept: coeff 0 -> residual ignored
         assert_eq!(u0, vec![1.0; 4]);
         assert_eq!(u2, vec![1.0; 4]);
+    }
+
+    /// Flatten a compressor's residual map over a slot layout.
+    fn flat_residuals(c: &CovapCompressor, layout: &[(usize, usize)]) -> Vec<u32> {
+        let span = layout.iter().map(|&(o, n)| o + n).max().unwrap_or(0);
+        let mut flat = vec![0.0f32; span];
+        for (slot, &(off, numel)) in layout.iter().enumerate() {
+            if let Some(r) = c.residuals.get(&slot) {
+                let n = numel.min(r.len());
+                flat[off..off + n].copy_from_slice(&r[..n]);
+            }
+        }
+        flat.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The re-shard acceptance criterion: remapping to a different shard
+    /// layout preserves the EF residual mass **bitwise** — same flat
+    /// values, just resliced — and a second remap back is the identity.
+    #[test]
+    fn reconfigure_remaps_residuals_bitwise() {
+        let ef = EfScheduler::constant(1.0);
+        let mut c = CovapCompressor::new(3, ef);
+        let old = [(0usize, 8usize), (8, 4)];
+        let g0: Vec<f32> = (0..8).map(|i| 0.25 * i as f32 - 0.8).collect();
+        let g1: Vec<f32> = (0..4).map(|i| 1.5 - 0.4 * i as f32).collect();
+        // step 1: both tensors dropped ((t + 1) % 3 != 0) -> residuals park
+        for (t, g) in [(0usize, &g0), (1, &g1)] {
+            let p = c.compress(t, 1, g);
+            assert!(matches!(p, Payload::Empty), "tensor {t} must be dropped");
+        }
+        let before = flat_residuals(&c, &old);
+        assert!(before.iter().any(|&b| b != 0), "residuals must be nonzero");
+
+        // re-shard 2 tensors -> 3 (different slicing of the same 12 params)
+        let new = [(0usize, 3usize), (3, 5), (8, 4)];
+        let kind = SchemeKind::Covap { interval: 4, ef };
+        assert!(c.reconfigure(&kind, &old, &new));
+        assert_eq!(flat_residuals(&c, &new), before, "remap must preserve bits");
+        assert_eq!(c.filter.interval(), 4);
+
+        // and back: still the identical flat residual vector
+        assert!(c.reconfigure(&SchemeKind::Covap { interval: 3, ef }, &new, &old));
+        assert_eq!(flat_residuals(&c, &old), before);
+    }
+
+    /// A remapped compressor behaves exactly like one that accumulated
+    /// under the new layout all along would on the *kept* step: the flush
+    /// transmits g + c·r with the remapped residuals.
+    #[test]
+    fn post_reshard_flush_uses_remapped_residuals() {
+        let ef = EfScheduler::constant(1.0);
+        let mut c = CovapCompressor::new(2, ef);
+        let g = vec![1.0f32; 6];
+        // one tensor [0, 6); step 1 drops it ((0 + 1) % 2 == 1)
+        assert!(matches!(c.compress(0, 1, &g), Payload::Empty));
+        // re-shard into two tensors of 3; interval 2 keeps tensor 0 at
+        // step 2 and tensor 1 at step 3
+        let old = [(0usize, 6usize)];
+        let new = [(0usize, 3usize), (3, 3)];
+        assert!(c.reconfigure(&SchemeKind::Covap { interval: 2, ef }, &old, &new));
+        let p = c.compress(0, 2, &g[0..3]);
+        let Payload::Dense(v) = p else { panic!("kept tensor must be dense") };
+        // flush = g + 1.0 * residual(=1.0 each) = 2.0
+        assert_eq!(v, vec![2.0f32; 3]);
+    }
+
+    /// Cross-scheme migrations are refused (caller rebuilds instead), and
+    /// stateless compressors refuse COVAP state (default impl).
+    #[test]
+    fn reconfigure_rejects_foreign_schemes() {
+        let ef = EfScheduler::default();
+        let mut c = CovapCompressor::new(2, ef);
+        assert!(!c.reconfigure(&SchemeKind::TopK { ratio: 0.01 }, &[], &[]));
+        let (mut dense, _) = super::super::rank::build_rank_pair(&SchemeKind::Baseline, 1, 0);
+        assert!(!dense.reconfigure(&SchemeKind::Covap { interval: 2, ef }, &[], &[]));
+        // covap -> covap@auto migrates to interval 1 (dense)
+        assert!(c.reconfigure(&SchemeKind::CovapAuto { ef }, &[], &[]));
+        assert_eq!(c.filter.interval(), 1);
     }
 
     #[test]

@@ -101,6 +101,20 @@ pub trait Scheme: Send {
 
     fn round(&mut self, bucket: usize, step: u64, grads: &[&[f32]]) -> (Vec<f32>, CommRecord);
 
+    /// Re-shard hook (see [`RankCompressor::reconfigure`]): migrate to
+    /// `kind` while remapping per-tensor state from the `old` tensor
+    /// layout to `new` (both `(flat offset, numel)` slot tables). Returns
+    /// true when handled in place; false tells the caller to rebuild via
+    /// [`SchemeKind::build`] (state dropped — the pre-remap behavior).
+    fn reconfigure(
+        &mut self,
+        _kind: &SchemeKind,
+        _old: &[(usize, usize)],
+        _new: &[(usize, usize)],
+    ) -> bool {
+        false
+    }
+
     /// Reset all error-feedback / iteration state (new training run).
     fn reset(&mut self);
 }
@@ -119,6 +133,7 @@ pub trait Scheme: Send {
 pub struct LockstepDriver {
     label: &'static str,
     workers: usize,
+    seed: u64,
     compressors: Vec<Box<dyn RankCompressor>>,
     /// Combiners are deterministic and bit-identical across ranks, so the
     /// driver holds a single replica (rank 0's).
@@ -146,6 +161,7 @@ impl LockstepDriver {
         LockstepDriver {
             label: kind.label(),
             workers,
+            seed,
             compressors,
             combiner: combiner.expect("workers >= 1"),
             scratch: Scratch::new(),
@@ -191,6 +207,29 @@ impl Scheme for LockstepDriver {
         (self.update.clone(), record)
     }
 
+    /// In-place re-shard: every rank pair must accept the migration (same
+    /// compressor type on all ranks, so they agree); the combiner is
+    /// rebuilt from the new kind exactly as the threaded executor's comm
+    /// threads do, keeping the two drivers' post-reshard state structural
+    /// twins.
+    fn reconfigure(
+        &mut self,
+        kind: &SchemeKind,
+        old: &[(usize, usize)],
+        new: &[(usize, usize)],
+    ) -> bool {
+        let mut ok = true;
+        for c in &mut self.compressors {
+            ok &= c.reconfigure(kind, old, new);
+        }
+        if ok {
+            let (_, cb) = build_rank_pair(kind, self.workers, self.seed);
+            self.combiner = cb;
+            self.label = kind.label();
+        }
+        ok
+    }
+
     fn reset(&mut self) {
         for c in &mut self.compressors {
             c.reset();
@@ -207,6 +246,12 @@ pub enum SchemeKind {
     /// COVAP with a fixed interval (adaptive selection happens in the
     /// trainer via the profiler; see covap::interval_from_ccr).
     Covap { interval: usize, ef: EfScheduler },
+    /// COVAP in closed-loop adaptive mode (`covap@auto`): runs dense
+    /// (interval 1) while the engine's interval controller profiles CCR,
+    /// then re-shards to `ceil(CCR)` and keeps re-profiling in windows.
+    /// Profiling swaps *only this* scheme — a configured `topk@...` etc.
+    /// is never silently replaced (the old adaptive path's bug).
+    CovapAuto { ef: EfScheduler },
     TopK { ratio: f64 },
     Dgc { ratio: f64 },
     RandomK { ratio: f64 },
@@ -235,9 +280,10 @@ impl SchemeKind {
 
     /// Parse a scheme spec string: a paper-default name, optionally with a
     /// `@hyperparameter` suffix — `topk@0.05` (ratio), `powersgd@2` (rank),
-    /// `covap@8` (interval), `dgc@0.001`, `randomk@0.02`, `oktopk@0.01`.
-    /// Schemes without a hyperparameter (`baseline`, `fp16`, `efsignsgd`)
-    /// reject a suffix. Inverse of [`SchemeKind::spec`].
+    /// `covap@8` (fixed interval), `covap@auto` (closed-loop adaptive
+    /// interval), `dgc@0.001`, `randomk@0.02`, `oktopk@0.01`. Schemes
+    /// without a hyperparameter (`baseline`, `fp16`, `efsignsgd`) reject a
+    /// suffix. Inverse of [`SchemeKind::spec`].
     pub fn parse(spec: &str) -> Option<SchemeKind> {
         let (name, param) = match spec.split_once('@') {
             Some((n, p)) => (n, Some(p)),
@@ -245,6 +291,9 @@ impl SchemeKind {
         };
         let mut kind = Self::paper_default(name)?;
         if let Some(p) = param {
+            if matches!(kind, SchemeKind::Covap { .. }) && p.eq_ignore_ascii_case("auto") {
+                return Some(SchemeKind::CovapAuto { ef: EfScheduler::default() });
+            }
             match &mut kind {
                 SchemeKind::TopK { ratio }
                 | SchemeKind::Dgc { ratio }
@@ -261,6 +310,9 @@ impl SchemeKind {
                 SchemeKind::Baseline | SchemeKind::Fp16 | SchemeKind::EfSignSgd => {
                     return None;
                 }
+                // paper_default never yields CovapAuto; the `@auto` suffix
+                // is handled above.
+                SchemeKind::CovapAuto { .. } => return None,
             }
         }
         Some(kind)
@@ -272,6 +324,7 @@ impl SchemeKind {
         match self {
             SchemeKind::Baseline => "baseline".into(),
             SchemeKind::Covap { interval, .. } => format!("covap@{interval}"),
+            SchemeKind::CovapAuto { .. } => "covap@auto".into(),
             SchemeKind::TopK { ratio } => format!("topk@{ratio}"),
             SchemeKind::Dgc { ratio } => format!("dgc@{ratio}"),
             SchemeKind::RandomK { ratio } => format!("randomk@{ratio}"),
@@ -286,6 +339,7 @@ impl SchemeKind {
         match self {
             SchemeKind::Baseline => "DDPovlp",
             SchemeKind::Covap { .. } => "COVAP",
+            SchemeKind::CovapAuto { .. } => "COVAP-auto",
             SchemeKind::TopK { .. } => "Top-k",
             SchemeKind::Dgc { .. } => "DGC",
             SchemeKind::RandomK { .. } => "Random-k",
@@ -364,6 +418,14 @@ mod tests {
             Some(SchemeKind::Covap { interval: 8, .. }) => {}
             other => panic!("covap@8 parsed to {other:?}"),
         }
+        match SchemeKind::parse("covap@auto") {
+            Some(SchemeKind::CovapAuto { .. }) => {}
+            other => panic!("covap@auto parsed to {other:?}"),
+        }
+        match SchemeKind::parse("covap@AUTO") {
+            Some(SchemeKind::CovapAuto { .. }) => {}
+            other => panic!("covap@AUTO parsed to {other:?}"),
+        }
         // bare names keep working
         assert_eq!(SchemeKind::parse("fp16"), Some(SchemeKind::Fp16));
         assert_eq!(
@@ -383,6 +445,8 @@ mod tests {
             "topk@abc",     // not a number
             "powersgd@0",   // rank must be >= 1
             "covap@0",      // interval must be >= 1
+            "covap@auto2",  // 'auto' is exact, not a prefix
+            "topk@auto",    // only covap has an adaptive mode
             "nope@1",       // unknown scheme
         ] {
             assert!(SchemeKind::parse(bad).is_none(), "{bad} should be rejected");
@@ -403,8 +467,30 @@ mod tests {
             SchemeKind::Dgc { ratio: 0.0025 },
             SchemeKind::PowerSgd { rank: 4 },
             SchemeKind::Covap { interval: 7, ef: EfScheduler::default() },
+            SchemeKind::CovapAuto { ef: EfScheduler::default() },
         ] {
             assert_eq!(SchemeKind::parse(&kind.spec()), Some(kind));
+        }
+    }
+
+    /// Before its controller concludes, `covap@auto` *is* COVAP at
+    /// interval 1 (dense warmup): the two specs produce bitwise-identical
+    /// rounds, so profiling measures the true dense CCR.
+    #[test]
+    fn covap_auto_warmup_is_dense_interval_one() {
+        let mut rng = Rng::seed(0xA07);
+        let gs: Vec<Vec<f32>> = (0..3).map(|_| prop::vec_f32(&mut rng, 64, 1.0)).collect();
+        let refs: Vec<&[f32]> = gs.iter().map(|g| g.as_slice()).collect();
+        let ef = EfScheduler::default();
+        let mut auto_s = SchemeKind::CovapAuto { ef }.build(3, 9);
+        let mut one = SchemeKind::Covap { interval: 1, ef }.build(3, 9);
+        for step in 0..3 {
+            for tensor in 0..2 {
+                let (ua, ra) = auto_s.round(tensor, step, &refs);
+                let (uo, ro) = one.round(tensor, step, &refs);
+                assert_eq!(ua, uo, "step {step} tensor {tensor}");
+                assert_eq!(ra.wire_bytes, ro.wire_bytes);
+            }
         }
     }
 

@@ -472,6 +472,23 @@ pub trait RankCompressor: Send {
         false
     }
 
+    /// Re-shard hook (§III.C/D): migrate this compressor to `kind` while
+    /// remapping long-lived per-tensor state (EF residuals) from the `old`
+    /// tensor layout to `new`. Both layouts are slot tables of
+    /// `(flat offset, element count)` in the same flat parameter space,
+    /// indexed by communication-tensor id. Returns true when the
+    /// transition was handled in place — accumulated state survives —
+    /// false when the caller should rebuild the compressor from scratch
+    /// (stateless schemes, cross-scheme swaps).
+    fn reconfigure(
+        &mut self,
+        _kind: &SchemeKind,
+        _old: &[(usize, usize)],
+        _new: &[(usize, usize)],
+    ) -> bool {
+        false
+    }
+
     fn reset(&mut self);
 }
 
@@ -543,6 +560,12 @@ pub fn build_rank_pair(
         SchemeKind::Baseline => (Box::new(baseline::DenseCompressor), Box::new(MeanCombiner)),
         SchemeKind::Covap { interval, ef } => {
             (Box::new(covap::CovapCompressor::new(interval, ef)), Box::new(MeanCombiner))
+        }
+        // adaptive mode warms up dense: interval 1 until the engine's
+        // controller concludes and re-shards (the same compressor then
+        // migrates in place via `reconfigure`, keeping its residuals)
+        SchemeKind::CovapAuto { ef } => {
+            (Box::new(covap::CovapCompressor::new(1, ef)), Box::new(MeanCombiner))
         }
         SchemeKind::Fp16 => (Box::new(fp16::HalfCompressor), Box::new(MeanCombiner)),
         SchemeKind::TopK { ratio } => {

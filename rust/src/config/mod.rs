@@ -58,6 +58,20 @@ fn policy_parse(s: &str) -> Option<Policy> {
     }
 }
 
+/// One injected straggler: rank `rank` runs its synthetic backward pass
+/// `work_factor`× slower during steps `[from_step, until_step)`. Numerics
+/// never change (the inflation recomputes identical values) — only the
+/// measured compute time skews, which is exactly what the distributed
+/// profiler's Fig. 3 alignment and the adaptive controller must absorb.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Straggler {
+    pub rank: usize,
+    pub work_factor: u32,
+    pub from_step: u64,
+    /// Exclusive; `u64::MAX` = straggles for the rest of the run.
+    pub until_step: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     /// Artifact directory (artifacts/<preset>).
@@ -76,9 +90,24 @@ pub struct RunConfig {
     pub seed: u64,
     /// Bucket capacity in bytes (PyTorch DDP default: 25 MiB).
     pub bucket_bytes: usize,
-    /// COVAP adaptive interval: profile CCR for this many warmup steps and
-    /// set I = ceil(CCR). 0 = use the configured interval as-is.
+    /// COVAP adaptive interval (`covap@auto`): profile CCR for this many
+    /// warmup steps and set I = ceil(CCR). With any other scheme this only
+    /// produces the CCR report — the configured scheme is never swapped.
+    /// 0 with `covap@auto` = the engine's default warmup window.
     pub profile_steps: u64,
+    /// `covap@auto` steady-state re-profiling window (steps per CCR
+    /// measurement after warmup). 0 = reuse the warmup length.
+    pub profile_window: u64,
+    /// Consecutive windows that must propose the same *new* interval
+    /// before the controller re-shards (hysteresis; >= 1).
+    pub profile_hysteresis: u32,
+    /// Mid-run bandwidth changes: at step `.0`, set the emulated wire
+    /// (threaded pacer) and the modeled NIC rate to `.1` Gbit/s — the
+    /// CCR-drift scenario knob. Rates must be > 0 (unlike `pace_gbps`,
+    /// where 0 disables pacing).
+    pub pace_schedule: Vec<(u64, f64)>,
+    /// Per-rank straggler injection windows (synthetic backward skew).
+    pub stragglers: Vec<Straggler>,
     /// Emit per-step metrics here (CSV) if set.
     pub metrics_csv: Option<PathBuf>,
     /// Maps measured per-step compute wall time onto the simulated
@@ -117,6 +146,10 @@ impl Default for RunConfig {
             seed: 42,
             bucket_bytes: 25 * 1024 * 1024,
             profile_steps: 0,
+            profile_window: 0,
+            profile_hysteresis: 2,
+            pace_schedule: Vec::new(),
+            stragglers: Vec::new(),
             metrics_csv: None,
             compute_scale: 1.0,
             backend: ExecBackend::Analytic,
@@ -183,6 +216,33 @@ impl RunConfig {
             j.get_or("bucket_bytes", &Json::from(d.bucket_bytes)).as_usize()?;
         cfg.profile_steps =
             j.get_or("profile_steps", &Json::from(d.profile_steps as usize)).as_usize()? as u64;
+        cfg.profile_window =
+            j.get_or("profile_window", &Json::from(d.profile_window as usize)).as_usize()? as u64;
+        cfg.profile_hysteresis = j
+            .get_or("profile_hysteresis", &Json::from(d.profile_hysteresis as usize))
+            .as_usize()? as u32;
+        if let Ok(ps) = j.get("pace_schedule") {
+            for (i, row) in ps.as_arr()?.iter().enumerate() {
+                let r = row.as_arr()?;
+                if r.len() != 2 {
+                    bail!("pace_schedule[{i}]: rows are [step, gbps]");
+                }
+                cfg.pace_schedule.push((r[0].as_usize()? as u64, r[1].as_f64()?));
+            }
+        }
+        if let Ok(ss) = j.get("stragglers") {
+            for row in ss.as_arr()? {
+                cfg.stragglers.push(Straggler {
+                    rank: row.get("rank")?.as_usize()?,
+                    work_factor: row.get_or("work", &Json::from(2usize)).as_usize()? as u32,
+                    from_step: row.get_or("from", &Json::from(0usize)).as_usize()? as u64,
+                    until_step: match row.get("until") {
+                        Ok(v) => v.as_usize()? as u64,
+                        Err(_) => u64::MAX,
+                    },
+                });
+            }
+        }
         cfg.compute_scale = j.get_or("compute_scale", &Json::from(1.0)).as_f64()?;
         if let Ok(b) = j.get("backend") {
             let s = b.as_str()?;
@@ -243,6 +303,15 @@ impl RunConfig {
             self.bucket_bytes = (mb * 1024.0 * 1024.0) as usize;
         }
         self.profile_steps = a.get_parsed("profile-steps", self.profile_steps)?;
+        self.profile_window = a.get_parsed("profile-window", self.profile_window)?;
+        self.profile_hysteresis =
+            a.get_parsed("profile-hysteresis", self.profile_hysteresis)?;
+        if let Some(spec) = a.get("pace-schedule") {
+            self.pace_schedule = parse_pace_schedule(spec)?;
+        }
+        if let Some(spec) = a.get("straggler") {
+            self.stragglers = parse_stragglers(spec)?;
+        }
         if let Some(p) = a.get("metrics-csv") {
             self.metrics_csv = Some(PathBuf::from(p));
         }
@@ -284,8 +353,85 @@ impl RunConfig {
         if self.pace_gbps < 0.0 || !self.pace_gbps.is_finite() {
             bail!("pace_gbps must be finite and >= 0, got {}", self.pace_gbps);
         }
+        if self.profile_hysteresis == 0 {
+            bail!("profile_hysteresis must be >= 1");
+        }
+        for (i, (_, gbps)) in self.pace_schedule.iter().enumerate() {
+            // strictly positive: 0 means "unpaced" for the threaded wire
+            // but "zero bandwidth" (infinite time) for the α–β model — a
+            // schedule entry must name a real bandwidth so both sides
+            // drift together.
+            if !gbps.is_finite() || *gbps <= 0.0 {
+                bail!("pace_schedule[{i}]: gbps must be finite and > 0, got {gbps}");
+            }
+        }
+        for s in &self.stragglers {
+            if s.rank >= self.workers {
+                bail!("straggler rank {} out of range (workers {})", s.rank, self.workers);
+            }
+            if s.work_factor == 0 {
+                bail!("straggler work_factor must be >= 1");
+            }
+            if s.until_step <= s.from_step {
+                bail!(
+                    "straggler window empty: from {} until {}",
+                    s.from_step,
+                    s.until_step
+                );
+            }
+        }
+        // The silent-swap fix: profiling re-shards only covap@auto. Any
+        // other scheme + profile_steps still *measures* CCR (the `profile`
+        // subcommand's report) but keeps running the configured scheme.
+        if self.profile_steps > 0 && !matches!(self.scheme, SchemeKind::CovapAuto { .. }) {
+            eprintln!(
+                "warning: profile_steps={} with scheme '{}' only reports CCR; the \
+                 scheme will NOT be swapped (use --scheme covap@auto for adaptive mode)",
+                self.profile_steps,
+                self.scheme.spec()
+            );
+        }
         Ok(())
     }
+}
+
+/// Parse `"step:gbps[,step:gbps...]"` into a pace schedule.
+fn parse_pace_schedule(spec: &str) -> Result<Vec<(u64, f64)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let Some((at, gbps)) = part.split_once(':') else {
+            bail!("--pace-schedule entries are step:gbps, got '{part}'");
+        };
+        out.push((
+            at.trim().parse().context("--pace-schedule step")?,
+            gbps.trim().parse().context("--pace-schedule gbps")?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Parse `"rank:factor[:from[:until]][,...]"` into straggler windows.
+fn parse_stragglers(spec: &str) -> Result<Vec<Straggler>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() < 2 || fields.len() > 4 {
+            bail!("--straggler entries are rank:factor[:from[:until]], got '{part}'");
+        }
+        out.push(Straggler {
+            rank: fields[0].trim().parse().context("--straggler rank")?,
+            work_factor: fields[1].trim().parse().context("--straggler factor")?,
+            from_step: match fields.get(2) {
+                Some(f) => f.trim().parse().context("--straggler from")?,
+                None => 0,
+            },
+            until_step: match fields.get(3) {
+                Some(f) => f.trim().parse().context("--straggler until")?,
+                None => u64::MAX,
+            },
+        });
+    }
+    Ok(out)
 }
 
 /// Cluster shape implied by a worker count: multiples of 8 map onto the
@@ -311,15 +457,24 @@ fn scheme_from_json(j: &Json) -> Result<SchemeKind> {
     match &mut kind {
         SchemeKind::Covap { interval, ef } => {
             if let Ok(i) = j.get("interval") {
+                // {"name": "covap", "interval": "auto"} selects the
+                // closed-loop adaptive mode (same as the covap@auto spec)
+                if i.as_str().map(|s| s.eq_ignore_ascii_case("auto")).unwrap_or(false) {
+                    let mut ef2 = *ef;
+                    if let Ok(e) = j.get("ef") {
+                        ef2 = ef_from_json(e)?;
+                    }
+                    return Ok(SchemeKind::CovapAuto { ef: ef2 });
+                }
                 *interval = i.as_usize()?;
             }
             if let Ok(e) = j.get("ef") {
-                *ef = EfScheduler {
-                    init_value: e.get_or("init_value", &Json::from(0.1)).as_f64()? as f32,
-                    ascend_steps: e.get_or("ascend_steps", &Json::from(100usize)).as_usize()?
-                        as u64,
-                    ascend_range: e.get_or("ascend_range", &Json::from(0.09)).as_f64()? as f32,
-                };
+                *ef = ef_from_json(e)?;
+            }
+        }
+        SchemeKind::CovapAuto { ef } => {
+            if let Ok(e) = j.get("ef") {
+                *ef = ef_from_json(e)?;
             }
         }
         SchemeKind::TopK { ratio }
@@ -338,6 +493,14 @@ fn scheme_from_json(j: &Json) -> Result<SchemeKind> {
         _ => {}
     }
     Ok(kind)
+}
+
+fn ef_from_json(e: &Json) -> Result<EfScheduler> {
+    Ok(EfScheduler {
+        init_value: e.get_or("init_value", &Json::from(0.1)).as_f64()? as f32,
+        ascend_steps: e.get_or("ascend_steps", &Json::from(100usize)).as_usize()? as u64,
+        ascend_range: e.get_or("ascend_range", &Json::from(0.09)).as_f64()? as f32,
+    })
 }
 
 #[cfg(test)]
@@ -463,5 +626,145 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.lr = -1.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn covap_auto_spec_parses_everywhere() {
+        // CLI form
+        let args = Args::parse(
+            ["--scheme", "covap@auto", "--profile-steps", "4"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert!(matches!(cfg.scheme, SchemeKind::CovapAuto { .. }));
+        assert_eq!(cfg.profile_steps, 4);
+        cfg.validate().unwrap();
+
+        // JSON string form
+        let j = Json::parse(r#"{"scheme": "covap@auto"}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert!(matches!(cfg.scheme, SchemeKind::CovapAuto { .. }));
+
+        // JSON object forms: name spec, and interval: "auto" with an EF block
+        let j = Json::parse(
+            r#"{"scheme": {"name": "covap@auto", "ef": {"init_value": 0.25}}}"#,
+        )
+        .unwrap();
+        match RunConfig::from_json(&j).unwrap().scheme {
+            SchemeKind::CovapAuto { ef } => assert!((ef.init_value - 0.25).abs() < 1e-6),
+            other => panic!("wrong scheme {other:?}"),
+        }
+        let j = Json::parse(
+            r#"{"scheme": {"name": "covap", "interval": "auto", "ef": {"init_value": 0.4}}}"#,
+        )
+        .unwrap();
+        match RunConfig::from_json(&j).unwrap().scheme {
+            SchemeKind::CovapAuto { ef } => assert!((ef.init_value - 0.4).abs() < 1e-6),
+            other => panic!("wrong scheme {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scenario_knobs_parse_from_cli_and_json() {
+        let args = Args::parse(
+            [
+                "--pace-schedule", "30:0.25,60:2",
+                "--straggler", "0:4:10:50,1:2",
+                "--profile-window", "6",
+                "--profile-hysteresis", "3",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.pace_schedule, vec![(30, 0.25), (60, 2.0)]);
+        assert_eq!(
+            cfg.stragglers,
+            vec![
+                Straggler { rank: 0, work_factor: 4, from_step: 10, until_step: 50 },
+                Straggler { rank: 1, work_factor: 2, from_step: 0, until_step: u64::MAX },
+            ]
+        );
+        assert_eq!(cfg.profile_window, 6);
+        assert_eq!(cfg.profile_hysteresis, 3);
+        cfg.validate().unwrap();
+
+        let j = Json::parse(
+            r#"{"workers": 4,
+                "pace_schedule": [[20, 0.5]],
+                "stragglers": [{"rank": 3, "work": 5, "from": 2, "until": 9}],
+                "profile_window": 8, "profile_hysteresis": 1}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.pace_schedule, vec![(20, 0.5)]);
+        assert_eq!(
+            cfg.stragglers,
+            vec![Straggler { rank: 3, work_factor: 5, from_step: 2, until_step: 9 }]
+        );
+        assert_eq!(cfg.profile_window, 8);
+        assert_eq!(cfg.profile_hysteresis, 1);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn scenario_knobs_validate() {
+        let mut cfg = RunConfig::default(); // workers = 4
+        cfg.stragglers =
+            vec![Straggler { rank: 9, work_factor: 2, from_step: 0, until_step: 5 }];
+        assert!(cfg.validate().is_err(), "rank out of range");
+
+        let mut cfg = RunConfig::default();
+        cfg.stragglers =
+            vec![Straggler { rank: 0, work_factor: 0, from_step: 0, until_step: 5 }];
+        assert!(cfg.validate().is_err(), "zero work factor");
+
+        let mut cfg = RunConfig::default();
+        cfg.stragglers =
+            vec![Straggler { rank: 0, work_factor: 2, from_step: 5, until_step: 5 }];
+        assert!(cfg.validate().is_err(), "empty window");
+
+        let mut cfg = RunConfig::default();
+        cfg.pace_schedule = vec![(3, f64::NAN)];
+        assert!(cfg.validate().is_err(), "NaN bandwidth");
+
+        let mut cfg = RunConfig::default();
+        cfg.pace_schedule = vec![(3, 0.0)];
+        assert!(
+            cfg.validate().is_err(),
+            "0 would mean unpaced wire but zero-bandwidth model"
+        );
+
+        let mut cfg = RunConfig::default();
+        cfg.profile_hysteresis = 0;
+        assert!(cfg.validate().is_err(), "zero hysteresis");
+
+        // malformed CLI specs are rejected, not silently dropped
+        let mut cfg = RunConfig::default();
+        let bad = Args::parse(["--pace-schedule", "abc"].iter().map(|s| s.to_string()))
+            .unwrap();
+        assert!(cfg.apply_args(&bad).is_err());
+        let bad =
+            Args::parse(["--straggler", "1"].iter().map(|s| s.to_string())).unwrap();
+        assert!(cfg.apply_args(&bad).is_err());
+    }
+
+    /// Satellite regression: a non-COVAP scheme plus profile_steps must
+    /// still *validate* (warn-and-report, never swap) — the engine-side
+    /// guarantee that top-k keeps running lives in the engine tests.
+    #[test]
+    fn profiling_with_non_covap_scheme_validates() {
+        let args = Args::parse(
+            ["--scheme", "topk@0.05", "--profile-steps", "20"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.scheme, SchemeKind::TopK { ratio: 0.05 });
+        assert_eq!(cfg.profile_steps, 20);
     }
 }

@@ -25,12 +25,28 @@ use anyhow::{ensure, Result};
 use crate::compress::{CommRecord, Scheme, SchemeKind};
 use crate::config::{ExecBackend, Optimizer, RunConfig};
 use crate::coordinator::bucketizer::{bucketize, Bucket};
-use crate::covap::{interval_from_ccr, shard_buckets, EfScheduler};
+use crate::covap::{shard_buckets, EfScheduler, IntervalController, IntervalDecision};
 use crate::data::{DataShard, SyntheticCorpus};
-use crate::exec::{MeasuredBreakdown, Pacer, ThreadedExec};
+use crate::exec::{MeasuredBreakdown, Pacer, RankTimeline, SpanKind, ThreadedExec};
 use crate::profiler::{Event, EventKind, Profile};
 use crate::runtime::ModelArtifacts;
 use crate::sim::{simulate_iteration, Breakdown, TensorCost};
+
+/// Default warmup window (steps) when `covap@auto` runs without an
+/// explicit `profile_steps`.
+const DEFAULT_WARMUP_STEPS: u64 = 8;
+
+/// What one backend step hands back to the engine: per-worker losses and
+/// compute walls, per-tensor records, the reduced gradient, and — threaded
+/// only — the measured breakdown + per-rank span timelines.
+type StepData = (
+    Vec<f32>,
+    Vec<f64>,
+    Vec<CommRecord>,
+    Vec<f32>,
+    Option<MeasuredBreakdown>,
+    Option<Vec<RankTimeline>>,
+);
 
 /// A communication tensor: a bucket or a COVAP shard of one.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,14 +91,19 @@ pub struct DpEngine {
     step: u64,
     /// The threaded rank executor (ExecBackend::Threaded only).
     exec: Option<ThreadedExec>,
-    /// Profile of warmup steps for adaptive interval selection.
+    /// Profile of warmup steps (the CCR report; any scheme).
     profile: Profile,
+    /// The closed-loop interval controller (`covap@auto` only — profiling
+    /// never swaps any other configured scheme).
+    controller: Option<IntervalController>,
+    /// Effective per-rank synth_work currently applied (straggler windows).
+    rank_work: Vec<u32>,
     /// Chosen interval once profiling concludes (COVAP adaptive mode).
     pub chosen_interval: Option<usize>,
 }
 
 impl DpEngine {
-    pub fn new(cfg: RunConfig, mut arts: ModelArtifacts) -> Result<DpEngine> {
+    pub fn new(mut cfg: RunConfig, mut arts: ModelArtifacts) -> Result<DpEngine> {
         arts.set_synth_work(cfg.synth_work);
         let manifest = &arts.manifest;
         let n = manifest.param_count;
@@ -91,6 +112,26 @@ impl DpEngine {
 
         let buckets = bucketize(&manifest.params, cfg.bucket_bytes);
         let tensors = plain_tensors(&buckets);
+
+        // covap@auto always profiles: default the warmup window if unset,
+        // and spin up the closed-loop controller (warmup -> windowed
+        // re-profiling with hysteresis).
+        let controller = if matches!(cfg.scheme, SchemeKind::CovapAuto { .. }) {
+            if cfg.profile_steps == 0 {
+                cfg.profile_steps = DEFAULT_WARMUP_STEPS;
+            }
+            let warmup = cfg.profile_steps;
+            let window = if cfg.profile_window > 0 { cfg.profile_window } else { warmup };
+            Some(IntervalController::new(
+                cfg.workers,
+                1,
+                warmup,
+                window,
+                cfg.profile_hysteresis.max(1),
+            ))
+        } else {
+            None
+        };
 
         let corpus = SyntheticCorpus::new(dims.vocab);
         let make_shards = || -> Vec<DataShard> {
@@ -127,6 +168,8 @@ impl DpEngine {
         };
 
         Ok(DpEngine {
+            rank_work: vec![cfg.synth_work; cfg.workers],
+            profile: Profile::for_world(cfg.workers),
             cfg,
             arts,
             scheme,
@@ -138,7 +181,7 @@ impl DpEngine {
             v: vec![0.0; n],
             step: 0,
             exec,
-            profile: Profile::new(),
+            controller,
             chosen_interval: None,
         })
     }
@@ -162,18 +205,34 @@ impl DpEngine {
     /// Run one synchronous DP step.
     pub fn step(&mut self) -> Result<StepOutput> {
         let wall0 = Instant::now();
-        let (losses, comp_walls, records, reduced, measured) = if self.exec.is_some() {
-            self.step_threaded()?
-        } else {
-            self.step_analytic()?
-        };
+        self.apply_scenario();
+        let (losses, comp_walls, records, reduced, measured, timelines) =
+            if self.exec.is_some() {
+                self.step_threaded()?
+            } else {
+                self.step_analytic()?
+            };
 
         // ---- optimizer ----
         self.apply_update(&reduced)?;
 
         // ---- simulated timeline (both backends, for cross-validation) ----
         let breakdown = self.simulate(&comp_walls, &records);
-        self.record_profile(&comp_walls, &records);
+
+        // ---- profiling: measured spans (threaded) or the modeled dense
+        // collective (analytic) — built only when someone consumes them
+        // (warmup report and/or the adaptive controller) ----
+        let profiling = self.cfg.profile_steps > 0 && self.step < self.cfg.profile_steps;
+        let events = if profiling || self.controller.is_some() {
+            self.step_events(&comp_walls, timelines.as_deref())
+        } else {
+            Vec::new()
+        };
+        if profiling {
+            for e in &events {
+                self.profile.record(e.clone());
+            }
+        }
 
         let wire_bytes: usize = records.iter().map(|r| r.wire_bytes).sum();
         let compress_s: f64 = records.iter().map(|r| r.compress_s).sum();
@@ -187,19 +246,33 @@ impl DpEngine {
             wire_bytes,
             compress_s,
         };
+        let step_now = self.step;
         self.step += 1;
 
-        // adaptive interval: conclude profiling
-        if self.cfg.profile_steps > 0 && self.step == self.cfg.profile_steps {
-            self.conclude_profiling();
+        // ---- the closed adaptive loop (covap@auto only) ----
+        if let Some(mut ctrl) = self.controller.take() {
+            for e in events {
+                ctrl.record(e);
+            }
+            let dense_bytes: usize = self.tensors.iter().map(|t| t.numel * 4).sum();
+            // Under the threaded backend the events are measurements of
+            // the *compressed* traffic, so the controller rescales by
+            // dense/wire; the analytic events already model the dense
+            // collective, so the scale must stay 1.
+            let ctrl_wire = if timelines.is_some() { wire_bytes } else { dense_bytes };
+            let switch = ctrl.end_step(step_now, ctrl_wire, dense_bytes);
+            if ctrl.concluded() {
+                self.chosen_interval = Some(ctrl.current_interval());
+            }
+            self.controller = Some(ctrl);
+            if let Some(interval) = switch {
+                self.set_covap_interval(interval);
+            }
         }
         Ok(out)
     }
 
-    fn step_analytic(
-        &mut self,
-    ) -> Result<(Vec<f32>, Vec<f64>, Vec<CommRecord>, Vec<f32>, Option<MeasuredBreakdown>)>
-    {
+    fn step_analytic(&mut self) -> Result<StepData> {
         let n = self.params.len();
         let dims = self.arts.manifest.dims.clone();
 
@@ -209,6 +282,8 @@ impl DpEngine {
         let mut comp_walls = Vec::with_capacity(self.cfg.workers);
         for w in 0..self.cfg.workers {
             let batch = self.shards[w].next_batch();
+            // straggler windows skew this worker's wall time, never values
+            self.arts.set_synth_work(self.rank_work[w]);
             let t0 = Instant::now();
             let (loss, g) =
                 self.arts.run_fwd_bwd(&self.params, &batch, dims.batch, dims.seq_len + 1)?;
@@ -234,13 +309,10 @@ impl DpEngine {
             }
             records.push(rec);
         }
-        Ok((losses, comp_walls, records, reduced, None))
+        Ok((losses, comp_walls, records, reduced, None, None))
     }
 
-    fn step_threaded(
-        &mut self,
-    ) -> Result<(Vec<f32>, Vec<f64>, Vec<CommRecord>, Vec<f32>, Option<MeasuredBreakdown>)>
-    {
+    fn step_threaded(&mut self) -> Result<StepData> {
         let exec = self.exec.as_mut().expect("threaded backend");
         let out = exec.step(
             self.step,
@@ -248,7 +320,55 @@ impl DpEngine {
             Arc::new(self.tensors.clone()),
             self.cfg.policy,
         )?;
-        Ok((out.losses, out.comp_walls, out.records, out.reduced, Some(out.measured)))
+        Ok((
+            out.losses,
+            out.comp_walls,
+            out.records,
+            out.reduced,
+            Some(out.measured),
+            Some(out.timelines),
+        ))
+    }
+
+    /// Apply this step's scenario knobs before executing it: scheduled
+    /// bandwidth changes hit both the threaded pacer and the α–β model's
+    /// NIC rate (so measured *and* modeled CCR drift together), straggler
+    /// windows skew per-rank synthetic compute cost. Neither ever changes
+    /// numeric results.
+    fn apply_scenario(&mut self) {
+        let step = self.step;
+        for i in 0..self.cfg.pace_schedule.len() {
+            let (at, gbps) = self.cfg.pace_schedule[i];
+            if at == step {
+                self.cfg.pace_gbps = gbps;
+                self.cfg.net.nic_gbps = gbps;
+                if let Some(exec) = &self.exec {
+                    let pacer = if gbps > 0.0 {
+                        Some(Pacer::from_gbps(gbps, 1.0, self.cfg.net.latency_s))
+                    } else {
+                        None
+                    };
+                    exec.set_pacer(pacer);
+                }
+            }
+        }
+        if self.cfg.stragglers.is_empty() {
+            return;
+        }
+        for w in 0..self.cfg.workers {
+            let mut work = self.cfg.synth_work;
+            for s in &self.cfg.stragglers {
+                if s.rank == w && step >= s.from_step && step < s.until_step {
+                    work = work.saturating_mul(s.work_factor);
+                }
+            }
+            if self.rank_work[w] != work {
+                self.rank_work[w] = work;
+                if let Some(exec) = &self.exec {
+                    exec.set_rank_work(w, work);
+                }
+            }
+        }
     }
 
     fn apply_update(&mut self, grads: &[f32]) -> Result<()> {
@@ -302,68 +422,84 @@ impl DpEngine {
         simulate_iteration(&self.cfg.net, self.cfg.cluster, t_before, &costs, self.cfg.policy)
     }
 
-    /// Feed this step's measured compute + modeled comm into the
-    /// distributed profiler (per-worker skew from real wall times).
-    fn record_profile(&mut self, comp_walls: &[f64], records: &[CommRecord]) {
-        if self.cfg.profile_steps == 0 || self.step >= self.cfg.profile_steps {
-            return;
-        }
-        let op_base = (self.step as usize) * (records.len() + 1);
-        // one compute event per worker (their real, skewed wall times,
-        // mapped to the simulated accelerator's timescale)...
-        let arrive: Vec<f64> =
-            comp_walls.iter().map(|w| w * self.cfg.compute_scale).collect();
-        for (w, &d) in arrive.iter().enumerate() {
-            self.profile.record(Event {
-                worker: w,
-                kind: EventKind::Compute,
-                op: op_base,
-                start_s: 0.0,
-                end_s: d,
-            });
-        }
-        // ...and the dense-equivalent collective with rendezvous semantics.
-        let last = arrive.iter().copied().fold(f64::MIN, f64::max);
-        let dense_bytes: usize = self.tensors.iter().map(|t| t.numel * 4).sum();
-        let dur = self.cfg.net.allreduce_s(dense_bytes, self.cfg.cluster);
-        for (w, &a) in arrive.iter().enumerate() {
-            self.profile.record(Event {
-                worker: w,
-                kind: EventKind::Comm,
-                op: op_base + 1,
-                start_s: a,
-                end_s: last + dur,
-            });
+    /// Build this step's profiler events. Under the threaded backend these
+    /// are the *measured* per-rank spans — the Fig. 3 skew-alignment
+    /// machinery finally sees real skew (comm ops keyed by `(step,
+    /// tensor)`, compute + compression busy time on the compute stream).
+    /// Under the analytic backend: per-worker measured compute walls plus
+    /// the modeled dense-equivalent collective with rendezvous semantics.
+    fn step_events(&self, comp_walls: &[f64], timelines: Option<&[RankTimeline]>) -> Vec<Event> {
+        let step = self.step;
+        if let Some(tls) = timelines {
+            let mut events =
+                Vec::with_capacity(tls.iter().map(|t| t.spans.len()).sum::<usize>());
+            for tl in tls {
+                for s in &tl.spans {
+                    events.push(Event {
+                        worker: tl.rank,
+                        kind: match s.kind {
+                            SpanKind::Comm => EventKind::Comm,
+                            SpanKind::Compute | SpanKind::Compress => EventKind::Compute,
+                        },
+                        step,
+                        op: s.tensor,
+                        start_s: s.start_s,
+                        end_s: s.end_s.max(s.start_s),
+                    });
+                }
+            }
+            events
+        } else {
+            let arrive: Vec<f64> =
+                comp_walls.iter().map(|w| w * self.cfg.compute_scale).collect();
+            let mut events = Vec::with_capacity(arrive.len() * 2);
+            for (w, &d) in arrive.iter().enumerate() {
+                events.push(Event {
+                    worker: w,
+                    kind: EventKind::Compute,
+                    step,
+                    op: 0,
+                    start_s: 0.0,
+                    end_s: d,
+                });
+            }
+            // the dense-equivalent collective with rendezvous semantics
+            let last = arrive.iter().copied().fold(f64::MIN, f64::max);
+            let dense_bytes: usize = self.tensors.iter().map(|t| t.numel * 4).sum();
+            let dur = self.cfg.net.allreduce_s(dense_bytes, self.cfg.cluster);
+            for (w, &a) in arrive.iter().enumerate() {
+                events.push(Event {
+                    worker: w,
+                    kind: EventKind::Comm,
+                    step,
+                    op: 0,
+                    start_s: a,
+                    end_s: last + dur,
+                });
+            }
+            events
         }
     }
 
-    /// §III.B: set I = ceil(CCR) from the aligned profile and re-shard.
-    fn conclude_profiling(&mut self) {
-        // ccr() aggregates comm and comp over all profiled steps, so the
-        // ratio is step-count invariant.
-        let report = self.profile.ccr();
-        let interval = interval_from_ccr(report.ccr);
-        self.set_covap_interval(interval);
-    }
-
-    /// Switch the engine to COVAP with the given interval: rebuild the
-    /// scheme (on every rank, under the threaded backend) and apply tensor
-    /// sharding (§III.C) over the buckets.
+    /// Switch the engine to COVAP with the given interval and apply tensor
+    /// sharding (§III.C) over the buckets. **Residual-preserving**: the
+    /// running scheme's per-rank EF residuals are remapped by flat offset
+    /// into the new shard layout (`Scheme::reconfigure` in the analytic
+    /// driver, `Cmd::Reconfigure` on every threaded rank) — accumulated
+    /// gradient error survives the re-shard instead of leaking (§III.D).
+    /// Schemes that cannot migrate (cross-scheme swaps) are rebuilt.
     pub fn set_covap_interval(&mut self, interval: usize) {
         self.chosen_interval = Some(interval);
         let ef = match &self.cfg.scheme {
-            SchemeKind::Covap { ef, .. } => *ef,
+            SchemeKind::Covap { ef, .. } | SchemeKind::CovapAuto { ef } => *ef,
             _ => EfScheduler::default(),
         };
-        self.cfg.scheme = SchemeKind::Covap { interval, ef };
-        self.scheme = self.cfg.scheme.build(self.cfg.workers, self.cfg.seed);
-        if let Some(exec) = &self.exec {
-            exec.reconfigure(&self.cfg.scheme);
-        }
+        let kind = SchemeKind::Covap { interval, ef };
+
         // sharding: slice oversized buckets
         let sizes: Vec<usize> = self.buckets.iter().map(|b| b.numel).collect();
         let shards = shard_buckets(&sizes, interval);
-        self.tensors = shards
+        let new_tensors: Vec<CommTensor> = shards
             .iter()
             .map(|s| CommTensor {
                 offset: self.buckets[s.bucket].offset + s.offset,
@@ -371,11 +507,30 @@ impl DpEngine {
                 bucket: s.bucket,
             })
             .collect();
+        let old_layout: Vec<(usize, usize)> =
+            self.tensors.iter().map(|t| (t.offset, t.numel)).collect();
+        let new_layout: Vec<(usize, usize)> =
+            new_tensors.iter().map(|t| (t.offset, t.numel)).collect();
+
+        if !self.scheme.reconfigure(&kind, &old_layout, &new_layout) {
+            self.scheme = kind.build(self.cfg.workers, self.cfg.seed);
+        }
+        if let Some(exec) = &self.exec {
+            exec.reconfigure(&kind, &old_layout, &new_layout);
+        }
+        self.cfg.scheme = kind;
+        self.tensors = new_tensors;
     }
 
     /// CCR report of the warmup profile (for logging).
     pub fn profile_report(&self) -> crate::profiler::CcrReport {
         self.profile.ccr()
+    }
+
+    /// The adaptive controller's decision log (empty unless the scheme is
+    /// `covap@auto`): every windowed CCR measurement, proposal and switch.
+    pub fn adaptive_history(&self) -> &[IntervalDecision] {
+        self.controller.as_ref().map(|c| c.history()).unwrap_or(&[])
     }
 }
 
@@ -527,5 +682,119 @@ mod tests {
             }
             assert_eq!(a.params(), b.params(), "{} params diverged", kind.label());
         }
+    }
+
+    /// The silent-swap regression (satellite): `--scheme topk@0.05
+    /// --profile-steps N` must still run top-k after warmup — profiling
+    /// only re-shards `covap@auto`.
+    #[test]
+    fn profiling_never_swaps_non_covap_schemes() {
+        if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+            return;
+        }
+        for backend in [ExecBackend::Analytic, ExecBackend::Threaded] {
+            let mut cfg = synth_cfg(SchemeKind::TopK { ratio: 0.05 }, backend, 5);
+            cfg.profile_steps = 2;
+            let mut e = DpEngine::new(cfg, ModelArtifacts::synthetic("tiny")).unwrap();
+            for _ in 0..5 {
+                e.step().unwrap();
+            }
+            assert_eq!(e.chosen_interval, None, "{backend:?}: no interval may be chosen");
+            assert!(
+                matches!(e.cfg.scheme, SchemeKind::TopK { ratio } if ratio == 0.05),
+                "{backend:?}: scheme was swapped to {:?}",
+                e.cfg.scheme
+            );
+            assert!(e.adaptive_history().is_empty());
+            // the warmup CCR report still works (profiling = reporting)
+            assert!(e.profile_report().comp_s > 0.0);
+        }
+    }
+
+    /// covap@auto closes the loop: warmup profiles, concludes an interval,
+    /// re-shards, and the comm tensors still partition the flat vector.
+    /// A crushed modeled fabric forces CCR >> 1, so the chosen interval
+    /// must exceed the dense warmup interval of 1.
+    #[test]
+    fn covap_auto_concludes_and_reshards() {
+        if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+            return;
+        }
+        let mut cfg = synth_cfg(
+            SchemeKind::CovapAuto { ef: EfScheduler::default() },
+            ExecBackend::Analytic,
+            6,
+        );
+        cfg.profile_steps = 2;
+        cfg.net.nic_gbps = 0.001; // modeled dense allreduce dwarfs compute
+        let arts = ModelArtifacts::synthetic("tiny");
+        let param_count = arts.manifest.param_count;
+        let mut e = DpEngine::new(cfg, arts).unwrap();
+        for _ in 0..4 {
+            e.step().unwrap();
+        }
+        let i = e.chosen_interval.expect("interval chosen after warmup");
+        assert!(i > 1, "CCR >> 1 must pick a compressing interval, got {i}");
+        assert!(
+            matches!(e.cfg.scheme, SchemeKind::Covap { interval, .. } if interval == i),
+            "scheme after conclusion: {:?}",
+            e.cfg.scheme
+        );
+        let hist = e.adaptive_history();
+        assert!(!hist.is_empty() && hist[0].switched && hist[0].interval == i);
+        // comm tensors still partition the flat vector exactly
+        let mut covered = vec![false; param_count];
+        for t in e.tensors() {
+            for j in t.offset..t.offset + t.numel {
+                assert!(!covered[j], "overlap at {j}");
+                covered[j] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "gap in tensor coverage");
+    }
+
+    /// Scenario knobs (mid-run pace change + straggler injection) must
+    /// never change numerics: with and without them, and across backends,
+    /// the loss trajectory is bit-identical.
+    #[test]
+    fn scenario_knobs_preserve_numerics() {
+        if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+            return;
+        }
+        let scenario = |mut cfg: RunConfig| {
+            cfg.pace_schedule = vec![(1, 0.5)];
+            cfg.stragglers = vec![crate::config::Straggler {
+                rank: 0,
+                work_factor: 3,
+                from_step: 1,
+                until_step: 3,
+            }];
+            cfg
+        };
+        let kind = SchemeKind::Covap { interval: 2, ef: EfScheduler::default() };
+        let mut clean = DpEngine::new(
+            synth_cfg(kind.clone(), ExecBackend::Analytic, 4),
+            ModelArtifacts::synthetic("tiny"),
+        )
+        .unwrap();
+        let mut sc_a = DpEngine::new(
+            scenario(synth_cfg(kind.clone(), ExecBackend::Analytic, 4)),
+            ModelArtifacts::synthetic("tiny"),
+        )
+        .unwrap();
+        let mut sc_t = DpEngine::new(
+            scenario(synth_cfg(kind, ExecBackend::Threaded, 4)),
+            ModelArtifacts::synthetic("tiny"),
+        )
+        .unwrap();
+        for s in 0..4 {
+            let l0 = clean.step().unwrap().loss;
+            let la = sc_a.step().unwrap().loss;
+            let lt = sc_t.step().unwrap().loss;
+            assert_eq!(l0.to_bits(), la.to_bits(), "analytic scenario diverged at {s}");
+            assert_eq!(l0.to_bits(), lt.to_bits(), "threaded scenario diverged at {s}");
+        }
+        assert_eq!(clean.params(), sc_a.params());
+        assert_eq!(clean.params(), sc_t.params());
     }
 }

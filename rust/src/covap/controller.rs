@@ -1,0 +1,333 @@
+//! The closed-loop adaptive-interval controller (§III.B, closed).
+//!
+//! The paper's adaptive mode is a one-shot warmup: profile CCR once, set
+//! `I = ceil(CCR)`, never look back. Real runs drift — bandwidth drops,
+//! stragglers appear, pacing changes — and a stale interval either exposes
+//! communication again (I too small) or wastes accuracy on compression the
+//! network no longer needs (I too large). GraVAC and Agarwal et al. both
+//! argue the ratio must keep tracking the measured regime.
+//!
+//! [`IntervalController`] closes the loop:
+//!
+//! * **Warmup window** (`warmup` steps): the initial CCR measurement — the
+//!   paper's §III.B profiling — concluded with an immediate re-shard to
+//!   `ceil(CCR)` (no hysteresis: there is no prior interval worth
+//!   defending).
+//! * **Steady windows** (`window` steps each): re-profile continuously.
+//!   Every window produces a *dense-equivalent* CCR: the aligned
+//!   communication time is rescaled by `dense_bytes / wire_bytes` so a
+//!   measurement taken under compression (COVAP moves ~1/I of the dense
+//!   volume) still estimates what the *uncompressed* traffic would cost —
+//!   the quantity `ceil(CCR)` is defined over.
+//! * **Hysteresis**: a re-shard only fires after `hysteresis` consecutive
+//!   windows propose the *same* new interval. `ceil` sits on a cliff — a
+//!   CCR hovering at 3.99/4.01 would otherwise re-shard every window, and
+//!   each re-shard perturbs the EF residual layout. A window proposing the
+//!   current interval resets the pending streak.
+//!
+//! The controller is pure bookkeeping over [`Profile`] events — the engine
+//! feeds it *measured* per-rank spans under `ExecBackend::Threaded` and
+//! the modeled dense collective under `Analytic` (see
+//! `DpEngine::step_events`), and applies the returned interval via its
+//! residual-preserving re-shard path.
+
+use crate::covap::interval_from_ccr;
+use crate::profiler::{Event, Profile};
+
+/// One windowed CCR decision (the controller's audit log; benches emit it
+/// as the chosen-interval trajectory).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IntervalDecision {
+    /// Step at whose end the window closed.
+    pub step: u64,
+    /// Dense-equivalent CCR measured over the window.
+    pub ccr: f64,
+    /// `ceil(CCR)` this window proposed.
+    pub proposed: usize,
+    /// Interval in force after the decision.
+    pub interval: usize,
+    /// True when this decision re-sharded (warmup conclusion or an open
+    /// hysteresis gate).
+    pub switched: bool,
+}
+
+/// Windowed re-profiler + hysteresis gate for COVAP's interval.
+pub struct IntervalController {
+    warmup: u64,
+    window: u64,
+    hysteresis: u32,
+    current: usize,
+    warmed_up: bool,
+    profile: Profile,
+    steps_in_window: u64,
+    wire_sum: u64,
+    dense_sum: u64,
+    /// Candidate interval + how many consecutive windows proposed it.
+    pending: Option<(usize, u32)>,
+    history: Vec<IntervalDecision>,
+}
+
+impl IntervalController {
+    /// `world` ranks, starting at `initial` (the warmup transmission
+    /// interval, 1 for `covap@auto`), warmup window of `warmup` steps,
+    /// steady windows of `window` steps, `hysteresis` consecutive windows
+    /// to open the re-shard gate.
+    pub fn new(
+        world: usize,
+        initial: usize,
+        warmup: u64,
+        window: u64,
+        hysteresis: u32,
+    ) -> IntervalController {
+        assert!(warmup >= 1, "warmup window must be >= 1 step");
+        assert!(window >= 1, "profiling window must be >= 1 step");
+        assert!(hysteresis >= 1, "hysteresis must be >= 1 window");
+        IntervalController {
+            warmup,
+            window,
+            hysteresis,
+            current: initial.max(1),
+            warmed_up: false,
+            // window rollover only clears events (Profile::clear keeps the
+            // world-size configuration), so the controller needs no copy
+            profile: Profile::for_world(world),
+            steps_in_window: 0,
+            wire_sum: 0,
+            dense_sum: 0,
+            pending: None,
+            history: Vec::new(),
+        }
+    }
+
+    /// Interval currently in force.
+    pub fn current_interval(&self) -> usize {
+        self.current
+    }
+
+    /// True once the warmup window concluded (an interval has been chosen).
+    pub fn concluded(&self) -> bool {
+        self.warmed_up
+    }
+
+    /// Every windowed decision so far, oldest first.
+    pub fn history(&self) -> &[IntervalDecision] {
+        &self.history
+    }
+
+    /// Feed one operator event (measured span or modeled collective) of
+    /// the current step into the window's profile.
+    pub fn record(&mut self, e: Event) {
+        self.profile.record(e);
+    }
+
+    /// Close step `step`: account its wire volume (`wire_bytes` actually
+    /// transmitted per rank vs `dense_bytes` the uncompressed tensors
+    /// would have moved) and, on a window boundary, decide. Returns
+    /// `Some(new_interval)` when the engine must re-shard.
+    pub fn end_step(&mut self, step: u64, wire_bytes: usize, dense_bytes: usize) -> Option<usize> {
+        self.wire_sum += wire_bytes as u64;
+        self.dense_sum += dense_bytes as u64;
+        self.steps_in_window += 1;
+        let len = if self.warmed_up { self.window } else { self.warmup };
+        if self.steps_in_window < len {
+            return None;
+        }
+
+        let report = self.profile.ccr();
+        let scale = if self.wire_sum > 0 {
+            self.dense_sum as f64 / self.wire_sum as f64
+        } else {
+            f64::NAN
+        };
+        let ccr = report.ccr * scale;
+        self.profile.clear();
+        self.steps_in_window = 0;
+        self.wire_sum = 0;
+        self.dense_sum = 0;
+        if !ccr.is_finite() {
+            // degenerate window (no compute measured / nothing moved):
+            // hold the interval, decide again next window
+            return None;
+        }
+        let proposed = interval_from_ccr(ccr);
+
+        if !self.warmed_up {
+            // §III.B one-shot conclusion: adopt ceil(CCR) immediately.
+            self.warmed_up = true;
+            let switched = proposed != self.current;
+            self.current = proposed;
+            self.history.push(IntervalDecision {
+                step,
+                ccr,
+                proposed,
+                interval: proposed,
+                switched,
+            });
+            return if switched { Some(proposed) } else { None };
+        }
+
+        let mut switched = false;
+        if proposed == self.current {
+            self.pending = None;
+        } else {
+            let streak = match self.pending {
+                Some((p, c)) if p == proposed => c + 1,
+                _ => 1,
+            };
+            if streak >= self.hysteresis {
+                self.pending = None;
+                self.current = proposed;
+                switched = true;
+            } else {
+                self.pending = Some((proposed, streak));
+            }
+        }
+        self.history.push(IntervalDecision {
+            step,
+            ccr,
+            proposed,
+            interval: self.current,
+            switched,
+        });
+        if switched {
+            Some(self.current)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::EventKind;
+
+    /// Feed one idealized step: every worker computes for `comp_s`, then
+    /// one rendezvous collective of `comm_s` — and close the step with the
+    /// given volume accounting.
+    fn feed_step(
+        ctrl: &mut IntervalController,
+        world: usize,
+        step: u64,
+        comp_s: f64,
+        comm_s: f64,
+        wire: usize,
+        dense: usize,
+    ) -> Option<usize> {
+        for w in 0..world {
+            ctrl.record(Event {
+                worker: w,
+                kind: EventKind::Compute,
+                step,
+                op: 0,
+                start_s: 0.0,
+                end_s: comp_s,
+            });
+            ctrl.record(Event {
+                worker: w,
+                kind: EventKind::Comm,
+                step,
+                op: 0,
+                start_s: comp_s,
+                end_s: comp_s + comm_s,
+            });
+        }
+        ctrl.end_step(step, wire, dense)
+    }
+
+    #[test]
+    fn warmup_concludes_to_ceil_ccr_immediately() {
+        let mut c = IntervalController::new(2, 1, 2, 4, 2);
+        assert!(!c.concluded());
+        assert_eq!(feed_step(&mut c, 2, 0, 1.0, 2.5, 1000, 1000), None);
+        // CCR 2.5 -> ceil 3, adopted without hysteresis
+        assert_eq!(feed_step(&mut c, 2, 1, 1.0, 2.5, 1000, 1000), Some(3));
+        assert!(c.concluded());
+        assert_eq!(c.current_interval(), 3);
+        let d = c.history()[0];
+        assert!(d.switched && d.proposed == 3 && (d.ccr - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compressed_windows_rescale_to_dense_equivalent_ccr() {
+        let mut c = IntervalController::new(2, 1, 1, 3, 2);
+        // warmup: dense, CCR 2.5 -> interval 3
+        assert_eq!(feed_step(&mut c, 2, 0, 1.0, 2.5, 999, 999), Some(3));
+        // steady state under I=3: measured comm and wire both ~1/3 of
+        // dense; the rescale recovers CCR 2.5 -> proposal 3 == current.
+        for s in 1..=3 {
+            let got = feed_step(&mut c, 2, s, 1.0, 2.5 / 3.0, 333, 999);
+            assert_eq!(got, None, "step {s}");
+        }
+        let d = *c.history().last().unwrap();
+        assert!((d.ccr - 2.5).abs() < 1e-6, "rescaled ccr {}", d.ccr);
+        assert_eq!(d.proposed, 3);
+        assert!(!d.switched);
+    }
+
+    #[test]
+    fn hysteresis_needs_consecutive_agreeing_windows() {
+        let mut c = IntervalController::new(1, 1, 1, 2, 2);
+        assert_eq!(feed_step(&mut c, 1, 0, 1.0, 2.0, 10, 10), Some(2));
+        // bandwidth drops: dense-equivalent CCR jumps to ~6
+        let mut step = 1;
+        let mut drift = |c: &mut IntervalController, comm: f64| {
+            let mut out = None;
+            for _ in 0..2 {
+                out = feed_step(c, 1, step, 1.0, comm, 5, 10);
+                step += 1;
+            }
+            out
+        };
+        // first drifted window: proposal 6, gate stays closed
+        assert_eq!(drift(&mut c, 3.0), None);
+        assert_eq!(c.current_interval(), 2);
+        // second consecutive window proposing 6: gate opens
+        assert_eq!(drift(&mut c, 3.0), Some(6));
+        assert_eq!(c.current_interval(), 6);
+        let switched: Vec<bool> = c.history().iter().map(|d| d.switched).collect();
+        assert_eq!(switched, vec![true, false, true]);
+    }
+
+    #[test]
+    fn flapping_proposals_never_open_the_gate() {
+        let mut c = IntervalController::new(1, 1, 1, 1, 2);
+        assert_eq!(feed_step(&mut c, 1, 0, 1.0, 3.0, 10, 10), Some(3));
+        // alternate between ceil 5 and ceil 2 forever: streak never hits 2
+        for s in 0..10u64 {
+            let comm = if s % 2 == 0 { 4.5 } else { 1.5 };
+            assert_eq!(feed_step(&mut c, 1, 1 + s, 1.0, comm, 10, 10), None, "step {s}");
+        }
+        assert_eq!(c.current_interval(), 3);
+        assert!(c.history().iter().skip(1).all(|d| !d.switched));
+    }
+
+    #[test]
+    fn returning_to_current_resets_the_streak() {
+        let mut c = IntervalController::new(1, 1, 1, 1, 2);
+        assert_eq!(feed_step(&mut c, 1, 0, 1.0, 3.0, 10, 10), Some(3));
+        // one window proposing 6...
+        assert_eq!(feed_step(&mut c, 1, 1, 1.0, 6.0, 10, 10), None);
+        // ...then one back at 3: pending streak must reset...
+        assert_eq!(feed_step(&mut c, 1, 2, 1.0, 3.0, 10, 10), None);
+        // ...so the next 6-window starts a fresh streak of 1, not 2.
+        assert_eq!(feed_step(&mut c, 1, 3, 1.0, 6.0, 10, 10), None);
+        assert_eq!(c.current_interval(), 3);
+        // and a second consecutive 6-window finally switches
+        assert_eq!(feed_step(&mut c, 1, 4, 1.0, 6.0, 10, 10), Some(6));
+    }
+
+    #[test]
+    fn degenerate_windows_hold_without_deciding() {
+        let mut c = IntervalController::new(1, 1, 1, 1, 1);
+        // nothing moved: scale is undefined -> no decision, no history row
+        assert_eq!(feed_step(&mut c, 1, 0, 1.0, 0.5, 0, 10), None);
+        assert!(c.history().is_empty());
+        assert!(!c.concluded());
+        // zero compute: CCR NaN -> same
+        assert_eq!(c.end_step(1, 10, 10), None);
+        assert!(c.history().is_empty());
+        // a healthy window still works afterwards
+        assert_eq!(feed_step(&mut c, 1, 2, 1.0, 3.5, 10, 10), Some(4));
+    }
+}

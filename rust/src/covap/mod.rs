@@ -1,10 +1,13 @@
 //! COVAP core: the paper's §III — coarse-grained filter, adaptive interval
-//! selection, tensor sharding, and the error-feedback scheduler.
+//! selection (one-shot *and* the closed-loop controller), tensor sharding,
+//! and the error-feedback scheduler.
 
+mod controller;
 mod filter;
 mod scheduler;
 mod sharding;
 
+pub use controller::{IntervalController, IntervalDecision};
 pub use filter::CoarseFilter;
 pub use scheduler::EfScheduler;
 pub use sharding::{shard_buckets, Shard};

@@ -26,8 +26,21 @@ impl EfScheduler {
     }
 
     /// Compensation coefficient at iteration `step`.
+    ///
+    /// Overflow audit: `(step / ascend_steps) as f32` can reach ~1.8e19 for
+    /// huge step counts, and multiplying by a large `ascend_range` then
+    /// saturates f32 *before* the `.min(1.0)` clamp. The coefficient is
+    /// capped at 1.0 anyway, so the ascent count is clamped to the first
+    /// plateau past saturation — every reachable value is unchanged, and
+    /// `coeff(u64::MAX - 1)` stays finite (pinned below).
     pub fn coeff(&self, step: u64) -> f32 {
-        let ascents = (step / self.ascend_steps) as f32;
+        if self.ascend_range <= 0.0 {
+            return self.init_value.min(1.0);
+        }
+        // Plateaus beyond this count cannot change the clamped result.
+        let cap = ((1.0f32 - self.init_value).max(0.0) / self.ascend_range).ceil();
+        let cap = if cap.is_finite() { cap as u64 + 1 } else { u32::MAX as u64 };
+        let ascents = (step / self.ascend_steps.max(1)).min(cap) as f32;
         (self.init_value + ascents * self.ascend_range).min(1.0)
     }
 }
@@ -63,5 +76,25 @@ mod tests {
         let s = EfScheduler::default();
         assert_eq!(s.coeff(0), 0.1);
         assert_eq!(s.coeff(1000), 1.0);
+    }
+
+    /// Satellite (overflow audit): near-u64::MAX step counts with a short
+    /// ascend period must neither saturate f32 into inf/NaN nor dodge the
+    /// 1.0 cap — the coefficient is exactly 1.0 and finite.
+    #[test]
+    fn huge_step_counts_stay_finite_and_clamped() {
+        for s in [
+            EfScheduler { init_value: 0.1, ascend_steps: 1, ascend_range: 0.09 },
+            EfScheduler { init_value: 0.0, ascend_steps: 1, ascend_range: f32::MAX },
+            EfScheduler { init_value: 0.5, ascend_steps: 7, ascend_range: 1e30 },
+            EfScheduler::default(),
+        ] {
+            let c = s.coeff(u64::MAX - 1);
+            assert!(c.is_finite(), "{s:?} -> {c}");
+            assert_eq!(c, 1.0, "{s:?}");
+        }
+        // and a tiny range: clamped ascents still approach the init value
+        let s = EfScheduler { init_value: 0.3, ascend_steps: 1, ascend_range: 0.0 };
+        assert_eq!(s.coeff(u64::MAX - 1), 0.3);
     }
 }

@@ -138,10 +138,34 @@ impl ThreadedExec {
         self.world
     }
 
-    /// Swap every rank's scheme (adaptive-interval selection).
-    pub fn reconfigure(&self, kind: &SchemeKind) {
+    /// Swap every rank's scheme (adaptive-interval re-shard). `old`/`new`
+    /// are the tensor layouts — `(flat offset, numel)` per slot — before
+    /// and after the re-shard, so stateful compressors remap their EF
+    /// residuals in place instead of dropping them.
+    pub fn reconfigure(&self, kind: &SchemeKind, old: &[(usize, usize)], new: &[(usize, usize)]) {
         for tx in &self.cmd_tx {
-            let _ = tx.send(Cmd::Reconfigure(kind.clone()));
+            let _ = tx.send(Cmd::Reconfigure {
+                kind: kind.clone(),
+                old: old.to_vec(),
+                new: new.to_vec(),
+            });
+        }
+    }
+
+    /// Replace the emulated wire pacer on every rank (mid-run bandwidth
+    /// change). Cmd/Work queues are FIFO, so a change sent before a step's
+    /// `Cmd::Step` applies to that step — in lockstep with the engine's
+    /// in-place `cfg.net` update for the modeled side.
+    pub fn set_pacer(&self, pacer: Option<Pacer>) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::SetPacer(pacer));
+        }
+    }
+
+    /// Set one rank's synthetic compute inflation (straggler injection).
+    pub fn set_rank_work(&self, rank: usize, work: u32) {
+        if let Some(tx) = self.cmd_tx.get(rank) {
+            let _ = tx.send(Cmd::SetWork(work));
         }
     }
 
@@ -394,10 +418,14 @@ mod tests {
             .step(0, params.clone(), tensors.clone(), Policy::Overlap)
             .unwrap();
         assert!(dense.records.iter().all(|r| r.wire_bytes > 0));
-        exec.reconfigure(&SchemeKind::Covap {
-            interval: 2,
-            ef: crate::covap::EfScheduler::constant(1.0),
-        });
+        exec.reconfigure(
+            &SchemeKind::Covap {
+                interval: 2,
+                ef: crate::covap::EfScheduler::constant(1.0),
+            },
+            &[],
+            &[],
+        );
         let covap = exec.step(1, params, tensors, Policy::Overlap).unwrap();
         // with I=2 one of the two tensors is dropped at any step
         assert!(covap.records.iter().any(|r| r.wire_bytes == 0));

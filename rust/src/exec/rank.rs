@@ -40,8 +40,20 @@ use crate::sim::Policy;
 /// Commands from the engine to a rank's compute thread.
 pub enum Cmd {
     Step(StepSpec),
-    /// Swap the compression scheme (adaptive-interval reshard).
-    Reconfigure(SchemeKind),
+    /// Swap / re-shard the compression scheme (adaptive interval). The old
+    /// and new tensor layouts — `(flat offset, numel)` per slot — let a
+    /// stateful compressor remap its EF residuals in place instead of
+    /// dropping them; schemes that can't migrate are rebuilt.
+    Reconfigure {
+        kind: SchemeKind,
+        old: Vec<(usize, usize)>,
+        new: Vec<(usize, usize)>,
+    },
+    /// Replace the emulated wire pacer (mid-run bandwidth change).
+    SetPacer(Option<Pacer>),
+    /// Set this rank's synthetic compute inflation (straggler injection;
+    /// never changes numerics).
+    SetWork(u32),
     Shutdown,
 }
 
@@ -90,6 +102,7 @@ enum Work {
     },
     Finish { loss: f32, comp_wall_s: f64, spans: Vec<Span>, barrier_wait_s: f64 },
     Reconfig(SchemeKind),
+    SetPacer(Option<Pacer>),
     Stop,
 }
 
@@ -150,12 +163,21 @@ fn compute_main(
                 let _ = work_tx.send(Work::Stop);
                 return;
             }
-            Cmd::Reconfigure(kind) => {
-                let (c, _) = build_rank_pair(&kind, ctx.workers, ctx.seed);
-                compressor = c;
+            Cmd::Reconfigure { kind, old, new } => {
+                // stateful schemes (COVAP) migrate in place, remapping EF
+                // residuals into the new shard layout; everything else
+                // rebuilds (state reset — the pre-remap semantics)
+                if !compressor.reconfigure(&kind, &old, &new) {
+                    let (c, _) = build_rank_pair(&kind, ctx.workers, ctx.seed);
+                    compressor = c;
+                }
                 ctx.kind = kind.clone();
                 let _ = work_tx.send(Work::Reconfig(kind));
             }
+            Cmd::SetPacer(p) => {
+                let _ = work_tx.send(Work::SetPacer(p));
+            }
+            Cmd::SetWork(w) => ctx.model.set_work(w),
             Cmd::Step(spec) => {
                 run_step(
                     &mut ctx,
@@ -287,6 +309,7 @@ fn comm_main(
                 combiner = cb;
                 ctx.kind = kind;
             }
+            Work::SetPacer(p) => ctx.pacer = p,
             Work::Begin { step: s, epoch: e, param_len } => {
                 step = s;
                 epoch = e;

@@ -94,7 +94,8 @@ pub fn paper_profile(kind: &SchemeKind) -> CompressProfile {
     const N: f64 = 143_652_544.0;
     let total_s = match kind {
         SchemeKind::Baseline => 0.0,
-        SchemeKind::Covap { .. } => 0.002, // "close to zero" (§III.A)
+        // "close to zero" (§III.A); auto mode runs the same filter + EF pass
+        SchemeKind::Covap { .. } | SchemeKind::CovapAuto { .. } => 0.002,
         SchemeKind::TopK { .. } => 1.560,
         SchemeKind::Dgc { .. } => 0.025,
         SchemeKind::RandomK { .. } => 0.200,
@@ -115,7 +116,8 @@ pub fn paper_profile(kind: &SchemeKind) -> CompressProfile {
 pub fn wire_bytes(kind: &SchemeKind, n: usize) -> usize {
     match kind {
         SchemeKind::Baseline => dense_frame_len(n),
-        SchemeKind::Covap { .. } => dense_frame_len(n), // when kept; filter is upstream
+        // when kept; the filter is upstream (auto mode warms up dense)
+        SchemeKind::Covap { .. } | SchemeKind::CovapAuto { .. } => dense_frame_len(n),
         SchemeKind::TopK { ratio }
         | SchemeKind::RandomK { ratio }
         | SchemeKind::OkTopk { ratio }

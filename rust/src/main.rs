@@ -18,7 +18,13 @@
 //!   schemes   list available GC schemes
 //!
 //! train also accepts --backend analytic|threaded, --policy overlap|seq,
-//! --pace-gbps F and --synth-work N (see config).
+//! --pace-gbps F and --synth-work N (see config). Adaptive COVAP is
+//! `--scheme covap@auto`: profiling (`--profile-steps`) selects
+//! I = ceil(CCR) and a windowed controller (`--profile-window`,
+//! `--profile-hysteresis`) keeps re-selecting as CCR drifts; with any
+//! other scheme, profiling only reports — nothing is swapped. Drift
+//! scenarios: `--pace-schedule step:gbps,...` (mid-run bandwidth change)
+//! and `--straggler rank:factor[:from[:until]],...` (per-rank skew).
 
 use std::path::{Path, PathBuf};
 

@@ -11,6 +11,14 @@
 //! operator — all ranks leave a collective together — and take the true
 //! transfer time as `end - max_w(start_w)`: the interval during which every
 //! rank was actually inside the collective.
+//!
+//! Collectives are identified by `(step, op)`: op ids are local to a
+//! training step, so profiles spanning many steps (the adaptive
+//! controller's windows) can reuse per-tensor op ids without aliasing even
+//! when the tensor count changes mid-profile (an interval re-shard). The
+//! world size can be given explicitly ([`Profile::for_world`]) — worker ids
+//! may then be sparse or gapped; when it is inferred, the profiler counts
+//! *distinct* worker ids rather than assuming a dense `0..=max` range.
 
 use std::collections::BTreeMap;
 
@@ -19,8 +27,10 @@ use std::collections::BTreeMap;
 pub struct Event {
     pub worker: usize,
     pub kind: EventKind,
-    /// Operator sequence id — communication ops with the same id are the
-    /// same collective across workers.
+    /// Training step this operator belongs to.
+    pub step: u64,
+    /// Operator sequence id within the step — communication ops with the
+    /// same `(step, op)` are the same collective across workers.
     pub op: usize,
     pub start_s: f64,
     pub end_s: f64,
@@ -42,6 +52,8 @@ impl Event {
 #[derive(Debug, Default, Clone)]
 pub struct Profile {
     events: Vec<Event>,
+    /// Explicit world size; `None` = count distinct worker ids.
+    world: Option<usize>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -62,6 +74,14 @@ impl Profile {
         Profile::default()
     }
 
+    /// A profile with an explicit world size. Worker ids may be sparse or
+    /// gapped (e.g. only the stragglers of a large fleet report); the
+    /// per-worker mean still divides by the true world size instead of a
+    /// guess derived from the largest id seen.
+    pub fn for_world(world: usize) -> Profile {
+        Profile { events: Vec::new(), world: Some(world) }
+    }
+
     pub fn record(&mut self, e: Event) {
         assert!(e.end_s >= e.start_s, "negative duration");
         self.events.push(e);
@@ -71,8 +91,24 @@ impl Profile {
         &self.events
     }
 
+    /// Drop all recorded events, keeping the world-size configuration
+    /// (window rollover in the adaptive controller).
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
     fn workers(&self) -> usize {
-        self.events.iter().map(|e| e.worker + 1).max().unwrap_or(0)
+        match self.world {
+            Some(w) => w,
+            None => {
+                // Count distinct worker ids: a gapped id set (worker 7
+                // without workers 1..=6) must not inflate the denominator.
+                let mut ids: Vec<usize> = self.events.iter().map(|e| e.worker).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                ids.len()
+            }
+        }
     }
 
     /// CCR per the distributed-profiler algorithm.
@@ -80,20 +116,20 @@ impl Profile {
         let nw = self.workers().max(1);
 
         // computation: mean over workers of total compute time
-        let mut comp = vec![0.0f64; nw];
+        let mut comp: BTreeMap<usize, f64> = BTreeMap::new();
         for e in self.events.iter().filter(|e| e.kind == EventKind::Compute) {
-            comp[e.worker] += e.duration();
+            *comp.entry(e.worker).or_insert(0.0) += e.duration();
         }
-        let comp_s = comp.iter().sum::<f64>() / nw as f64;
+        let comp_s = comp.values().sum::<f64>() / nw as f64;
 
-        // communication: group by op id
-        let mut by_op: BTreeMap<usize, Vec<&Event>> = BTreeMap::new();
+        // communication: group collectives by (step, op)
+        let mut by_op: BTreeMap<(u64, usize), Vec<&Event>> = BTreeMap::new();
         for e in self.events.iter().filter(|e| e.kind == EventKind::Comm) {
-            by_op.entry(e.op).or_default().push(e);
+            by_op.entry((e.step, e.op)).or_default().push(e);
         }
         let mut naive = 0.0f64;
         let mut aligned = 0.0f64;
-        for (_op, evs) in &by_op {
+        for evs in by_op.values() {
             // naive: average of per-worker durations (incl. waiting)
             naive += evs.iter().map(|e| e.duration()).sum::<f64>() / evs.len() as f64;
             // aligned: the collective really runs only once every rank has
@@ -137,6 +173,7 @@ pub fn synthetic_profile(
             p.record(Event {
                 worker: w,
                 kind: EventKind::Compute,
+                step: 0,
                 op,
                 start_s: clock[w],
                 end_s: clock[w] + d,
@@ -152,6 +189,7 @@ pub fn synthetic_profile(
             p.record(Event {
                 worker: w,
                 kind: EventKind::Comm,
+                step: 0,
                 op,
                 start_s: ends[w],
                 end_s: end,
@@ -165,6 +203,8 @@ pub fn synthetic_profile(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
 
     #[test]
     fn no_skew_naive_equals_aligned() {
@@ -212,5 +252,97 @@ mod tests {
     fn empty_profile_is_nan() {
         let r = Profile::new().ccr();
         assert!(r.ccr.is_nan());
+    }
+
+    /// Remap a profile's worker ids through a strictly increasing gapped
+    /// mapping (0 -> gaps[0], 1 -> gaps[1], ...).
+    fn relabel(p: &Profile, gaps: &[usize]) -> Profile {
+        let mut out = Profile::new();
+        for e in p.events() {
+            let mut e = e.clone();
+            e.worker = gaps[e.worker];
+            out.record(e);
+        }
+        out
+    }
+
+    /// Satellite (workers() audit): the CCR must be invariant under worker
+    /// relabeling — gapped/sparse worker ids may not inflate the per-worker
+    /// mean. The old `max id + 1` inference divided an 8-worker gap set's
+    /// compute by 8 instead of 2.
+    #[test]
+    fn gapped_worker_ids_do_not_inflate_ccr() {
+        prop::check("profiler-gapped-ids", 0x6A99ED, 40, |rng: &mut Rng| {
+            let nw = 1 + rng.below(6);
+            let p = synthetic_profile(nw, 4, 0.1, 0.2, 0.3, rng.next_u64());
+            // strictly increasing gapped ids: cumulative positive offsets
+            let mut gaps = Vec::with_capacity(nw);
+            let mut id = 0usize;
+            for _ in 0..nw {
+                id += 1 + rng.below(5);
+                gaps.push(id);
+            }
+            let dense = p.ccr();
+            let sparse = relabel(&p, &gaps).ccr();
+            assert_eq!(dense, sparse, "relabeling {gaps:?} changed the report");
+        });
+    }
+
+    /// An explicit world size wins over inference: with only one worker
+    /// reporting out of 4, the mean compute divides by 4.
+    #[test]
+    fn explicit_world_size_divides_the_mean() {
+        let mut p = Profile::for_world(4);
+        p.record(Event {
+            worker: 2,
+            kind: EventKind::Compute,
+            step: 0,
+            op: 0,
+            start_s: 0.0,
+            end_s: 2.0,
+        });
+        p.record(Event {
+            worker: 2,
+            kind: EventKind::Comm,
+            step: 0,
+            op: 0,
+            start_s: 2.0,
+            end_s: 3.0,
+        });
+        let r = p.ccr();
+        assert!((r.comp_s - 0.5).abs() < 1e-12, "2.0 / world 4 = 0.5, got {}", r.comp_s);
+        assert!((r.ccr - 2.0).abs() < 1e-12);
+    }
+
+    /// Satellite (op-collision audit): the same per-tensor op id used on
+    /// two different steps is two collectives, not one. Keyed only by op,
+    /// the aligned window would span both steps and swallow the compute
+    /// time between them.
+    #[test]
+    fn same_op_id_across_steps_does_not_alias() {
+        let mut p = Profile::for_world(1);
+        for step in 0..2u64 {
+            let base = step as f64 * 10.0;
+            p.record(Event {
+                worker: 0,
+                kind: EventKind::Compute,
+                step,
+                op: 0,
+                start_s: base,
+                end_s: base + 4.0,
+            });
+            p.record(Event {
+                worker: 0,
+                kind: EventKind::Comm,
+                step,
+                op: 0, // identical op id on both steps (tensor 0)
+                start_s: base + 4.0,
+                end_s: base + 5.0,
+            });
+        }
+        let r = p.ccr();
+        // two 1 s collectives, not one [4, 15] monster window
+        assert!((r.aligned_comm_s - 2.0).abs() < 1e-12, "{}", r.aligned_comm_s);
+        assert!((r.comp_s - 8.0).abs() < 1e-12);
     }
 }

@@ -24,6 +24,9 @@ pub trait RankModel: Send {
     fn grad_range(&mut self, params: &[f32], offset: usize, out: &mut [f32]);
     /// Finish the step: mean loss over the `n` parameters covered.
     fn end_step(&mut self, n: usize) -> f32;
+    /// Set the compute inflation factor mid-run (straggler injection).
+    /// Must never change numeric results — only wall time.
+    fn set_work(&mut self, _work: u32) {}
 }
 
 /// Specification shared by all ranks of one run (cheap to copy).
@@ -123,6 +126,10 @@ impl RankModel for SyntheticModel {
 
     fn end_step(&mut self, n: usize) -> f32 {
         (0.5 * self.sq_sum / n.max(1) as f64) as f32
+    }
+
+    fn set_work(&mut self, work: u32) {
+        self.spec.work = work.max(1);
     }
 }
 

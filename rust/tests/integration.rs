@@ -193,7 +193,9 @@ fn quantize_artifact_matches_rust_f16() {
 #[test]
 fn adaptive_profiling_selects_interval_and_reshards() {
     let (_rt, arts) = load();
-    let mut c = cfg(SchemeKind::Baseline, 4);
+    // adaptive profiling applies to covap@auto only (a configured
+    // non-COVAP scheme is never silently swapped)
+    let mut c = cfg(SchemeKind::CovapAuto { ef: EfScheduler::default() }, 4);
     c.profile_steps = 2;
     let param_count = arts.manifest.param_count;
     let mut e = DpEngine::new(c, arts).unwrap();
