@@ -1,15 +1,22 @@
 //! Fig. 11-style scalability sweep: simulated speedups of all GC schemes
-//! across 8/16/32/64-GPU clusters for a chosen workload.
+//! across 8/16/32/64-GPU clusters for a chosen workload, plus a
+//! collective-topology sweep (ring / hier / tree) with the per-level
+//! wire-byte breakdown each hop schedule accounts.
 //!
 //!     cargo run --release --example scalability_sweep -- [--dnn VGG-19]
 
+use covap::comm::TopologyKind;
 use covap::compress::SchemeKind;
 use covap::covap::interval_from_ccr;
-use covap::harness::{allgather_rank_memory, calibrated_profiles, paper_profile, scheme_breakdown};
+use covap::harness::{
+    allgather_rank_memory, calibrated_profiles, paper_profile, scheme_breakdown,
+    scheme_level_bytes,
+};
 use covap::network::{ClusterSpec, NetworkModel};
 use covap::sim::Policy;
 use covap::util::bench::Table;
 use covap::util::cli::Args;
+use covap::util::{fmt_bytes, fmt_secs};
 use covap::workload;
 
 const V100_MEM: usize = 16 << 30;
@@ -48,7 +55,15 @@ fn main() -> anyhow::Result<()> {
                 },
                 k => k.clone(),
             };
-            let b = scheme_breakdown(&w, &kind_here, &profile, &net, cluster, Policy::Overlap);
+            let b = scheme_breakdown(
+                &w,
+                &kind_here,
+                &profile,
+                &net,
+                cluster,
+                TopologyKind::Auto.resolve(cluster),
+                Policy::Overlap,
+            );
             row.push(format!("{:.1}x", b.speedup(gpus)));
         }
         table.row(&row);
@@ -60,5 +75,39 @@ fn main() -> anyhow::Result<()> {
     table.row(&linear);
     table.print(&format!("Fig. 11 — scalability, {} @ 30 Gbps", w.name));
     println!("\n(OOM = AllGather payload exceeds 16 GB V100 memory, matching the paper's\n exclusion of Top-k/Random-k/DGC/EFsignSGD/Ok-topk beyond 16 GPUs on VGG-19.)");
+
+    // ---- topology sweep: exposed comm + per-level wire bytes ----------
+    // Same workload on the paper's 4x8 cluster under every collective
+    // topology: the hierarchy shifts most of the volume from the NIC
+    // (inter) onto the PCIe fabric (intra); the tree trades bandwidth for
+    // O(log P) rounds (its win is the small-frame sync round).
+    let cluster = ClusterSpec::ecs(32);
+    let mut tt = Table::new(&[
+        "topology", "scheme", "exposed", "speedup", "inter B/step", "intra B/step",
+    ]);
+    for topo_kind in TopologyKind::all() {
+        let topo = topo_kind.resolve(cluster);
+        for kind in [
+            SchemeKind::Baseline,
+            SchemeKind::Fp16,
+            SchemeKind::Covap {
+                interval: interval_from_ccr(w.ccr(&net, cluster)),
+                ef: Default::default(),
+            },
+        ] {
+            let prof = paper_profile(&kind);
+            let b = scheme_breakdown(&w, &kind, &prof, &net, cluster, topo, Policy::Overlap);
+            let lb = scheme_level_bytes(&w, &kind, topo, cluster);
+            tt.row(&[
+                topo_kind.spec().to_string(),
+                kind.label().to_string(),
+                fmt_secs(b.t_comm_exposed_s),
+                format!("{:.1}x", b.speedup(cluster.world())),
+                fmt_bytes(lb.inter),
+                fmt_bytes(lb.intra),
+            ]);
+        }
+    }
+    tt.print(&format!("Topologies — {} @ 4x8, per-level wire bytes", w.name));
     Ok(())
 }

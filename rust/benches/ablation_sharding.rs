@@ -5,7 +5,7 @@
 //! ~628 ms collective that nothing can hide; with sharding the per-step
 //! volume is balanced and every step overlaps.
 
-use covap::compress::Collective;
+use covap::compress::CollectiveOp;
 use covap::covap::{shard_buckets, CoarseFilter};
 use covap::harness::{bucket_comp_fractions, workload_buckets};
 use covap::network::{ClusterSpec, NetworkModel};
@@ -58,7 +58,7 @@ fn main() {
                     comp_s,
                     compress_s: 0.0,
                     wire_bytes: if filter.keep(i, step) { n * 4 } else { 0 },
-                    collective: Collective::AllReduce,
+                    collective: CollectiveOp::AllReduce,
                     rounds: 1,
                     sync_rounds: 0,
                     data_dependency: false,

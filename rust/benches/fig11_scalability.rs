@@ -52,7 +52,9 @@ fn main() -> anyhow::Result<()> {
                     },
                     k => k.clone(),
                 };
-                let b = scheme_breakdown(&w, &kind_here, prof, &net, cluster, Policy::Overlap);
+                let topo = covap::comm::TopologyKind::Auto.resolve(cluster);
+                let b =
+                    scheme_breakdown(&w, &kind_here, prof, &net, cluster, topo, Policy::Overlap);
                 last = b.speedup(gpus) / gpus as f64;
                 row.push(format!("{:.1}x", b.speedup(gpus)));
             }

@@ -34,7 +34,8 @@ fn main() {
                 SchemeKind::Covap { interval: r, ef: Default::default() }
             };
             let prof = paper_profile(&kind);
-            let b = scheme_breakdown(&w, &kind, &prof, &net, cluster, Policy::Overlap);
+            let topo = covap::comm::TopologyKind::Auto.resolve(cluster);
+            let b = scheme_breakdown(&w, &kind, &prof, &net, cluster, topo, Policy::Overlap);
             row.push(format!("{:.1}x", b.speedup(64)));
         }
         t.row(&row);

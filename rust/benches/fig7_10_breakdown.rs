@@ -47,7 +47,8 @@ fn main() -> anyhow::Result<()> {
                 },
                 k => k.clone(),
             };
-            let b = scheme_breakdown(&w, &kind, prof, &net, cluster, Policy::Overlap);
+            let topo = covap::comm::TopologyKind::Auto.resolve(cluster);
+            let b = scheme_breakdown(&w, &kind, prof, &net, cluster, topo, Policy::Overlap);
             t.row(&[
                 kind.label().to_string(),
                 format!("{:.0}ms", b.t_compress_s * 1e3),

@@ -65,8 +65,8 @@ fn main() {
         };
         let (rounds, syncs, _dep) = rounds_of(kind);
         let comm_s = match collective_of(kind) {
-            covap::compress::Collective::AllReduce => net.allreduce_s(wire, cluster),
-            covap::compress::Collective::AllGather => net.allgather_s(wire, cluster),
+            covap::compress::CollectiveOp::AllReduce => net.allreduce_s(wire, cluster),
+            covap::compress::CollectiveOp::AllGather => net.allgather_s(wire, cluster),
         } * rounds as f64
             + syncs as f64 * net.sync_round_s(cluster);
         let ours_compress_ms = prof.s_per_elem * n as f64 * 1e3;

@@ -5,7 +5,7 @@
 //!   Random-k: CCR after 1.07, S_GC 1.29x, S_GC&ovlp 2.05x
 //!   FP16:     CCR after 1.04, S_GC 1.42x, S_GC&ovlp 2.35x
 
-use covap::compress::Collective;
+use covap::compress::CollectiveOp;
 use covap::harness::{bucket_comp_fractions, workload_buckets};
 use covap::network::{ClusterSpec, NetworkModel};
 use covap::sim::{simulate_iteration, Breakdown, Policy, TensorCost};
@@ -41,7 +41,7 @@ fn main() {
                 comp_s: w.t_comp_s * f,
                 compress_s: compress_total * n as f64 / total as f64,
                 wire_bytes: (n as f64 * 4.0 * wire_per_byte) as usize,
-                collective: Collective::AllReduce,
+                collective: CollectiveOp::AllReduce,
                 rounds: 1,
                 sync_rounds: 0,
                 data_dependency: false,

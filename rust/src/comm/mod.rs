@@ -13,15 +13,16 @@
 //! byte-identical chunks in the identical order — which is what makes the
 //! two paths bitwise-comparable (`exec::ring` is property-tested against
 //! [`ring_allreduce`]).
+//!
+//! Collective *pricing* lives in [`topology`]: every algorithm (flat
+//! ring, hierarchical 2-level, binomial tree) is one hop schedule behind
+//! the [`topology::Collective`] trait, which both the analytic and the
+//! threaded backends consume. The old `allreduce_cost`/`allgather_cost`
+//! free functions are retired in its favor.
 
-use crate::network::{ClusterSpec, NetworkModel};
+pub mod topology;
 
-/// Outcome of one collective: simulated wall time + bytes each rank moved.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct CollectiveCost {
-    pub sim_s: f64,
-    pub bytes_per_rank: usize,
-}
+pub use topology::{Collective, CollectiveCost, LevelBytes, LinkLevel, TopologyKind};
 
 /// The chunk schedule of a P-rank ring collective over `n` elements.
 ///
@@ -199,23 +200,13 @@ pub fn ring_allgather(payloads: &[Vec<f32>]) -> (Vec<f32>, usize) {
 }
 
 /// AllGather: every rank receives every rank's payload. Returns the
-/// gathered Vec (rank-major) — callers slice per rank.
+/// gathered Vec (rank-major) — callers slice per rank. This is the
+/// topology-invariant *oracle*: every [`topology::Collective`] frame
+/// allgather must converge to exactly this rank-major concatenation
+/// (property-tested in `exec::ring`).
 pub fn allgather<T: Clone>(payloads: &[Vec<T>]) -> Vec<Vec<T>> {
     // Numerically trivial in-process; the cost model charges the real wire.
     payloads.to_vec()
-}
-
-/// Price a dense-f32 allreduce of `bytes` on the given fabric.
-pub fn allreduce_cost(net: &NetworkModel, cluster: ClusterSpec, bytes: usize) -> CollectiveCost {
-    CollectiveCost { sim_s: net.allreduce_s(bytes, cluster), bytes_per_rank: bytes }
-}
-
-/// Price an allgather where each rank contributes `bytes`.
-pub fn allgather_cost(net: &NetworkModel, cluster: ClusterSpec, bytes: usize) -> CollectiveCost {
-    CollectiveCost {
-        sim_s: net.allgather_s(bytes, cluster),
-        bytes_per_rank: bytes * (cluster.world() - 1),
-    }
 }
 
 #[cfg(test)]
@@ -375,19 +366,30 @@ mod tests {
         );
     }
 
+    /// Satellite regression: single-rank worlds are a no-op collective —
+    /// the schedule charges zero bytes and the in-place path moves none.
     #[test]
     fn single_rank_is_noop() {
         let mut bufs = vec![vec![1.0f32, 2.0]];
         assert_eq!(ring_allreduce(&mut bufs), 0);
         assert_eq!(bufs[0], vec![1.0, 2.0]);
+        for n in [0usize, 1, 7, 1000] {
+            let s = RingSchedule::new(1, n);
+            assert_eq!(s.allreduce_sent_bytes(0), 0, "p=1 n={n} must send nothing");
+        }
+        let (got, sent) = ring_allgather(&[vec![1.0f32, 2.0]]);
+        assert_eq!(got, vec![1.0, 2.0]);
+        assert_eq!(sent, 0);
     }
 
     #[test]
     fn cost_helpers_price_by_kind() {
+        use crate::network::{ClusterSpec, NetworkModel};
         let net = NetworkModel::default();
         let c = ClusterSpec::ecs(64);
-        let ar = allreduce_cost(&net, c, 1 << 20);
-        let ag = allgather_cost(&net, c, 1 << 20);
+        let topo = TopologyKind::Auto.resolve(c);
+        let ar = topo.allreduce_cost(&net, c, 1 << 20);
+        let ag = topo.allgather_cost(&net, c, 1 << 20);
         assert!(ag.sim_s > ar.sim_s);
         assert!(ag.bytes_per_rank > ar.bytes_per_rank);
     }

@@ -1,0 +1,1000 @@
+//! The topology layer: pluggable collective algorithms behind one
+//! [`Collective`] trait (DESIGN.md §9).
+//!
+//! Each algorithm — flat ring, hierarchical 2-level, binomial tree — is
+//! implemented **once**, as an object-granular [`HopSchedule`]: the exact
+//! sequence of `(round, src, dst, slot)` frame movements of an allgather
+//! where every rank contributes one wire frame. Both backends consume
+//! that single schedule:
+//!
+//! * the **analytic** backend prices each hop against the per-level
+//!   [`NetworkModel`] (intra-node vs inter-node bandwidth and latency) —
+//!   [`HopSchedule::cost_uniform`] — and derives per-level wire-byte
+//!   accounting from the same hop list
+//!   ([`HopSchedule::level_bytes_uniform`]);
+//! * the **threaded** backend (`exec::ring::allgather_sched`) rotates the
+//!   real encoded frames hop by hop over per-level paced links.
+//!
+//! The gathered *result* is topology-invariant — every rank ends holding
+//! the rank-major frames of all ranks, each received exactly once — so
+//! swapping topologies never changes numerics, only who moves which bytes
+//! over which link. That invariant (each rank receives each slot exactly
+//! once, never its own, and every hop's source already holds the slot it
+//! forwards) is what makes the threaded executor's epoch-tagged delivery
+//! deadlock-free; it is property-tested below for every topology over
+//! degenerate cluster shapes (`p = 1`, `nodes = 1`, `gpus_per_node = 1`).
+
+use crate::network::{ClusterSpec, NetworkModel};
+
+use super::rot_send;
+
+/// Which link a hop crosses: the intra-node fabric (PCIe/NVLink) or the
+/// inter-node NIC. Classified from the cluster shape (`rank / g`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkLevel {
+    Intra,
+    Inter,
+}
+
+/// Per-level byte counts of one collective (what a rank sent over each
+/// link class). `intra + inter` is the total wire traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LevelBytes {
+    pub intra: usize,
+    pub inter: usize,
+}
+
+impl LevelBytes {
+    pub fn total(&self) -> usize {
+        self.intra + self.inter
+    }
+
+    pub fn add(&mut self, level: LinkLevel, bytes: usize) {
+        match level {
+            LinkLevel::Intra => self.intra += bytes,
+            LinkLevel::Inter => self.inter += bytes,
+        }
+    }
+}
+
+/// One frame movement: at `round`, rank `src` sends its copy of slot
+/// `slot` (rank `slot`'s frame) to rank `dst` over `level`.
+#[derive(Debug, Clone, Copy)]
+pub struct Hop {
+    pub round: u32,
+    pub src: u32,
+    pub dst: u32,
+    pub slot: u32,
+    pub level: LinkLevel,
+}
+
+/// A complete object-granular allgather schedule over `world` ranks:
+/// every rank starts holding its own slot and ends holding all of them.
+///
+/// Contract (checked by [`HopSchedule::validate`], property-tested for
+/// every topology): hops are sorted by round; each rank receives each
+/// slot **exactly once** and never its own; a hop's source holds the slot
+/// it forwards (its own, or one received at a strictly earlier round).
+/// Exactly-once delivery is what lets the threaded executor store frames
+/// on arrival without round bookkeeping, and the strictly-earlier-round
+/// dependency is what makes that execution deadlock-free.
+#[derive(Debug, Clone)]
+pub struct HopSchedule {
+    world: usize,
+    rounds: usize,
+    hops: Vec<Hop>,
+    /// Frames each rank receives over the whole schedule (`p - 1` for a
+    /// complete allgather; kept explicit so the executor needs no rule).
+    recvs: Vec<usize>,
+}
+
+/// Incremental builder: classifies each hop's level from the cluster
+/// shape and tracks the round count.
+struct SchedBuilder {
+    cluster: ClusterSpec,
+    hops: Vec<Hop>,
+    rounds: usize,
+}
+
+impl SchedBuilder {
+    fn new(cluster: ClusterSpec) -> SchedBuilder {
+        SchedBuilder { cluster, hops: Vec::new(), rounds: 0 }
+    }
+
+    fn push(&mut self, round: usize, src: usize, dst: usize, slot: usize) {
+        debug_assert_ne!(src, dst, "self-hop");
+        let level = link_level(self.cluster, src, dst);
+        self.rounds = self.rounds.max(round + 1);
+        self.hops.push(Hop {
+            round: round as u32,
+            src: src as u32,
+            dst: dst as u32,
+            slot: slot as u32,
+            level,
+        });
+    }
+
+    fn finish(self) -> HopSchedule {
+        let world = self.cluster.world();
+        let mut recvs = vec![0usize; world];
+        for h in &self.hops {
+            recvs[h.dst as usize] += 1;
+        }
+        debug_assert!(
+            self.hops.windows(2).all(|w| w[0].round <= w[1].round),
+            "hops must be emitted in round order"
+        );
+        HopSchedule { world, rounds: self.rounds, hops: self.hops, recvs }
+    }
+}
+
+impl HopSchedule {
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    pub fn hops(&self) -> &[Hop] {
+        &self.hops
+    }
+
+    /// Frames rank `r` receives over the whole schedule.
+    pub fn recv_count(&self, r: usize) -> usize {
+        self.recvs[r]
+    }
+
+    /// Hops rank `r` sends per link level (frame *counts*). Callers that
+    /// stamp accounting per record should cache this — it scans the whole
+    /// hop list — and multiply by the frame length themselves.
+    pub fn level_hops(&self, r: usize) -> LevelBytes {
+        let mut out = LevelBytes::default();
+        for h in &self.hops {
+            if h.src as usize == r {
+                out.add(h.level, 1);
+            }
+        }
+        out
+    }
+
+    /// Worst-rank hops per link level, maxima taken independently — the
+    /// per-level traffic budget one collective costs the busiest NIC and
+    /// the busiest PCIe lane (which may be different ranks: on a
+    /// multi-node flat ring the node-boundary rank ships everything over
+    /// the NIC while interior ranks ship everything intra). This is the
+    /// reduction the measured side uses too (`exec::timeline::aggregate`
+    /// takes worst-rank moved bytes per level), so stamped accounting and
+    /// measured traffic agree for size-uniform schemes.
+    pub fn max_level_hops(&self) -> LevelBytes {
+        let mut per = vec![LevelBytes::default(); self.world];
+        for h in &self.hops {
+            per[h.src as usize].add(h.level, 1);
+        }
+        let mut out = LevelBytes::default();
+        for lb in per {
+            out.intra = out.intra.max(lb.intra);
+            out.inter = out.inter.max(lb.inter);
+        }
+        out
+    }
+
+    /// Bytes rank `r` sends per link level when every frame is `bytes`
+    /// long — the per-rank view (tests compare it against each rank's
+    /// measured traffic). Stamped accounting (`CommRecord.levels`) uses
+    /// the worst-rank [`HopSchedule::max_level_hops`] instead: on a
+    /// multi-node flat ring rank 0 never crosses a node while the
+    /// boundary rank ships everything over the NIC.
+    pub fn level_bytes_uniform(&self, r: usize, bytes: usize) -> LevelBytes {
+        let hops = self.level_hops(r);
+        LevelBytes { intra: hops.intra * bytes, inter: hops.inter * bytes }
+    }
+
+    /// Price the schedule on the α–β model with uniform `bytes`-long
+    /// frames: within a round each rank's sends serialize on its own link
+    /// (one NIC / one PCIe lane per rank), rounds rendezvous on the
+    /// slowest rank — the lockstep form of what the threaded executor
+    /// does with per-level `exec::ring::Pacer`s.
+    pub fn cost_uniform(&self, net: &NetworkModel, bytes: usize) -> f64 {
+        let mut per_src = vec![0.0f64; self.world];
+        let mut total = 0.0;
+        let mut i = 0;
+        while i < self.hops.len() {
+            let round = self.hops[i].round;
+            per_src.fill(0.0);
+            let mut worst = 0.0f64;
+            while i < self.hops.len() && self.hops[i].round == round {
+                let h = &self.hops[i];
+                let (bps, lat) = level_rate(net, h.level);
+                let src = h.src as usize;
+                per_src[src] += bytes as f64 / bps + lat;
+                worst = worst.max(per_src[src]);
+                i += 1;
+            }
+            total += worst;
+        }
+        total
+    }
+
+    /// Check the full allgather contract; panics with a diagnostic on the
+    /// first violation. Test-oriented (O(p²) state).
+    pub fn validate(&self) {
+        let p = self.world;
+        // got[r][s]: round at which rank r acquired slot s (own = round 0
+        // before anything runs); None = not yet held. A forward must
+        // depend on a *strictly earlier* round — same-round
+        // receive-then-forward chains could cyclically deadlock the
+        // threaded executor, so they are banned outright.
+        let mut got: Vec<Vec<Option<u32>>> = (0..p)
+            .map(|r| (0..p).map(|s| if s == r { Some(0) } else { None }).collect())
+            .collect();
+        let mut last_round = 0u32;
+        for h in &self.hops {
+            assert!(h.round >= last_round, "hops out of round order");
+            last_round = h.round;
+            let (src, dst, slot) = (h.src as usize, h.dst as usize, h.slot as usize);
+            assert!(src < p && dst < p && slot < p, "hop out of range");
+            match got[src][slot] {
+                None => panic!(
+                    "round {}: rank {src} forwards slot {slot} it does not hold",
+                    h.round
+                ),
+                Some(acquired) => assert!(
+                    slot == src || acquired < h.round,
+                    "round {}: rank {src} forwards slot {slot} acquired the same round",
+                    h.round
+                ),
+            }
+            assert!(
+                got[dst][slot].is_none(),
+                "round {}: rank {dst} receives slot {slot} twice",
+                h.round
+            );
+            assert_ne!(dst, slot, "rank {dst} receives its own slot");
+            got[dst][slot] = Some(h.round);
+        }
+        for (r, row) in got.iter().enumerate() {
+            assert!(
+                row.iter().all(|h| h.is_some()),
+                "rank {r} did not receive every slot"
+            );
+        }
+    }
+}
+
+/// Effective (bytes/s, per-hop latency) of one link level.
+pub fn level_rate(net: &NetworkModel, level: LinkLevel) -> (f64, f64) {
+    match level {
+        LinkLevel::Intra => (net.intra_bps(), NetworkModel::INTRA_LATENCY_S),
+        LinkLevel::Inter => (net.effective_bps(), net.latency_s),
+    }
+}
+
+/// The link class a hop between two ranks crosses — the single
+/// classification rule every schedule builder and closed-form pricer
+/// shares (rank-major placement via [`ClusterSpec::node_of`]).
+pub fn link_level(cluster: ClusterSpec, a: usize, b: usize) -> LinkLevel {
+    if cluster.node_of(a) == cluster.node_of(b) {
+        LinkLevel::Intra
+    } else {
+        LinkLevel::Inter
+    }
+}
+
+/// Outcome of pricing one collective: simulated wall time + the dense
+/// payload bytes each rank contributes/receives (accounting volume).
+/// Replaces the retired `comm::{allreduce_cost, allgather_cost}` free
+/// functions — costs now come from a [`Collective`], never a bare model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveCost {
+    pub sim_s: f64,
+    pub bytes_per_rank: usize,
+}
+
+/// One collective algorithm (topology): the schedule/cost split.
+///
+/// `allgather_schedule` is the single implementation of the algorithm —
+/// the threaded executor executes it frame by frame, and the default
+/// `allgather_s` prices the identical hop list per level. `allreduce_s`
+/// prices the topology's dense summable collective (chunk-granular, so it
+/// is closed-form rather than schedule-derived); `sync_round_s` prices
+/// the small synchronous rendezvous of data-dependent schemes, where the
+/// binomial tree's `O(log P)` depth is the whole point.
+pub trait Collective: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// The object-granular allgather hop schedule (one frame per rank)
+    /// for a cluster of exactly `cluster.world()` ranks.
+    fn allgather_schedule(&self, cluster: ClusterSpec) -> HopSchedule;
+
+    /// Price a dense ring/tree AllReduce of `bytes` per rank.
+    fn allreduce_s(&self, net: &NetworkModel, cluster: ClusterSpec, bytes: usize) -> f64;
+
+    /// Price the frame allgather where each rank contributes `bytes`.
+    /// The default rebuilds the hop schedule and prices it per level —
+    /// always correct, but O(hops) per call; the provided topologies
+    /// override it with round-walk forms that compute the identical
+    /// per-round maxima without materializing the hop list.
+    fn allgather_s(&self, net: &NetworkModel, cluster: ClusterSpec, bytes: usize) -> f64 {
+        self.allgather_schedule(cluster)
+            .cost_uniform(net, bytes)
+            .max(net.latency_s)
+    }
+
+    /// A small synchronous rendezvous (threshold / count exchange).
+    fn sync_round_s(&self, net: &NetworkModel, cluster: ClusterSpec) -> f64;
+
+    fn allreduce_cost(
+        &self,
+        net: &NetworkModel,
+        cluster: ClusterSpec,
+        bytes: usize,
+    ) -> CollectiveCost {
+        CollectiveCost { sim_s: self.allreduce_s(net, cluster, bytes), bytes_per_rank: bytes }
+    }
+
+    fn allgather_cost(
+        &self,
+        net: &NetworkModel,
+        cluster: ClusterSpec,
+        bytes: usize,
+    ) -> CollectiveCost {
+        CollectiveCost {
+            sim_s: self.allgather_s(net, cluster, bytes),
+            bytes_per_rank: bytes * (cluster.world() - 1),
+        }
+    }
+}
+
+/// Flat ring over all `P` ranks in rank-major order: hops within a node
+/// are intra-level, the node-boundary hops cross the NIC. The rotation is
+/// [`rot_send`] — identical to the pre-topology `exec::ring` path, so the
+/// slot movement of existing ring tests is unchanged.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlatRing;
+
+/// Hierarchical 2-level collective: intra-node ring allgather (every rank
+/// gets its node's bundle), `g` parallel inter-node rings (local rank `j`
+/// of each node rotates the `j`-slots across nodes), then an intra-node
+/// ring allgather of the remote bundles. The 2-level pipelined collective
+/// is exactly what the calibrated [`NetworkModel`] α–β pricing models
+/// (DESIGN.md §2), so this topology's analytic allreduce *and* allgather
+/// costs delegate to it; the per-level byte accounting and the threaded
+/// execution derive from the hop schedule.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hier2Level;
+
+/// Binomial tree: gather everything to rank 0 up a binomial tree
+/// (`ceil(log2 P)` rounds), then broadcast down the mirror tree, each
+/// parent sending a child exactly the slots outside the child's own
+/// subtree (so delivery stays exactly-once). Latency-optimal — `O(log P)`
+/// rounds instead of `O(P)` — which is why it wins for the small-frame
+/// sync rounds; bandwidth-poor at the root for large frames.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BinomialTree;
+
+pub static RING: FlatRing = FlatRing;
+pub static HIER: Hier2Level = Hier2Level;
+pub static TREE: BinomialTree = BinomialTree;
+
+fn ceil_log2(p: usize) -> u32 {
+    debug_assert!(p >= 1);
+    usize::BITS - (p - 1).leading_zeros()
+}
+
+impl Collective for FlatRing {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn allgather_schedule(&self, cluster: ClusterSpec) -> HopSchedule {
+        let p = cluster.world();
+        let mut b = SchedBuilder::new(cluster);
+        for s in 0..p.saturating_sub(1) {
+            for r in 0..p {
+                b.push(s, r, (r + 1) % p, rot_send(p, r, s));
+            }
+        }
+        b.finish()
+    }
+
+    fn allreduce_s(&self, net: &NetworkModel, c: ClusterSpec, bytes: usize) -> f64 {
+        let p = c.world();
+        if p <= 1 {
+            return net.latency_s;
+        }
+        // 2(P-1) rounds of one `bytes/P` chunk per link; every round is
+        // bound by its slowest hop. Degenerates to the calibrated
+        // NetworkModel formulas (same arithmetic, up to fp association)
+        // when the cluster is single-node or one-rank-per-node.
+        let rounds = 2.0 * (p as f64 - 1.0);
+        let chunk = bytes as f64 / p as f64;
+        let intra_s = chunk / net.intra_bps() + NetworkModel::INTRA_LATENCY_S;
+        let round_s = if c.nodes > 1 {
+            let inter_s = chunk / net.effective_bps() + net.latency_s;
+            if c.gpus_per_node > 1 {
+                inter_s.max(intra_s)
+            } else {
+                inter_s
+            }
+        } else {
+            intra_s
+        };
+        (rounds * round_s).max(net.latency_s)
+    }
+
+    /// Closed form of the ring schedule's per-round pricing: P-1 rounds,
+    /// each rank sends one slot, the round rendezvouses on its slowest
+    /// hop (the inter-node one whenever the ring crosses nodes — with a
+    /// max against the intra hop, matching the schedule's true per-round
+    /// worst on fabrics where PCIe is the slower link).
+    fn allgather_s(&self, net: &NetworkModel, c: ClusterSpec, bytes: usize) -> f64 {
+        let p = c.world();
+        if p <= 1 {
+            return net.latency_s;
+        }
+        let (intra_bps, intra_lat) = level_rate(net, LinkLevel::Intra);
+        let intra_hop = bytes as f64 / intra_bps + intra_lat;
+        let round_s = if c.nodes > 1 {
+            let (bps, lat) = level_rate(net, LinkLevel::Inter);
+            let inter_hop = bytes as f64 / bps + lat;
+            if c.gpus_per_node > 1 {
+                inter_hop.max(intra_hop)
+            } else {
+                inter_hop
+            }
+        } else {
+            intra_hop
+        };
+        ((p as f64 - 1.0) * round_s).max(net.latency_s)
+    }
+
+    fn sync_round_s(&self, net: &NetworkModel, c: ClusterSpec) -> f64 {
+        if c.nodes == 1 {
+            net.latency_s
+        } else {
+            2.0 * (c.world() as f64 - 1.0) * net.latency_s
+        }
+    }
+}
+
+impl Collective for Hier2Level {
+    fn name(&self) -> &'static str {
+        "hier"
+    }
+
+    fn allgather_schedule(&self, cluster: ClusterSpec) -> HopSchedule {
+        let n = cluster.nodes;
+        let g = cluster.gpus_per_node;
+        let mut b = SchedBuilder::new(cluster);
+        let mut round = 0usize;
+        // Phase A: intra-node ring allgather of the local slots — every
+        // rank ends holding its node's bundle.
+        for s in 0..g.saturating_sub(1) {
+            for node in 0..n {
+                for j in 0..g {
+                    let src = node * g + j;
+                    let dst = node * g + (j + 1) % g;
+                    let slot = node * g + rot_send(g, j, s);
+                    b.push(round + s, src, dst, slot);
+                }
+            }
+        }
+        round += g.saturating_sub(1);
+        // Phase B: g parallel inter-node rings — ring j (local rank j of
+        // every node) rotates the j-slots across nodes, so each node's
+        // NIC moves (N-1) * g frames total but each *rank* only (N-1).
+        for s in 0..n.saturating_sub(1) {
+            for j in 0..g {
+                for node in 0..n {
+                    let src = node * g + j;
+                    let dst = ((node + 1) % n) * g + j;
+                    let slot = rot_send(n, node, s) * g + j;
+                    b.push(round + s, src, dst, slot);
+                }
+            }
+        }
+        round += n.saturating_sub(1);
+        // Phase C: intra-node ring allgather of the remote bundles —
+        // local rank j contributes the (N-1) j-slots it fetched in B.
+        for s in 0..g.saturating_sub(1) {
+            for node in 0..n {
+                for j in 0..g {
+                    let src = node * g + j;
+                    let dst = node * g + (j + 1) % g;
+                    let owner = rot_send(g, j, s);
+                    for m in 0..n {
+                        if m != node {
+                            b.push(round + s, src, dst, m * g + owner);
+                        }
+                    }
+                }
+            }
+        }
+        b.finish()
+    }
+
+    fn allreduce_s(&self, net: &NetworkModel, c: ClusterSpec, bytes: usize) -> f64 {
+        // The calibrated α–β model *is* the pipelined 2-level allreduce
+        // (intra reduce / inter ring / intra broadcast, slower stage
+        // binds) — DESIGN.md §2.
+        net.allreduce_s(bytes, c)
+    }
+
+    /// The calibrated α–β allgather (per-node NIC shared by all g local
+    /// ranks, intra and inter stages pipelined). Pricing the hop schedule
+    /// with per-rank links would credit phase B's g parallel rings with
+    /// g× the node's NIC bandwidth — so, like `allreduce_s`, the analytic
+    /// cost stays with the Table-I-calibrated model and the hop schedule
+    /// remains the source of byte accounting and threaded execution only.
+    /// (Ring and tree have at most one inter-node sender per node per
+    /// round, so their schedule-derived pricing has no such contention
+    /// blind spot.) This also keeps `TopologyKind::Auto` pricing on
+    /// 2-level clusters bitwise-identical to the pre-topology
+    /// `NetworkModel::allgather_s` path.
+    fn allgather_s(&self, net: &NetworkModel, c: ClusterSpec, bytes: usize) -> f64 {
+        net.allgather_s(bytes, c)
+    }
+
+    fn sync_round_s(&self, net: &NetworkModel, c: ClusterSpec) -> f64 {
+        net.sync_round_s(c)
+    }
+}
+
+impl Collective for BinomialTree {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn allgather_schedule(&self, cluster: ClusterSpec) -> HopSchedule {
+        let p = cluster.world();
+        let mut b = SchedBuilder::new(cluster);
+        if p <= 1 {
+            return b.finish();
+        }
+        let k_max = ceil_log2(p);
+        let mut round = 0usize;
+        // Gather: round k, rank r (r ≡ 2^k mod 2^(k+1)) ships its whole
+        // subtree [r, r + 2^k) to its parent r - 2^k.
+        for k in 0..k_max {
+            let stride = 1usize << k;
+            let mut r = stride;
+            while r < p {
+                for slot in r..(r + stride).min(p) {
+                    b.push(round, r, r - stride, slot);
+                }
+                r += 2 * stride;
+            }
+            round += 1;
+        }
+        // Broadcast: mirror tree, each parent sending a child exactly the
+        // slots outside the child's subtree (the child gathered those
+        // itself), keeping delivery exactly-once.
+        for k in (0..k_max).rev() {
+            let stride = 1usize << k;
+            let mut r = 0usize;
+            while r < p {
+                let dst = r + stride;
+                if dst < p {
+                    let sub = dst..(dst + stride).min(p);
+                    for slot in 0..p {
+                        if !sub.contains(&slot) {
+                            b.push(round, r, dst, slot);
+                        }
+                    }
+                }
+                r += 2 * stride;
+            }
+            round += 1;
+        }
+        b.finish()
+    }
+
+    fn allreduce_s(&self, net: &NetworkModel, c: ClusterSpec, bytes: usize) -> f64 {
+        let p = c.world();
+        if p <= 1 {
+            return net.latency_s;
+        }
+        // Reduce up + broadcast down: 2·ceil(log2 P) rounds, each moving
+        // the full buffer over the round's widest link. A round crosses
+        // nodes iff any of its parent↔child pairs does (checked against
+        // the actual rank-major placement — sub-stride hops still cross
+        // when gpus_per_node is not a power of two).
+        let mut total = 0.0;
+        for k in 0..ceil_log2(p) {
+            let stride = 1usize << k;
+            let mut level = LinkLevel::Intra;
+            let mut r = stride;
+            while r < p {
+                if link_level(c, r, r - stride) == LinkLevel::Inter {
+                    level = LinkLevel::Inter;
+                    break;
+                }
+                r += 2 * stride;
+            }
+            let (bps, lat) = level_rate(net, level);
+            total += bytes as f64 / bps + lat;
+        }
+        (2.0 * total).max(net.latency_s)
+    }
+
+    /// Round walk over the gather/broadcast trees without materializing
+    /// the hop list: per round, each sender ships its whole
+    /// subtree-complement serially, and the round rendezvouses on its
+    /// slowest sender — the same per-round maxima
+    /// [`HopSchedule::cost_uniform`] computes from the schedule.
+    fn allgather_s(&self, net: &NetworkModel, c: ClusterSpec, bytes: usize) -> f64 {
+        let p = c.world();
+        if p <= 1 {
+            return net.latency_s;
+        }
+        let mut total = 0.0;
+        // gather: sender r ships [r, r+stride) ∩ [0, p) to r - stride
+        for k in 0..ceil_log2(p) {
+            let stride = 1usize << k;
+            let mut worst = 0.0f64;
+            let mut r = stride;
+            while r < p {
+                let cnt = (r + stride).min(p) - r;
+                let (bps, lat) = level_rate(net, link_level(c, r, r - stride));
+                worst = worst.max(cnt as f64 * (bytes as f64 / bps + lat));
+                r += 2 * stride;
+            }
+            total += worst;
+        }
+        // broadcast: sender r ships everything outside the child's
+        // subtree to dst = r + stride
+        for k in (0..ceil_log2(p)).rev() {
+            let stride = 1usize << k;
+            let mut worst = 0.0f64;
+            let mut r = 0usize;
+            while r < p {
+                let dst = r + stride;
+                if dst < p {
+                    let cnt = p - ((dst + stride).min(p) - dst);
+                    let (bps, lat) = level_rate(net, link_level(c, r, dst));
+                    worst = worst.max(cnt as f64 * (bytes as f64 / bps + lat));
+                }
+                r += 2 * stride;
+            }
+            total += worst;
+        }
+        total.max(net.latency_s)
+    }
+
+    fn sync_round_s(&self, net: &NetworkModel, c: ClusterSpec) -> f64 {
+        let p = c.world();
+        if p <= 1 {
+            return net.latency_s;
+        }
+        let lat = if c.nodes > 1 {
+            net.latency_s
+        } else {
+            NetworkModel::INTRA_LATENCY_S
+        };
+        (2.0 * ceil_log2(p) as f64 * lat).max(net.latency_s)
+    }
+}
+
+/// The config-facing topology selector (`topology = ring | hier | tree |
+/// auto` in JSON/CLI). `Auto` picks by cluster shape: hierarchical when
+/// the cluster actually has two levels (`nodes > 1` *and*
+/// `gpus_per_node > 1`), flat ring otherwise — a single-node or
+/// one-rank-per-node cluster has only one link class, where `hier`
+/// degenerates to the ring anyway.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TopologyKind {
+    Ring,
+    Hier,
+    Tree,
+    #[default]
+    Auto,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" | "flat" => Some(TopologyKind::Ring),
+            "hier" | "hierarchical" | "2level" => Some(TopologyKind::Hier),
+            "tree" | "binomial" => Some(TopologyKind::Tree),
+            "auto" => Some(TopologyKind::Auto),
+            _ => None,
+        }
+    }
+
+    /// Canonical spec string; `parse(&k.spec())` round-trips.
+    pub fn spec(&self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::Hier => "hier",
+            TopologyKind::Tree => "tree",
+            TopologyKind::Auto => "auto",
+        }
+    }
+
+    /// Resolve to the concrete algorithm for a cluster shape.
+    pub fn resolve(&self, cluster: ClusterSpec) -> &'static dyn Collective {
+        match self {
+            TopologyKind::Ring => &RING,
+            TopologyKind::Hier => &HIER,
+            TopologyKind::Tree => &TREE,
+            TopologyKind::Auto => {
+                if cluster.nodes > 1 && cluster.gpus_per_node > 1 {
+                    &HIER
+                } else {
+                    &RING
+                }
+            }
+        }
+    }
+
+    pub fn all() -> [TopologyKind; 3] {
+        [TopologyKind::Ring, TopologyKind::Hier, TopologyKind::Tree]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<ClusterSpec> {
+        vec![
+            ClusterSpec::new(1, 1),
+            ClusterSpec::new(1, 3),
+            ClusterSpec::new(1, 8),
+            ClusterSpec::new(3, 1),
+            ClusterSpec::new(2, 2),
+            ClusterSpec::new(2, 3),
+            ClusterSpec::new(3, 2),
+            ClusterSpec::new(4, 8),
+            ClusterSpec::new(5, 3), // non-power-of-two world for the tree
+        ]
+    }
+
+    /// The schedule contract for every topology × degenerate/odd shapes:
+    /// exactly-once delivery, sources hold what they forward, everyone
+    /// converges. This is the satellite property the executor relies on.
+    #[test]
+    fn every_topology_schedule_is_a_complete_allgather() {
+        for c in shapes() {
+            for kind in TopologyKind::all() {
+                let topo = kind.resolve(c);
+                let s = topo.allgather_schedule(c);
+                assert_eq!(s.world(), c.world(), "{}", topo.name());
+                s.validate();
+                for r in 0..c.world() {
+                    assert_eq!(
+                        s.recv_count(r),
+                        c.world() - 1,
+                        "{} {c:?}: rank {r} must receive P-1 frames",
+                        topo.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_matches_legacy_rotation() {
+        // The flat ring must move exactly the rot_send slots the
+        // pre-topology executor moved (bitwise compatibility anchor).
+        let c = ClusterSpec::new(5, 1);
+        let s = RING.allgather_schedule(c);
+        for h in s.hops() {
+            assert_eq!(h.dst as usize, (h.src as usize + 1) % 5);
+            assert_eq!(
+                h.slot as usize,
+                rot_send(5, h.src as usize, h.round as usize)
+            );
+        }
+        assert_eq!(s.rounds(), 4);
+    }
+
+    #[test]
+    fn single_rank_schedules_are_empty_noops() {
+        // Satellite regression: p = 1 worlds are no-op collectives.
+        let c = ClusterSpec::new(1, 1);
+        for kind in TopologyKind::all() {
+            let s = kind.resolve(c).allgather_schedule(c);
+            assert!(s.hops().is_empty(), "{}", kind.spec());
+            assert_eq!(s.recv_count(0), 0);
+            assert_eq!(s.level_bytes_uniform(0, 128), LevelBytes::default());
+        }
+    }
+
+    #[test]
+    fn hier_moves_fewer_inter_bytes_than_ring() {
+        // The point of the hierarchy: per-rank inter-node traffic drops
+        // from (P-1)·b to (N-1)·b frames.
+        let c = ClusterSpec::new(4, 8);
+        let b = 1000usize;
+        let ring = RING.allgather_schedule(c);
+        let hier = HIER.allgather_schedule(c);
+        // ring: the node-boundary rank ships all P-1 slots over the NIC
+        let ring_inter: usize =
+            (0..c.world()).map(|r| ring.level_bytes_uniform(r, b).inter).max().unwrap();
+        let hier_inter: usize =
+            (0..c.world()).map(|r| hier.level_bytes_uniform(r, b).inter).max().unwrap();
+        assert_eq!(ring_inter, 31 * b);
+        assert_eq!(hier_inter, 3 * b, "each rank rides its own inter ring");
+        // total per-node NIC traffic also drops: (N-1)·g vs (P-1)
+        let node_inter = |s: &HopSchedule| -> usize {
+            (0..8).map(|j| s.level_bytes_uniform(j, b).inter).sum()
+        };
+        assert_eq!(node_inter(&ring), 31 * b);
+        assert_eq!(node_inter(&hier), 24 * b);
+        // every rank's totals are symmetric in the hierarchical schedule
+        for r in 0..c.world() {
+            assert_eq!(hier.level_bytes_uniform(r, b), hier.level_bytes_uniform(0, b));
+        }
+        // the worst-rank accounting reduction sees exactly those maxima —
+        // NOT rank 0's walk, which on the flat ring never crosses a node
+        assert_eq!(ring.max_level_hops().inter * b, ring_inter);
+        assert_eq!(hier.max_level_hops().inter * b, hier_inter);
+        assert_eq!(ring.level_bytes_uniform(0, b).inter, 0, "rank 0 stays on-node");
+        assert_eq!(ring.max_level_hops().intra, 31, "interior ranks ship everything intra");
+    }
+
+    #[test]
+    fn hier_degenerates_to_ring_on_flat_clusters() {
+        for c in [ClusterSpec::new(1, 6), ClusterSpec::new(6, 1)] {
+            let hier = HIER.allgather_schedule(c);
+            let ring = RING.allgather_schedule(c);
+            assert_eq!(hier.hops().len(), ring.hops().len(), "{c:?}");
+            assert_eq!(hier.rounds(), ring.rounds(), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn tree_has_log_depth() {
+        let c = ClusterSpec::new(8, 8);
+        let s = TREE.allgather_schedule(c);
+        assert_eq!(s.rounds(), 12, "2 * ceil(log2 64)");
+        let ring = RING.allgather_schedule(c);
+        assert!(s.rounds() < ring.rounds() / 4);
+    }
+
+    #[test]
+    fn modeled_costs_order_sensibly() {
+        let net = NetworkModel::default();
+        let c = ClusterSpec::new(4, 8);
+        let mb = 1 << 20;
+        // hierarchical beats the flat ring on a 2-level cluster for the
+        // dense allreduce (the acceptance criterion's modeled half)
+        assert!(HIER.allreduce_s(&net, c, 32 * mb) < RING.allreduce_s(&net, c, 32 * mb));
+        // hier's allgather pricing IS the calibrated per-node-NIC model —
+        // pinned so `auto` on 2-level clusters reprices nothing
+        assert_eq!(HIER.allgather_s(&net, c, mb), net.allgather_s(mb, c));
+        // the tree wins the latency race (tiny frames) but loses the
+        // bandwidth race (large frames) against the ring
+        assert!(TREE.sync_round_s(&net, c) < RING.sync_round_s(&net, c));
+        assert!(TREE.allgather_s(&net, c, 8 * mb) > RING.allgather_s(&net, c, 8 * mb));
+    }
+
+    #[test]
+    fn ring_degenerate_costs_match_calibrated_model() {
+        // On one-level clusters the flat ring must reproduce the
+        // calibrated NetworkModel allreduce (same arithmetic; tolerance
+        // covers fp association only) — existing pricing and its Table-I
+        // calibration are unchanged where there is no topology choice to
+        // make.
+        let net = NetworkModel::default();
+        for c in [
+            ClusterSpec::new(4, 1),
+            ClusterSpec::new(9, 1),
+            ClusterSpec::new(1, 8),
+            ClusterSpec::new(1, 1),
+        ] {
+            for bytes in [0usize, 1 << 10, 100 << 20] {
+                let ring = RING.allreduce_s(&net, c, bytes);
+                let model = net.allreduce_s(bytes, c);
+                assert!(
+                    (ring - model).abs() <= 1e-12 * model.abs().max(1e-12),
+                    "{c:?} bytes={bytes}: {ring} vs {model}"
+                );
+            }
+        }
+        // The allgather drifts from the legacy model by a bounded,
+        // documented amount only: the schedule charges the per-hop intra
+        // latency the legacy single-node formula omitted (the legacy
+        // *allreduce* always charged it — the old model was internally
+        // inconsistent). One-rank-per-node shapes stay exact.
+        for c in [ClusterSpec::new(4, 1), ClusterSpec::new(9, 1)] {
+            let bytes = 1 << 20;
+            let ring = RING.allgather_s(&net, c, bytes);
+            let model = net.allgather_s(bytes, c);
+            assert!(
+                (ring - model).abs() <= 1e-12 * model.abs(),
+                "{c:?}: {ring} vs {model}"
+            );
+        }
+        let c = ClusterSpec::new(1, 8);
+        let bytes = 1 << 20;
+        let drift = RING.allgather_s(&net, c, bytes) - net.allgather_s(bytes, c);
+        let bound = (c.world() - 1) as f64 * NetworkModel::INTRA_LATENCY_S;
+        assert!(
+            drift >= 0.0 && drift <= bound + 1e-12,
+            "single-node allgather drift {drift} must be the per-hop intra \
+             latency only (<= {bound})"
+        );
+    }
+
+    /// The closed-form `allgather_s` overrides of ring and tree exist
+    /// only to avoid rebuilding O(P²)-hop schedules on the pricing hot
+    /// path — they must agree with the schedule-derived default (the
+    /// single source of truth) on every shape, to fp association. (Hier
+    /// is deliberately absent: its analytic cost is the calibrated
+    /// per-node-NIC model, not the per-rank-link schedule pricing.)
+    #[test]
+    fn closed_form_costs_match_schedule_pricing() {
+        let net = NetworkModel::default();
+        for c in shapes() {
+            for topo in [&RING as &dyn Collective, &TREE as &dyn Collective] {
+                let want = topo
+                    .allgather_schedule(c)
+                    .cost_uniform(&net, 4096)
+                    .max(net.latency_s);
+                let got = topo.allgather_s(&net, c, 4096);
+                assert!(
+                    (got - want).abs() <= 1e-9 * want.max(1e-12),
+                    "{} {c:?}: closed form {got} vs schedule {want}",
+                    topo.name()
+                );
+            }
+        }
+    }
+
+    /// Satellite of the tree fix: on a cluster whose gpus_per_node is not
+    /// a power of two, sub-stride tree hops cross node boundaries and
+    /// must be priced at the NIC rate — the allreduce can never price
+    /// below a single inter-node traversal there.
+    #[test]
+    fn tree_allreduce_sees_cross_node_substride_hops() {
+        let net = NetworkModel::default();
+        let c = ClusterSpec::new(2, 3);
+        let bytes = 8 << 20;
+        let floor = bytes as f64 / net.effective_bps();
+        assert!(
+            TREE.allreduce_s(&net, c, bytes) >= 2.0 * floor,
+            "reduce+broadcast must each cross the NIC at least once"
+        );
+    }
+
+    #[test]
+    fn auto_resolves_by_cluster_shape() {
+        assert_eq!(TopologyKind::Auto.resolve(ClusterSpec::new(4, 8)).name(), "hier");
+        assert_eq!(TopologyKind::Auto.resolve(ClusterSpec::new(4, 1)).name(), "ring");
+        assert_eq!(TopologyKind::Auto.resolve(ClusterSpec::new(1, 8)).name(), "ring");
+        assert_eq!(TopologyKind::Tree.resolve(ClusterSpec::new(1, 1)).name(), "tree");
+    }
+
+    #[test]
+    fn kind_specs_round_trip() {
+        for k in [TopologyKind::Ring, TopologyKind::Hier, TopologyKind::Tree, TopologyKind::Auto] {
+            assert_eq!(TopologyKind::parse(k.spec()), Some(k));
+        }
+        assert_eq!(TopologyKind::parse("HIER"), Some(TopologyKind::Hier));
+        assert_eq!(TopologyKind::parse("binomial"), Some(TopologyKind::Tree));
+        assert!(TopologyKind::parse("mesh").is_none());
+    }
+
+    #[test]
+    fn cost_uniform_prices_rounds_not_hops() {
+        // Two hops by the same src in one round serialize; hops by
+        // different srcs do not.
+        let net = NetworkModel::default();
+        let c = ClusterSpec::new(2, 2);
+        let s = HIER.allgather_schedule(c);
+        let cost = s.cost_uniform(&net, 1 << 20);
+        assert!(cost > 0.0 && cost.is_finite());
+        // empty schedule (p = 1) prices to zero, floored by the trait
+        let s1 = HIER.allgather_schedule(ClusterSpec::new(1, 1));
+        assert_eq!(s1.cost_uniform(&net, 1 << 20), 0.0);
+        assert_eq!(
+            HIER.allgather_s(&net, ClusterSpec::new(1, 1), 1 << 20),
+            net.latency_s,
+            "empty schedule floors at the collective-step latency"
+        );
+    }
+}

@@ -46,11 +46,14 @@ pub(crate) use topk::k_of;
 
 use std::time::Instant;
 
+use crate::comm::LevelBytes;
 use crate::covap::EfScheduler;
 
-/// Which collective the scheme's wire format requires.
+/// Which collective *operation* the scheme's wire format requires. The
+/// algorithm executing it (ring / hier / tree) is the orthogonal
+/// [`crate::comm::Collective`] topology axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Collective {
+pub enum CollectiveOp {
     /// Payloads are summable in-network (dense / shared-index sparse).
     AllReduce,
     /// Payloads must be gathered to every rank (worker-specific indices).
@@ -63,7 +66,7 @@ pub struct CommRecord {
     /// Bytes of this rank's encoded payload frame for this bucket — the
     /// measured `Payload::encode().len()`, 0 = nothing transmitted.
     pub wire_bytes: usize,
-    pub collective: Collective,
+    pub collective: CollectiveOp,
     /// Number of dependent collective rounds (PowerSGD = 2).
     pub rounds: u32,
     /// Extra synchronous rendezvous (threshold exchange etc.).
@@ -73,17 +76,25 @@ pub struct CommRecord {
     /// True if the scheme's later computation depends on an earlier
     /// collective's *result* (breaks overlapping; §I "data dependency").
     pub data_dependency: bool,
+    /// Per-link-level bytes the *busiest* rank sends rotating this
+    /// tensor's frames through the configured topology (worst-rank
+    /// uniform-frame arithmetic over the hop schedule, maxima per level
+    /// independent; hierarchical moves fewer inter-node bytes). Combiners
+    /// cannot see the topology, so they leave this zeroed and the engine
+    /// fills it — identically on both backends.
+    pub levels: LevelBytes,
 }
 
 impl CommRecord {
     pub fn dense(bytes: usize, compress_s: f64) -> CommRecord {
         CommRecord {
             wire_bytes: bytes,
-            collective: Collective::AllReduce,
+            collective: CollectiveOp::AllReduce,
             rounds: 1,
             sync_rounds: 0,
             compress_s,
             data_dependency: false,
+            levels: LevelBytes::default(),
         }
     }
 }

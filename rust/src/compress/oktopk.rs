@@ -14,7 +14,7 @@
 use std::time::Instant;
 
 use super::rank::{sparse_frame_len, ReplicatedScheme};
-use super::{CommRecord, Collective, EfState};
+use super::{CollectiveOp, CommRecord, EfState};
 
 pub struct OkTopk {
     ratio: f64,
@@ -93,11 +93,12 @@ impl ReplicatedScheme for OkTopk {
         let rec = CommRecord {
             // the encoded sparse frame of the selected coordinates
             wire_bytes: sparse_frame_len(selected.len()),
-            collective: Collective::AllReduce,
+            collective: CollectiveOp::AllReduce,
             rounds: 1,
             sync_rounds: 2, // split + threshold rendezvous
             compress_s,
             data_dependency: true,
+            levels: crate::comm::LevelBytes::default(),
         };
         (update, rec)
     }
@@ -133,7 +134,7 @@ mod tests {
         let (_, rec) = OkTopk::new(0.1, 1).round(0, 0, &refs);
         assert!(rec.data_dependency);
         assert!(rec.sync_rounds > 0);
-        assert_eq!(rec.collective, Collective::AllReduce);
+        assert_eq!(rec.collective, CollectiveOp::AllReduce);
     }
 
     #[test]

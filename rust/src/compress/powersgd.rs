@@ -17,7 +17,7 @@
 use std::time::Instant;
 
 use super::rank::{dense_frame_len, ReplicatedScheme};
-use super::{CommRecord, Collective, EfState};
+use super::{CollectiveOp, CommRecord, EfState};
 use crate::util::rng::Rng;
 
 pub struct PowerSgd {
@@ -176,7 +176,7 @@ impl ReplicatedScheme for PowerSgd {
         let rec = CommRecord {
             // the encoded P and Q frames the two collective rounds move
             wire_bytes: dense_frame_len(rows * r) + dense_frame_len(cols * r),
-            collective: Collective::AllReduce,
+            collective: CollectiveOp::AllReduce,
             rounds: 2,
             sync_rounds: 0,
             compress_s,
@@ -184,6 +184,7 @@ impl ReplicatedScheme for PowerSgd {
             // PowerSGD DDP hook still overlaps buckets with computation;
             // the timeline model charges 2 rounds instead (see harness).
             data_dependency: false,
+            levels: crate::comm::LevelBytes::default(),
         };
         (update, rec)
     }

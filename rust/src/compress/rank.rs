@@ -66,7 +66,7 @@
 
 use std::time::Instant;
 
-use super::{CommRecord, Collective, SchemeKind};
+use super::{CollectiveOp, CommRecord, SchemeKind};
 use crate::compress::{baseline, covap, fp16, oktopk, powersgd, randomk, signsgd, topk};
 
 /// A wire-format payload one rank contributes to the collective.
@@ -708,11 +708,12 @@ impl RankCombiner for SparseCombiner {
         let compress_s = compress_s + t0.elapsed().as_secs_f64();
         CommRecord {
             wire_bytes: max_frame_len(frames),
-            collective: Collective::AllGather,
+            collective: CollectiveOp::AllGather,
             rounds: 1,
             sync_rounds: 0,
             compress_s,
             data_dependency: false,
+            levels: crate::comm::LevelBytes::default(),
         }
     }
 
@@ -760,11 +761,12 @@ impl RankCombiner for SignCombiner {
         let compress_s = compress_s + t0.elapsed().as_secs_f64();
         CommRecord {
             wire_bytes: max_frame_len(frames),
-            collective: Collective::AllGather,
+            collective: CollectiveOp::AllGather,
             rounds: 1,
             sync_rounds: 0,
             compress_s,
             data_dependency: false,
+            levels: crate::comm::LevelBytes::default(),
         }
     }
 

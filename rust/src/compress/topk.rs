@@ -185,7 +185,7 @@ impl RankCompressor for DgcCompressor {
 #[cfg(test)]
 mod tests {
     use super::super::rank::sparse_frame_len;
-    use super::super::{Collective, Payload, SchemeKind};
+    use super::super::{CollectiveOp, Payload, SchemeKind};
     use super::*;
     use crate::util::prop;
     use crate::util::rng::Rng as TRng;
@@ -211,7 +211,7 @@ mod tests {
         let (u, rec) = s.round(0, 0, &refs);
         assert_eq!(u, vec![0.0, 10.0, 0.0, -20.0, 0.0, 0.0]);
         assert_eq!(rec.wire_bytes, sparse_frame_len(2));
-        assert_eq!(rec.collective, Collective::AllGather);
+        assert_eq!(rec.collective, CollectiveOp::AllGather);
     }
 
     #[test]

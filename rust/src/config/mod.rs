@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::comm::TopologyKind;
 use crate::compress::SchemeKind;
 use crate::covap::EfScheduler;
 use crate::network::{ClusterSpec, NetworkModel};
@@ -84,6 +85,11 @@ pub struct RunConfig {
     pub cluster: ClusterSpec,
     pub net: NetworkModel,
     pub scheme: SchemeKind,
+    /// Collective topology: `ring` (flat, one level), `hier` (2-level
+    /// intra/inter-node), `tree` (binomial), or `auto` (pick by
+    /// `ClusterSpec` shape). Drives both the analytic pricing and the
+    /// threaded executor's hop schedule + per-level pacing.
+    pub topology: TopologyKind,
     pub steps: u64,
     pub lr: f32,
     pub optimizer: Optimizer,
@@ -140,6 +146,7 @@ impl Default for RunConfig {
             cluster: ClusterSpec::new(4, 1),
             net: NetworkModel::default(),
             scheme: SchemeKind::Baseline,
+            topology: TopologyKind::Auto,
             steps: 50,
             lr: 1e-3,
             optimizer: Optimizer::Adam,
@@ -203,6 +210,12 @@ impl RunConfig {
         }
         if let Ok(s) = j.get("scheme") {
             cfg.scheme = scheme_from_json(s)?;
+        }
+        if let Ok(t) = j.get("topology") {
+            let s = t.as_str()?;
+            cfg.topology = TopologyKind::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown topology '{s}' (ring|hier|tree|auto)")
+            })?;
         }
         cfg.steps = j.get_or("steps", &Json::from(d.steps as usize)).as_usize()? as u64;
         cfg.lr = j.get_or("lr", &Json::from(d.lr as f64)).as_f64()? as f32;
@@ -287,6 +300,11 @@ impl RunConfig {
         if let Some(i) = a.get("interval") {
             let interval: usize = i.parse().context("--interval")?;
             self.scheme = SchemeKind::Covap { interval, ef: EfScheduler::default() };
+        }
+        if let Some(t) = a.get("topology") {
+            self.topology = TopologyKind::parse(t).ok_or_else(|| {
+                anyhow::anyhow!("unknown topology '{t}' (ring|hier|tree|auto)")
+            })?;
         }
         self.steps = a.get_parsed("steps", self.steps)?;
         self.lr = a.get_parsed("lr", self.lr)?;
@@ -379,6 +397,17 @@ impl RunConfig {
                     s.until_step
                 );
             }
+        }
+        // `hier` on a cluster without a second level still runs (the
+        // schedule degenerates to the flat ring) but the request is
+        // almost certainly a shape mistake — warn, don't fail.
+        if self.topology == TopologyKind::Hier && self.cluster.nodes == 1 {
+            eprintln!(
+                "warning: topology 'hier' on a single-node cluster ({}x{}) degenerates \
+                 to the flat intra-node ring (use --gpus or a cluster config with \
+                 nodes > 1 to model the hierarchy)",
+                self.cluster.nodes, self.cluster.gpus_per_node
+            );
         }
         // The silent-swap fix: profiling re-shards only covap@auto. Any
         // other scheme + profile_steps still *measures* CCR (the `profile`
@@ -750,6 +779,57 @@ mod tests {
         let bad =
             Args::parse(["--straggler", "1"].iter().map(|s| s.to_string())).unwrap();
         assert!(cfg.apply_args(&bad).is_err());
+    }
+
+    /// Satellite: `topology` parses from CLI and JSON (spec strings
+    /// round-trip like SchemeKind's), defaults to `auto`, rejects unknown
+    /// names, and `hier` on a single-node cluster still validates (warn,
+    /// not error).
+    #[test]
+    fn topology_knob_parses_everywhere() {
+        assert_eq!(RunConfig::default().topology, TopologyKind::Auto);
+
+        // CLI form
+        for (spec, want) in [
+            ("ring", TopologyKind::Ring),
+            ("hier", TopologyKind::Hier),
+            ("tree", TopologyKind::Tree),
+            ("auto", TopologyKind::Auto),
+        ] {
+            let args = Args::parse(
+                ["--topology", spec].iter().map(|s| s.to_string()),
+            )
+            .unwrap();
+            let mut cfg = RunConfig::default();
+            cfg.apply_args(&args).unwrap();
+            assert_eq!(cfg.topology, want, "--topology {spec}");
+            cfg.validate().unwrap();
+            // spec round-trip: what we store prints back to what parses
+            assert_eq!(TopologyKind::parse(cfg.topology.spec()), Some(want));
+        }
+
+        // JSON form
+        let j = Json::parse(r#"{"workers": 16, "topology": "hier"}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.topology, TopologyKind::Hier);
+        assert_eq!(cfg.cluster, ClusterSpec::ecs(16));
+        cfg.validate().unwrap();
+
+        // unknown names are rejected, not silently defaulted
+        let args = Args::parse(
+            ["--topology", "mesh"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_args(&args).is_err());
+        let j = Json::parse(r#"{"topology": "mesh"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+
+        // hier on a single-node cluster: warns but validates
+        let mut cfg = RunConfig::default();
+        cfg.cluster = ClusterSpec::new(1, 8);
+        cfg.topology = TopologyKind::Hier;
+        cfg.validate().unwrap();
     }
 
     /// Satellite regression: a non-COVAP scheme plus profile_steps must

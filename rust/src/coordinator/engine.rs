@@ -22,15 +22,17 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::comm::topology::{Collective, LevelBytes};
 use crate::compress::{CommRecord, Scheme, SchemeKind};
 use crate::config::{ExecBackend, Optimizer, RunConfig};
 use crate::coordinator::bucketizer::{bucketize, Bucket};
 use crate::covap::{shard_buckets, EfScheduler, IntervalController, IntervalDecision};
 use crate::data::{DataShard, SyntheticCorpus};
-use crate::exec::{MeasuredBreakdown, Pacer, RankTimeline, SpanKind, ThreadedExec};
+use crate::exec::{MeasuredBreakdown, PacerSet, RankTimeline, SpanKind, ThreadedExec};
+use crate::network::ClusterSpec;
 use crate::profiler::{Event, EventKind, Profile};
 use crate::runtime::ModelArtifacts;
-use crate::sim::{simulate_iteration, Breakdown, TensorCost};
+use crate::sim::{simulate_iteration_on, Breakdown, TensorCost};
 
 /// Default warmup window (steps) when `covap@auto` runs without an
 /// explicit `profile_steps`.
@@ -72,6 +74,12 @@ pub struct StepOutput {
     pub measured: Option<MeasuredBreakdown>,
     /// Total wire bytes per rank this step.
     pub wire_bytes: usize,
+    /// The collective traffic split by link level: bytes the *busiest*
+    /// rank sends over intra- vs inter-node links rotating this step's
+    /// frames through the configured topology (summed record accounting;
+    /// maxima per level taken independently, so the two columns may
+    /// belong to different ranks).
+    pub wire_levels: LevelBytes,
     /// Summed per-tensor compression overhead (per-worker mean).
     pub compress_s: f64,
 }
@@ -89,6 +97,14 @@ pub struct DpEngine {
     m: Vec<f32>,
     v: Vec<f32>,
     step: u64,
+    /// The resolved collective topology (from `cfg.topology` + cluster).
+    topo: &'static dyn Collective,
+    /// Worst-rank per-level hop *counts* through the topology's schedule
+    /// over the *modeled* cluster (independent maxima — the busiest NIC
+    /// and the busiest PCIe lane) — the per-level wire accounting both
+    /// backends stamp into their records (levels = counts × frame
+    /// length), precomputed once so stamping is two multiplications.
+    acct_hops: LevelBytes,
     /// The threaded rank executor (ExecBackend::Threaded only).
     exec: Option<ThreadedExec>,
     /// Profile of warmup steps (the CCR report; any scheme).
@@ -146,15 +162,27 @@ impl DpEngine {
         let params = init_params(manifest, cfg.seed);
         let scheme = cfg.scheme.build(cfg.workers, cfg.seed);
 
+        // Resolve the collective topology once: `auto` picks by cluster
+        // shape. The accounting schedule covers the modeled cluster; the
+        // executor's schedule must cover exactly `workers` ranks, so when
+        // the modeled cluster is bigger than the rank fleet it falls back
+        // to one-rank-per-node grouping (every hop inter-node — the
+        // pre-topology behavior).
+        let topo = cfg.topology.resolve(cfg.cluster);
+        let acct_hops = topo.allgather_schedule(cfg.cluster).max_level_hops();
         let exec = match cfg.backend {
             ExecBackend::Analytic => None,
             ExecBackend::Threaded => {
                 let models = arts.rank_models(cfg.workers)?;
-                let pacer = if cfg.pace_gbps > 0.0 {
-                    Some(Pacer::from_gbps(cfg.pace_gbps, 1.0, cfg.net.latency_s))
+                let pacers = PacerSet::from_net(cfg.pace_gbps, &cfg.net);
+                let exec_cluster = if cfg.cluster.world() == cfg.workers {
+                    cfg.cluster
                 } else {
-                    None
+                    ClusterSpec::new(cfg.workers, 1)
                 };
+                let sched = Arc::new(
+                    cfg.topology.resolve(exec_cluster).allgather_schedule(exec_cluster),
+                );
                 // the executor gets its own identical shard streams; the
                 // engine's copies go unused in this mode
                 Some(ThreadedExec::new(
@@ -162,7 +190,8 @@ impl DpEngine {
                     cfg.seed,
                     models,
                     make_shards(),
-                    pacer,
+                    sched,
+                    pacers,
                 ))
             }
         };
@@ -180,6 +209,8 @@ impl DpEngine {
             m: vec![0.0; n],
             v: vec![0.0; n],
             step: 0,
+            topo,
+            acct_hops,
             exec,
             controller,
             chosen_interval: None,
@@ -206,12 +237,24 @@ impl DpEngine {
     pub fn step(&mut self) -> Result<StepOutput> {
         let wall0 = Instant::now();
         self.apply_scenario();
-        let (losses, comp_walls, records, reduced, measured, timelines) =
+        let (losses, comp_walls, mut records, reduced, measured, timelines) =
             if self.exec.is_some() {
                 self.step_threaded()?
             } else {
                 self.step_analytic()?
             };
+
+        // Per-level wire accounting: route every record's measured frame
+        // length through the topology's hop schedule over the modeled
+        // cluster. Combiners cannot see the topology, so the engine
+        // stamps this — with the same arithmetic on both backends, which
+        // keeps the records backend-identical.
+        for r in &mut records {
+            r.levels = LevelBytes {
+                intra: self.acct_hops.intra * r.wire_bytes,
+                inter: self.acct_hops.inter * r.wire_bytes,
+            };
+        }
 
         // ---- optimizer ----
         self.apply_update(&reduced)?;
@@ -235,6 +278,11 @@ impl DpEngine {
         }
 
         let wire_bytes: usize = records.iter().map(|r| r.wire_bytes).sum();
+        let mut wire_levels = LevelBytes::default();
+        for r in &records {
+            wire_levels.intra += r.levels.intra;
+            wire_levels.inter += r.levels.inter;
+        }
         let compress_s: f64 = records.iter().map(|r| r.compress_s).sum();
         let loss = losses.iter().sum::<f32>() / losses.len() as f32;
         let out = StepOutput {
@@ -244,6 +292,7 @@ impl DpEngine {
             breakdown,
             measured,
             wire_bytes,
+            wire_levels,
             compress_s,
         };
         let step_now = self.step;
@@ -343,12 +392,7 @@ impl DpEngine {
                 self.cfg.pace_gbps = gbps;
                 self.cfg.net.nic_gbps = gbps;
                 if let Some(exec) = &self.exec {
-                    let pacer = if gbps > 0.0 {
-                        Some(Pacer::from_gbps(gbps, 1.0, self.cfg.net.latency_s))
-                    } else {
-                        None
-                    };
-                    exec.set_pacer(pacer);
+                    exec.set_pacers(PacerSet::from_net(gbps, &self.cfg.net));
                 }
             }
         }
@@ -419,7 +463,14 @@ impl DpEngine {
                 data_dependency: r.data_dependency,
             })
             .collect();
-        simulate_iteration(&self.cfg.net, self.cfg.cluster, t_before, &costs, self.cfg.policy)
+        simulate_iteration_on(
+            self.topo,
+            &self.cfg.net,
+            self.cfg.cluster,
+            t_before,
+            &costs,
+            self.cfg.policy,
+        )
     }
 
     /// Build this step's profiler events. Under the threaded backend these
@@ -466,7 +517,7 @@ impl DpEngine {
             // the dense-equivalent collective with rendezvous semantics
             let last = arrive.iter().copied().fold(f64::MIN, f64::max);
             let dense_bytes: usize = self.tensors.iter().map(|t| t.numel * 4).sum();
-            let dur = self.cfg.net.allreduce_s(dense_bytes, self.cfg.cluster);
+            let dur = self.topo.allreduce_s(&self.cfg.net, self.cfg.cluster, dense_bytes);
             for (w, &a) in arrive.iter().enumerate() {
                 events.push(Event {
                     worker: w,

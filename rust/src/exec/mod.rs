@@ -2,10 +2,11 @@
 //! with its own gradient buffer, data shard and per-rank error-feedback
 //! state, exchanging *serialized* compressed-payload frames (encoded
 //! in place by `RankCompressor::compress_into`, rotated through reusable
-//! slot buffers) over per-edge channels with the same chunk schedule as
-//! the in-place simulator path. Wire accounting is the measured frame
-//! length, shared with the analytic backend's records; the steady-state
-//! compress→encode→ring path is allocation-free (DESIGN.md §7).
+//! slot buffers) over a per-rank channel mesh, walking the configured
+//! topology's hop schedule (`comm::topology`). Wire accounting is the
+//! measured frame length — split per link level — shared with the
+//! analytic backend's records; the steady-state compress→encode→rotate
+//! path is allocation-free (DESIGN.md §7).
 //!
 //! This subsystem turns the repo's *simulated* overlap claims into
 //! *measured* ones: the analytic backend predicts a step's
@@ -19,8 +20,10 @@
 //! thing that differs is *time*.
 //!
 //! Module map:
-//! * [`ring`] — threaded ring collectives over per-edge channels
-//!   (bitwise-validated against `comm::ring_allreduce`) + wire pacing.
+//! * [`ring`] — threaded collectives over a per-rank channel mesh,
+//!   executing the configured topology's hop schedule
+//!   (`comm::topology`; bitwise-validated against `comm::ring_allreduce`
+//!   and the `comm::allgather` oracle) + per-level wire pacing.
 //! * [`rank`] — the compute/comm thread pair of one rank.
 //! * [`barrier`] — reusable sense-reversing barrier with skew measurement.
 //! * [`timeline`] — measured spans -> breakdowns.
@@ -35,7 +38,8 @@ pub mod validate;
 pub use barrier::Barrier;
 pub use rank::{fnv1a_f32, Cmd, RankStepResult, StepSpec};
 pub use ring::{
-    allgather_frames, allgather_payloads, make_links, ring_allreduce_threaded, Pacer, RingLink,
+    allgather_frames, allgather_payloads, allgather_sched, make_mesh, ring_allreduce_threaded,
+    GatherScratch, MeshLink, Pacer, PacerSet,
 };
 pub use timeline::{aggregate, breakdown, MeasuredBreakdown, RankTimeline, Span, SpanKind};
 pub use validate::{compare_backends, BackendComparison};
@@ -47,6 +51,7 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::comm::topology::HopSchedule;
 use crate::compress::{CommRecord, SchemeKind};
 use crate::coordinator::CommTensor;
 use crate::data::DataShard;
@@ -82,24 +87,28 @@ pub struct ThreadedExec {
 impl ThreadedExec {
     /// Spawn the rank fleet. `models` and `shards` are rank-major; the
     /// scheme pair is built per rank from identical `(kind, world, seed)`
-    /// so all replicas agree.
+    /// so all replicas agree. `sched` is the configured topology's
+    /// allgather hop schedule over exactly `world` ranks (shared by every
+    /// comm thread), `pacers` the per-level emulated wire.
     pub fn new(
         kind: SchemeKind,
         seed: u64,
         models: Vec<Box<dyn RankModel>>,
         shards: Vec<DataShard>,
-        pacer: Option<Pacer>,
+        sched: Arc<HopSchedule>,
+        pacers: PacerSet,
     ) -> ThreadedExec {
         let world = models.len();
         assert!(world >= 1);
         assert_eq!(shards.len(), world);
+        assert_eq!(sched.world(), world, "schedule must cover exactly the rank fleet");
         let barrier = Arc::new(Barrier::new(world));
-        let links = make_links(world);
+        let links = make_mesh(world);
         let (res_tx, res_rx) = channel::<RankStepResult>();
         let mut cmd_tx = Vec::with_capacity(world);
         let mut computes = Vec::with_capacity(world);
         let mut comms = Vec::with_capacity(world);
-        let mut ranks: Vec<(Box<dyn RankModel>, DataShard, RingLink)> = models
+        let mut ranks: Vec<(Box<dyn RankModel>, DataShard, MeshLink)> = models
             .into_iter()
             .zip(shards)
             .zip(links)
@@ -124,7 +133,8 @@ impl ThreadedExec {
                 seed,
                 kind: kind.clone(),
                 link,
-                pacer,
+                sched: sched.clone(),
+                pacers,
                 res_tx: res_tx.clone(),
             };
             let (th, ch) = rank::spawn_rank(compute, comm);
@@ -152,13 +162,13 @@ impl ThreadedExec {
         }
     }
 
-    /// Replace the emulated wire pacer on every rank (mid-run bandwidth
-    /// change). Cmd/Work queues are FIFO, so a change sent before a step's
-    /// `Cmd::Step` applies to that step — in lockstep with the engine's
-    /// in-place `cfg.net` update for the modeled side.
-    pub fn set_pacer(&self, pacer: Option<Pacer>) {
+    /// Replace the emulated per-level wire pacers on every rank (mid-run
+    /// bandwidth change). Cmd/Work queues are FIFO, so a change sent
+    /// before a step's `Cmd::Step` applies to that step — in lockstep
+    /// with the engine's in-place `cfg.net` update for the modeled side.
+    pub fn set_pacers(&self, pacers: PacerSet) {
         for tx in &self.cmd_tx {
-            let _ = tx.send(Cmd::SetPacer(pacer));
+            let _ = tx.send(Cmd::SetPacer(pacers));
         }
     }
 
@@ -265,6 +275,8 @@ mod tests {
     use crate::runtime::{synthetic, SyntheticModel, SyntheticSpec};
 
     fn setup(world: usize, kind: &SchemeKind, seed: u64) -> (ThreadedExec, usize) {
+        use crate::comm::TopologyKind;
+        use crate::network::ClusterSpec;
         let n = 400usize;
         let spec = SyntheticSpec::new(0xBEEF, 1);
         let models: Vec<Box<dyn RankModel>> = (0..world)
@@ -273,7 +285,12 @@ mod tests {
         let corpus = SyntheticCorpus::new(64);
         let shards: Vec<DataShard> =
             (0..world).map(|w| DataShard::new(corpus.clone(), seed, w, 2, 9)).collect();
-        (ThreadedExec::new(kind.clone(), seed, models, shards, None), n)
+        let cluster = ClusterSpec::new(world, 1);
+        let sched =
+            Arc::new(TopologyKind::Auto.resolve(cluster).allgather_schedule(cluster));
+        let exec =
+            ThreadedExec::new(kind.clone(), seed, models, shards, sched, PacerSet::default());
+        (exec, n)
     }
 
     fn tensors_of(n: usize) -> Arc<Vec<CommTensor>> {

@@ -1,19 +1,20 @@
 //! The per-rank worker: one OS *compute* thread (data shard -> backward
 //! pass -> per-tensor compression, wait-free) feeding one OS *comm* thread
-//! (serialized-frame exchange over the ring + decode-free combine into the
-//! dense update) through a FIFO bucket queue — the executable form of the
-//! paper's Fig. 1b/1d two-stream picture. The ring moves encoded byte
-//! frames (`RankCompressor::compress_into` writes them directly), so the
-//! timeline's moved-bytes and the records' wire accounting are
-//! measurements of real serialized volume.
+//! (serialized-frame exchange over the configured topology's hop schedule
+//! + decode-free combine into the dense update) through a FIFO bucket
+//! queue — the executable form of the paper's Fig. 1b/1d two-stream
+//! picture. The mesh moves encoded byte frames
+//! (`RankCompressor::compress_into` writes them directly), so the
+//! timeline's moved-bytes — now split per link level — and the records'
+//! wire accounting are measurements of real serialized volume.
 //!
 //! Buffer lifecycle (DESIGN.md §7): the compute thread compresses into
 //! frame buffers recycled from the comm thread (a return channel of spent
-//! `Vec<u8>`s), the ring rotates frames through the comm thread's
+//! `Vec<u8>`s), the collective rotates frames through the comm thread's
 //! persistent rank-major slots, and the combiner folds the slot bytes into
 //! a persistent update buffer — so a steady-state step allocates nothing
-//! on the compress→encode→ring path beyond the mpsc channel's internal
-//! queue blocks.
+//! on the compress→encode→collective path beyond the mpsc channel's
+//! internal queue blocks.
 //!
 //! Under `Policy::Overlap` the compute thread enqueues each tensor the
 //! moment its gradient+frame is ready, so communication of early tensors
@@ -27,12 +28,13 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::comm::topology::{HopSchedule, LevelBytes};
 use crate::compress::rank::{build_rank_pair, RankCombiner, RankCompressor, Scratch};
 use crate::compress::{CommRecord, SchemeKind};
 use crate::coordinator::CommTensor;
 use crate::data::DataShard;
 use crate::exec::barrier::Barrier;
-use crate::exec::ring::{allgather_frames, Pacer, RingLink};
+use crate::exec::ring::{allgather_sched, GatherScratch, MeshLink, PacerSet};
 use crate::exec::timeline::{RankTimeline, Span, SpanKind};
 use crate::runtime::RankModel;
 use crate::sim::Policy;
@@ -49,8 +51,9 @@ pub enum Cmd {
         old: Vec<(usize, usize)>,
         new: Vec<(usize, usize)>,
     },
-    /// Replace the emulated wire pacer (mid-run bandwidth change).
-    SetPacer(Option<Pacer>),
+    /// Replace the emulated per-level wire pacers (mid-run bandwidth
+    /// change).
+    SetPacer(PacerSet),
     /// Set this rank's synthetic compute inflation (straggler injection;
     /// never changes numerics).
     SetWork(u32),
@@ -102,7 +105,7 @@ enum Work {
     },
     Finish { loss: f32, comp_wall_s: f64, spans: Vec<Span>, barrier_wait_s: f64 },
     Reconfig(SchemeKind),
-    SetPacer(Option<Pacer>),
+    SetPacer(PacerSet),
     Stop,
 }
 
@@ -122,8 +125,11 @@ pub(crate) struct CommCtx {
     pub workers: usize,
     pub seed: u64,
     pub kind: SchemeKind,
-    pub link: RingLink,
-    pub pacer: Option<Pacer>,
+    pub link: MeshLink,
+    /// The configured topology's allgather hop schedule (built once per
+    /// executor; identical on every rank).
+    pub sched: Arc<HopSchedule>,
+    pub pacers: PacerSet,
     pub res_tx: Sender<RankStepResult>,
 }
 
@@ -290,7 +296,7 @@ fn comm_main(
     // persistent hot-path buffers (capacities grow to the largest tensor,
     // then every later step reuses them)
     let mut slots: Vec<Vec<u8>> = (0..ctx.workers).map(|_| Vec::new()).collect();
-    let mut spare: Vec<u8> = Vec::new();
+    let mut gather = GatherScratch::new();
     let mut scratch = Scratch::new();
     let mut update: Vec<f32> = Vec::new();
     // per-step state
@@ -300,6 +306,7 @@ fn comm_main(
     let mut records: Vec<CommRecord> = Vec::new();
     let mut comm_spans: Vec<Span> = Vec::new();
     let mut moved = 0usize;
+    let mut moved_levels = LevelBytes::default();
 
     while let Ok(work) = work_rx.recv() {
         match work {
@@ -309,7 +316,7 @@ fn comm_main(
                 combiner = cb;
                 ctx.kind = kind;
             }
-            Work::SetPacer(p) => ctx.pacer = p,
+            Work::SetPacer(p) => ctx.pacers = p,
             Work::Begin { step: s, epoch: e, param_len } => {
                 step = s;
                 epoch = e;
@@ -318,17 +325,18 @@ fn comm_main(
                 records.clear();
                 comm_spans.clear();
                 moved = 0;
+                moved_levels = LevelBytes::default();
             }
             Work::Tensor { idx, offset, numel, frame, compress_s, dep } => {
                 let c0 = epoch.elapsed().as_secs_f64();
-                let sent = allgather_frames(
+                let lb = allgather_sched(
                     ctx.rank,
-                    ctx.workers,
+                    &ctx.sched,
                     &frame,
                     &mut slots,
-                    &mut spare,
+                    &mut gather,
                     &ctx.link,
-                    ctx.pacer.as_ref(),
+                    &ctx.pacers,
                 );
                 let record = combiner.combine_into(
                     idx,
@@ -343,7 +351,9 @@ fn comm_main(
                     reduced[offset..offset + numel].copy_from_slice(&update);
                 }
                 records.push(record);
-                moved += sent;
+                moved += lb.total();
+                moved_levels.intra += lb.intra;
+                moved_levels.inter += lb.inter;
                 // the spent frame buffer flows back for reuse (receiver
                 // may be gone during shutdown — then it just drops)
                 let _ = recycle_tx.send(frame);
@@ -365,6 +375,7 @@ fn comm_main(
                     rank: ctx.rank,
                     spans: all_spans,
                     moved_bytes: moved,
+                    moved_levels,
                     barrier_wait_s,
                 };
                 let checksum = fnv1a_f32(&reduced);

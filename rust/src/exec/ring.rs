@@ -1,72 +1,77 @@
-//! Threaded ring collectives over per-edge FIFO channels.
+//! Threaded collectives over a per-rank channel mesh, driven by the
+//! topology layer's hop schedules.
 //!
-//! Each directed ring edge `r -> (r+1) % P` is one mpsc channel; a rank's
-//! [`RingLink`] bundles its outgoing sender and incoming receiver. The
-//! dense allreduce follows [`crate::comm::RingSchedule`] chunk-for-chunk —
-//! the same schedule the in-place [`crate::comm::ring_allreduce`] walks —
-//! so the two are **bitwise identical** (property-tested below): per chunk
-//! the sum is the same sequential chain, only executed by P real threads.
+//! Every rank owns one [`MeshLink`]: a sender to every other rank and a
+//! single inbound queue. [`allgather_sched`] executes a
+//! [`crate::comm::topology::HopSchedule`] — flat ring, hierarchical
+//! 2-level, or binomial tree; the executor neither knows nor cares which —
+//! moving this rank's encoded wire frames into the caller's **persistent
+//! slot buffers** (rank-major). The schedule contract (each rank receives
+//! each slot exactly once, sources hold what they forward, dependencies
+//! point to strictly earlier rounds) makes execution deadlock-free with
+//! unbounded channels: a rank sends everything it can, blocks only for
+//! frames whose producing hop is strictly earlier, and stores arrivals by
+//! their slot tag regardless of arrival order.
 //!
-//! [`allgather_frames`] is the compressed-frame rotation: every rank
-//! contributes one encoded wire frame and the ring moves the raw bytes —
-//! what a real transport would see — into the caller's **persistent slot
-//! buffers** (rank-major). Buffer discipline is allocation-free in steady
-//! state: each hop copies the outgoing slot into a `spare` send buffer
-//! (the one unavoidable copy — the slot must be retained for combining
-//! while its bytes ship), sends the spare's allocation through the
-//! channel, adopts the incoming frame's allocation as the slot
-//! (zero-copy receive via swap) and keeps the displaced slot buffer as
-//! the next spare — so `Vec` capacities circulate around the ring and,
-//! once every buffer has grown to the largest frame seen, no hop
-//! allocates. (The mpsc channel's internal
-//! block allocation is the one remaining transport-layer cost; see
-//! DESIGN.md §7.) Hop pacing and the `sent` accounting both use the
-//! measured frame length, so the bytes charged are the bytes a rank
-//! actually put on the wire, not a size model. [`Pacer`] optionally
-//! throttles every hop to a modeled wire bandwidth + latency so measured
-//! timelines can emulate a slow fabric on a fast testbed.
+//! Buffer discipline is allocation-free in steady state, extending the
+//! DESIGN.md §7 rotation contract to arbitrary topologies: each send
+//! copies the outgoing slot into a spare buffer popped from a per-thread
+//! pool (the one unavoidable copy — the slot must be retained while its
+//! bytes ship), ships the spare's allocation through the channel, and
+//! each receive adopts the incoming frame's allocation as the slot,
+//! pushing the displaced buffer back into the pool — so `Vec` capacities
+//! circulate through the mesh and, once every buffer has grown to the
+//! largest frame seen, no hop allocates. Because mesh receivers see all
+//! senders, a fast peer may race one collective ahead; frames carry an
+//! epoch tag and early arrivals park in the scratch's pending queue (a
+//! peer can never be **two** collectives ahead — completing a collective
+//! requires a frame originating at every other rank).
 //!
-//! [`allgather_payloads`] — the `Payload`-level wrapper over
-//! [`allgather_frames`] — is retained as the property-test oracle.
+//! Per-hop pacing is **per level**: a [`PacerSet`] throttles intra-node
+//! hops at the modeled PCIe rate and inter-node hops at the emulated NIC
+//! rate, so measured timelines reproduce a hierarchical fabric's regime
+//! on a flat testbed. Sent-byte accounting is per level too
+//! ([`LevelBytes`]) and uses measured frame lengths, not a size model.
+//!
+//! The dense [`ring_allreduce_threaded`] still follows
+//! [`crate::comm::RingSchedule`] chunk-for-chunk — bitwise-identical to
+//! the in-place [`crate::comm::ring_allreduce`] (property-tested below).
+//! [`allgather_frames`]/[`allgather_payloads`] are the flat-ring oracle
+//! wrappers retained for tests and one-shot callers.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
-use crate::comm::{rot_recv, rot_send, RingSchedule};
+use crate::comm::topology::{Collective, HopSchedule, LevelBytes, LinkLevel, RING};
+use crate::comm::RingSchedule;
 use crate::compress::Payload;
+use crate::network::{ClusterSpec, NetworkModel};
 
-/// One frame on a ring edge.
+/// One frame on a mesh edge.
 pub enum Frame {
-    /// A chunk of a dense f32 collective.
+    /// A chunk of a dense f32 collective (single-sender ring order).
     Chunk(Vec<f32>),
-    /// A serialized compressed-payload frame ([`Payload::encode_into`]).
-    Bytes(Vec<u8>),
+    /// A serialized compressed-payload frame ([`Payload::encode_into`]):
+    /// the collective's sequence number, the global slot id whose bytes
+    /// these are, and the bytes themselves.
+    Slot { epoch: u64, slot: u32, data: Vec<u8> },
 }
 
-/// One rank's pair of ring-edge endpoints.
-pub struct RingLink {
-    /// To rank (r + 1) % P.
-    pub tx: Sender<Frame>,
-    /// From rank (r - 1 + P) % P.
+/// One rank's endpoints: a sender to every rank plus its inbound queue.
+pub struct MeshLink {
+    /// `txs[d]` sends to rank `d` (the self entry is unused).
+    pub txs: Vec<Sender<Frame>>,
+    /// All peers' frames arrive here, slot-tagged.
     pub rx: Receiver<Frame>,
 }
 
-/// Build the P directed edges; element r is rank r's link.
-pub fn make_links(p: usize) -> Vec<RingLink> {
+/// Build the full mesh; element `r` is rank `r`'s link.
+pub fn make_mesh(p: usize) -> Vec<MeshLink> {
     assert!(p >= 1);
-    let mut txs = Vec::with_capacity(p);
-    let mut rxs = Vec::with_capacity(p);
-    for _ in 0..p {
-        let (tx, rx) = channel::<Frame>();
-        txs.push(tx);
-        rxs.push(rx);
-    }
-    // rank r sends on edge r (into r+1) and receives on edge r-1.
-    rxs.rotate_right(1);
-    txs.into_iter()
-        .zip(rxs)
-        .map(|(tx, rx)| RingLink { tx, rx })
-        .collect()
+    let (txs, rxs): (Vec<Sender<Frame>>, Vec<Receiver<Frame>>) =
+        (0..p).map(|_| channel::<Frame>()).unzip();
+    rxs.into_iter().map(|rx| MeshLink { txs: txs.clone(), rx }).collect()
 }
 
 /// Emulated wire pacing: every hop of `bytes` costs
@@ -91,40 +96,167 @@ impl Pacer {
     }
 }
 
-fn recv_chunk(link: &RingLink) -> Vec<f32> {
+/// Per-link-level pacers: intra-node hops and inter-node hops emulate
+/// different fabrics (`None` = move bytes at memcpy speed).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PacerSet {
+    pub intra: Option<Pacer>,
+    pub inter: Option<Pacer>,
+}
+
+impl PacerSet {
+    /// Pace both levels identically (the pre-topology single-wire knob).
+    pub fn uniform(p: Option<Pacer>) -> PacerSet {
+        PacerSet { intra: p, inter: p }
+    }
+
+    /// Emulate a fabric whose inter-node wire runs at `gbps` Gbit/s:
+    /// intra-node hops run faster by the network model's intra/inter
+    /// effective-bandwidth ratio, so the emulated hierarchy matches the
+    /// modeled one. `gbps <= 0` disables pacing entirely.
+    pub fn from_net(gbps: f64, net: &NetworkModel) -> PacerSet {
+        if gbps <= 0.0 {
+            return PacerSet::default();
+        }
+        let inter = Pacer::from_gbps(gbps, 1.0, net.latency_s);
+        let intra = Pacer {
+            bytes_per_s: (inter.bytes_per_s * net.intra_bps() / net.effective_bps()).max(1.0),
+            latency_s: NetworkModel::INTRA_LATENCY_S,
+        };
+        PacerSet { intra: Some(intra), inter: Some(inter) }
+    }
+
+    pub fn level(&self, l: LinkLevel) -> Option<&Pacer> {
+        match l {
+            LinkLevel::Intra => self.intra.as_ref(),
+            LinkLevel::Inter => self.inter.as_ref(),
+        }
+    }
+}
+
+/// Per-thread reusable state for [`allgather_sched`]: the slot-arrival
+/// bitmap, the circulating spare-buffer pool, the parking queue for
+/// frames that arrive one collective early, and the epoch counter (all
+/// ranks run collectives in identical order, so counters agree without
+/// coordination). Capacity-only state — contents never survive a call.
+#[derive(Default)]
+pub struct GatherScratch {
+    have: Vec<bool>,
+    spares: Vec<Vec<u8>>,
+    pending: VecDeque<(u32, Vec<u8>)>,
+    epoch: u64,
+}
+
+impl GatherScratch {
+    pub fn new() -> GatherScratch {
+        GatherScratch::default()
+    }
+}
+
+fn recv_chunk(link: &MeshLink) -> Vec<f32> {
     match link.rx.recv() {
         Ok(Frame::Chunk(v)) => v,
-        Ok(Frame::Bytes(_)) => panic!("protocol error: expected Chunk, got Bytes"),
-        Err(_) => panic!("ring peer disconnected mid-collective"),
+        Ok(Frame::Slot { .. }) => panic!("protocol error: expected Chunk, got Slot"),
+        Err(_) => panic!("mesh peer disconnected mid-collective"),
     }
 }
 
-fn recv_bytes(link: &RingLink) -> Vec<u8> {
-    match link.rx.recv() {
-        Ok(Frame::Bytes(b)) => b,
-        Ok(Frame::Chunk(_)) => panic!("protocol error: expected Bytes, got Chunk"),
-        Err(_) => panic!("ring peer disconnected mid-collective"),
-    }
+/// Adopt an arrived frame: its allocation becomes the slot, the displaced
+/// slot buffer joins the spare pool.
+fn store_slot(
+    slot: usize,
+    mut data: Vec<u8>,
+    slots: &mut [Vec<u8>],
+    have: &mut [bool],
+    spares: &mut Vec<Vec<u8>>,
+    received: &mut usize,
+) {
+    debug_assert!(!have[slot], "slot {slot} delivered twice");
+    std::mem::swap(&mut slots[slot], &mut data);
+    spares.push(data);
+    have[slot] = true;
+    *received += 1;
 }
 
-/// One byte-frame hop: copy `src` into `spare`, ship the spare's
-/// allocation down the ring edge (pacing on the sender side), and return
-/// the incoming frame. The caller copies the incoming bytes into its slot
-/// and adopts the returned buffer as the next spare — the allocation
-/// circulates instead of being dropped.
-fn hop_bytes(
-    link: &RingLink,
-    pacer: Option<&Pacer>,
-    src: &[u8],
-    spare: &mut Vec<u8>,
-) -> Vec<u8> {
-    spare.clear();
-    spare.extend_from_slice(src);
-    if let Some(p) = pacer {
-        p.pace(src.len());
+/// Execute one hop schedule from `rank`'s perspective: `mine` is this
+/// rank's encoded wire frame; after the call the caller's `slots` hold
+/// the rank-major frames of all ranks (including a copy of `mine` at
+/// `slots[rank]`). Returns the per-level bytes this rank sent — the
+/// measured wire traffic.
+pub fn allgather_sched(
+    rank: usize,
+    sched: &HopSchedule,
+    mine: &[u8],
+    slots: &mut [Vec<u8>],
+    gs: &mut GatherScratch,
+    link: &MeshLink,
+    pacers: &PacerSet,
+) -> LevelBytes {
+    let p = sched.world();
+    assert_eq!(slots.len(), p, "one slot per rank");
+    assert!(rank < p);
+    slots[rank].clear();
+    slots[rank].extend_from_slice(mine);
+    let epoch = gs.epoch;
+    gs.epoch += 1;
+    let mut sent = LevelBytes::default();
+    if p <= 1 {
+        return sent;
     }
-    link.tx.send(Frame::Bytes(std::mem::take(spare))).expect("ring send");
-    recv_bytes(link)
+    gs.have.clear();
+    gs.have.resize(p, false);
+    gs.have[rank] = true;
+    let mut received = 0usize;
+    let expected = sched.recv_count(rank);
+    // frames of THIS collective that arrived while the previous one was
+    // still draining
+    while let Some((slot, data)) = gs.pending.pop_front() {
+        store_slot(slot as usize, data, slots, &mut gs.have, &mut gs.spares, &mut received);
+    }
+    let recv_one = |slots: &mut [Vec<u8>],
+                        have: &mut Vec<bool>,
+                        spares: &mut Vec<Vec<u8>>,
+                        pending: &mut VecDeque<(u32, Vec<u8>)>,
+                        received: &mut usize| {
+        match link.rx.recv() {
+            Ok(Frame::Slot { epoch: e, slot, data }) => {
+                if e == epoch {
+                    store_slot(slot as usize, data, slots, have, spares, received);
+                } else {
+                    debug_assert_eq!(e, epoch + 1, "peer ran >1 collective ahead");
+                    pending.push_back((slot, data));
+                }
+            }
+            Ok(Frame::Chunk(_)) => panic!("protocol error: expected Slot, got Chunk"),
+            Err(_) => panic!("mesh peer disconnected mid-collective"),
+        }
+    };
+    for hop in sched.hops() {
+        if hop.src as usize != rank {
+            continue;
+        }
+        let slot = hop.slot as usize;
+        // a forwarded slot's producing hop is strictly earlier: block
+        // until it lands (storing whatever else arrives meanwhile)
+        while !gs.have[slot] {
+            recv_one(slots, &mut gs.have, &mut gs.spares, &mut gs.pending, &mut received);
+        }
+        let mut spare = gs.spares.pop().unwrap_or_default();
+        spare.clear();
+        spare.extend_from_slice(&slots[slot]);
+        let bytes = spare.len();
+        if let Some(pc) = pacers.level(hop.level) {
+            pc.pace(bytes);
+        }
+        link.txs[hop.dst as usize]
+            .send(Frame::Slot { epoch, slot: hop.slot, data: spare })
+            .expect("mesh send");
+        sent.add(hop.level, bytes);
+    }
+    while received < expected {
+        recv_one(slots, &mut gs.have, &mut gs.spares, &mut gs.pending, &mut received);
+    }
+    sent
 }
 
 /// Chunked ring AllReduce (sum), threaded: call from every rank's comm
@@ -134,12 +266,13 @@ fn hop_bytes(
 /// [`RingSchedule`], same `own += incoming` accumulation order per chunk.
 /// Chunk buffers are recycled hop-to-hop (one spare per call, refilled
 /// with the incoming chunk's allocation), so a 2(P-1)-hop collective
-/// allocates O(1) buffers instead of O(P).
+/// allocates O(1) buffers instead of O(P). Single-rank worlds are a
+/// no-op.
 pub fn ring_allreduce_threaded(
     rank: usize,
     world: usize,
     buf: &mut [f32],
-    link: &RingLink,
+    link: &MeshLink,
     pacer: Option<&Pacer>,
 ) -> usize {
     let n = buf.len();
@@ -147,6 +280,7 @@ pub fn ring_allreduce_threaded(
         return 0;
     }
     let sched = RingSchedule::new(world, n);
+    let next = (rank + 1) % world;
     let prev = (rank + world - 1) % world;
     let mut sent = 0usize;
     let mut spare: Vec<f32> = Vec::new();
@@ -161,7 +295,7 @@ pub fn ring_allreduce_threaded(
             p.pace(bytes);
         }
         sent += bytes;
-        link.tx.send(Frame::Chunk(std::mem::take(&mut spare))).expect("ring send");
+        link.txs[next].send(Frame::Chunk(std::mem::take(&mut spare))).expect("ring send");
         let inc = recv_chunk(link);
         let c_in = sched.rs_chunk(prev, s);
         let range = sched.chunk(c_in);
@@ -181,7 +315,7 @@ pub fn ring_allreduce_threaded(
             p.pace(bytes);
         }
         sent += bytes;
-        link.tx.send(Frame::Chunk(std::mem::take(&mut spare))).expect("ring send");
+        link.txs[next].send(Frame::Chunk(std::mem::take(&mut spare))).expect("ring send");
         let inc = recv_chunk(link);
         let c_in = sched.ag_chunk(prev, s);
         let range = sched.chunk(c_in);
@@ -192,41 +326,23 @@ pub fn ring_allreduce_threaded(
     sent
 }
 
-/// Serialized ring AllGather over **reusable frame buffers**: every rank
-/// contributes its encoded wire frame `mine`; after P-1 rotation hops the
-/// caller's `slots` hold the rank-major frames of all ranks (including a
-/// copy of `mine` at `slots[rank]`). `spare` is the persistent send
-/// buffer; its allocation is shipped each hop and replaced by the
-/// incoming frame's (capacities circulate — see module docs). Returns the
-/// frame bytes this rank sent — the measured wire traffic.
+/// Flat-ring frame AllGather — [`allgather_sched`] specialized to the
+/// one-level ring, building its schedule per call. The oracle path for
+/// tests and one-shot callers; the executor caches the configured
+/// topology's schedule and calls [`allgather_sched`] directly. Returns
+/// total frame bytes sent.
 pub fn allgather_frames(
     rank: usize,
     world: usize,
     mine: &[u8],
     slots: &mut [Vec<u8>],
-    spare: &mut Vec<u8>,
-    link: &RingLink,
+    gs: &mut GatherScratch,
+    link: &MeshLink,
     pacer: Option<&Pacer>,
 ) -> usize {
-    assert_eq!(slots.len(), world, "one slot per rank");
-    slots[rank].clear();
-    slots[rank].extend_from_slice(mine);
-    if world <= 1 {
-        return 0;
-    }
-    let mut sent = 0usize;
-    for s in 0..world - 1 {
-        let c_out = rot_send(world, rank, s);
-        sent += slots[c_out].len();
-        let mut inc = hop_bytes(link, pacer, &slots[c_out], spare);
-        let c_in = rot_recv(world, rank, s);
-        debug_assert_ne!(c_in, rank, "rotation must never overwrite our own slot");
-        // adopt the incoming buffer as the slot (zero-copy receive); the
-        // displaced slot buffer becomes the next hop's spare
-        std::mem::swap(&mut slots[c_in], &mut inc);
-        *spare = inc;
-    }
-    sent
+    let sched = RING.allgather_schedule(ClusterSpec::new(world, 1));
+    allgather_sched(rank, &sched, mine, slots, gs, link, &PacerSet::uniform(pacer.copied()))
+        .total()
 }
 
 /// `Payload`-level oracle wrapper over [`allgather_frames`]: encode,
@@ -237,16 +353,16 @@ pub fn allgather_payloads(
     rank: usize,
     world: usize,
     mine: Payload,
-    link: &RingLink,
+    link: &MeshLink,
     pacer: Option<&Pacer>,
 ) -> (Vec<Payload>, usize) {
     let frame = mine.encode();
     let mut slots: Vec<Vec<u8>> = (0..world).map(|_| Vec::new()).collect();
-    let mut spare = Vec::new();
-    let sent = allgather_frames(rank, world, &frame, &mut slots, &mut spare, link, pacer);
+    let mut gs = GatherScratch::new();
+    let sent = allgather_frames(rank, world, &frame, &mut slots, &mut gs, link, pacer);
     let gathered = slots
         .iter()
-        .map(|f| Payload::decode(f).expect("corrupt ring frame"))
+        .map(|f| Payload::decode(f).expect("corrupt mesh frame"))
         .collect();
     (gathered, sent)
 }
@@ -254,6 +370,7 @@ pub fn allgather_payloads(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::topology::TopologyKind;
     use crate::comm::ring_allreduce;
     use crate::util::prop;
     use crate::util::rng::Rng;
@@ -261,7 +378,7 @@ mod tests {
     /// Run the threaded allreduce across P scoped threads.
     fn run_threaded(bufs: &[Vec<f32>]) -> (Vec<Vec<f32>>, Vec<usize>) {
         let p = bufs.len();
-        let links = make_links(p);
+        let links = make_mesh(p);
         std::thread::scope(|s| {
             let handles: Vec<_> = links
                 .into_iter()
@@ -285,9 +402,9 @@ mod tests {
         })
     }
 
-    /// The cross-validation the issue pins down: the threaded ring must be
-    /// bitwise identical to the in-place simulator ring — uneven splits,
-    /// n < p, p = 1 and empty buffers included.
+    /// The cross-validation the original issue pinned down: the threaded
+    /// ring must be bitwise identical to the in-place simulator ring —
+    /// uneven splits, n < p, p = 1 and empty buffers included.
     #[test]
     fn threaded_ring_bitwise_matches_inplace() {
         prop::check("exec-ring==comm-ring", 0x51D, 40, |rng: &mut Rng| {
@@ -332,11 +449,154 @@ mod tests {
         }
     }
 
+    /// Run a schedule-driven frame allgather across P scoped threads:
+    /// `rounds` consecutive collectives per thread with NO cross-thread
+    /// synchronization between them (exercising the epoch parking path).
+    /// Returns per-rank (slots after every round, per-level sent bytes of
+    /// the last round).
+    fn run_sched(
+        sched: &HopSchedule,
+        rounds: &[Vec<Vec<u8>>],
+    ) -> Vec<(Vec<Vec<Vec<u8>>>, LevelBytes)> {
+        let p = sched.world();
+        let links = make_mesh(p);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = links
+                .into_iter()
+                .enumerate()
+                .map(|(r, link)| {
+                    s.spawn(move || {
+                        let mut slots: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+                        let mut gs = GatherScratch::new();
+                        let mut got = Vec::new();
+                        let mut last = LevelBytes::default();
+                        let pacers = PacerSet::default();
+                        for frames in rounds {
+                            last = allgather_sched(
+                                r, sched, &frames[r], &mut slots, &mut gs, &link, &pacers,
+                            );
+                            got.push(slots.clone());
+                        }
+                        (got, last)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+        })
+    }
+
+    /// The satellite property test: every topology's frame allgather is
+    /// bitwise-equal to the `comm::allgather` oracle (the rank-major
+    /// payload set itself) for payloads of every variant — including
+    /// `Payload::Empty` frames — over degenerate worlds (p = 1,
+    /// nodes = 1, gpus_per_node = 1) and back-to-back collectives.
+    #[test]
+    fn every_topology_matches_allgather_oracle() {
+        let shapes = [
+            ClusterSpec::new(1, 1),
+            ClusterSpec::new(1, 4),
+            ClusterSpec::new(4, 1),
+            ClusterSpec::new(2, 2),
+            ClusterSpec::new(3, 2),
+            ClusterSpec::new(2, 3),
+        ];
+        let mut rng = Rng::seed(0x7070);
+        for c in shapes {
+            let p = c.world();
+            for kind in TopologyKind::all() {
+                let sched = kind.resolve(c).allgather_schedule(c);
+                // three consecutive rounds of fresh random payloads — the
+                // third one all-Empty so zero-length frames rotate too
+                let rounds: Vec<Vec<Payload>> = (0..3usize)
+                    .map(|round| {
+                        (0..p)
+                            .map(|r| {
+                                if round == 2 {
+                                    return Payload::Empty;
+                                }
+                                let n = rng.below(9);
+                                match (r + round) % 4 {
+                                    0 => Payload::Dense(prop::vec_f32(&mut rng, n, 1.0)),
+                                    1 => Payload::Empty,
+                                    2 => Payload::Sparse {
+                                        idx: vec![1, 7],
+                                        val: vec![0.5, -2.0],
+                                    },
+                                    _ => Payload::Sign {
+                                        scale: 0.25,
+                                        bits: vec![0b1011_0010],
+                                        n: 7,
+                                    },
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let frame_rounds: Vec<Vec<Vec<u8>>> = rounds
+                    .iter()
+                    .map(|ps| ps.iter().map(|p| p.encode()).collect())
+                    .collect();
+                let results = run_sched(&sched, &frame_rounds);
+                for (r, (per_round, _)) in results.iter().enumerate() {
+                    for (round, got) in per_round.iter().enumerate() {
+                        // oracle: the rank-major frames themselves
+                        assert_eq!(
+                            got, &frame_rounds[round],
+                            "{} {c:?} rank {r} round {round}",
+                            kind.spec()
+                        );
+                        for (slot, f) in got.iter().enumerate() {
+                            assert_eq!(
+                                Payload::decode(f).unwrap(),
+                                rounds[round][slot],
+                                "{} {c:?}: payload must survive the mesh bitwise",
+                                kind.spec()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sent-byte accounting matches the schedule's per-level arithmetic
+    /// for uniform frames, and the hierarchy really moves fewer
+    /// inter-node bytes than the flat ring.
+    #[test]
+    fn sent_bytes_match_schedule_accounting() {
+        let c = ClusterSpec::new(2, 2);
+        let frame = vec![0xABu8; 50];
+        let frames: Vec<Vec<Vec<u8>>> = vec![(0..4).map(|_| frame.clone()).collect()];
+        let mut inter = std::collections::BTreeMap::new();
+        for kind in TopologyKind::all() {
+            let sched = kind.resolve(c).allgather_schedule(c);
+            let results = run_sched(&sched, &frames);
+            for (r, (_, sent)) in results.iter().enumerate() {
+                assert_eq!(
+                    *sent,
+                    sched.level_bytes_uniform(r, frame.len()),
+                    "{} rank {r}",
+                    kind.spec()
+                );
+            }
+            inter.insert(
+                kind.spec(),
+                results.iter().map(|(_, s)| s.inter).max().unwrap(),
+            );
+        }
+        assert!(
+            inter["hier"] < inter["ring"],
+            "hier inter bytes {} must undercut ring {}",
+            inter["hier"],
+            inter["ring"]
+        );
+    }
+
     /// Run a payload allgather across P scoped threads; returns the
     /// rank-major gathered payloads and per-rank sent bytes.
     fn run_allgather(payloads: Vec<Payload>) -> (Vec<Vec<Payload>>, Vec<usize>) {
         let p = payloads.len();
-        let links = make_links(p);
+        let links = make_mesh(p);
         std::thread::scope(|s| {
             let handles: Vec<_> = links
                 .into_iter()
@@ -399,8 +659,8 @@ mod tests {
         }
     }
 
-    /// The reuse contract: calling `allgather_frames` repeatedly with the
-    /// same persistent slots/spare buffers yields the identical gathered
+    /// The reuse contract: calling [`allgather_frames`] repeatedly with
+    /// the same persistent slots/scratch yields the identical gathered
     /// bytes every round — stale bytes from a previous (larger) round can
     /// never leak into a later one.
     #[test]
@@ -412,7 +672,7 @@ mod tests {
             (0..p).map(|r| vec![0xF0 | r as u8; 5]).collect(),
             (0..p).map(|_| Vec::new()).collect(), // empty frames rotate too
         ];
-        let links = make_links(p);
+        let links = make_mesh(p);
         let results: Vec<Vec<Vec<Vec<u8>>>> = std::thread::scope(|s| {
             let handles: Vec<_> = links
                 .into_iter()
@@ -422,11 +682,11 @@ mod tests {
                     s.spawn(move || {
                         let mut slots: Vec<Vec<u8>> =
                             (0..p).map(|_| Vec::new()).collect();
-                        let mut spare = Vec::new();
+                        let mut gs = GatherScratch::new();
                         let mut got = Vec::new();
                         for frames in &rounds {
                             allgather_frames(
-                                r, p, &frames[r], &mut slots, &mut spare, &link, None,
+                                r, p, &frames[r], &mut slots, &mut gs, &link, None,
                             );
                             got.push(slots.clone());
                         }
@@ -446,11 +706,19 @@ mod tests {
         }
     }
 
+    /// Satellite regression: a single-rank world is a no-op collective on
+    /// the threaded path too — zero bytes sent, slots hold only `mine`.
     #[test]
     fn single_rank_allgather_is_identity() {
-        let (got, sent) =
-            allgather_payloads(0, 1, Payload::Dense(vec![1.0, 2.0]), &make_links(1).remove(0), None);
+        let (got, sent) = allgather_payloads(
+            0,
+            1,
+            Payload::Dense(vec![1.0, 2.0]),
+            &make_mesh(1).remove(0),
+            None,
+        );
         assert_eq!(got.len(), 1);
+        assert_eq!(got[0], Payload::Dense(vec![1.0, 2.0]));
         assert_eq!(sent, 0);
     }
 
@@ -461,5 +729,16 @@ mod tests {
         let t0 = Instant::now();
         pacer.pace(50_000); // 50 ms at 1 MB/s
         assert!(t0.elapsed() >= Duration::from_millis(40));
+    }
+
+    #[test]
+    fn pacer_set_derives_levels_from_net() {
+        let net = NetworkModel::default();
+        let ps = PacerSet::from_net(1.0, &net);
+        let (intra, inter) = (ps.intra.unwrap(), ps.inter.unwrap());
+        assert!(intra.bytes_per_s > inter.bytes_per_s, "intra fabric must be faster");
+        assert!(intra.latency_s < inter.latency_s);
+        assert!(PacerSet::from_net(0.0, &net).intra.is_none());
+        assert!(PacerSet::from_net(0.0, &net).inter.is_none());
     }
 }

@@ -39,8 +39,11 @@ impl Span {
 pub struct RankTimeline {
     pub rank: usize,
     pub spans: Vec<Span>,
-    /// Bytes this rank actually pushed through its ring link this step.
+    /// Bytes this rank actually pushed through its mesh links this step.
     pub moved_bytes: usize,
+    /// The same bytes split by link level (intra- vs inter-node hops of
+    /// the configured topology's schedule).
+    pub moved_levels: crate::comm::LevelBytes,
     /// Time spent blocked in the step-start barrier (skew indicator).
     pub barrier_wait_s: f64,
 }
@@ -60,8 +63,12 @@ pub struct MeasuredBreakdown {
     pub exposed_s: f64,
     /// End-to-end step wall time (max span end).
     pub wall_s: f64,
-    /// Bytes moved through the ring link.
+    /// Bytes moved through the mesh links.
     pub moved_bytes: usize,
+    /// Of `moved_bytes`, the bytes that crossed inter-node links — the
+    /// measured form of the per-level wire accounting (hierarchical
+    /// topologies push most of their volume onto the intra fabric).
+    pub moved_inter_bytes: usize,
 }
 
 /// Reduce one rank's spans to a breakdown.
@@ -96,6 +103,7 @@ pub fn breakdown(t: &RankTimeline) -> MeasuredBreakdown {
         exposed_s: (comm_end - compute_end).max(0.0),
         wall_s: wall,
         moved_bytes: t.moved_bytes,
+        moved_inter_bytes: t.moved_levels.inter,
     }
 }
 
@@ -114,6 +122,7 @@ pub fn aggregate(per_rank: &[MeasuredBreakdown]) -> MeasuredBreakdown {
         exposed_s: per_rank.iter().map(|b| b.exposed_s).fold(0.0, f64::max),
         wall_s: per_rank.iter().map(|b| b.wall_s).fold(0.0, f64::max),
         moved_bytes: per_rank.iter().map(|b| b.moved_bytes).max().unwrap_or(0),
+        moved_inter_bytes: per_rank.iter().map(|b| b.moved_inter_bytes).max().unwrap_or(0),
     }
 }
 
@@ -135,7 +144,7 @@ mod tests {
                 span(SpanKind::Comm, 2.0, 5.0),
             ],
             moved_bytes: 100,
-            barrier_wait_s: 0.0,
+            ..Default::default()
         };
         let b = breakdown(&t);
         assert_eq!(b.comp_s, 2.0);
@@ -197,11 +206,11 @@ mod tests {
     fn aggregate_takes_worst_rank_walls() {
         let a = MeasuredBreakdown {
             comp_s: 1.0,
-            compress_s: 0.0,
             comm_s: 2.0,
             exposed_s: 0.5,
             wall_s: 3.0,
             moved_bytes: 10,
+            ..Default::default()
         };
         let b = MeasuredBreakdown { comp_s: 2.0, exposed_s: 1.5, wall_s: 4.0, ..a };
         let agg = aggregate(&[a, b]);

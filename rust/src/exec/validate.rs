@@ -93,6 +93,7 @@ pub fn compare_backends(base: &RunConfig, preset: &str, steps: u64) -> Result<Ba
                 exposed_s: meas_acc.exposed_s + m.exposed_s,
                 wall_s: meas_acc.wall_s + m.wall_s,
                 moved_bytes: meas_acc.moved_bytes + m.moved_bytes,
+                moved_inter_bytes: meas_acc.moved_inter_bytes + m.moved_inter_bytes,
             };
             wire_acc += ot.wire_bytes;
             wall_acc += ot.wall_s;
@@ -124,6 +125,7 @@ pub fn compare_backends(base: &RunConfig, preset: &str, steps: u64) -> Result<Ba
         exposed_s: meas_acc.exposed_s * inv,
         wall_s: meas_acc.wall_s * inv,
         moved_bytes: (meas_acc.moved_bytes as f64 * inv) as usize,
+        moved_inter_bytes: (meas_acc.moved_inter_bytes as f64 * inv) as usize,
     };
 
     Ok(BackendComparison {

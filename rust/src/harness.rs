@@ -9,15 +9,16 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::comm::Collective;
 use crate::compress::{
-    dense_frame_len, half_frame_len, k_of, sign_frame_len, sparse_frame_len, Collective,
+    dense_frame_len, half_frame_len, k_of, sign_frame_len, sparse_frame_len, CollectiveOp,
     PowerSgd, SchemeKind,
 };
 use crate::util::json::Json;
 use crate::coordinator::bucketize_layers;
 use crate::covap::{shard_buckets, CoarseFilter};
 use crate::network::{ClusterSpec, NetworkModel};
-use crate::sim::{simulate_iteration, Breakdown, Policy, TensorCost};
+use crate::sim::{simulate_iteration_on, Breakdown, Policy, TensorCost};
 use crate::util::bench::time_fn;
 use crate::util::rng::Rng;
 use crate::workload::Workload;
@@ -128,13 +129,13 @@ pub fn wire_bytes(kind: &SchemeKind, n: usize) -> usize {
     }
 }
 
-pub fn collective_of(kind: &SchemeKind) -> Collective {
+pub fn collective_of(kind: &SchemeKind) -> CollectiveOp {
     match kind {
         SchemeKind::TopK { .. }
         | SchemeKind::Dgc { .. }
         | SchemeKind::RandomK { .. }
-        | SchemeKind::EfSignSgd => Collective::AllGather,
-        _ => Collective::AllReduce,
+        | SchemeKind::EfSignSgd => CollectiveOp::AllGather,
+        _ => CollectiveOp::AllReduce,
     }
 }
 
@@ -207,7 +208,9 @@ pub fn bucket_comp_fractions(w: &Workload, bucket_sizes: &[usize]) -> Vec<f64> {
     fracs
 }
 
-/// Simulated per-iteration breakdown of (workload, scheme) on a cluster.
+/// Simulated per-iteration breakdown of (workload, scheme) on a cluster
+/// under the collective topology `topo` (pass
+/// `TopologyKind::Auto.resolve(cluster)` for the pre-topology behavior).
 ///
 /// For COVAP the breakdown is averaged over one full interval of steps
 /// (different steps transmit different shards); other schemes are
@@ -221,6 +224,7 @@ pub fn scheme_breakdown(
     profile: &CompressProfile,
     net: &NetworkModel,
     cluster: ClusterSpec,
+    topo: &dyn Collective,
     policy: Policy,
 ) -> Breakdown {
     let buckets = workload_buckets(w);
@@ -262,7 +266,8 @@ pub fn scheme_breakdown(
             let mut acc: Option<Breakdown> = None;
             for step in 0..*interval as u64 {
                 let costs = build_costs(&sizes, &|i| filter.keep(i, step));
-                let b = simulate_iteration(net, cluster, w.t_before_s, &costs, policy);
+                let b =
+                    simulate_iteration_on(topo, net, cluster, w.t_before_s, &costs, policy);
                 acc = Some(match acc {
                     None => b,
                     Some(a) => Breakdown {
@@ -292,7 +297,7 @@ pub fn scheme_breakdown(
                 .map(|(&n, &f)| (n, w.t_comp_s * f))
                 .collect();
             let costs = build_costs(&tensors, &|_| true);
-            simulate_iteration(net, cluster, w.t_before_s, &costs, policy)
+            simulate_iteration_on(topo, net, cluster, w.t_before_s, &costs, policy)
         }
     }
 }
@@ -306,9 +311,31 @@ pub fn scheme_breakdown(
 /// the paper's Fig. 11b exclusions.)
 pub fn allgather_rank_memory(kind: &SchemeKind, model_params: usize, world: usize) -> usize {
     match collective_of(kind) {
-        Collective::AllGather => model_params * 4 * world,
-        Collective::AllReduce => model_params * 4,
+        CollectiveOp::AllGather => model_params * 4 * world,
+        CollectiveOp::AllReduce => model_params * 4,
     }
+}
+
+/// Per-level wire bytes the *busiest* rank sends per step under
+/// `(kind, topo)` on `cluster` (worst-rank maxima per level, like the
+/// engine's record accounting and the measured aggregate — on a
+/// multi-node flat ring the inter column is the node-boundary rank's
+/// NIC): every bucket's frame priced by the codec arithmetic
+/// ([`wire_bytes`]) and routed through the topology's hop schedule.
+pub fn scheme_level_bytes(
+    w: &Workload,
+    kind: &SchemeKind,
+    topo: &dyn Collective,
+    cluster: ClusterSpec,
+) -> crate::comm::LevelBytes {
+    let hops = topo.allgather_schedule(cluster).max_level_hops();
+    let mut out = crate::comm::LevelBytes::default();
+    for n in workload_buckets(w) {
+        let b = wire_bytes(kind, n);
+        out.intra += hops.intra * b;
+        out.inter += hops.inter * b;
+    }
+    out
 }
 
 /// One row of a `BENCH_*.json` artifact: a (scheme, world, policy) cell
@@ -480,13 +507,16 @@ mod tests {
         let w = workload::vgg19();
         let net = NetworkModel::default();
         let c = ClusterSpec::ecs(64);
-        let base = scheme_breakdown(&w, &SchemeKind::Baseline, &prof(), &net, c, Policy::Overlap);
+        let topo = crate::comm::TopologyKind::Auto.resolve(c);
+        let base =
+            scheme_breakdown(&w, &SchemeKind::Baseline, &prof(), &net, c, topo, Policy::Overlap);
         let covap = scheme_breakdown(
             &w,
             &SchemeKind::Covap { interval: 4, ef: Default::default() },
             &prof(),
             &net,
             c,
+            topo,
             Policy::Overlap,
         );
         assert!(covap.total_s < base.total_s * 0.6, "{} vs {}", covap.total_s, base.total_s);
@@ -506,6 +536,7 @@ mod tests {
                 &prof(),
                 &net,
                 c,
+                crate::comm::TopologyKind::Auto.resolve(c),
                 Policy::Overlap,
             )
             .speedup(64)

@@ -18,6 +18,8 @@
 //!   schemes   list available GC schemes
 //!
 //! train also accepts --backend analytic|threaded, --policy overlap|seq,
+//! --topology ring|hier|tree|auto (collective topology: flat ring,
+//! hierarchical 2-level, binomial tree, or pick by cluster shape),
 //! --pace-gbps F and --synth-work N (see config). Adaptive COVAP is
 //! `--scheme covap@auto`: profiling (`--profile-steps`) selects
 //! I = ceil(CCR) and a windowed controller (`--profile-window`,

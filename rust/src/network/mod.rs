@@ -33,6 +33,13 @@ impl ClusterSpec {
     pub fn world(&self) -> usize {
         self.nodes * self.gpus_per_node
     }
+
+    /// Node housing `rank` under rank-major placement (ranks `[n*g,
+    /// (n+1)*g)` live on node `n`) — what classifies a hop as intra- vs
+    /// inter-node in the topology layer.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -59,6 +66,11 @@ impl Default for NetworkModel {
 }
 
 impl NetworkModel {
+    /// Per-hop latency of the intra-node fabric (PCIe peer copies), used
+    /// by both the α–β intra stage and the topology layer's per-level hop
+    /// pricing.
+    pub const INTRA_LATENCY_S: f64 = 5e-6;
+
     pub fn hpc_100g() -> NetworkModel {
         NetworkModel { nic_gbps: 100.0, efficiency: 0.45, latency_s: 10e-6, intra_gbps: 48.0 }
     }
@@ -79,7 +91,8 @@ impl NetworkModel {
             return 0.0;
         }
         let g = g as f64;
-        2.0 * (g - 1.0) / g * bytes as f64 / self.intra_bps() + 5e-6 * 2.0 * (g - 1.0)
+        2.0 * (g - 1.0) / g * bytes as f64 / self.intra_bps()
+            + Self::INTRA_LATENCY_S * 2.0 * (g - 1.0)
     }
 
     /// Ring AllReduce over `bytes` payload per rank.

@@ -8,7 +8,8 @@
 //! breakdown the paper plots in Figs. 7–10 (computation, compression,
 //! exposed communication T_comm', bubbles) and the speedup of Eq. (2).
 
-use crate::compress::Collective;
+use crate::comm::{Collective, TopologyKind};
+use crate::compress::CollectiveOp;
 use crate::network::{ClusterSpec, NetworkModel};
 
 /// One communication tensor's per-iteration costs.
@@ -22,7 +23,7 @@ pub struct TensorCost {
     /// measured `Payload::encode().len()` the executor moves (0 = skipped
     /// by the filter), so sim and exec price identical volumes.
     pub wire_bytes: usize,
-    pub collective: Collective,
+    pub collective: CollectiveOp,
     /// Dependent collective rounds (PowerSGD: 2).
     pub rounds: u32,
     /// Synchronous rendezvous rounds before the collective can start.
@@ -75,16 +76,29 @@ impl Breakdown {
     }
 }
 
-/// Price one tensor's communication on the fabric.
+/// Price one tensor's communication on the fabric under the `auto`
+/// topology for the cluster shape (the pre-topology behavior).
 pub fn comm_time(net: &NetworkModel, cluster: ClusterSpec, t: &TensorCost) -> f64 {
+    comm_time_on(TopologyKind::Auto.resolve(cluster), net, cluster, t)
+}
+
+/// Price one tensor's communication under an explicit collective
+/// topology: the operation (allreduce vs allgather) comes from the
+/// scheme's record, the algorithm executing it from `topo`.
+pub fn comm_time_on(
+    topo: &dyn Collective,
+    net: &NetworkModel,
+    cluster: ClusterSpec,
+    t: &TensorCost,
+) -> f64 {
     if t.wire_bytes == 0 {
         return 0.0;
     }
     let per_round = match t.collective {
-        Collective::AllReduce => net.allreduce_s(t.wire_bytes, cluster),
-        Collective::AllGather => net.allgather_s(t.wire_bytes, cluster),
+        CollectiveOp::AllReduce => topo.allreduce_s(net, cluster, t.wire_bytes),
+        CollectiveOp::AllGather => topo.allgather_s(net, cluster, t.wire_bytes),
     };
-    per_round * t.rounds as f64 + t.sync_rounds as f64 * net.sync_round_s(cluster)
+    per_round * t.rounds as f64 + t.sync_rounds as f64 * topo.sync_round_s(net, cluster)
 }
 
 /// Simulate one iteration.
@@ -96,6 +110,28 @@ pub fn comm_time(net: &NetworkModel, cluster: ClusterSpec, t: &TensorCost) -> f6
 /// tensor blocks the compute stream until its own communication finishes
 /// (synchronous collective semantics).
 pub fn simulate_iteration(
+    net: &NetworkModel,
+    cluster: ClusterSpec,
+    t_before_s: f64,
+    tensors: &[TensorCost],
+    policy: Policy,
+) -> Breakdown {
+    simulate_iteration_on(
+        TopologyKind::Auto.resolve(cluster),
+        net,
+        cluster,
+        t_before_s,
+        tensors,
+        policy,
+    )
+}
+
+/// [`simulate_iteration`] under an explicit collective topology — the
+/// engine threads its configured `topology` knob through here so the
+/// predicted timeline prices the same hop schedules the threaded backend
+/// executes.
+pub fn simulate_iteration_on(
+    topo: &dyn Collective,
     net: &NetworkModel,
     cluster: ClusterSpec,
     t_before_s: f64,
@@ -126,7 +162,7 @@ pub fn simulate_iteration(
         t_comp += t.comp_s;
         t_compress += t.compress_s;
 
-        let dur = comm_time(net, cluster, t);
+        let dur = comm_time_on(topo, net, cluster, t);
         if dur > 0.0 {
             let ready = compute_t.max(comm_open);
             let start = if comm_free == f64::NEG_INFINITY {
@@ -183,7 +219,7 @@ pub fn dense_tensors(
             comp_s: comp_total_s * e as f64 / total as f64,
             compress_s: compress_each_s,
             wire_bytes: e * 4,
-            collective: Collective::AllReduce,
+            collective: CollectiveOp::AllReduce,
             rounds: 1,
             sync_rounds: 0,
             data_dependency: false,
@@ -209,7 +245,7 @@ mod tests {
                 comp_s: comp_each,
                 compress_s: 0.0,
                 wire_bytes: bytes_each,
-                collective: Collective::AllReduce,
+                collective: CollectiveOp::AllReduce,
                 rounds: 1,
                 sync_rounds: 0,
                 data_dependency: false,
@@ -273,7 +309,7 @@ mod tests {
                     comp_s: 0.01,
                     compress_s: 0.0,
                     wire_bytes: 4 << 20,
-                    collective: Collective::AllReduce,
+                    collective: CollectiveOp::AllReduce,
                     rounds: 1,
                     sync_rounds: 0,
                     data_dependency: dep,

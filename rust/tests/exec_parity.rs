@@ -8,11 +8,13 @@
 //! * with a paced ring, COVAP's measured exposed communication under
 //!   `Overlap` is strictly lower than under `Sequential` at P >= 4.
 
+use covap::comm::TopologyKind;
 use covap::compress::SchemeKind;
 use covap::config::{ExecBackend, Optimizer, RunConfig};
 use covap::coordinator::DpEngine;
 use covap::covap::EfScheduler;
 use covap::exec::compare_backends;
+use covap::network::ClusterSpec;
 use covap::runtime::ModelArtifacts;
 use covap::sim::Policy;
 use covap::trainer;
@@ -50,6 +52,61 @@ fn parity_holds_across_world_sizes() {
         let kind = SchemeKind::Covap { interval: 3, ef: Default::default() };
         let c = compare_backends(&cfg(workers, kind), "tiny", 3).unwrap();
         assert!(c.bitwise_equal, "P={workers} diverged");
+    }
+}
+
+/// The topology acceptance criterion: analytic/threaded bitwise parity
+/// holds for every topology × scheme combination on a genuinely 2-level
+/// cluster (2 nodes × 2 GPUs) — the topology changes who moves which
+/// frames over which link, never the numerics.
+#[test]
+fn every_topology_bitwise_parity_for_every_scheme() {
+    for topo in TopologyKind::all() {
+        for kind in SchemeKind::evaluation_set() {
+            let mut c = cfg(4, kind.clone());
+            c.cluster = ClusterSpec::new(2, 2);
+            c.topology = topo;
+            let cmp = compare_backends(&c, "tiny", 2)
+                .unwrap_or_else(|e| panic!("{} x {}: {e}", topo.spec(), kind.label()));
+            assert!(
+                cmp.bitwise_equal,
+                "{} x {}: threaded diverged from analytic: {:?} vs {:?}",
+                topo.spec(),
+                kind.label(),
+                cmp.loss_analytic,
+                cmp.loss_threaded
+            );
+        }
+    }
+}
+
+/// Satellite regression: degenerate worlds (p = 1, one node, one GPU per
+/// node) are no-op or single-level collectives under every topology, on
+/// both backends, and a single-rank world moves zero bytes.
+#[test]
+fn topology_parity_degenerate_worlds() {
+    let kind = SchemeKind::Covap { interval: 2, ef: Default::default() };
+    for topo in TopologyKind::all() {
+        for (workers, cluster) in [
+            (1usize, ClusterSpec::new(1, 1)),
+            (2, ClusterSpec::new(1, 2)),
+            (3, ClusterSpec::new(3, 1)),
+            (6, ClusterSpec::new(2, 3)),
+        ] {
+            let mut c = cfg(workers, kind.clone());
+            c.cluster = cluster;
+            c.topology = topo;
+            let cmp = compare_backends(&c, "tiny", 2)
+                .unwrap_or_else(|e| panic!("{} P={workers}: {e}", topo.spec()));
+            assert!(cmp.bitwise_equal, "{} P={workers} diverged", topo.spec());
+            if workers == 1 {
+                assert_eq!(
+                    cmp.measured.moved_bytes, 0,
+                    "{}: single-rank world must move zero bytes",
+                    topo.spec()
+                );
+            }
+        }
     }
 }
 
