@@ -74,7 +74,11 @@ fn main() -> anyhow::Result<()> {
     }
     table.row(&linear);
     table.print(&format!("Fig. 11 — scalability, {} @ 30 Gbps", w.name));
-    println!("\n(OOM = AllGather payload exceeds 16 GB V100 memory, matching the paper's\n exclusion of Top-k/Random-k/DGC/EFsignSGD/Ok-topk beyond 16 GPUs on VGG-19.)");
+    covap::log_info!(
+        target: "example",
+        "OOM = AllGather payload exceeds 16 GB V100 memory, matching the paper's \
+         exclusion of Top-k/Random-k/DGC/EFsignSGD/Ok-topk beyond 16 GPUs on VGG-19."
+    );
 
     // ---- topology sweep: exposed comm + per-level wire bytes ----------
     // Same workload on the paper's 4x8 cluster under every collective

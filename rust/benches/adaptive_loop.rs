@@ -149,7 +149,7 @@ fn main() -> anyhow::Result<()> {
             fmt_secs(o.mid),
             fmt_secs(o.post)
         );
-        eprintln!("{last_err} — retrying");
+        covap::log_warn!(target: "bench", "{last_err} — retrying");
         outcome = Some(o);
     }
     let o = outcome.expect("at least one attempt ran");

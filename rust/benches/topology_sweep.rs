@@ -198,7 +198,7 @@ fn main() -> anyhow::Result<()> {
             ok = true;
             break;
         }
-        eprintln!("attempt {attempt}: hier {last:?} not yet < ring, retrying");
+        covap::log_warn!(target: "bench", "attempt {attempt}: hier {last:?} not yet < ring, retrying");
     }
     t2.print(&format!(
         "topology sweep — measured, dense baseline, {}x{} paced fleet",

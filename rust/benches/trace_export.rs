@@ -1,0 +1,112 @@
+//! trace_export — the CI driver for the unified trace layer (DESIGN.md
+//! §10): run 4 threaded ranks under covap@auto with tracing on, export the
+//! Chrome-Trace/Perfetto `trace.json`, and validate it against the schema
+//! the `tests/trace_schema.rs` property suite enforces. The same config is
+//! replayed on the analytic backend so both producers are exercised in one
+//! job.
+//!
+//!     cargo bench --bench trace_export -- [--quick]
+//!         [--out trace.json] [--json BENCH_trace_export.json]
+//!
+//! The exported file is the artifact CI uploads — drop it on
+//! <https://ui.perfetto.dev> to see per-rank compute/comm streams, the
+//! predicted analytic timeline, controller decisions, pacer changes and
+//! wire-byte counters on one timeline.
+
+use std::path::PathBuf;
+
+use covap::compress::SchemeKind;
+use covap::config::{ExecBackend, Optimizer, RunConfig};
+use covap::coordinator::DpEngine;
+use covap::covap::EfScheduler;
+use covap::obs::validate_trace;
+use covap::runtime::ModelArtifacts;
+use covap::util::cli::Args;
+use covap::util::json::Json;
+
+fn traced_cfg(backend: ExecBackend, steps: u64, out: &PathBuf) -> RunConfig {
+    RunConfig {
+        workers: 4,
+        scheme: SchemeKind::CovapAuto { ef: EfScheduler::constant(1.0) },
+        backend,
+        optimizer: Optimizer::Sgd,
+        lr: 0.05,
+        seed: 11,
+        bucket_bytes: 16 * 1024,
+        synth_work: 6,
+        pace_gbps: 1.0,
+        // mid-run bandwidth drop so a pacer instant lands in the trace
+        pace_schedule: vec![(steps / 2, 0.5)],
+        profile_steps: 2,
+        profile_window: 2,
+        profile_hysteresis: 1,
+        steps,
+        trace_out: Some(out.clone()),
+        ..RunConfig::default()
+    }
+}
+
+/// Run `steps` engine steps with tracing on; return the trace document and
+/// the number of events in it.
+fn run_traced(cfg: RunConfig) -> anyhow::Result<(Json, usize)> {
+    let steps = cfg.steps;
+    let mut engine = DpEngine::new(cfg, ModelArtifacts::synthetic("tiny"))?;
+    for _ in 0..steps {
+        engine.step()?;
+    }
+    let doc = engine.trace_json().expect("tracing was enabled");
+    validate_trace(&doc)?;
+    let n = doc.get("traceEvents")?.as_arr()?.len();
+    engine.write_trace()?;
+    Ok((doc, n))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let quick = args.has("quick");
+    let out = PathBuf::from(args.get_or("out", "trace.json"));
+    let json_path = PathBuf::from(args.get_or("json", "BENCH_trace_export.json"));
+    let steps: u64 = if quick { 6 } else { 10 };
+
+    // Threaded backend last: both runs write through the same --out path
+    // and the uploaded artifact should be the one with measured ranks.
+    let (_, analytic_events) =
+        run_traced(traced_cfg(ExecBackend::Analytic, steps, &out))?;
+    let (doc, threaded_events) =
+        run_traced(traced_cfg(ExecBackend::Threaded, steps, &out))?;
+
+    // The threaded trace must carry both producers: measured per-rank
+    // spans and the predicted analytic timeline.
+    let events = doc.get("traceEvents")?.as_arr()?;
+    let has_cat = |cat: &str| {
+        events.iter().any(
+            |e| matches!(e.get_or("cat", &Json::Null), Json::Str(s) if s == cat),
+        )
+    };
+    anyhow::ensure!(has_cat("measured"), "threaded trace must have measured spans");
+    anyhow::ensure!(has_cat("predicted"), "threaded trace must have predicted spans");
+    let instants = events
+        .iter()
+        .filter(|e| matches!(e.get_or("ph", &Json::Null), Json::Str(s) if s == "i"))
+        .count();
+    anyhow::ensure!(instants > 0, "covap@auto run must emit instant events");
+
+    let rows = vec![Json::obj(vec![
+        ("world", Json::from(4usize)),
+        ("steps", Json::from(steps as usize)),
+        ("scheme", Json::from("covap@auto")),
+        ("analytic_events", Json::from(analytic_events)),
+        ("threaded_events", Json::from(threaded_events)),
+        ("instant_events", Json::from(instants)),
+        ("trace_path", Json::from(out.to_string_lossy().as_ref())),
+    ])];
+    covap::harness::write_bench_doc(&json_path, "trace_export", rows)?;
+    covap::log_info!(target: "bench", "wrote {}", json_path.display());
+
+    println!(
+        "trace export OK: {threaded_events} events (threaded), {analytic_events} (analytic), \
+         schema valid -> {}",
+        out.display()
+    );
+    Ok(())
+}

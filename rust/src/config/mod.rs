@@ -116,6 +116,13 @@ pub struct RunConfig {
     pub stragglers: Vec<Straggler>,
     /// Emit per-step metrics here (CSV) if set.
     pub metrics_csv: Option<PathBuf>,
+    /// Emit a Perfetto-loadable Chrome Trace Event file here if set
+    /// (measured per-rank spans + the predicted analytic timeline; see
+    /// DESIGN.md §10). None = tracing fully off (zero cost).
+    pub trace_out: Option<PathBuf>,
+    /// Override the process log level (`--log-level` / `"log_level"`;
+    /// otherwise the `COVAP_LOG` env var or the `info` default applies).
+    pub log_level: Option<crate::obs::LogLevel>,
     /// Maps measured per-step compute wall time onto the simulated
     /// accelerator: sim_compute = wall * compute_scale. 1.0 = this CPU;
     /// ~0.01 puts the small preset's step on a V100-like timescale so the
@@ -158,6 +165,8 @@ impl Default for RunConfig {
             pace_schedule: Vec::new(),
             stragglers: Vec::new(),
             metrics_csv: None,
+            trace_out: None,
+            log_level: None,
             compute_scale: 1.0,
             backend: ExecBackend::Analytic,
             policy: Policy::Overlap,
@@ -256,6 +265,15 @@ impl RunConfig {
                 });
             }
         }
+        if let Ok(p) = j.get("trace_out") {
+            cfg.trace_out = Some(PathBuf::from(p.as_str()?));
+        }
+        if let Ok(l) = j.get("log_level") {
+            let s = l.as_str()?;
+            cfg.log_level = Some(crate::obs::LogLevel::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("unknown log level '{s}' (off|error|warn|info|debug)")
+            })?);
+        }
         cfg.compute_scale = j.get_or("compute_scale", &Json::from(1.0)).as_f64()?;
         if let Ok(b) = j.get("backend") {
             let s = b.as_str()?;
@@ -275,7 +293,7 @@ impl RunConfig {
 
     /// CLI overrides: --artifacts --workers --scheme --steps --lr
     /// --optimizer --seed --bucket-mb --profile-steps --metrics-csv
-    /// --gpus (cluster size) --bandwidth-gbps.
+    /// --trace-out --log-level --gpus (cluster size) --bandwidth-gbps.
     pub fn apply_args(&mut self, a: &Args) -> Result<()> {
         if let Some(v) = a.get("artifacts") {
             self.artifacts = PathBuf::from(v);
@@ -332,6 +350,14 @@ impl RunConfig {
         }
         if let Some(p) = a.get("metrics-csv") {
             self.metrics_csv = Some(PathBuf::from(p));
+        }
+        if let Some(p) = a.get("trace-out") {
+            self.trace_out = Some(PathBuf::from(p));
+        }
+        if let Some(l) = a.get("log-level") {
+            self.log_level = Some(crate::obs::LogLevel::parse(l).ok_or_else(|| {
+                anyhow::anyhow!("unknown log level '{l}' (off|error|warn|info|debug)")
+            })?);
         }
         if let Some(bw) = a.get("bandwidth-gbps") {
             self.net.nic_gbps = bw.parse().context("--bandwidth-gbps")?;
@@ -402,19 +428,22 @@ impl RunConfig {
         // schedule degenerates to the flat ring) but the request is
         // almost certainly a shape mistake — warn, don't fail.
         if self.topology == TopologyKind::Hier && self.cluster.nodes == 1 {
-            eprintln!(
-                "warning: topology 'hier' on a single-node cluster ({}x{}) degenerates \
+            crate::log_warn!(
+                target: "config",
+                "topology 'hier' on a single-node cluster ({}x{}) degenerates \
                  to the flat intra-node ring (use --gpus or a cluster config with \
                  nodes > 1 to model the hierarchy)",
-                self.cluster.nodes, self.cluster.gpus_per_node
+                self.cluster.nodes,
+                self.cluster.gpus_per_node
             );
         }
         // The silent-swap fix: profiling re-shards only covap@auto. Any
         // other scheme + profile_steps still *measures* CCR (the `profile`
         // subcommand's report) but keeps running the configured scheme.
         if self.profile_steps > 0 && !matches!(self.scheme, SchemeKind::CovapAuto { .. }) {
-            eprintln!(
-                "warning: profile_steps={} with scheme '{}' only reports CCR; the \
+            crate::log_warn!(
+                target: "config",
+                "profile_steps={} with scheme '{}' only reports CCR; the \
                  scheme will NOT be swapped (use --scheme covap@auto for adaptive mode)",
                 self.profile_steps,
                 self.scheme.spec()
@@ -830,6 +859,43 @@ mod tests {
         cfg.cluster = ClusterSpec::new(1, 8);
         cfg.topology = TopologyKind::Hier;
         cfg.validate().unwrap();
+    }
+
+    /// Observability knobs: `--trace-out` / `--log-level` parse from CLI
+    /// and JSON, default to off, and bad levels are rejected.
+    #[test]
+    fn observability_knobs_parse_everywhere() {
+        let d = RunConfig::default();
+        assert!(d.trace_out.is_none());
+        assert!(d.log_level.is_none());
+
+        let args = Args::parse(
+            ["--trace-out", "out/trace.json", "--log-level", "debug"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.trace_out, Some(PathBuf::from("out/trace.json")));
+        assert_eq!(cfg.log_level, Some(crate::obs::LogLevel::Debug));
+        cfg.validate().unwrap();
+
+        let j = Json::parse(
+            r#"{"trace_out": "t.json", "log_level": "warn"}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.trace_out, Some(PathBuf::from("t.json")));
+        assert_eq!(cfg.log_level, Some(crate::obs::LogLevel::Warn));
+
+        // unknown levels are rejected, not silently defaulted
+        let bad =
+            Args::parse(["--log-level", "loud"].iter().map(|s| s.to_string())).unwrap();
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_args(&bad).is_err());
+        let j = Json::parse(r#"{"log_level": "loud"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     /// Satellite regression: a non-COVAP scheme plus profile_steps must

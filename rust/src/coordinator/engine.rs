@@ -17,6 +17,7 @@
 //! rank's reduced gradient by checksum each step. Wire accounting in both
 //! backends is the measured encoded-frame length of each payload.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -28,11 +29,14 @@ use crate::config::{ExecBackend, Optimizer, RunConfig};
 use crate::coordinator::bucketizer::{bucketize, Bucket};
 use crate::covap::{shard_buckets, EfScheduler, IntervalController, IntervalDecision};
 use crate::data::{DataShard, SyntheticCorpus};
-use crate::exec::{MeasuredBreakdown, PacerSet, RankTimeline, SpanKind, ThreadedExec};
+use crate::exec::{MeasuredBreakdown, PacerSet, RankTimeline, Span, SpanKind, ThreadedExec};
 use crate::network::ClusterSpec;
+use crate::obs::log::{emit_kv, LogLevel};
+use crate::obs::{registry, TraceBuilder, TID_COMM, TID_COMPUTE};
 use crate::profiler::{Event, EventKind, Profile};
 use crate::runtime::ModelArtifacts;
-use crate::sim::{simulate_iteration_on, Breakdown, TensorCost};
+use crate::sim::{simulate_iteration_on, simulate_iteration_spans, Breakdown, TensorCost};
+use crate::util::json::Json;
 
 /// Default warmup window (steps) when `covap@auto` runs without an
 /// explicit `profile_steps`.
@@ -116,6 +120,9 @@ pub struct DpEngine {
     rank_work: Vec<u32>,
     /// Chosen interval once profiling concludes (COVAP adaptive mode).
     pub chosen_interval: Option<usize>,
+    /// Perfetto trace accumulator (only when `cfg.trace_out` is set —
+    /// tracing is strictly zero-cost otherwise).
+    trace: Option<TraceBuilder>,
 }
 
 impl DpEngine {
@@ -199,6 +206,7 @@ impl DpEngine {
         Ok(DpEngine {
             rank_work: vec![cfg.synth_work; cfg.workers],
             profile: Profile::for_world(cfg.workers),
+            trace: cfg.trace_out.as_ref().map(|_| TraceBuilder::new()),
             cfg,
             arts,
             scheme,
@@ -236,6 +244,14 @@ impl DpEngine {
     /// Run one synchronous DP step.
     pub fn step(&mut self) -> Result<StepOutput> {
         let wall0 = Instant::now();
+        // remember whether a scheduled pacer change fires this step (the
+        // trace marks it as an instant event)
+        let pace_event = self
+            .cfg
+            .pace_schedule
+            .iter()
+            .find(|(at, _)| *at == self.step)
+            .map(|&(_, gbps)| gbps);
         self.apply_scenario();
         let (losses, comp_walls, mut records, reduced, measured, timelines) =
             if self.exec.is_some() {
@@ -259,8 +275,14 @@ impl DpEngine {
         // ---- optimizer ----
         self.apply_update(&reduced)?;
 
-        // ---- simulated timeline (both backends, for cross-validation) ----
-        let breakdown = self.simulate(&comp_walls, &records);
+        // ---- simulated timeline (both backends, for cross-validation);
+        // predicted spans are collected only when tracing is active ----
+        let mut sim_spans: Vec<Span> = Vec::new();
+        let breakdown = if self.trace.is_some() {
+            self.simulate_spans(&comp_walls, &records, &mut sim_spans)
+        } else {
+            self.simulate(&comp_walls, &records)
+        };
 
         // ---- profiling: measured spans (threaded) or the modeled dense
         // collective (analytic) — built only when someone consumes them
@@ -299,6 +321,7 @@ impl DpEngine {
         self.step += 1;
 
         // ---- the closed adaptive loop (covap@auto only) ----
+        let mut decision: Option<IntervalDecision> = None;
         if let Some(mut ctrl) = self.controller.take() {
             for e in events {
                 ctrl.record(e);
@@ -309,7 +332,11 @@ impl DpEngine {
             // dense/wire; the analytic events already model the dense
             // collective, so the scale must stay 1.
             let ctrl_wire = if timelines.is_some() { wire_bytes } else { dense_bytes };
+            let hist_before = ctrl.history().len();
             let switch = ctrl.end_step(step_now, ctrl_wire, dense_bytes);
+            if ctrl.history().len() > hist_before {
+                decision = ctrl.history().last().copied();
+            }
             if ctrl.concluded() {
                 self.chosen_interval = Some(ctrl.current_interval());
             }
@@ -318,6 +345,17 @@ impl DpEngine {
                 self.set_covap_interval(interval);
             }
         }
+
+        self.record_obs(
+            step_now,
+            &out,
+            &records,
+            &comp_walls,
+            timelines.as_deref(),
+            &sim_spans,
+            pace_event,
+            decision,
+        );
         Ok(out)
     }
 
@@ -442,6 +480,43 @@ impl DpEngine {
     /// the *measured* mean worker fwd_bwd wall time as (T_before + T_comp)
     /// with the Bert-like 80/170 split.
     fn simulate(&self, comp_walls: &[f64], records: &[CommRecord]) -> Breakdown {
+        let (t_before, costs) = self.tensor_costs(comp_walls, records);
+        simulate_iteration_on(
+            self.topo,
+            &self.cfg.net,
+            self.cfg.cluster,
+            t_before,
+            &costs,
+            self.cfg.policy,
+        )
+    }
+
+    /// [`Self::simulate`] while also collecting the predicted per-tensor
+    /// spans — the analytic timeline the trace exporter overlays against
+    /// measurements.
+    fn simulate_spans(
+        &self,
+        comp_walls: &[f64],
+        records: &[CommRecord],
+        spans: &mut Vec<Span>,
+    ) -> Breakdown {
+        let (t_before, costs) = self.tensor_costs(comp_walls, records);
+        simulate_iteration_spans(
+            self.topo,
+            &self.cfg.net,
+            self.cfg.cluster,
+            t_before,
+            &costs,
+            self.cfg.policy,
+            spans,
+        )
+    }
+
+    fn tensor_costs(
+        &self,
+        comp_walls: &[f64],
+        records: &[CommRecord],
+    ) -> (f64, Vec<TensorCost>) {
         let mean_wall = comp_walls.iter().sum::<f64>() / comp_walls.len() as f64
             * self.cfg.compute_scale;
         let t_before = mean_wall * 0.32; // fwd ~1/3, bwd ~2/3
@@ -463,14 +538,7 @@ impl DpEngine {
                 data_dependency: r.data_dependency,
             })
             .collect();
-        simulate_iteration_on(
-            self.topo,
-            &self.cfg.net,
-            self.cfg.cluster,
-            t_before,
-            &costs,
-            self.cfg.policy,
-        )
+        (t_before, costs)
     }
 
     /// Build this step's profiler events. Under the threaded backend these
@@ -582,6 +650,215 @@ impl DpEngine {
     /// `covap@auto`): every windowed CCR measurement, proposal and switch.
     pub fn adaptive_history(&self) -> &[IntervalDecision] {
         self.controller.as_ref().map(|c| c.history()).unwrap_or(&[])
+    }
+
+    /// Snapshot the accumulated Perfetto trace document (None unless
+    /// `trace_out` is configured).
+    pub fn trace_json(&self) -> Option<Json> {
+        self.trace.as_ref().map(|t| t.to_json())
+    }
+
+    /// Write the accumulated trace to `cfg.trace_out`, returning the path
+    /// written (None when tracing is off).
+    pub fn write_trace(&self) -> Result<Option<PathBuf>> {
+        match (&self.trace, &self.cfg.trace_out) {
+            (Some(t), Some(path)) => {
+                t.write(path)?;
+                Ok(Some(path.clone()))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Stamp this step into the global metrics registry, log the
+    /// controller decision (if any) as a structured event, and — when
+    /// `--trace-out` is active — append the step's spans, instants and
+    /// counters to the trace. Runs once per step, far from the per-tensor
+    /// hot path.
+    fn record_obs(
+        &mut self,
+        step: u64,
+        out: &StepOutput,
+        records: &[CommRecord],
+        comp_walls: &[f64],
+        timelines: Option<&[RankTimeline]>,
+        sim_spans: &[Span],
+        pace_event: Option<f64>,
+        decision: Option<IntervalDecision>,
+    ) {
+        // modeled rendezvous skew: spread of the scaled compute walls
+        // (identical arithmetic on both backends)
+        let (mut min_w, mut max_w) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &w in comp_walls {
+            min_w = min_w.min(w * self.cfg.compute_scale);
+            max_w = max_w.max(w * self.cfg.compute_scale);
+        }
+        let skew = if min_w.is_finite() { (max_w - min_w).max(0.0) } else { 0.0 };
+
+        registry::with_global(|r| {
+            r.counter_add("steps", 1);
+            r.counter_add("wire_bytes", out.wire_bytes as u64);
+            r.counter_add("wire_bytes_intra", out.wire_levels.intra as u64);
+            r.counter_add("wire_bytes_inter", out.wire_levels.inter as u64);
+            r.observe("step_wall_s", out.wall_s);
+            r.observe("sim_total_s", out.breakdown.total_s);
+            r.observe("sim_exposed_s", out.breakdown.t_comm_exposed_s);
+            r.observe("compress_s", out.compress_s);
+            r.gauge_set("barrier_skew_s", skew);
+            if let Some(tls) = timelines {
+                for tl in tls {
+                    r.observe("barrier_wait_s", tl.barrier_wait_s);
+                    for s in &tl.spans {
+                        r.observe(span_metric(s.kind), s.duration());
+                    }
+                }
+            } else {
+                for s in sim_spans {
+                    r.observe(span_metric(s.kind), s.duration());
+                }
+            }
+            if let Some(d) = &decision {
+                r.counter_add("controller_decisions", 1);
+                if d.switched {
+                    r.counter_add("controller_switches", 1);
+                }
+                r.gauge_set("interval", d.interval as f64);
+                r.gauge_set("ccr", d.ccr);
+            }
+        });
+
+        if let Some(d) = &decision {
+            emit_kv(LogLevel::Info, "controller", "interval_decision", &d.kv());
+        }
+
+        let scheme = self.cfg.scheme.spec();
+        let sim_pid = self.cfg.workers;
+        let Some(trace) = self.trace.as_mut() else { return };
+        trace.process(sim_pid, "sim (predicted)");
+        trace.thread(sim_pid, TID_COMPUTE, "compute");
+        trace.thread(sim_pid, TID_COMM, "comm");
+        let span_args = |s: &Span| -> Vec<(&str, Json)> {
+            let (wire, intra, inter) = records
+                .get(s.tensor)
+                .map(|r| (r.wire_bytes, r.levels.intra, r.levels.inter))
+                .unwrap_or((0, 0, 0));
+            vec![
+                ("tensor", Json::from(s.tensor)),
+                ("scheme", Json::from(scheme.as_str())),
+                ("wire_bytes", Json::from(wire)),
+                ("intra_bytes", Json::from(intra)),
+                ("inter_bytes", Json::from(inter)),
+                ("step", Json::from(step as usize)),
+            ]
+        };
+        let span_name = |k: SpanKind| match k {
+            SpanKind::Compute => "compute",
+            SpanKind::Compress => "compress",
+            SpanKind::Comm => "comm",
+        };
+        let stream = |k: SpanKind| if k == SpanKind::Comm { TID_COMM } else { TID_COMPUTE };
+
+        // measured per-rank timelines (threaded backend only)
+        if let Some(tls) = timelines {
+            let mut lift = 0.0f64;
+            for tl in tls {
+                for s in &tl.spans {
+                    lift = lift.min(s.start_s);
+                }
+            }
+            let lift = -lift; // keep every trace ts >= 0
+            for tl in tls {
+                let pname = format!("rank {}", tl.rank);
+                trace.process(tl.rank, &pname);
+                trace.thread(tl.rank, TID_COMPUTE, "compute");
+                trace.thread(tl.rank, TID_COMM, "comm");
+                for s in &tl.spans {
+                    trace.complete(
+                        tl.rank,
+                        stream(s.kind),
+                        span_name(s.kind),
+                        "measured",
+                        s.start_s + lift,
+                        s.end_s.max(s.start_s) + lift,
+                        span_args(s),
+                    );
+                }
+                trace.instant(
+                    tl.rank,
+                    TID_COMM,
+                    "barrier_wait",
+                    0.0,
+                    vec![
+                        ("rank", Json::from(tl.rank)),
+                        ("step", Json::from(step as usize)),
+                        ("wait_s", Json::from(tl.barrier_wait_s)),
+                    ],
+                );
+            }
+        }
+
+        // predicted timeline (both backends -> visual diff in one window)
+        for s in sim_spans {
+            trace.complete(
+                sim_pid,
+                stream(s.kind),
+                span_name(s.kind),
+                "predicted",
+                s.start_s,
+                s.end_s,
+                span_args(s),
+            );
+        }
+        trace.instant(
+            sim_pid,
+            TID_COMPUTE,
+            "barrier_skew",
+            0.0,
+            vec![("step", Json::from(step as usize)), ("skew_s", Json::from(skew))],
+        );
+        if let Some(gbps) = pace_event {
+            trace.instant(
+                sim_pid,
+                TID_COMM,
+                "pacer",
+                0.0,
+                vec![("step", Json::from(step as usize)), ("gbps", Json::from(gbps))],
+            );
+        }
+        if let Some(d) = &decision {
+            trace.instant(
+                sim_pid,
+                TID_COMPUTE,
+                "controller_decision",
+                0.0,
+                vec![
+                    ("step", Json::from(d.step as usize)),
+                    ("ccr", Json::from(d.ccr)),
+                    ("proposed", Json::from(d.proposed)),
+                    ("interval", Json::from(d.interval)),
+                    ("switched", Json::from(d.switched)),
+                ],
+            );
+        }
+        trace.counter(
+            sim_pid,
+            "wire_bytes",
+            0.0,
+            &[
+                ("intra", out.wire_levels.intra as f64),
+                ("inter", out.wire_levels.inter as f64),
+            ],
+        );
+        trace.end_step();
+    }
+}
+
+/// Registry histogram name for a span kind.
+fn span_metric(kind: SpanKind) -> &'static str {
+    match kind {
+        SpanKind::Compute => "span_compute_s",
+        SpanKind::Compress => "span_compress_s",
+        SpanKind::Comm => "span_comm_s",
     }
 }
 
@@ -802,6 +1079,51 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&c| c), "gap in tensor coverage");
+    }
+
+    /// Tracing is strictly opt-in, and when on, both backends emit a
+    /// schema-valid trace: predicted spans always, measured rank spans
+    /// only under the threaded backend.
+    #[test]
+    fn trace_capture_is_opt_in_and_schema_valid() {
+        if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+            return;
+        }
+        for backend in [ExecBackend::Analytic, ExecBackend::Threaded] {
+            let mut off = DpEngine::new(
+                synth_cfg(SchemeKind::Baseline, backend, 2),
+                ModelArtifacts::synthetic("tiny"),
+            )
+            .unwrap();
+            off.step().unwrap();
+            assert!(off.trace_json().is_none(), "{backend:?}: tracing must be opt-in");
+
+            let mut cfg = synth_cfg(
+                SchemeKind::Covap { interval: 2, ef: EfScheduler::default() },
+                backend,
+                2,
+            );
+            cfg.trace_out = Some(PathBuf::from("unused_trace.json"));
+            let mut e = DpEngine::new(cfg, ModelArtifacts::synthetic("tiny")).unwrap();
+            for _ in 0..2 {
+                e.step().unwrap();
+            }
+            let doc = e.trace_json().expect("tracing enabled");
+            crate::obs::validate_trace(&doc).unwrap();
+            let events = doc.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+            let null = Json::Null;
+            let has_cat = |cat: &str| {
+                events
+                    .iter()
+                    .any(|ev| matches!(ev.get_or("cat", &null), Json::Str(s) if s == cat))
+            };
+            assert!(has_cat("predicted"), "{backend:?}: predicted spans missing");
+            assert_eq!(
+                has_cat("measured"),
+                matches!(backend, ExecBackend::Threaded),
+                "{backend:?}: measured spans only on the threaded backend"
+            );
+        }
     }
 
     /// Scenario knobs (mid-run pace change + straggler injection) must

@@ -51,6 +51,21 @@ pub struct IntervalDecision {
     pub switched: bool,
 }
 
+impl IntervalDecision {
+    /// The decision as `key=value` pairs for the structured log
+    /// (`obs::log::emit_kv`) — one line per window:
+    /// `interval_decision step=.. ccr=.. proposed=.. interval=.. switched=..`.
+    pub fn kv(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("step", self.step.to_string()),
+            ("ccr", format!("{:.3}", self.ccr)),
+            ("proposed", self.proposed.to_string()),
+            ("interval", self.interval.to_string()),
+            ("switched", self.switched.to_string()),
+        ]
+    }
+}
+
 /// Windowed re-profiler + hysteresis gate for COVAP's interval.
 pub struct IntervalController {
     warmup: u64,
@@ -201,6 +216,23 @@ impl IntervalController {
 mod tests {
     use super::*;
     use crate::profiler::EventKind;
+
+    #[test]
+    fn decision_kv_pairs_are_complete_and_ordered() {
+        let d = IntervalDecision {
+            step: 7,
+            ccr: 3.14159,
+            proposed: 4,
+            interval: 4,
+            switched: true,
+        };
+        let kv = d.kv();
+        let keys: Vec<&str> = kv.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, ["step", "ccr", "proposed", "interval", "switched"]);
+        assert_eq!(kv[0].1, "7");
+        assert_eq!(kv[1].1, "3.142");
+        assert_eq!(kv[4].1, "true");
+    }
 
     /// Feed one idealized step: every worker computes for `comp_s`, then
     /// one rendezvous collective of `comm_s` — and close the step with the

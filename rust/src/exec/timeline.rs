@@ -29,8 +29,29 @@ pub struct Span {
 }
 
 impl Span {
+    /// Span length in seconds. A negative extent means the clock stamps
+    /// went backwards (cross-thread skew bug) — that must surface, not
+    /// vanish into the breakdowns: debug builds assert, release builds
+    /// log a structured warning and clamp to zero.
     pub fn duration(&self) -> f64 {
-        (self.end_s - self.start_s).max(0.0)
+        let d = self.end_s - self.start_s;
+        if d < 0.0 {
+            debug_assert!(
+                false,
+                "negative span: kind={:?} tensor={} start={} end={}",
+                self.kind, self.tensor, self.start_s, self.end_s
+            );
+            crate::log_warn!(
+                target: "exec",
+                "negative span clamped: kind={:?} tensor={} start_s={} end_s={}",
+                self.kind,
+                self.tensor,
+                self.start_s,
+                self.end_s
+            );
+            return 0.0;
+        }
+        d
     }
 }
 
@@ -200,6 +221,19 @@ mod tests {
         let b = breakdown(&t);
         assert_eq!(b.compress_s, 0.5);
         assert_eq!(b.exposed_s, 0.0, "comm ended before compress stream");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "negative span")]
+    fn negative_span_asserts_in_debug() {
+        span(SpanKind::Compute, 2.0, 1.0).duration();
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn negative_span_clamps_in_release() {
+        assert_eq!(span(SpanKind::Compute, 2.0, 1.0).duration(), 0.0);
     }
 
     #[test]

@@ -375,10 +375,15 @@ fn num_or_null(x: f64) -> Json {
 /// Write a `BENCH_<name>.json` artifact with caller-shaped rows — the
 /// generic form of [`write_bench_json`] for benches whose rows are not
 /// (scheme, world, policy) cells (e.g. `perf_hotpath`'s throughput +
-/// allocation counts). Same stable envelope: `{"bench": ..., "rows": [..]}`.
+/// allocation counts). Stable envelope:
+/// `{"bench": ..., "metrics": {...}, "rows": [..]}` where `"metrics"` is a
+/// snapshot of the process-wide obs registry (DESIGN.md §10) — counters,
+/// gauges and p50/p95/p99 histograms stamped by everything that ran in
+/// this process before the write.
 pub fn write_bench_doc(path: &Path, bench: &str, rows: Vec<Json>) -> Result<()> {
     let doc = Json::obj(vec![
         ("bench", Json::from(bench)),
+        ("metrics", crate::obs::registry::global_snapshot()),
         ("rows", Json::Arr(rows)),
     ]);
     std::fs::write(path, format!("{doc}\n"))
@@ -568,6 +573,11 @@ mod tests {
         write_bench_json(&path, "test", &rows).unwrap();
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "test");
+        // Envelope embeds the obs registry snapshot (DESIGN.md §10).
+        let metrics = j.get("metrics").unwrap();
+        assert!(metrics.get("counters").is_ok());
+        assert!(metrics.get("gauges").is_ok());
+        assert!(metrics.get("histograms").is_ok());
         let arr = j.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("world").unwrap().as_usize().unwrap(), 4);

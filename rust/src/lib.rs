@@ -42,6 +42,7 @@ pub mod data;
 pub mod exec;
 pub mod metrics;
 pub mod network;
+pub mod obs;
 pub mod profiler;
 pub mod runtime;
 pub mod sim;

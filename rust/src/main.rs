@@ -27,6 +27,12 @@
 //! other scheme, profiling only reports — nothing is swapped. Drift
 //! scenarios: `--pace-schedule step:gbps,...` (mid-run bandwidth change)
 //! and `--straggler rank:factor[:from[:until]],...` (per-rank skew).
+//!
+//! Observability (DESIGN.md §10): `--trace-out PATH` writes a
+//! Perfetto-loadable trace.json (measured per-rank spans + the predicted
+//! analytic timeline, barrier/pacer/controller instants, wire-byte
+//! counters); `--log-level off|error|warn|info|debug` (or the COVAP_LOG
+//! env var) gates the stderr diagnostics.
 
 use std::path::{Path, PathBuf};
 
@@ -68,7 +74,11 @@ fn main() -> Result<()> {
 
 fn config_from(args: &Args) -> Result<RunConfig> {
     let path = args.get("config").map(PathBuf::from);
-    RunConfig::load(path.as_deref(), args)
+    let cfg = RunConfig::load(path.as_deref(), args)?;
+    if let Some(lv) = cfg.log_level {
+        covap::obs::log::set_level(lv);
+    }
+    Ok(cfg)
 }
 
 fn smoke(args: &Args) -> Result<()> {

@@ -87,6 +87,20 @@ impl RunMetrics {
         Ok(())
     }
 
+    /// Stamp the run-level aggregates into the global obs registry so
+    /// `harness::write_bench_doc` embeds them in every `BENCH_*.json`
+    /// (DESIGN.md §10). Safe to call on an empty run: NaN gauges are
+    /// serialized as null by the registry snapshot.
+    pub fn stamp_registry(&self) {
+        let s = self.summary();
+        crate::obs::registry::with_global(|r| {
+            r.counter_add("run_steps", s.steps as u64);
+            r.gauge_set("run_final_loss", s.final_loss as f64);
+            r.gauge_set("run_total_wall_s", s.total_wall_s);
+            r.gauge_set("run_total_sim_s", s.total_sim_s);
+        });
+    }
+
     /// JSONL (one object per step).
     pub fn write_jsonl(&self, path: &Path) -> Result<()> {
         let mut f = std::fs::File::create(path)
@@ -154,5 +168,19 @@ mod tests {
         let s = RunMetrics::new().summary();
         assert_eq!(s.steps, 0);
         assert!(s.final_loss.is_nan());
+    }
+
+    #[test]
+    fn stamp_registry_publishes_run_summary() {
+        let mut m = RunMetrics::new();
+        m.push(rec(0, 5.0));
+        m.push(rec(1, 4.0));
+        m.stamp_registry();
+        crate::obs::registry::with_global(|r| {
+            assert!(r.counter("run_steps") >= 2);
+            assert_eq!(r.gauge("run_final_loss"), Some(4.0));
+            assert_eq!(r.gauge("run_total_wall_s"), Some(0.2));
+            assert_eq!(r.gauge("run_total_sim_s"), Some(0.4));
+        });
     }
 }

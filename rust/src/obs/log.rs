@@ -1,0 +1,238 @@
+//! Leveled, target-tagged logging (DESIGN.md §10).
+//!
+//! One process-wide level (atomic; `COVAP_LOG=debug` env or
+//! `--log-level` / `"log_level"` config knob via [`set_level`]) gates the
+//! [`crate::log_error!`] / [`crate::log_warn!`] / [`crate::log_info!`] /
+//! [`crate::log_debug!`] macros. Every message carries a *target* — the
+//! subsystem it came from (`engine`, `trainer`, `config`, `exec`,
+//! `controller`, `bench`, ...) — and goes to **stderr**, so stdout stays
+//! reserved for primary program output (tables, reports, bench JSON
+//! paths).
+//!
+//! Zero-cost when disabled: the macros test [`enabled`] (one relaxed
+//! atomic load) before touching `format_args!`, so a suppressed call
+//! formats nothing and allocates nothing — asserted by
+//! `benches/perf_hotpath.rs`.
+//!
+//! Structured events (the controller's interval decisions) go through
+//! [`emit_kv`] as `event key=value ...` lines, grep- and parse-friendly.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Verbosity levels, ordered so that a message passes when its level is
+/// at or below the active one. [`LogLevel::Off`] silences everything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum LogLevel {
+    /// No output at all.
+    Off = 0,
+    /// Unrecoverable problems.
+    Error = 1,
+    /// Suspicious-but-continuing conditions (the config warnings,
+    /// negative-span clamps).
+    Warn = 2,
+    /// Run milestones: progress lines, controller decisions, artifact
+    /// paths. The default.
+    Info = 3,
+    /// Per-step diagnostics.
+    Debug = 4,
+}
+
+impl LogLevel {
+    /// Parse a level name (case-insensitive): off|error|warn|info|debug.
+    pub fn parse(s: &str) -> Option<LogLevel> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(LogLevel::Off),
+            "error" => Some(LogLevel::Error),
+            "warn" | "warning" => Some(LogLevel::Warn),
+            "info" => Some(LogLevel::Info),
+            "debug" => Some(LogLevel::Debug),
+            _ => None,
+        }
+    }
+
+    /// The canonical lowercase name (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: LogLevel::parse
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LogLevel::Off => "off",
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+
+    fn from_u8(v: u8) -> LogLevel {
+        match v {
+            0 => LogLevel::Off,
+            1 => LogLevel::Error,
+            2 => LogLevel::Warn,
+            4 => LogLevel::Debug,
+            _ => LogLevel::Info,
+        }
+    }
+}
+
+/// Sentinel: the global level has not been initialized yet (first read
+/// consults the `COVAP_LOG` environment variable).
+const UNINIT: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn init_from_env() -> u8 {
+    let lv = std::env::var("COVAP_LOG")
+        .ok()
+        .and_then(|s| LogLevel::parse(&s))
+        .unwrap_or(LogLevel::Info);
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+    lv as u8
+}
+
+/// The active level (lazily read from `COVAP_LOG`, default `info`).
+pub fn level() -> LogLevel {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == UNINIT { init_from_env() } else { raw };
+    LogLevel::from_u8(raw)
+}
+
+/// Override the active level (CLI `--log-level` / config `"log_level"`).
+pub fn set_level(lv: LogLevel) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+/// Would a message at `lv` be emitted right now? One relaxed atomic load —
+/// the macros call this before formatting anything.
+#[inline]
+pub fn enabled(lv: LogLevel) -> bool {
+    lv != LogLevel::Off && lv <= level()
+}
+
+/// Emit one line to stderr: `[<level> <target>] <message>`. The macros
+/// hand in `format_args!` directly, so an enabled message is formatted
+/// straight into the stderr writer without an intermediate `String`.
+pub fn emit(level: LogLevel, target: &str, args: fmt::Arguments<'_>) {
+    eprintln!("[{} {target}] {args}", level.as_str());
+}
+
+/// Emit a structured `event key=value ...` line (checks [`enabled`]
+/// itself, so callers can build the pairs unconditionally only when they
+/// are cheap — or gate on [`enabled`] first).
+pub fn emit_kv(level: LogLevel, target: &str, event: &str, kvs: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    let mut line = String::with_capacity(event.len() + kvs.len() * 16);
+    line.push_str(event);
+    for (k, v) in kvs {
+        line.push(' ');
+        line.push_str(k);
+        line.push('=');
+        line.push_str(v);
+    }
+    emit(level, target, format_args!("{line}"));
+}
+
+/// Log at `error` level: `log_error!(target: "engine", "...", ...)`.
+#[macro_export]
+macro_rules! log_error {
+    (target: $target:expr, $($arg:tt)*) => {{
+        if $crate::obs::log::enabled($crate::obs::log::LogLevel::Error) {
+            $crate::obs::log::emit(
+                $crate::obs::log::LogLevel::Error, $target, format_args!($($arg)*));
+        }
+    }};
+}
+
+/// Log at `warn` level: `log_warn!(target: "config", "...", ...)`.
+#[macro_export]
+macro_rules! log_warn {
+    (target: $target:expr, $($arg:tt)*) => {{
+        if $crate::obs::log::enabled($crate::obs::log::LogLevel::Warn) {
+            $crate::obs::log::emit(
+                $crate::obs::log::LogLevel::Warn, $target, format_args!($($arg)*));
+        }
+    }};
+}
+
+/// Log at `info` level: `log_info!(target: "trainer", "...", ...)`.
+#[macro_export]
+macro_rules! log_info {
+    (target: $target:expr, $($arg:tt)*) => {{
+        if $crate::obs::log::enabled($crate::obs::log::LogLevel::Info) {
+            $crate::obs::log::emit(
+                $crate::obs::log::LogLevel::Info, $target, format_args!($($arg)*));
+        }
+    }};
+}
+
+/// Log at `debug` level: `log_debug!(target: "exec", "...", ...)`.
+#[macro_export]
+macro_rules! log_debug {
+    (target: $target:expr, $($arg:tt)*) => {{
+        if $crate::obs::log::enabled($crate::obs::log::LogLevel::Debug) {
+            $crate::obs::log::emit(
+                $crate::obs::log::LogLevel::Debug, $target, format_args!($($arg)*));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_roundtrip() {
+        for lv in [
+            LogLevel::Off,
+            LogLevel::Error,
+            LogLevel::Warn,
+            LogLevel::Info,
+            LogLevel::Debug,
+        ] {
+            assert_eq!(LogLevel::parse(lv.as_str()), Some(lv));
+        }
+        assert_eq!(LogLevel::parse("WARN"), Some(LogLevel::Warn));
+        assert_eq!(LogLevel::parse("verbose"), None);
+    }
+
+    #[test]
+    fn levels_order_by_verbosity() {
+        assert!(LogLevel::Off < LogLevel::Error);
+        assert!(LogLevel::Error < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+    }
+
+    #[test]
+    fn enabled_respects_set_level() {
+        // restore whatever the process-wide level was (tests share it)
+        let prev = level();
+        set_level(LogLevel::Warn);
+        assert!(enabled(LogLevel::Error));
+        assert!(enabled(LogLevel::Warn));
+        assert!(!enabled(LogLevel::Info));
+        assert!(!enabled(LogLevel::Debug));
+        set_level(LogLevel::Off);
+        assert!(!enabled(LogLevel::Error));
+        assert!(!enabled(LogLevel::Off), "Off is never an emit level");
+        set_level(prev);
+    }
+
+    #[test]
+    fn macros_compile_for_all_levels() {
+        // smoke: the macro forms expand inside the crate
+        crate::log_error!(target: "test", "e {}", 1);
+        crate::log_warn!(target: "test", "w {}", 2);
+        crate::log_info!(target: "test", "i {}", 3);
+        crate::log_debug!(target: "test", "d {}", 4);
+        emit_kv(
+            LogLevel::Debug,
+            "test",
+            "event",
+            &[("k", "v".to_string()), ("n", 7.to_string())],
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Unified observability layer (DESIGN.md §10).
+//!
+//! Three pieces, threaded through both execution backends:
+//!
+//! * [`trace`] — Chrome Trace Event / Perfetto export: measured
+//!   `RankTimeline`s and the analytic simulator's predicted spans in one
+//!   `trace.json` (`--trace-out`), plus instant events for barrier
+//!   waits, pacer changes and `IntervalController` decisions, and
+//!   cumulative per-level wire-byte counters.
+//! * [`registry`] — process-wide counter/gauge/histogram registry the
+//!   engine stamps each step; `harness::write_bench_doc` embeds its
+//!   snapshot into every `BENCH_*.json`.
+//! * [`log`] — leveled, target-tagged logging to stderr behind the
+//!   [`crate::log_error!`]/[`crate::log_warn!`]/[`crate::log_info!`]/
+//!   [`crate::log_debug!`] macros (`--log-level` / `COVAP_LOG`).
+//!
+//! All of it is zero-cost when disabled: tracing only runs when
+//! `trace_out` is set, registry stamping happens at step (not
+//! per-tensor) granularity, and suppressed log macros are a single
+//! relaxed atomic load — `benches/perf_hotpath.rs` asserts the
+//! steady-state hot path still performs zero allocations.
+
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use log::LogLevel;
+pub use registry::{global_snapshot, with_global, Registry};
+pub use trace::{validate_trace, TraceBuilder, TID_COMM, TID_COMPUTE};

@@ -1,0 +1,316 @@
+//! Step-metrics registry (DESIGN.md §10): counters, gauges and
+//! percentile histograms the engine stamps every step.
+//!
+//! One process-wide [`Registry`] behind a mutex ([`with_global`]) so the
+//! engine, the trainer and the benches all accumulate into the same
+//! snapshot, and `harness::write_bench_doc` embeds it into every
+//! `BENCH_*.json` envelope (the `"metrics"` field) — replacing ad-hoc
+//! per-bench aggregation with one shared vocabulary:
+//!
+//! * counters — `steps`, `wire_bytes{,_intra,_inter}`,
+//!   `controller_decisions`, `controller_switches`, `run_steps`,
+//!   `bench_steady_allocs`
+//! * gauges — `interval`, `ccr`, `barrier_skew_s`, `run_final_loss`,
+//!   `run_total_{wall,sim}_s`
+//! * histograms (p50/p95/p99) — `step_wall_s`, `sim_total_s`,
+//!   `sim_exposed_s`, `compress_s`, `barrier_wait_s`, and per-`SpanKind`
+//!   durations `span_{compute,compress,comm}_s`
+//!
+//! Stamping happens at engine-step granularity, far from the
+//! compress→encode→combine hot path, so the zero-allocation steady-state
+//! guarantee (`benches/perf_hotpath.rs`) is untouched.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Sample cap per histogram: beyond this the reservoir wraps around
+/// (bounded memory for arbitrarily long runs; percentiles then reflect a
+/// rolling window of recent observations).
+const HIST_CAP: usize = 8192;
+
+/// A streaming histogram: exact count/sum/max plus a bounded sample
+/// reservoir for percentile estimates.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    count: u64,
+    sum: f64,
+    max: f64,
+    samples: Vec<f64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { count: 0, sum: 0.0, max: f64::NEG_INFINITY, samples: Vec::new() }
+    }
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+        if self.samples.len() < HIST_CAP {
+            self.samples.push(v);
+        } else {
+            self.samples[(self.count as usize) % HIST_CAP] = v;
+        }
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// The `q`-th percentile (0..=100) over the retained samples; NaN when
+    /// empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let idx = (q / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// Summary as a JSON object: count, sum, mean, p50/p95/p99, max.
+    pub fn to_json(&self) -> Json {
+        let mean = if self.count == 0 { 0.0 } else { self.sum / self.count as f64 };
+        let pct = |q: f64| {
+            let v = self.percentile(q);
+            if v.is_finite() { Json::Num(v) } else { Json::Null }
+        };
+        Json::obj(vec![
+            ("count", Json::from(self.count as usize)),
+            ("sum", Json::from(self.sum)),
+            ("mean", Json::from(mean)),
+            ("p50", pct(50.0)),
+            ("p95", pct(95.0)),
+            ("p99", pct(99.0)),
+            ("max", if self.count == 0 { Json::Null } else { Json::Num(self.max) }),
+        ])
+    }
+}
+
+/// Counter/gauge/histogram registry. Plain struct — unit tests build their
+/// own; production code shares the process-wide one via [`with_global`].
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `v` to a monotone counter (created at 0 on first use).
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        match self.counters.get_mut(name) {
+            Some(c) => *c += v,
+            None => {
+                self.counters.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        match self.gauges.get_mut(name) {
+            Some(g) => *g = v,
+            None => {
+                self.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Current gauge value, if ever set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one observation into a histogram (created on first use).
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self.histograms.get_mut(name) {
+            Some(h) => h.observe(v),
+            None => {
+                let mut h = Histogram::default();
+                h.observe(v);
+                self.histograms.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// The named histogram, if any observation was ever recorded.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Drop all series (tests isolate themselves with fresh registries
+    /// instead; the global registry is append-only in production).
+    pub fn clear(&mut self) {
+        self.counters.clear();
+        self.gauges.clear();
+        self.histograms.clear();
+    }
+
+    /// Snapshot as `{"counters": {...}, "gauges": {...},
+    /// "histograms": {name: {count, sum, mean, p50, p95, p99, max}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(), if v.is_finite() { Json::Num(*v) } else { Json::Null })
+            })
+            .collect();
+        let hists =
+            self.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+}
+
+/// Run `f` against the process-wide registry (engine steps, trainer run
+/// summaries and bench instruments all land here).
+pub fn with_global<T>(f: impl FnOnce(&mut Registry) -> T) -> T {
+    static GLOBAL: OnceLock<Mutex<Registry>> = OnceLock::new();
+    let m = GLOBAL.get_or_init(|| Mutex::new(Registry::new()));
+    let mut guard = m.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    f(&mut guard)
+}
+
+/// JSON snapshot of the process-wide registry — what
+/// `harness::write_bench_doc` embeds into every `BENCH_*.json`.
+pub fn global_snapshot() -> Json {
+    with_global(|r| r.to_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_zero() {
+        let mut r = Registry::new();
+        assert_eq!(r.counter("steps"), 0);
+        r.counter_add("steps", 1);
+        r.counter_add("steps", 4);
+        assert_eq!(r.counter("steps"), 5);
+    }
+
+    #[test]
+    fn gauges_keep_latest() {
+        let mut r = Registry::new();
+        assert_eq!(r.gauge("ccr"), None);
+        r.gauge_set("ccr", 1.5);
+        r.gauge_set("ccr", 2.5);
+        assert_eq!(r.gauge("ccr"), Some(2.5));
+    }
+
+    #[test]
+    fn histogram_percentiles_on_known_data() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 5050.0).abs() < 1e-9);
+        let p50 = h.percentile(50.0);
+        assert!((49.0..=52.0).contains(&p50), "p50 = {p50}");
+        let p99 = h.percentile(99.0);
+        assert!((98.0..=100.0).contains(&p99), "p99 = {p99}");
+        assert_eq!(h.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_reservoir_is_bounded() {
+        let mut h = Histogram::default();
+        for i in 0..(HIST_CAP * 3) {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count() as usize, HIST_CAP * 3);
+        assert_eq!(h.max, (HIST_CAP * 3 - 1) as f64);
+        assert!(h.samples.len() <= HIST_CAP);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let mut r = Registry::new();
+        r.counter_add("wire_bytes", 128);
+        r.gauge_set("interval", 3.0);
+        r.observe("step_wall_s", 0.5);
+        r.observe("step_wall_s", 1.5);
+        let j = r.to_json();
+        assert_eq!(
+            j.get("counters").unwrap().get("wire_bytes").unwrap().as_usize().unwrap(),
+            128
+        );
+        assert_eq!(
+            j.get("gauges").unwrap().get("interval").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        let h = j.get("histograms").unwrap().get("step_wall_s").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 2);
+        assert!((h.get("mean").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert!(h.get("max").unwrap().as_f64().unwrap() >= 1.5);
+    }
+
+    #[test]
+    fn empty_histogram_summary_is_null_safe() {
+        let h = Histogram::default();
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(*j.get("p50").unwrap(), Json::Null);
+        assert_eq!(*j.get("max").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn non_finite_gauges_serialize_as_null() {
+        let mut r = Registry::new();
+        r.gauge_set("run_final_loss", f64::NAN);
+        r.gauge_set("ok", 1.25);
+        let j = r.to_json();
+        assert_eq!(*j.get("gauges").unwrap().get("run_final_loss").unwrap(), Json::Null);
+        assert_eq!(j.get("gauges").unwrap().get("ok").unwrap().as_f64().unwrap(), 1.25);
+        // And the snapshot parses back as valid JSON.
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok(), "snapshot must be valid JSON: {text}");
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        with_global(|r| r.counter_add("test_shared_counter", 2));
+        with_global(|r| r.counter_add("test_shared_counter", 3));
+        let v = with_global(|r| r.counter("test_shared_counter"));
+        assert!(v >= 5, "global accumulates across calls, got {v}");
+        let snap = global_snapshot();
+        assert!(snap.get("counters").is_ok());
+    }
+}

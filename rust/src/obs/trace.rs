@@ -1,0 +1,447 @@
+//! Chrome Trace Event Format / Perfetto export (DESIGN.md §10).
+//!
+//! [`TraceBuilder`] turns per-step span data — the threaded backend's
+//! measured `RankTimeline`s *and* the analytic simulator's predicted
+//! spans — into one `trace.json` that loads directly in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`:
+//!
+//! * **pid** — one process per measured rank (`rank 0..P-1`), plus one
+//!   extra process `sim (predicted)` at pid = P carrying the analytic
+//!   model's predicted timeline. Both backends emit the predicted
+//!   process, so predicted-vs-measured overlap can be diffed in one
+//!   window.
+//! * **tid** — 0 = compute stream (Compute + Compress spans),
+//!   1 = comm stream (Comm spans).
+//! * **complete events** (`ph:"X"`) carry `args` with tensor id, scheme,
+//!   wire/intra/inter bytes and step.
+//! * **instant events** (`ph:"i"`) mark barrier waits (measured, per
+//!   rank), barrier skew (predicted), pacer state changes, and
+//!   `IntervalController` decisions (measured CCR, proposed/chosen
+//!   interval, whether a re-shard happened).
+//! * **counter events** (`ph:"C"`) track cumulative per-level wire bytes
+//!   (`intra`/`inter` series) — monotone by construction.
+//!
+//! Steps are laid out back-to-back on a single timeline: the builder
+//! keeps a cursor (µs) advanced past each step's latest event at
+//! [`TraceBuilder::end_step`], so span times passed in are
+//! *step-relative seconds*.
+//!
+//! [`validate_trace`] is the schema check the property tests and the CI
+//! trace job run against every emitted document: required keys per
+//! phase, non-negative finite times, per-(pid, tid) span non-overlap,
+//! and monotone wire-byte counter series.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Thread id of the compute stream within each trace process.
+pub const TID_COMPUTE: usize = 0;
+/// Thread id of the comm stream within each trace process.
+pub const TID_COMM: usize = 1;
+
+/// Incrementally builds a Chrome Trace Event document; one per engine
+/// run, fed at step granularity (never from the per-tensor hot path).
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    events: Vec<Json>,
+    /// Start of the current step on the global trace clock, in µs.
+    cursor_us: f64,
+    /// Latest event end seen this step, relative to `cursor_us`, in µs.
+    step_max_us: f64,
+    named_procs: BTreeSet<usize>,
+    named_threads: BTreeSet<(usize, usize)>,
+    /// Cumulative counter series, keyed (pid, counter name, series key).
+    counter_totals: BTreeMap<(usize, String, String), f64>,
+}
+
+impl TraceBuilder {
+    /// An empty trace.
+    pub fn new() -> TraceBuilder {
+        TraceBuilder::default()
+    }
+
+    /// Number of events emitted so far (metadata included).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when no events have been emitted.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Name a trace process (once per pid; later calls are no-ops).
+    pub fn process(&mut self, pid: usize, name: &str) {
+        if !self.named_procs.insert(pid) {
+            return;
+        }
+        self.events.push(Json::obj(vec![
+            ("ph", Json::from("M")),
+            ("name", Json::from("process_name")),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(0usize)),
+            ("ts", Json::from(0.0)),
+            ("args", Json::obj(vec![("name", Json::from(name))])),
+        ]));
+    }
+
+    /// Name a thread within a process (once per (pid, tid)).
+    pub fn thread(&mut self, pid: usize, tid: usize, name: &str) {
+        if !self.named_threads.insert((pid, tid)) {
+            return;
+        }
+        self.events.push(Json::obj(vec![
+            ("ph", Json::from("M")),
+            ("name", Json::from("thread_name")),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(tid)),
+            ("ts", Json::from(0.0)),
+            ("args", Json::obj(vec![("name", Json::from(name))])),
+        ]));
+    }
+
+    /// Emit a complete (`ph:"X"`) event. `start_s`/`end_s` are
+    /// step-relative seconds; a non-positive duration clamps to zero
+    /// (the upstream `Span::duration()` warning already flagged it).
+    pub fn complete(
+        &mut self,
+        pid: usize,
+        tid: usize,
+        name: &str,
+        cat: &str,
+        start_s: f64,
+        end_s: f64,
+        args: Vec<(&str, Json)>,
+    ) {
+        let start_us = (start_s * 1e6).max(0.0);
+        let dur_us = ((end_s - start_s) * 1e6).max(0.0);
+        self.step_max_us = self.step_max_us.max(start_us + dur_us);
+        self.events.push(Json::obj(vec![
+            ("ph", Json::from("X")),
+            ("name", Json::from(name)),
+            ("cat", Json::from(cat)),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(tid)),
+            ("ts", Json::from(self.cursor_us + start_us)),
+            ("dur", Json::from(dur_us)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    /// Emit a thread-scoped instant (`ph:"i"`, `s:"t"`) event at a
+    /// step-relative time.
+    pub fn instant(
+        &mut self,
+        pid: usize,
+        tid: usize,
+        name: &str,
+        ts_s: f64,
+        args: Vec<(&str, Json)>,
+    ) {
+        let ts_us = (ts_s * 1e6).max(0.0);
+        self.step_max_us = self.step_max_us.max(ts_us);
+        self.events.push(Json::obj(vec![
+            ("ph", Json::from("i")),
+            ("s", Json::from("t")),
+            ("name", Json::from(name)),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(tid)),
+            ("ts", Json::from(self.cursor_us + ts_us)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    /// Emit a counter (`ph:"C"`) sample. Each `series` entry is *added*
+    /// to the running total for (pid, name, key), so the emitted values
+    /// are cumulative and therefore monotone — which is what
+    /// [`validate_trace`] checks for the `wire_bytes` counter.
+    pub fn counter(&mut self, pid: usize, name: &str, ts_s: f64, series: &[(&str, f64)]) {
+        let ts_us = (ts_s * 1e6).max(0.0);
+        self.step_max_us = self.step_max_us.max(ts_us);
+        let mut args: Vec<(&str, Json)> = Vec::with_capacity(series.len());
+        for (key, delta) in series {
+            let slot = self
+                .counter_totals
+                .entry((pid, name.to_string(), key.to_string()))
+                .or_insert(0.0);
+            *slot += delta.max(0.0);
+            args.push((key, Json::Num(*slot)));
+        }
+        self.events.push(Json::obj(vec![
+            ("ph", Json::from("C")),
+            ("name", Json::from(name)),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(0usize)),
+            ("ts", Json::from(self.cursor_us + ts_us)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    /// Close the current step: advance the cursor past every event seen,
+    /// plus a 1 µs gap so adjacent steps never touch.
+    pub fn end_step(&mut self) {
+        self.cursor_us += self.step_max_us + 1.0;
+        self.step_max_us = 0.0;
+    }
+
+    /// The full document: `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(self.events.clone())),
+            ("displayTimeUnit", Json::from("ms")),
+        ])
+    }
+
+    /// Write the document to `path` (the `--trace-out` target).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing trace to {}", path.display()))
+    }
+}
+
+fn ev_num(e: &Json, key: &str, i: usize) -> Result<f64> {
+    let v = e
+        .get(key)
+        .with_context(|| format!("event {i}: missing '{key}'"))?
+        .as_f64()
+        .with_context(|| format!("event {i}: '{key}' not a number"))?;
+    if !v.is_finite() {
+        bail!("event {i}: '{key}' is not finite");
+    }
+    Ok(v)
+}
+
+/// Validate a trace document against the schema the repo promises
+/// (ISSUE 6 / DESIGN.md §10):
+///
+/// * top level has a `traceEvents` array;
+/// * every event has `ph`, `name`, `ts`, `pid`, `tid`, with `ts` finite
+///   and non-negative;
+/// * `"X"` events have a finite non-negative `dur`, and per (pid, tid)
+///   the spans do not overlap (1 ms tolerance for float noise);
+/// * `"i"` events carry a valid scope `s`;
+/// * `"C"` events have all-numeric args, and the `wire_bytes` counter's
+///   series are non-decreasing per (pid, series key);
+/// * only phases `X`/`i`/`C`/`M` appear.
+pub fn validate_trace(doc: &Json) -> Result<()> {
+    let events = doc
+        .get("traceEvents")
+        .context("trace document: missing 'traceEvents'")?
+        .as_arr()
+        .context("trace document: 'traceEvents' not an array")?;
+    // (pid, tid) -> list of (start, end) µs for "X" events
+    let mut spans: BTreeMap<(usize, usize), Vec<(f64, f64)>> = BTreeMap::new();
+    // (pid, series key) -> last value for the wire_bytes counter
+    let mut wire_last: BTreeMap<(usize, String), f64> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .with_context(|| format!("event {i}: missing 'ph'"))?
+            .as_str()
+            .with_context(|| format!("event {i}: 'ph' not a string"))?
+            .to_string();
+        e.get("name").with_context(|| format!("event {i}: missing 'name'"))?;
+        let ts = ev_num(e, "ts", i)?;
+        if ts < 0.0 {
+            bail!("event {i}: negative ts {ts}");
+        }
+        let pid = e
+            .get("pid")
+            .with_context(|| format!("event {i}: missing 'pid'"))?
+            .as_usize()
+            .with_context(|| format!("event {i}: bad 'pid'"))?;
+        let tid = e
+            .get("tid")
+            .with_context(|| format!("event {i}: missing 'tid'"))?
+            .as_usize()
+            .with_context(|| format!("event {i}: bad 'tid'"))?;
+        match ph.as_str() {
+            "X" => {
+                let dur = ev_num(e, "dur", i)?;
+                if dur < 0.0 {
+                    bail!("event {i}: negative dur {dur}");
+                }
+                spans.entry((pid, tid)).or_default().push((ts, ts + dur));
+            }
+            "i" => {
+                let s = e
+                    .get("s")
+                    .with_context(|| format!("event {i}: instant missing scope 's'"))?
+                    .as_str()
+                    .with_context(|| format!("event {i}: 's' not a string"))?;
+                if !matches!(s, "t" | "p" | "g") {
+                    bail!("event {i}: invalid instant scope '{s}'");
+                }
+            }
+            "C" => {
+                let name = e.get("name")?.as_str()?.to_string();
+                let args = e
+                    .get("args")
+                    .with_context(|| format!("event {i}: counter missing 'args'"))?
+                    .as_obj()
+                    .with_context(|| format!("event {i}: counter 'args' not an object"))?;
+                for (key, v) in args {
+                    let v = v
+                        .as_f64()
+                        .with_context(|| format!("event {i}: counter series '{key}' not numeric"))?;
+                    if name == "wire_bytes" {
+                        let slot = wire_last.entry((pid, key.clone())).or_insert(f64::NEG_INFINITY);
+                        if v < *slot {
+                            bail!(
+                                "event {i}: counter wire_bytes/{key} decreased ({} -> {v})",
+                                *slot
+                            );
+                        }
+                        *slot = v;
+                    }
+                }
+            }
+            "M" => {}
+            other => bail!("event {i}: unsupported phase '{other}'"),
+        }
+    }
+    for ((pid, tid), mut list) in spans {
+        list.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        for w in list.windows(2) {
+            let (prev, next) = (w[0], w[1]);
+            // 1 ms slack: span ends are reconstructed from f64 seconds.
+            if next.0 < prev.1 - 1e-3 {
+                bail!(
+                    "pid {pid} tid {tid}: overlapping spans [{:.3}, {:.3}] and [{:.3}, {:.3}] µs",
+                    prev.0,
+                    prev.1,
+                    next.0,
+                    next.1
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn built_trace_validates_and_roundtrips() {
+        let mut t = TraceBuilder::new();
+        t.process(0, "rank 0");
+        t.thread(0, TID_COMPUTE, "compute");
+        t.thread(0, TID_COMM, "comm");
+        t.complete(0, TID_COMPUTE, "compute", "measured", 0.0, 1e-3, vec![
+            ("tensor", Json::from(0usize)),
+        ]);
+        t.complete(0, TID_COMM, "comm", "measured", 5e-4, 2e-3, vec![]);
+        t.instant(0, TID_COMM, "barrier_wait", 2e-3, vec![("wait_s", Json::from(1e-4))]);
+        t.counter(0, "wire_bytes", 2e-3, &[("intra", 100.0), ("inter", 50.0)]);
+        t.end_step();
+        t.complete(0, TID_COMPUTE, "compute", "measured", 0.0, 1e-3, vec![]);
+        t.counter(0, "wire_bytes", 1e-3, &[("intra", 10.0), ("inter", 0.0)]);
+        t.end_step();
+        let doc = t.to_json();
+        validate_trace(&doc).unwrap();
+        // writer output parses back to the same document
+        let back = Json::parse(&doc.to_string()).unwrap();
+        validate_trace(&back).unwrap();
+        assert!(t.len() >= 7);
+    }
+
+    #[test]
+    fn steps_do_not_overlap_on_the_global_clock() {
+        let mut t = TraceBuilder::new();
+        // Same [0, 1ms] window in two consecutive steps, same tid: only
+        // legal because end_step() advances the cursor.
+        t.complete(0, TID_COMPUTE, "compute", "measured", 0.0, 1e-3, vec![]);
+        t.end_step();
+        t.complete(0, TID_COMPUTE, "compute", "measured", 0.0, 1e-3, vec![]);
+        t.end_step();
+        validate_trace(&t.to_json()).unwrap();
+    }
+
+    #[test]
+    fn negative_duration_clamps_to_zero() {
+        let mut t = TraceBuilder::new();
+        t.complete(0, TID_COMPUTE, "compute", "measured", 2e-3, 1e-3, vec![]);
+        let doc = t.to_json();
+        validate_trace(&doc).unwrap();
+        let ev = &doc.get("traceEvents").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ev.get("dur").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn validator_rejects_overlap() {
+        let mk = |ts: f64, dur: f64| {
+            Json::obj(vec![
+                ("ph", Json::from("X")),
+                ("name", Json::from("compute")),
+                ("pid", Json::from(0usize)),
+                ("tid", Json::from(0usize)),
+                ("ts", Json::from(ts)),
+                ("dur", Json::from(dur)),
+                ("args", Json::obj(vec![])),
+            ])
+        };
+        let doc = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![mk(0.0, 100.0), mk(50.0, 100.0)]),
+        )]);
+        let err = validate_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("overlapping"), "got: {err}");
+    }
+
+    #[test]
+    fn validator_rejects_decreasing_wire_bytes() {
+        let mk = |ts: f64, v: f64| {
+            Json::obj(vec![
+                ("ph", Json::from("C")),
+                ("name", Json::from("wire_bytes")),
+                ("pid", Json::from(0usize)),
+                ("tid", Json::from(0usize)),
+                ("ts", Json::from(ts)),
+                ("args", Json::obj(vec![("intra", Json::Num(v))])),
+            ])
+        };
+        let doc =
+            Json::obj(vec![("traceEvents", Json::Arr(vec![mk(0.0, 100.0), mk(1.0, 90.0)]))]);
+        let err = validate_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("decreased"), "got: {err}");
+    }
+
+    #[test]
+    fn validator_rejects_missing_fields_and_bad_phase() {
+        let no_ts = Json::obj(vec![
+            ("ph", Json::from("X")),
+            ("name", Json::from("x")),
+            ("pid", Json::from(0usize)),
+            ("tid", Json::from(0usize)),
+            ("dur", Json::from(1.0)),
+        ]);
+        let doc = Json::obj(vec![("traceEvents", Json::Arr(vec![no_ts]))]);
+        assert!(validate_trace(&doc).is_err());
+        let bad_ph = Json::obj(vec![
+            ("ph", Json::from("Q")),
+            ("name", Json::from("x")),
+            ("pid", Json::from(0usize)),
+            ("tid", Json::from(0usize)),
+            ("ts", Json::from(0.0)),
+        ]);
+        let doc = Json::obj(vec![("traceEvents", Json::Arr(vec![bad_ph]))]);
+        assert!(validate_trace(&doc).is_err());
+    }
+
+    #[test]
+    fn metadata_emitted_once_per_target() {
+        let mut t = TraceBuilder::new();
+        t.process(3, "rank 3");
+        t.process(3, "rank 3");
+        t.thread(3, 0, "compute");
+        t.thread(3, 0, "compute");
+        assert_eq!(t.len(), 2);
+        validate_trace(&t.to_json()).unwrap();
+    }
+}

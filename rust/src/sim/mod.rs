@@ -10,6 +10,7 @@
 
 use crate::comm::{Collective, TopologyKind};
 use crate::compress::CollectiveOp;
+use crate::exec::{Span, SpanKind};
 use crate::network::{ClusterSpec, NetworkModel};
 
 /// One communication tensor's per-iteration costs.
@@ -138,6 +139,35 @@ pub fn simulate_iteration_on(
     tensors: &[TensorCost],
     policy: Policy,
 ) -> Breakdown {
+    simulate_core(topo, net, cluster, t_before_s, tensors, policy, None)
+}
+
+/// [`simulate_iteration_on`], additionally appending the predicted
+/// per-tensor Compute / Compress / Comm spans (absolute seconds from the
+/// iteration start, `t_before` included) to `spans` — the analytic
+/// backend's timeline for the Perfetto export (`obs::TraceBuilder`), in
+/// the same [`Span`] shape the threaded backend measures.
+pub fn simulate_iteration_spans(
+    topo: &dyn Collective,
+    net: &NetworkModel,
+    cluster: ClusterSpec,
+    t_before_s: f64,
+    tensors: &[TensorCost],
+    policy: Policy,
+    spans: &mut Vec<Span>,
+) -> Breakdown {
+    simulate_core(topo, net, cluster, t_before_s, tensors, policy, Some(spans))
+}
+
+fn simulate_core(
+    topo: &dyn Collective,
+    net: &NetworkModel,
+    cluster: ClusterSpec,
+    t_before_s: f64,
+    tensors: &[TensorCost],
+    policy: Policy,
+    mut spans: Option<&mut Vec<Span>>,
+) -> Breakdown {
     let mut compute_t = t_before_s;
     let mut comm_free = f64::NEG_INFINITY; // last comm completion
     let mut comm_busy = 0.0;
@@ -156,11 +186,26 @@ pub fn simulate_iteration_on(
         Policy::Overlap => 0.0,
     };
 
-    for t in tensors {
+    for (idx, t) in tensors.iter().enumerate() {
         // compute + compress for this tensor
+        let comp_start = compute_t;
         compute_t += t.comp_s + t.compress_s;
         t_comp += t.comp_s;
         t_compress += t.compress_s;
+        if let Some(out) = spans.as_deref_mut() {
+            out.push(Span {
+                kind: SpanKind::Compute,
+                tensor: idx,
+                start_s: comp_start,
+                end_s: comp_start + t.comp_s,
+            });
+            out.push(Span {
+                kind: SpanKind::Compress,
+                tensor: idx,
+                start_s: comp_start + t.comp_s,
+                end_s: compute_t,
+            });
+        }
 
         let dur = comm_time_on(topo, net, cluster, t);
         if dur > 0.0 {
@@ -179,10 +224,28 @@ pub fn simulate_iteration_on(
             comm_free = start + dur;
             comm_busy += dur;
             comm_end = comm_free;
+            if let Some(out) = spans.as_deref_mut() {
+                out.push(Span {
+                    kind: SpanKind::Comm,
+                    tensor: idx,
+                    start_s: start,
+                    end_s: comm_free,
+                });
+            }
             if t.data_dependency {
                 // synchronous collective: compute stream stalls
                 compute_t = compute_t.max(comm_free);
             }
+        } else if let Some(out) = spans.as_deref_mut() {
+            // Filter-dropped tensor: a zero-duration marker at the comm
+            // frontier (never earlier than a running collective, so the
+            // per-stream non-overlap property holds).
+            let at = if comm_free == f64::NEG_INFINITY {
+                compute_t
+            } else {
+                compute_t.max(comm_free)
+            };
+            out.push(Span { kind: SpanKind::Comm, tensor: idx, start_s: at, end_s: at });
         }
     }
 
@@ -338,6 +401,48 @@ mod tests {
         let b = simulate_iteration(&net(), ecs64(), 0.0, &tensors, Policy::Overlap);
         assert!((b.total_s - (0.04 + 0.02)).abs() < 1e-9);
         assert!((b.t_compress_s - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predicted_spans_match_breakdown() {
+        let mut tensors = uniform(6, 0.01, 4 << 20);
+        tensors[2].wire_bytes = 0; // filter-dropped tensor
+        for t in &mut tensors {
+            t.compress_s = 0.002;
+        }
+        let topo = TopologyKind::Auto.resolve(ecs64());
+        let plain =
+            simulate_iteration_on(topo, &net(), ecs64(), 0.05, &tensors, Policy::Overlap);
+        let mut spans = Vec::new();
+        let with = simulate_iteration_spans(
+            topo,
+            &net(),
+            ecs64(),
+            0.05,
+            &tensors,
+            Policy::Overlap,
+            &mut spans,
+        );
+        // span emission must not perturb the simulation
+        assert_eq!(with, plain);
+        // one Compute + Compress + Comm span per tensor
+        assert_eq!(spans.len(), 3 * tensors.len());
+        let sum = |k: SpanKind| {
+            spans.iter().filter(|s| s.kind == k).map(|s| s.duration()).sum::<f64>()
+        };
+        assert!((sum(SpanKind::Compute) - with.t_comp_s).abs() < 1e-9);
+        assert!((sum(SpanKind::Compress) - with.t_compress_s).abs() < 1e-9);
+        assert!((sum(SpanKind::Comm) - with.t_comm_s).abs() < 1e-9);
+        // spans are well-formed and comm spans never overlap (single stream)
+        let mut comm_frontier = f64::NEG_INFINITY;
+        for s in &spans {
+            assert!(s.end_s >= s.start_s);
+            if s.kind == SpanKind::Comm {
+                assert!(s.start_s >= comm_frontier - 1e-12, "comm overlap at {}", s.tensor);
+                comm_frontier = s.end_s;
+            }
+        }
+        assert!(spans.iter().map(|s| s.end_s).fold(0.0, f64::max) <= with.total_s + 1e-9);
     }
 
     #[test]

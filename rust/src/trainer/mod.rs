@@ -67,7 +67,8 @@ pub fn train_with(cfg: RunConfig, arts: ModelArtifacts, verbose: bool) -> Result
                 ),
                 None => String::new(),
             };
-            println!(
+            crate::log_info!(
+                target: "trainer",
                 "step {:>5}  loss {:>8.4}  sim {:>9}  wall {:>9}  speedup {:>6.2}x/{world}{measured}",
                 out.step,
                 out.loss,
@@ -89,9 +90,13 @@ pub fn train_with(cfg: RunConfig, arts: ModelArtifacts, verbose: bool) -> Result
     if let Some(path) = &metrics_csv {
         metrics.write_csv(path)?;
         if verbose {
-            println!("metrics -> {}", path.display());
+            crate::log_info!(target: "trainer", "metrics -> {}", path.display());
         }
     }
+    if let Some(path) = engine.write_trace()? {
+        crate::log_info!(target: "trainer", "trace -> {}", path.display());
+    }
+    metrics.stamp_registry();
     let mean = |xs: &[f64]| -> f64 {
         if xs.is_empty() {
             f64::NAN

@@ -1,0 +1,178 @@
+//! Trace schema tests (DESIGN.md §10).
+//!
+//! * Property: every scheme × topology × backend combination produces a
+//!   schema-valid Chrome Trace Event document — every event has
+//!   ph/ts/pid/tid, durations are non-negative, spans per (pid, tid) do
+//!   not overlap, and the `wire_bytes` counter is monotone
+//!   ([`covap::obs::validate_trace`]).
+//! * Golden structure: the analytic and threaded backends emit the same
+//!   event vocabulary (names + args keys) for the same config; the
+//!   threaded backend adds exactly the measured-only events.
+//! * CI hook: when `COVAP_TRACE_FILE` points at a trace exported by
+//!   `benches/trace_export.rs`, it must parse and validate too.
+
+use std::path::PathBuf;
+
+use covap::comm::TopologyKind;
+use covap::compress::SchemeKind;
+use covap::config::{ExecBackend, Optimizer, RunConfig};
+use covap::coordinator::DpEngine;
+use covap::network::ClusterSpec;
+use covap::obs::validate_trace;
+use covap::runtime::ModelArtifacts;
+use covap::util::json::Json;
+
+fn traced_cfg(
+    scheme: SchemeKind,
+    topo: TopologyKind,
+    backend: ExecBackend,
+    steps: u64,
+) -> RunConfig {
+    RunConfig {
+        workers: 4,
+        // a genuinely 2-level cluster so hier/tree schedules and the
+        // intra/inter byte split are exercised
+        cluster: ClusterSpec::new(2, 2),
+        scheme,
+        topology: topo,
+        backend,
+        optimizer: Optimizer::Sgd,
+        lr: 0.05,
+        seed: 77,
+        bucket_bytes: 16 * 1024,
+        steps,
+        trace_out: Some(PathBuf::from("unused_trace.json")),
+        ..RunConfig::default()
+    }
+}
+
+/// Run the config and return the in-memory trace document (nothing is
+/// written to disk — `write_trace` is never called).
+fn run_trace(cfg: RunConfig) -> Json {
+    let steps = cfg.steps;
+    let mut engine = DpEngine::new(cfg, ModelArtifacts::synthetic("tiny")).unwrap();
+    for _ in 0..steps {
+        engine.step().unwrap();
+    }
+    engine.trace_json().expect("tracing enabled via trace_out")
+}
+
+#[test]
+fn every_scheme_topology_backend_trace_is_schema_valid() {
+    if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+        return;
+    }
+    for backend in [ExecBackend::Analytic, ExecBackend::Threaded] {
+        for topo in [TopologyKind::Ring, TopologyKind::Hier, TopologyKind::Tree] {
+            for kind in SchemeKind::evaluation_set() {
+                let label = format!("{:?} x {} x {}", backend, topo.spec(), kind.label());
+                let doc = run_trace(traced_cfg(kind.clone(), topo, backend, 2));
+                validate_trace(&doc).unwrap_or_else(|e| panic!("{label}: {e}"));
+                let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+                let spans = events
+                    .iter()
+                    .filter(|e| {
+                        matches!(e.get_or("ph", &Json::Null), Json::Str(s) if s == "X")
+                    })
+                    .count();
+                assert!(spans > 0, "{label}: no complete events in the trace");
+            }
+        }
+    }
+}
+
+/// (ph, name, sorted args keys) — the structural identity of one event.
+fn signature(e: &Json) -> (String, String, Vec<String>) {
+    let ph = e.get("ph").unwrap().as_str().unwrap().to_string();
+    let name = e.get("name").unwrap().as_str().unwrap().to_string();
+    // args is a BTreeMap, so keys come out sorted
+    let keys = match e.get("args") {
+        Ok(a) => a.as_obj().unwrap().keys().cloned().collect(),
+        Err(_) => Vec::new(),
+    };
+    (ph, name, keys)
+}
+
+fn signatures(doc: &Json) -> std::collections::BTreeSet<(String, String, Vec<String>)> {
+    doc.get("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(signature)
+        .collect()
+}
+
+#[test]
+fn backends_emit_structurally_identical_traces() {
+    if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+        return;
+    }
+    let scheme = SchemeKind::Covap { interval: 2, ef: Default::default() };
+    let analytic = signatures(&run_trace(traced_cfg(
+        scheme.clone(),
+        TopologyKind::Ring,
+        ExecBackend::Analytic,
+        3,
+    )));
+    let threaded = signatures(&run_trace(traced_cfg(
+        scheme,
+        TopologyKind::Ring,
+        ExecBackend::Threaded,
+        3,
+    )));
+
+    let span_keys: Vec<String> =
+        ["inter_bytes", "intra_bytes", "scheme", "step", "tensor", "wire_bytes"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    let keys = |ks: &[&str]| -> Vec<String> { ks.iter().map(|s| s.to_string()).collect() };
+    let golden: std::collections::BTreeSet<(String, String, Vec<String>)> = [
+        ("M", "process_name", keys(&["name"])),
+        ("M", "thread_name", keys(&["name"])),
+        ("X", "compute", span_keys.clone()),
+        ("X", "compress", span_keys.clone()),
+        ("X", "comm", span_keys.clone()),
+        ("i", "barrier_skew", keys(&["skew_s", "step"])),
+        ("C", "wire_bytes", keys(&["inter", "intra"])),
+    ]
+    .into_iter()
+    .map(|(ph, name, ks)| (ph.to_string(), name.to_string(), ks))
+    .collect();
+    let barrier_wait =
+        ("i".to_string(), "barrier_wait".to_string(), keys(&["rank", "step", "wait_s"]));
+
+    assert_eq!(
+        analytic, golden,
+        "analytic trace vocabulary drifted from the golden set"
+    );
+    let mut expected_threaded = golden.clone();
+    expected_threaded.insert(barrier_wait.clone());
+    assert_eq!(
+        threaded, expected_threaded,
+        "threaded trace must be the analytic vocabulary plus measured-only events"
+    );
+    assert!(
+        !analytic.contains(&barrier_wait),
+        "analytic backend must not fabricate measured barrier waits"
+    );
+}
+
+/// CI runs `cargo bench --bench trace_export` first, then points
+/// `COVAP_TRACE_FILE` at the exported trace.json: the on-disk artifact
+/// must satisfy the same schema as the in-memory documents above.
+#[test]
+fn exported_trace_file_validates_when_present() {
+    let Ok(path) = std::env::var("COVAP_TRACE_FILE") else {
+        return; // not running under the CI trace job
+    };
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    let doc = Json::parse(&text).unwrap_or_else(|e| panic!("parsing {path}: {e}"));
+    validate_trace(&doc).unwrap_or_else(|e| panic!("{path}: {e}"));
+    assert!(
+        !doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+        "{path}: exported trace is empty"
+    );
+}
