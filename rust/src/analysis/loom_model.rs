@@ -1,0 +1,229 @@
+//! Exhaustive-interleaving (loom) models of the executor's two riskiest
+//! dynamic protocols. Compiled and run only under
+//! `RUSTFLAGS="--cfg loom"` (see DESIGN.md §11):
+//!
+//! ```text
+//! cd rust && RUSTFLAGS="--cfg loom" cargo test --release --lib analysis::loom_model
+//! ```
+//!
+//! **Model boundaries.** These are *models*, not the production code
+//! under loom: `exec::ring`/`exec::rank` are built on `std::sync::mpsc`
+//! and OS threads, which loom cannot instrument. Each model re-expresses
+//! one protocol's synchronization skeleton over loom primitives — a
+//! hand-rolled unbounded channel on `loom::sync::{Mutex, Condvar}` — and
+//! checks the protocol-level invariants the real code relies on. What is
+//! modeled: epoch-tagged parking and the circulating spare pool of
+//! `allgather_sched` (model A, 2 ranks × 3 back-to-back epochs), and the
+//! comm→compute recycle channel racing `Cmd::Reconfigure` through the
+//! FIFO work queue (model B, one rank's thread pair). What is **not**
+//! modeled: frame payload encoding, pacing/time, worlds beyond 2–3
+//! ranks, or mpsc's internals (assumed linearizable FIFO — the same
+//! assumption the std documentation guarantees).
+
+use std::collections::VecDeque;
+
+use loom::sync::{Arc, Condvar, Mutex};
+use loom::thread;
+
+/// Minimal unbounded FIFO channel on loom primitives: `send` never
+/// blocks, `recv` blocks until a value is available — the synchronization
+/// shape of `std::sync::mpsc` as the executor uses it.
+struct Chan<T> {
+    q: Mutex<VecDeque<T>>,
+    cv: Condvar,
+}
+
+impl<T> Chan<T> {
+    fn new() -> Chan<T> {
+        Chan { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn send(&self, v: T) {
+        self.q.lock().unwrap().push_back(v);
+        self.cv.notify_all();
+    }
+
+    fn recv(&self) -> T {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(v) = q.pop_front() {
+                return v;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    fn try_recv(&self) -> Option<T> {
+        self.q.lock().unwrap().pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A mesh frame as model A sees it: the epoch tag plus the buffer
+    /// whose allocation circulates through the pool.
+    struct Frame {
+        epoch: u64,
+        data: Vec<u8>,
+    }
+
+    /// Model A — `exec::ring::allgather_sched`'s spare-buffer rotation and
+    /// epoch parking, 2 ranks running 3 collectives back to back with no
+    /// cross-rank synchronization between them. Checked in every
+    /// interleaving:
+    /// * frames arriving early carry exactly `epoch + 1` (skew ≤ 1);
+    /// * the parking queue never exceeds `recv_count` (= 1 here);
+    /// * each epoch's delivery is exactly-once and bitwise-correct;
+    /// * only the warm-up epoch allocates — afterwards the spare pool
+    ///   (fed by adopted arrivals) always has a buffer for the next send.
+    #[test]
+    fn spare_pool_rotation_and_epoch_parking() {
+        loom::model(|| {
+            const EPOCHS: u64 = 3;
+            let chans: Vec<Arc<Chan<Frame>>> =
+                (0..2).map(|_| Arc::new(Chan::new())).collect();
+            let mut handles = Vec::new();
+            for rank in 0..2usize {
+                let rx = chans[rank].clone();
+                let tx = chans[1 - rank].clone();
+                handles.push(thread::spawn(move || {
+                    let peer = (1 - rank) as u8;
+                    let mut spares: Vec<Vec<u8>> = Vec::new();
+                    let mut pending: VecDeque<Frame> = VecDeque::new();
+                    let mut allocs = 0usize;
+                    for epoch in 0..EPOCHS {
+                        let mut buf = spares.pop().unwrap_or_else(|| {
+                            allocs += 1;
+                            Vec::new()
+                        });
+                        buf.clear();
+                        buf.extend_from_slice(&[epoch as u8, rank as u8]);
+                        tx.send(Frame { epoch, data: buf });
+                        // drain any frame of THIS epoch parked during the
+                        // previous collective, then block for the rest
+                        let mut got = 0usize;
+                        while let Some(i) =
+                            pending.iter().position(|f| f.epoch == epoch)
+                        {
+                            let f = pending.remove(i).unwrap();
+                            assert_eq!(f.data, [epoch as u8, peer]);
+                            spares.push(f.data);
+                            got += 1;
+                        }
+                        while got < 1 {
+                            let f = rx.recv();
+                            if f.epoch == epoch {
+                                assert_eq!(f.data, [epoch as u8, peer]);
+                                spares.push(f.data);
+                                got += 1;
+                            } else {
+                                assert_eq!(
+                                    f.epoch,
+                                    epoch + 1,
+                                    "peer ran more than one collective ahead"
+                                );
+                                pending.push_back(f);
+                                assert!(
+                                    pending.len() <= 1,
+                                    "parking queue exceeded recv_count"
+                                );
+                            }
+                        }
+                        assert_eq!(got, 1, "exactly-once delivery per epoch");
+                    }
+                    assert_eq!(allocs, 1, "steady state must not allocate");
+                    assert!(pending.is_empty(), "nothing parked past the last epoch");
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    /// Work-queue items as model B sees them (`exec::rank::Work`
+    /// skeleton): a compressed frame whose first byte records the scheme
+    /// it was compressed under, a scheme swap, or shutdown.
+    enum Work {
+        Tensor(Vec<u8>),
+        Reconfig(u8),
+        Stop,
+    }
+
+    /// Model B — one rank's compute/comm thread pair: the comm→compute
+    /// recycle channel racing `Cmd::Reconfigure` through the FIFO work
+    /// queue. The production invariant: because `Work` is a single FIFO,
+    /// the comm thread's combiner is *always* on the same scheme as the
+    /// frame it combines, even when the swap lands mid-step and spent
+    /// buffers from the old scheme are being reused for new-scheme
+    /// frames. Checked in every interleaving, plus buffer conservation:
+    /// every buffer the compute thread ever allocated ends parked in the
+    /// recycle channel — none lost, none duplicated.
+    #[test]
+    fn recycle_channel_vs_reconfigure_fifo() {
+        loom::model(|| {
+            let work = Arc::new(Chan::<Work>::new());
+            let recycle = Arc::new(Chan::<Vec<u8>>::new());
+
+            let compute = {
+                let work = work.clone();
+                let recycle = recycle.clone();
+                thread::spawn(move || {
+                    let mut scheme = 0u8;
+                    let mut allocs = 0usize;
+                    for step in 0..2 {
+                        for _tensor in 0..2 {
+                            let mut frame = recycle.try_recv().unwrap_or_else(|| {
+                                allocs += 1;
+                                Vec::new()
+                            });
+                            frame.clear();
+                            frame.push(scheme);
+                            work.send(Work::Tensor(frame));
+                        }
+                        if step == 0 {
+                            scheme = 1;
+                            work.send(Work::Reconfig(scheme));
+                        }
+                    }
+                    work.send(Work::Stop);
+                    allocs
+                })
+            };
+
+            let comm = {
+                let work = work.clone();
+                let recycle = recycle.clone();
+                thread::spawn(move || {
+                    let mut tag = 0u8;
+                    let mut processed = 0usize;
+                    loop {
+                        match work.recv() {
+                            Work::Tensor(frame) => {
+                                assert_eq!(
+                                    frame[0], tag,
+                                    "frame from a stale scheme crossed a reconfigure"
+                                );
+                                processed += 1;
+                                recycle.send(frame);
+                            }
+                            Work::Reconfig(t) => tag = t,
+                            Work::Stop => break,
+                        }
+                    }
+                    assert_eq!(processed, 4, "every tensor combined exactly once");
+                })
+            };
+
+            let allocs = compute.join().unwrap();
+            comm.join().unwrap();
+            let mut parked = 0usize;
+            while recycle.try_recv().is_some() {
+                parked += 1;
+            }
+            assert_eq!(parked, allocs, "buffer conservation through the recycle loop");
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Static verification of the executor's communication contracts
+//! (DESIGN.md §11).
+//!
+//! The threaded executor's safety argument rests on properties of the
+//! [`crate::comm::topology::HopSchedule`] it executes — not on anything
+//! it checks at runtime. This module proves those properties *statically*
+//! from the hop list alone, so a schedule for a world far too big to
+//! execute in tests (P = 1024 and beyond) is certified without spawning a
+//! thread:
+//!
+//! * **deadlock-freedom** — the same-round hop-dependency graph is empty
+//!   (every forward depends on a strictly earlier round), so no
+//!   receive-then-forward chain can cyclically block;
+//! * **exactly-once delivery** — each rank receives each slot exactly
+//!   once and never its own, so arrival-order-insensitive slot storage
+//!   needs no round bookkeeping;
+//! * **strictly-earlier sourcing** — every hop's source holds the slot it
+//!   forwards (its own, or one acquired at a strictly earlier round);
+//! * **bounded in-flight frames** — per-slot delivery chains all
+//!   originate at the slot's owner, which bounds epoch skew by 1 and the
+//!   parking queue by `recv_count` (see [`verifier::verify_schedule`] for
+//!   the proof-by-construction);
+//! * **wire-byte conservation** — every byte sent is received exactly
+//!   once, and claimed frame lengths match the codec arithmetic in
+//!   [`crate::harness::wire_bytes`].
+//!
+//! [`verifier::verify_schedule`] is the single implementation behind
+//! [`crate::comm::topology::HopSchedule::validate`], the
+//! `debug_assertions` hook at schedule build, the `verify-schedules` CLI
+//! sweep, and the mutation-style negative tests in
+//! `tests/schedule_verify.rs`.
+//!
+//! [`loom_model`] (compiled only under `RUSTFLAGS="--cfg loom"`) holds
+//! exhaustive-interleaving models of the two riskiest dynamic protocols:
+//! the circulating spare-buffer pool with epoch parking
+//! (`exec::ring::allgather_sched`) and the comm→compute recycle channel
+//! racing `Cmd::Reconfigure` (`exec::rank`).
+
+pub mod verifier;
+
+#[cfg(loom)]
+pub mod loom_model;
+
+pub use verifier::{
+    verify_frame_lengths, verify_schedule, wire_conservation, ScheduleReport, ScheduleViolation,
+    WireReport,
+};

@@ -1,0 +1,503 @@
+//! The static [`HopSchedule`] verifier: proves the executor contract from
+//! the hop list alone, without executing anything.
+//!
+//! Every check returns a distinct [`ScheduleViolation`] naming the exact
+//! hop/rank/slot, so a rejected schedule is actionable — the mutation
+//! suite in `tests/schedule_verify.rs` pins one variant per corruption.
+//!
+//! ## The bounded-in-flight argument (proof by construction)
+//!
+//! The executor parks frames that arrive one collective early
+//! (`exec::ring::GatherScratch::pending`). That queue is bounded because
+//! **epoch skew is bounded by 1**, which follows from invariants this
+//! verifier establishes — it is not a separate runtime property:
+//!
+//! 1. *Chains root at the owner.* Strictly-earlier sourcing means the
+//!    acquisition round strictly decreases along any slot's
+//!    delivered-from chain, so every chain terminates at the only rank
+//!    holding the slot without a delivery: its owner (checked:
+//!    [`ScheduleViolation::SourceMissingSlot`] /
+//!    [`ScheduleViolation::SameRoundForward`]).
+//! 2. *Completing epoch `e` requires every owner to have started `e`.*
+//!    By completeness (checked: [`ScheduleViolation::IncompleteGather`]),
+//!    a rank finishing epoch `e` received every slot, and by (1) each of
+//!    those deliveries descends from the owner's epoch-`e` send.
+//! 3. Therefore while any rank is still *inside* epoch `e`, it has not
+//!    sent its own epoch-`e+1` frame, no epoch-`e+1` chain for its slot
+//!    exists, no peer can complete `e+1`, and no epoch-`e+2` frame can be
+//!    emitted: a frame arriving at a rank in epoch `e` is tagged `e` or
+//!    `e+1`, never more. The executor enforces the corollary at runtime
+//!    (`MeshError::EpochSkew`).
+//!
+//! With skew ≤ 1, a rank's inbound queue holds at most `recv_count`
+//! undelivered current-epoch frames plus `recv_count` parked next-epoch
+//! frames: `max_in_flight = 2·recv_count ≤ 2(P-1)`, including across
+//! back-to-back epochs. [`ScheduleReport`] carries the computed bounds.
+
+use std::fmt;
+
+use crate::comm::topology::{HopSchedule, LevelBytes};
+use crate::compress::SchemeKind;
+
+/// One reason a schedule fails verification. Variants are deliberately
+/// fine-grained: each mutation class gets its own rejection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduleViolation {
+    /// A hop names a rank or slot outside `0..world`.
+    HopOutOfRange { hop: usize, src: u32, dst: u32, slot: u32, world: usize },
+    /// A hop sends from a rank to itself.
+    SelfHop { hop: usize, round: u32, rank: u32 },
+    /// The hop list is not sorted by round.
+    OutOfRoundOrder { hop: usize, prev: u32, round: u32 },
+    /// A rank is scheduled to receive its own slot.
+    OwnSlotDelivery { round: u32, rank: u32 },
+    /// A rank receives the same slot twice (breaks exactly-once storage).
+    DuplicateDelivery { first_round: u32, round: u32, dst: u32, slot: u32 },
+    /// A hop's source never acquires the slot it forwards, or acquires it
+    /// at a *later* round than the forward.
+    SourceMissingSlot { round: u32, src: u32, slot: u32, acquired: Option<u32> },
+    /// Same-round forwards form a dependency cycle: every hop in `hops`
+    /// waits on another's delivery — the executor would deadlock.
+    RoundCycle { round: u32, hops: Vec<usize> },
+    /// A source forwards a slot acquired in the *same* round. Acyclic, so
+    /// executable under ordered intra-round delivery — but the executor
+    /// guarantees no such ordering, so it is banned outright.
+    SameRoundForward { round: u32, src: u32, slot: u32 },
+    /// A rank ends the schedule missing `missing` slots.
+    IncompleteGather { rank: u32, missing: usize },
+    /// The schedule's cached `recv_count` disagrees with its hop list
+    /// (the executor trusts the cache for its receive loop).
+    RecvCountMismatch { rank: u32, recorded: usize, actual: usize },
+    /// A rank's parking bound exceeds `world - 1` frames. Unreachable
+    /// while exactly-once delivery holds — kept so the bound is checked
+    /// arithmetic, not an assumption.
+    InFlightOverflow { rank: u32, parked: usize, limit: usize },
+    /// A claimed per-slot frame length disagrees with the codec
+    /// arithmetic (`harness::wire_bytes`).
+    WireByteMismatch { slot: u32, expected: usize, got: usize },
+    /// Received bytes at a rank differ from the total minus its own frame
+    /// — bytes were created or destroyed on the wire.
+    WireNotConserved { rank: u32, expected: usize, got: usize },
+}
+
+impl fmt::Display for ScheduleViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use ScheduleViolation::*;
+        match self {
+            HopOutOfRange { hop, src, dst, slot, world } => write!(
+                f,
+                "hop {hop}: ({src} -> {dst}, slot {slot}) out of range for world {world}"
+            ),
+            SelfHop { hop, round, rank } => {
+                write!(f, "hop {hop} (round {round}): rank {rank} sends to itself")
+            }
+            OutOfRoundOrder { hop, prev, round } => write!(
+                f,
+                "hop {hop}: round {round} after round {prev} — hop list must be round-sorted"
+            ),
+            OwnSlotDelivery { round, rank } => {
+                write!(f, "round {round}: rank {rank} scheduled to receive its own slot")
+            }
+            DuplicateDelivery { first_round, round, dst, slot } => write!(
+                f,
+                "round {round}: rank {dst} receives slot {slot} again (first at round \
+                 {first_round}) — exactly-once delivery broken"
+            ),
+            SourceMissingSlot { round, src, slot, acquired: None } => write!(
+                f,
+                "round {round}: rank {src} forwards slot {slot} it never acquires"
+            ),
+            SourceMissingSlot { round, src, slot, acquired: Some(a) } => write!(
+                f,
+                "round {round}: rank {src} forwards slot {slot} it only acquires at the \
+                 later round {a}"
+            ),
+            RoundCycle { round, hops } => write!(
+                f,
+                "round {round}: same-round forwards form a dependency cycle through hops \
+                 {hops:?} — the executor would deadlock"
+            ),
+            SameRoundForward { round, src, slot } => write!(
+                f,
+                "round {round}: rank {src} forwards slot {slot} acquired in the same round \
+                 (dependencies must point to strictly earlier rounds)"
+            ),
+            IncompleteGather { rank, missing } => {
+                write!(f, "rank {rank} ends the schedule missing {missing} slot(s)")
+            }
+            RecvCountMismatch { rank, recorded, actual } => write!(
+                f,
+                "rank {rank}: cached recv_count {recorded} != {actual} deliveries in the \
+                 hop list"
+            ),
+            InFlightOverflow { rank, parked, limit } => write!(
+                f,
+                "rank {rank}: parking bound {parked} exceeds the per-link limit {limit}"
+            ),
+            WireByteMismatch { slot, expected, got } => write!(
+                f,
+                "slot {slot}: claimed frame length {got} B != codec arithmetic {expected} B"
+            ),
+            WireNotConserved { rank, expected, got } => write!(
+                f,
+                "rank {rank}: receives {got} B but conservation requires {expected} B \
+                 (total minus its own frame)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleViolation {}
+
+/// What verification proves about a valid schedule — the statically
+/// derived execution bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduleReport {
+    pub world: usize,
+    pub rounds: usize,
+    pub hops: usize,
+    /// Worst-rank frames received per collective (`P - 1` when `P > 1`).
+    pub max_recv: usize,
+    /// Worst-rank bound on next-epoch frames parked while the current
+    /// epoch drains (= `max_recv`; see the module docs for why).
+    pub max_park_bound: usize,
+    /// Worst-rank bound on frames simultaneously queued on one inbound
+    /// link across back-to-back epochs (= `2·max_recv`).
+    pub max_in_flight: usize,
+    /// The epoch-skew bound the parking protocol relies on (always 1).
+    pub epoch_skew: u64,
+}
+
+/// Outcome of [`wire_conservation`]: schedule-wide byte accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireReport {
+    /// Total bytes moved over the whole schedule (sum over hops).
+    pub total_sent: usize,
+    /// The same total split per link level.
+    pub levels: LevelBytes,
+    /// Worst-rank sent bytes.
+    pub max_rank_sent: usize,
+}
+
+const NO_HOP: usize = usize::MAX;
+
+/// Statically verify the full executor contract (see module docs) and
+/// return the proven execution bounds. O(hops + world²) time, O(world²)
+/// memory — P = 1024 verifies in well under a second per topology.
+pub fn verify_schedule(s: &HopSchedule) -> Result<ScheduleReport, ScheduleViolation> {
+    let p = s.world();
+    let hops = s.hops();
+
+    // Pass 1 — per-hop structure + the exactly-once delivery map.
+    // deliv[dst·p + slot] = index of the hop delivering `slot` to `dst`.
+    let mut deliv = vec![NO_HOP; p * p];
+    let mut prev_round = 0u32;
+    for (i, h) in hops.iter().enumerate() {
+        let (src, dst, slot) = (h.src as usize, h.dst as usize, h.slot as usize);
+        if src >= p || dst >= p || slot >= p {
+            return Err(ScheduleViolation::HopOutOfRange {
+                hop: i,
+                src: h.src,
+                dst: h.dst,
+                slot: h.slot,
+                world: p,
+            });
+        }
+        if src == dst {
+            return Err(ScheduleViolation::SelfHop { hop: i, round: h.round, rank: h.src });
+        }
+        if h.round < prev_round {
+            return Err(ScheduleViolation::OutOfRoundOrder {
+                hop: i,
+                prev: prev_round,
+                round: h.round,
+            });
+        }
+        prev_round = h.round;
+        if dst == slot {
+            return Err(ScheduleViolation::OwnSlotDelivery { round: h.round, rank: h.dst });
+        }
+        let cell = &mut deliv[dst * p + slot];
+        if *cell != NO_HOP {
+            return Err(ScheduleViolation::DuplicateDelivery {
+                first_round: hops[*cell].round,
+                round: h.round,
+                dst: h.dst,
+                slot: h.slot,
+            });
+        }
+        *cell = i;
+    }
+
+    // Pass 2 — sourcing: each hop's source must hold the slot it forwards
+    // (its own, or acquired at an earlier round). Same-round producer
+    // edges are collected for the dependency analysis below.
+    let mut same_round_edges: Vec<(usize, usize)> = Vec::new();
+    for (i, h) in hops.iter().enumerate() {
+        let (src, slot) = (h.src as usize, h.slot as usize);
+        if src == slot {
+            continue; // owns the slot from round 0
+        }
+        let producer = deliv[src * p + slot];
+        if producer == NO_HOP {
+            return Err(ScheduleViolation::SourceMissingSlot {
+                round: h.round,
+                src: h.src,
+                slot: h.slot,
+                acquired: None,
+            });
+        }
+        let pr = hops[producer].round;
+        if pr > h.round {
+            return Err(ScheduleViolation::SourceMissingSlot {
+                round: h.round,
+                src: h.src,
+                slot: h.slot,
+                acquired: Some(pr),
+            });
+        }
+        if pr == h.round {
+            same_round_edges.push((producer, i));
+        }
+    }
+
+    // Pass 3 — deadlock-freedom. Same-round edges partition by round
+    // (both endpoints share one), so one toposort covers all rounds. A
+    // cycle is a genuine executor deadlock and is reported as such;
+    // acyclic same-round forwards are banned too, but distinctly — they
+    // only execute under intra-round ordered delivery, which the mesh
+    // does not guarantee.
+    if !same_round_edges.is_empty() {
+        let mut indeg = vec![0usize; hops.len()];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); hops.len()];
+        for &(from, to) in &same_round_edges {
+            indeg[to] += 1;
+            adj[from].push(to);
+        }
+        let mut queue: Vec<usize> = (0..hops.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = queue.len();
+        while let Some(i) = queue.pop() {
+            for &j in &adj[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push(j);
+                    seen += 1;
+                }
+            }
+        }
+        if seen < hops.len() {
+            let cycle: Vec<usize> =
+                (0..hops.len()).filter(|&i| indeg[i] > 0).take(8).collect();
+            let round = hops[cycle[0]].round;
+            return Err(ScheduleViolation::RoundCycle { round, hops: cycle });
+        }
+        let (_, consumer) = same_round_edges[0];
+        let h = &hops[consumer];
+        return Err(ScheduleViolation::SameRoundForward {
+            round: h.round,
+            src: h.src,
+            slot: h.slot,
+        });
+    }
+
+    // Pass 4 — completeness + cached-recv consistency.
+    let mut actual_recv = vec![0usize; p];
+    for h in hops {
+        actual_recv[h.dst as usize] += 1;
+    }
+    for r in 0..p {
+        let missing = (0..p).filter(|&sl| sl != r && deliv[r * p + sl] == NO_HOP).count();
+        if missing > 0 {
+            return Err(ScheduleViolation::IncompleteGather { rank: r as u32, missing });
+        }
+        if s.recv_count(r) != actual_recv[r] {
+            return Err(ScheduleViolation::RecvCountMismatch {
+                rank: r as u32,
+                recorded: s.recv_count(r),
+                actual: actual_recv[r],
+            });
+        }
+    }
+
+    // Pass 5 — bounded in-flight. With the invariants above established,
+    // epoch skew ≤ 1 holds by construction (module docs), so each rank
+    // parks at most recv_count next-epoch frames; the explicit limit
+    // check is defense in depth against a future invariant regression.
+    let max_recv = actual_recv.iter().copied().max().unwrap_or(0);
+    let limit = p.saturating_sub(1);
+    for (r, &parked) in actual_recv.iter().enumerate() {
+        if parked > limit {
+            return Err(ScheduleViolation::InFlightOverflow { rank: r as u32, parked, limit });
+        }
+    }
+
+    Ok(ScheduleReport {
+        world: p,
+        rounds: s.rounds(),
+        hops: hops.len(),
+        max_recv,
+        max_park_bound: max_recv,
+        max_in_flight: 2 * max_recv,
+        epoch_skew: 1,
+    })
+}
+
+/// Check claimed per-slot frame lengths against the codec arithmetic
+/// ([`crate::harness::wire_bytes`]) for an `n`-element tensor under
+/// `kind`. Frames are size-uniform across ranks for every scheme in the
+/// evaluation set, so each slot must claim exactly the arithmetic length.
+/// Returns that length.
+pub fn verify_frame_lengths(
+    kind: &SchemeKind,
+    n: usize,
+    claimed: &[usize],
+) -> Result<usize, ScheduleViolation> {
+    let expected = crate::harness::wire_bytes(kind, n);
+    for (slot, &got) in claimed.iter().enumerate() {
+        if got != expected {
+            return Err(ScheduleViolation::WireByteMismatch {
+                slot: slot as u32,
+                expected,
+                got,
+            });
+        }
+    }
+    Ok(expected)
+}
+
+/// Wire-byte conservation over a (structurally valid) schedule for
+/// per-slot frame lengths `lens` (`lens[s]` = encoded length of rank
+/// `s`'s frame): every byte sent is received exactly once, and a
+/// complete allgather delivers to each rank exactly the total minus its
+/// own frame. Checked against the raw hop list — independently of the
+/// accounting helpers (`level_bytes_uniform`/`max_level_hops`), so the
+/// accounting layer cannot drift from what the executor moves.
+pub fn wire_conservation(
+    s: &HopSchedule,
+    lens: &[usize],
+) -> Result<WireReport, ScheduleViolation> {
+    let p = s.world();
+    assert_eq!(lens.len(), p, "one frame length per rank");
+    let mut sent = vec![0usize; p];
+    let mut recv = vec![0usize; p];
+    let mut levels = LevelBytes::default();
+    for h in s.hops() {
+        let b = lens[h.slot as usize];
+        sent[h.src as usize] += b;
+        recv[h.dst as usize] += b;
+        levels.add(h.level, b);
+    }
+    let total: usize = lens.iter().sum();
+    if p > 1 {
+        for r in 0..p {
+            let expected = total - lens[r];
+            if recv[r] != expected {
+                return Err(ScheduleViolation::WireNotConserved {
+                    rank: r as u32,
+                    expected,
+                    got: recv[r],
+                });
+            }
+        }
+    }
+    let total_sent: usize = sent.iter().sum();
+    debug_assert_eq!(total_sent, recv.iter().sum::<usize>(), "hop loop accounting");
+    Ok(WireReport {
+        total_sent,
+        levels,
+        max_rank_sent: sent.into_iter().max().unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::topology::TopologyKind;
+    use crate::network::ClusterSpec;
+
+    fn shapes() -> Vec<ClusterSpec> {
+        vec![
+            ClusterSpec::new(1, 1),
+            ClusterSpec::new(1, 3),
+            ClusterSpec::new(3, 1),
+            ClusterSpec::new(2, 2),
+            ClusterSpec::new(2, 3),
+            ClusterSpec::new(3, 2),
+            ClusterSpec::new(4, 8),
+        ]
+    }
+
+    #[test]
+    fn every_builder_schedule_verifies_with_tight_bounds() {
+        for c in shapes() {
+            let p = c.world();
+            for kind in TopologyKind::all() {
+                let s = kind.resolve(c).allgather_schedule(c);
+                let rep = verify_schedule(&s)
+                    .unwrap_or_else(|v| panic!("{} {c:?}: {v}", kind.spec()));
+                assert_eq!(rep.world, p);
+                assert_eq!(rep.hops, p * p.saturating_sub(1), "complete allgather hop count");
+                assert_eq!(rep.max_recv, p.saturating_sub(1));
+                assert_eq!(rep.max_in_flight, 2 * p.saturating_sub(1));
+                assert_eq!(rep.epoch_skew, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_conservation_holds_for_uniform_and_ragged_lengths() {
+        for c in shapes() {
+            let p = c.world();
+            for kind in TopologyKind::all() {
+                let s = kind.resolve(c).allgather_schedule(c);
+                // uniform: cross-check the totals against the accounting
+                // helpers the analytic backend uses
+                let uni = vec![64usize; p];
+                let w = wire_conservation(&s, &uni).expect("uniform conserves");
+                let helper_total: usize =
+                    (0..p).map(|r| s.level_bytes_uniform(r, 64).total()).sum();
+                assert_eq!(w.total_sent, helper_total, "{} {c:?}", kind.spec());
+                assert_eq!(w.levels.total(), w.total_sent);
+                // ragged: conservation is per-slot, not per-average
+                let ragged: Vec<usize> = (0..p).map(|r| 10 + 7 * r).collect();
+                wire_conservation(&s, &ragged).expect("ragged conserves");
+            }
+        }
+    }
+
+    #[test]
+    fn frame_lengths_check_against_codec_arithmetic() {
+        let n = 4096;
+        for kind in SchemeKind::evaluation_set() {
+            let expected = crate::harness::wire_bytes(&kind, n);
+            let claimed = vec![expected; 4];
+            assert_eq!(verify_frame_lengths(&kind, n, &claimed), Ok(expected));
+            let mut bad = claimed.clone();
+            bad[2] += 1;
+            assert_eq!(
+                verify_frame_lengths(&kind, n, &bad),
+                Err(ScheduleViolation::WireByteMismatch {
+                    slot: 2,
+                    expected,
+                    got: expected + 1
+                }),
+                "{}",
+                kind.label()
+            );
+        }
+    }
+
+    #[test]
+    fn violations_render_actionable_messages() {
+        let v = ScheduleViolation::DuplicateDelivery {
+            first_round: 0,
+            round: 2,
+            dst: 3,
+            slot: 1,
+        };
+        let msg = v.to_string();
+        assert!(msg.contains("rank 3"), "{msg}");
+        assert!(msg.contains("slot 1"), "{msg}");
+        assert!(msg.contains("exactly-once"), "{msg}");
+    }
+}

@@ -86,6 +86,7 @@ pub struct CommRecord {
 }
 
 impl CommRecord {
+    // xtask: hot-path
     pub fn dense(bytes: usize, compress_s: f64) -> CommRecord {
         CommRecord {
             wire_bytes: bytes,

@@ -111,6 +111,7 @@ pub fn varint_len(mut x: u64) -> usize {
     len
 }
 
+// xtask: hot-path
 pub(crate) fn write_varint(out: &mut Vec<u8>, mut x: u64) {
     while x >= 0x80 {
         out.push((x as u8 & 0x7f) | 0x80);
@@ -144,6 +145,7 @@ pub fn half_frame_len(n: usize) -> usize {
 /// Clear `out`, reserve the exact frame length and write `[tag][varint n]`.
 /// Scheme compressors stream their body bytes directly after this header,
 /// so the whole compress+encode is one pass with no intermediate `Payload`.
+// xtask: hot-path
 pub(crate) fn frame_header(out: &mut Vec<u8>, tag: u8, n: usize, frame_len: usize) {
     out.clear();
     out.reserve(frame_len);
@@ -152,6 +154,7 @@ pub(crate) fn frame_header(out: &mut Vec<u8>, tag: u8, n: usize, frame_len: usiz
 }
 
 /// Encode a dense f32 frame into `out` (cleared first).
+// xtask: hot-path
 pub(crate) fn encode_dense_into(v: &[f32], out: &mut Vec<u8>) {
     frame_header(out, TAG_DENSE, v.len(), dense_frame_len(v.len()));
     for x in v {
@@ -160,6 +163,7 @@ pub(crate) fn encode_dense_into(v: &[f32], out: &mut Vec<u8>) {
 }
 
 /// Encode a sparse (idx, val) frame into `out` (cleared first).
+// xtask: hot-path
 pub(crate) fn encode_sparse_into(idx: &[u32], val: &[f32], out: &mut Vec<u8>) {
     debug_assert_eq!(idx.len(), val.len());
     frame_header(out, TAG_SPARSE, idx.len(), sparse_frame_len(idx.len()));
@@ -182,6 +186,7 @@ pub(crate) fn encode_sparse_into(idx: &[u32], val: &[f32], out: &mut Vec<u8>) {
 /// the identical u64 words. The expression is only correct for 64-bit
 /// bitmap words (8 bytes per word); `sign_packing_crosses_word_boundaries`
 /// pins the cross-word layout at n = 63, 64, 65.
+// xtask: hot-path
 pub(crate) fn encode_sign_into(scale: f32, bits: &[u64], n: usize, out: &mut Vec<u8>) {
     frame_header(out, TAG_SIGN, n, sign_frame_len(n));
     out.extend_from_slice(&scale.to_le_bytes());
@@ -191,6 +196,7 @@ pub(crate) fn encode_sign_into(scale: f32, bits: &[u64], n: usize, out: &mut Vec
 }
 
 /// Encode a half-precision frame into `out` (cleared first).
+// xtask: hot-path
 pub(crate) fn encode_half_into(v: &[u16], out: &mut Vec<u8>) {
     frame_header(out, TAG_HALF, v.len(), half_frame_len(v.len()));
     for h in v {
@@ -248,6 +254,7 @@ impl<'a> Reader<'a> {
 /// without materializing a `Payload` — the entry point of decode-free
 /// combining. Panics on malformed frames: ring frames come from our own
 /// codec ([`Payload::decode`] is the lenient path for untrusted input).
+// xtask: hot-path
 fn split_frame(frame: &[u8]) -> (u8, usize, &[u8]) {
     assert!(!frame.is_empty(), "cannot split an Empty frame");
     let tag = frame[0];
@@ -261,6 +268,7 @@ impl Payload {
     /// calls, so steady-state re-encodes allocate nothing once the buffer
     /// reached its high-water size). The resulting frame length always
     /// equals [`Payload::encoded_len`].
+    // xtask: hot-path
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
             Payload::Empty => out.clear(),
@@ -597,6 +605,7 @@ pub fn build_rank_pair(
 /// volume the accounting charges (frames are identical sizes for
 /// dense/half/sign schemes; sparse selections may differ per rank, where
 /// the max is the conservative per-rank bound the old model also used).
+// xtask: hot-path
 fn max_frame_len(frames: &[Vec<u8>]) -> usize {
     frames.iter().map(|f| f.len()).max().unwrap_or(0)
 }
@@ -619,6 +628,7 @@ impl RankCombiner for MeanCombiner {
     }
 
     #[allow(clippy::too_many_arguments)]
+    // xtask: hot-path
     fn combine_into(
         &mut self,
         _tensor: usize,
@@ -680,6 +690,7 @@ impl RankCombiner for SparseCombiner {
     }
 
     #[allow(clippy::too_many_arguments)]
+    // xtask: hot-path
     fn combine_into(
         &mut self,
         _tensor: usize,
@@ -732,6 +743,7 @@ impl RankCombiner for SignCombiner {
     }
 
     #[allow(clippy::too_many_arguments)]
+    // xtask: hot-path
     fn combine_into(
         &mut self,
         _tensor: usize,
@@ -785,6 +797,7 @@ impl RankCompressor for RawCompressor {
         "raw"
     }
 
+    // xtask: hot-path
     fn compress_into(
         &mut self,
         _tensor: usize,

@@ -39,9 +39,17 @@ impl Barrier {
     /// Block until all parties arrive; returns this thread's wait time.
     /// The last arrival waits ~zero — the spread over ranks is the skew.
     /// Returns immediately once the barrier is [`abort`](Barrier::abort)ed.
+    ///
+    /// Lock poisoning is deliberately ignored (`PoisonError::into_inner`):
+    /// the state is a plain counter triple that is valid after any partial
+    /// update, and a panicking peer must release — not poison-panic — the
+    /// surviving ranks, or teardown would cascade.
     pub fn wait(&self) -> Duration {
         let t0 = Instant::now();
-        let mut st = self.state.lock().unwrap();
+        let mut st = self
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         if st.aborted {
             return t0.elapsed();
         }
@@ -54,7 +62,10 @@ impl Barrier {
             return t0.elapsed();
         }
         while st.generation == gen && !st.aborted {
-            st = self.cv.wait(st).unwrap();
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
         t0.elapsed()
     }
@@ -65,7 +76,10 @@ impl Barrier {
     /// released ranks then fail fast on their broken channels instead of
     /// hanging the process.
     pub fn abort(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         st.aborted = true;
         st.count = 0;
         st.generation = st.generation.wrapping_add(1);

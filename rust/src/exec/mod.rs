@@ -36,10 +36,10 @@ pub mod timeline;
 pub mod validate;
 
 pub use barrier::Barrier;
-pub use rank::{fnv1a_f32, Cmd, RankStepResult, StepSpec};
+pub use rank::{fnv1a_f32, Cmd, RankMsg, RankStepResult, StepSpec};
 pub use ring::{
-    allgather_frames, allgather_payloads, allgather_sched, make_mesh, ring_allreduce_threaded,
-    GatherScratch, MeshLink, Pacer, PacerSet,
+    allgather_frames, allgather_payloads, allgather_sched, broadcast_abort, make_mesh,
+    ring_allreduce_threaded, GatherScratch, MeshError, MeshLink, Pacer, PacerSet,
 };
 pub use timeline::{aggregate, breakdown, MeasuredBreakdown, RankTimeline, Span, SpanKind};
 pub use validate::{compare_backends, BackendComparison};
@@ -78,7 +78,7 @@ pub struct ExecStepOutput {
 pub struct ThreadedExec {
     world: usize,
     cmd_tx: Vec<Sender<Cmd>>,
-    res_rx: Receiver<RankStepResult>,
+    res_rx: Receiver<RankMsg>,
     barrier: Arc<Barrier>,
     computes: Vec<JoinHandle<()>>,
     comms: Vec<JoinHandle<()>>,
@@ -104,7 +104,7 @@ impl ThreadedExec {
         assert_eq!(sched.world(), world, "schedule must cover exactly the rank fleet");
         let barrier = Arc::new(Barrier::new(world));
         let links = make_mesh(world);
-        let (res_tx, res_rx) = channel::<RankStepResult>();
+        let (res_tx, res_rx) = channel::<RankMsg>();
         let mut cmd_tx = Vec::with_capacity(world);
         let mut computes = Vec::with_capacity(world);
         let mut comms = Vec::with_capacity(world);
@@ -137,7 +137,8 @@ impl ThreadedExec {
                 pacers,
                 res_tx: res_tx.clone(),
             };
-            let (th, ch) = rank::spawn_rank(compute, comm);
+            let (th, ch) = rank::spawn_rank(compute, comm)
+                .unwrap_or_else(|e| panic!("spawn rank {r}: {e}"));
             computes.push(th);
             comms.push(ch);
         }
@@ -179,6 +180,16 @@ impl ThreadedExec {
         }
     }
 
+    /// Kill one rank mid-run (failure injection). The next `step()` call
+    /// returns an error naming the rank instead of hanging: the dying
+    /// rank's comm thread broadcasts `Frame::Abort` so every peer's
+    /// collective fails fast, and the engine aborts the barrier.
+    pub fn fail_rank(&self, rank: usize, reason: &str) {
+        if let Some(tx) = self.cmd_tx.get(rank) {
+            let _ = tx.send(Cmd::Fail { reason: reason.to_string() });
+        }
+    }
+
     /// Run one synchronous step across all ranks.
     pub fn step(
         &mut self,
@@ -195,6 +206,13 @@ impl ThreadedExec {
                 // poisoning the barrier releases them onto their broken
                 // channels, where they fail fast instead of hanging Drop.
                 self.barrier.abort();
+                // a rank that failed earlier left its reason in the result
+                // queue — surface it instead of a generic death notice
+                while let Ok(msg) = self.res_rx.try_recv() {
+                    if let RankMsg::Failed { rank, reason } = msg {
+                        anyhow::bail!("rank {rank} failed before step {step}: {reason}");
+                    }
+                }
                 anyhow::bail!("rank thread died before step {step}");
             }
         }
@@ -202,7 +220,11 @@ impl ThreadedExec {
             (0..self.world).map(|_| None).collect();
         for _ in 0..self.world {
             let r = match self.res_rx.recv() {
-                Ok(r) => r,
+                Ok(RankMsg::Step(r)) => r,
+                Ok(RankMsg::Failed { rank, reason }) => {
+                    self.barrier.abort();
+                    anyhow::bail!("rank {rank} failed during step {step}: {reason}");
+                }
                 Err(_) => {
                     self.barrier.abort();
                     anyhow::bail!("rank threads died during step {step}");

@@ -34,7 +34,7 @@ use crate::compress::{CommRecord, SchemeKind};
 use crate::coordinator::CommTensor;
 use crate::data::DataShard;
 use crate::exec::barrier::Barrier;
-use crate::exec::ring::{allgather_sched, GatherScratch, MeshLink, PacerSet};
+use crate::exec::ring::{allgather_sched, broadcast_abort, GatherScratch, MeshLink, PacerSet};
 use crate::exec::timeline::{RankTimeline, Span, SpanKind};
 use crate::runtime::RankModel;
 use crate::sim::Policy;
@@ -57,6 +57,12 @@ pub enum Cmd {
     /// Set this rank's synthetic compute inflation (straggler injection;
     /// never changes numerics).
     SetWork(u32),
+    /// Kill this rank mid-run (failure injection): the compute thread
+    /// stops at its next command, the comm thread broadcasts
+    /// `Frame::Abort` so peers' collectives fail fast, and the engine is
+    /// told via [`RankMsg::Failed`] — `step()` surfaces an error naming
+    /// the rank instead of hanging the barrier.
+    Fail { reason: String },
     Shutdown,
 }
 
@@ -69,6 +75,16 @@ pub struct StepSpec {
     pub policy: Policy,
     /// Shared time origin for all ranks' spans.
     pub epoch: Instant,
+}
+
+/// What a rank's comm thread reports to the engine: a completed step, or
+/// a failure. Worker threads never panic on mesh errors — a poisoned
+/// panic would strand every peer blocked in `rx.recv()` and hang the
+/// P-party barrier — so failures are logged through `obs::log` and
+/// propagated here; the engine aborts the barrier and returns an error.
+pub enum RankMsg {
+    Step(RankStepResult),
+    Failed { rank: usize, reason: String },
 }
 
 /// What a rank reports back after one step.
@@ -106,6 +122,8 @@ enum Work {
     Finish { loss: f32, comp_wall_s: f64, spans: Vec<Span>, barrier_wait_s: f64 },
     Reconfig(SchemeKind),
     SetPacer(PacerSet),
+    /// Injected failure (`Cmd::Fail`): abort peers, report, exit.
+    Fail(String),
     Stop,
 }
 
@@ -130,28 +148,29 @@ pub(crate) struct CommCtx {
     /// executor; identical on every rank).
     pub sched: Arc<HopSchedule>,
     pub pacers: PacerSet,
-    pub res_tx: Sender<RankStepResult>,
+    pub res_tx: Sender<RankMsg>,
 }
 
 /// Spawn one rank: returns (work queue sender for internal use is hidden;
-/// the engine talks via `Cmd`). Called by `ThreadedExec`.
+/// the engine talks via `Cmd`). Called by `ThreadedExec`. Spawn failures
+/// propagate as `Err` — raised on the engine thread, never inside a
+/// worker; if the compute thread fails to spawn, its dropped `work_tx`
+/// makes the already-running comm thread abort its peers and exit.
 pub(crate) fn spawn_rank(
     compute: ComputeCtx,
     comm: CommCtx,
-) -> (std::thread::JoinHandle<()>, std::thread::JoinHandle<()>) {
+) -> std::io::Result<(std::thread::JoinHandle<()>, std::thread::JoinHandle<()>)> {
     let (work_tx, work_rx) = std::sync::mpsc::channel::<Work>();
     let (dep_tx, dep_rx) = std::sync::mpsc::channel::<usize>();
     // spent frame buffers flow back compute-ward for reuse
     let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<Vec<u8>>();
     let ch = std::thread::Builder::new()
         .name(format!("covap-comm-{}", comm.rank))
-        .spawn(move || comm_main(comm, work_rx, dep_tx, recycle_tx))
-        .expect("spawn comm thread");
+        .spawn(move || comm_main(comm, work_rx, dep_tx, recycle_tx))?;
     let th = std::thread::Builder::new()
         .name(format!("covap-rank-{}", compute.rank))
-        .spawn(move || compute_main(compute, work_tx, dep_rx, recycle_rx))
-        .expect("spawn compute thread");
-    (th, ch)
+        .spawn(move || compute_main(compute, work_tx, dep_rx, recycle_rx))?;
+    Ok((th, ch))
 }
 
 fn compute_main(
@@ -184,8 +203,18 @@ fn compute_main(
                 let _ = work_tx.send(Work::SetPacer(p));
             }
             Cmd::SetWork(w) => ctx.model.set_work(w),
+            Cmd::Fail { reason } => {
+                crate::log_error!(
+                    target: "exec",
+                    "rank {}: injected failure: {reason}",
+                    ctx.rank
+                );
+                // the comm thread aborts peers and reports to the engine
+                let _ = work_tx.send(Work::Fail(reason));
+                return;
+            }
             Cmd::Step(spec) => {
-                run_step(
+                let ok = run_step(
                     &mut ctx,
                     &mut *compressor,
                     &mut gbuf,
@@ -195,6 +224,16 @@ fn compute_main(
                     &dep_rx,
                     &recycle_rx,
                 );
+                if !ok {
+                    // comm thread gone (it already aborted peers and told
+                    // the engine) — nothing left to serve
+                    crate::log_error!(
+                        target: "exec",
+                        "rank {}: comm thread gone mid-step; stopping compute",
+                        ctx.rank
+                    );
+                    return;
+                }
             }
         }
     }
@@ -202,6 +241,9 @@ fn compute_main(
     let _ = work_tx.send(Work::Stop);
 }
 
+/// Returns `false` when the comm thread is gone — the caller must stop
+/// serving commands (the comm side already aborted peers and reported the
+/// failure; panicking here would only add a second corpse).
 #[allow(clippy::too_many_arguments)]
 fn run_step(
     ctx: &mut ComputeCtx,
@@ -212,14 +254,17 @@ fn run_step(
     work_tx: &Sender<Work>,
     dep_rx: &Receiver<usize>,
     recycle_rx: &Receiver<Vec<u8>>,
-) {
+) -> bool {
     let n = spec.params.len();
     gbuf.clear();
     gbuf.resize(n, 0.0);
     let barrier_wait = ctx.barrier.wait().as_secs_f64();
-    work_tx
+    if work_tx
         .send(Work::Begin { step: spec.step, epoch: spec.epoch, param_len: n })
-        .expect("comm thread alive");
+        .is_err()
+    {
+        return false;
+    }
 
     let batch = ctx.shard.next_batch();
     ctx.model.begin_step(&batch);
@@ -258,11 +303,15 @@ fn run_step(
             dep,
         };
         if overlap {
-            work_tx.send(item).expect("comm thread alive");
+            if work_tx.send(item).is_err() {
+                return false;
+            }
             if dep {
                 // synchronous collective: stall the backward pass until the
                 // comm thread confirms this tensor completed.
-                let done = dep_rx.recv().expect("comm thread alive");
+                let Ok(done) = dep_rx.recv() else {
+                    return false;
+                };
                 debug_assert_eq!(done, idx);
                 let t3 = spec.epoch.elapsed().as_secs_f64();
                 spans.push(Span {
@@ -279,11 +328,13 @@ fn run_step(
     let loss = ctx.model.end_step(n);
     // Sequential: communication starts only now (Fig. 1a/1c).
     for item in pending {
-        work_tx.send(item).expect("comm thread alive");
+        if work_tx.send(item).is_err() {
+            return false;
+        }
     }
     work_tx
         .send(Work::Finish { loss, comp_wall_s: comp_wall, spans, barrier_wait_s: barrier_wait })
-        .expect("comm thread alive");
+        .is_ok()
 }
 
 fn comm_main(
@@ -311,6 +362,15 @@ fn comm_main(
     while let Ok(work) = work_rx.recv() {
         match work {
             Work::Stop => return,
+            Work::Fail(reason) => {
+                // Injected or propagated failure: unblock every peer stuck in
+                // a recv on our link, tell the engine which rank died and why,
+                // then exit. Peers' collectives surface `PeerAborted` and walk
+                // the same path.
+                broadcast_abort(ctx.rank, &ctx.link);
+                let _ = ctx.res_tx.send(RankMsg::Failed { rank: ctx.rank, reason });
+                return;
+            }
             Work::Reconfig(kind) => {
                 let (_, cb) = build_rank_pair(&kind, ctx.workers, ctx.seed);
                 combiner = cb;
@@ -329,7 +389,7 @@ fn comm_main(
             }
             Work::Tensor { idx, offset, numel, frame, compress_s, dep } => {
                 let c0 = epoch.elapsed().as_secs_f64();
-                let lb = allgather_sched(
+                let lb = match allgather_sched(
                     ctx.rank,
                     &ctx.sched,
                     &frame,
@@ -337,7 +397,21 @@ fn comm_main(
                     &mut gather,
                     &ctx.link,
                     &ctx.pacers,
-                );
+                ) {
+                    Ok(lb) => lb,
+                    Err(e) => {
+                        crate::log_error!(
+                            target: "exec",
+                            "rank {}: collective failed on tensor {idx}: {e}",
+                            ctx.rank
+                        );
+                        broadcast_abort(ctx.rank, &ctx.link);
+                        let _ = ctx
+                            .res_tx
+                            .send(RankMsg::Failed { rank: ctx.rank, reason: e.to_string() });
+                        return;
+                    }
+                };
                 let record = combiner.combine_into(
                     idx,
                     step,
@@ -392,12 +466,21 @@ fn comm_main(
                     },
                     timeline,
                 };
-                if ctx.res_tx.send(result).is_err() {
+                if ctx.res_tx.send(RankMsg::Step(result)).is_err() {
                     return; // engine gone
                 }
             }
         }
     }
+    // Abnormal exit: the compute thread dropped `work_tx` without sending
+    // `Stop` (it panicked or bailed). Release peers and report, instead of
+    // leaving the mesh deadlocked on a rank that will never send again.
+    crate::log_error!(target: "exec", "rank {}: compute thread vanished", ctx.rank);
+    broadcast_abort(ctx.rank, &ctx.link);
+    let _ = ctx.res_tx.send(RankMsg::Failed {
+        rank: ctx.rank,
+        reason: "compute thread exited without Stop".into(),
+    });
 }
 
 /// FNV-1a over the f32 bit patterns — cheap bitwise fingerprint.

@@ -56,6 +56,71 @@ pub enum Frame {
     /// the collective's sequence number, the global slot id whose bytes
     /// these are, and the bytes themselves.
     Slot { epoch: u64, slot: u32, data: Vec<u8> },
+    /// A failing rank's last word ([`broadcast_abort`]): unblocks every
+    /// peer's `rx.recv()` so collectives fail fast with
+    /// [`MeshError::PeerAborted`] instead of waiting forever for frames
+    /// that will never come.
+    Abort { from: u32 },
+}
+
+/// A collective failure observed by a worker thread. Workers *return*
+/// this — they must never panic: a panicking comm thread strands every
+/// peer blocked in `rx.recv()` and deadlocks the mesh, so failures are
+/// logged through `obs::log` and propagated to the engine
+/// (`exec::RankMsg::Failed`), which aborts the barrier and surfaces an
+/// error from `step()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeshError {
+    /// A peer's channel endpoint closed mid-collective.
+    PeerDisconnected { rank: usize },
+    /// A frame of the wrong protocol variant arrived.
+    Protocol { rank: usize, expected: &'static str },
+    /// A peer broadcast [`Frame::Abort`] after failing.
+    PeerAborted { rank: usize, from: u32 },
+    /// A slot frame arrived from an epoch the parking contract forbids —
+    /// peers can race at most one collective ahead (the skew ≤ 1 bound
+    /// proven statically by `analysis::verify_schedule`).
+    EpochSkew { rank: usize, got: u64, current: u64 },
+    /// A gathered frame failed to decode (oracle wrappers only).
+    Corrupt { rank: usize, slot: usize },
+}
+
+impl std::fmt::Display for MeshError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MeshError::PeerDisconnected { rank } => {
+                write!(f, "rank {rank}: mesh peer disconnected mid-collective")
+            }
+            MeshError::Protocol { rank, expected } => {
+                write!(f, "rank {rank}: protocol error — expected {expected} frame")
+            }
+            MeshError::PeerAborted { rank, from } => {
+                write!(f, "rank {rank}: peer rank {from} aborted the collective")
+            }
+            MeshError::EpochSkew { rank, got, current } => write!(
+                f,
+                "rank {rank}: frame from epoch {got} while in epoch {current} \
+                 (peers may race at most one collective ahead)"
+            ),
+            MeshError::Corrupt { rank, slot } => {
+                write!(f, "rank {rank}: gathered frame for slot {slot} failed to decode")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MeshError {}
+
+/// Broadcast [`Frame::Abort`] from `rank` to every peer. Called by a
+/// failing rank's comm thread before it exits so no peer blocks forever
+/// on its silence; send failures are ignored (a peer already gone needs
+/// no unblocking).
+pub fn broadcast_abort(rank: usize, link: &MeshLink) {
+    for (d, tx) in link.txs.iter().enumerate() {
+        if d != rank {
+            let _ = tx.send(Frame::Abort { from: rank as u32 });
+        }
+    }
 }
 
 /// One rank's endpoints: a sender to every rank plus its inbound queue.
@@ -153,16 +218,19 @@ impl GatherScratch {
     }
 }
 
-fn recv_chunk(link: &MeshLink) -> Vec<f32> {
+// xtask: hot-path
+fn recv_chunk(rank: usize, link: &MeshLink) -> Result<Vec<f32>, MeshError> {
     match link.rx.recv() {
-        Ok(Frame::Chunk(v)) => v,
-        Ok(Frame::Slot { .. }) => panic!("protocol error: expected Chunk, got Slot"),
-        Err(_) => panic!("mesh peer disconnected mid-collective"),
+        Ok(Frame::Chunk(v)) => Ok(v),
+        Ok(Frame::Slot { .. }) => Err(MeshError::Protocol { rank, expected: "Chunk" }),
+        Ok(Frame::Abort { from }) => Err(MeshError::PeerAborted { rank, from }),
+        Err(_) => Err(MeshError::PeerDisconnected { rank }),
     }
 }
 
 /// Adopt an arrived frame: its allocation becomes the slot, the displaced
 /// slot buffer joins the spare pool.
+// xtask: hot-path
 fn store_slot(
     slot: usize,
     mut data: Vec<u8>,
@@ -182,7 +250,11 @@ fn store_slot(
 /// rank's encoded wire frame; after the call the caller's `slots` hold
 /// the rank-major frames of all ranks (including a copy of `mine` at
 /// `slots[rank]`). Returns the per-level bytes this rank sent — the
-/// measured wire traffic.
+/// measured wire traffic — or the [`MeshError`] that broke the
+/// collective (dead/aborting peer, protocol violation, epoch skew
+/// beyond the parking contract). On error the scratch state is stale;
+/// callers must treat the executor as poisoned.
+// xtask: hot-path
 pub fn allgather_sched(
     rank: usize,
     sched: &HopSchedule,
@@ -191,7 +263,7 @@ pub fn allgather_sched(
     gs: &mut GatherScratch,
     link: &MeshLink,
     pacers: &PacerSet,
-) -> LevelBytes {
+) -> Result<LevelBytes, MeshError> {
     let p = sched.world();
     assert_eq!(slots.len(), p, "one slot per rank");
     assert!(rank < p);
@@ -201,7 +273,7 @@ pub fn allgather_sched(
     gs.epoch += 1;
     let mut sent = LevelBytes::default();
     if p <= 1 {
-        return sent;
+        return Ok(sent);
     }
     gs.have.clear();
     gs.have.resize(p, false);
@@ -217,18 +289,26 @@ pub fn allgather_sched(
                         have: &mut Vec<bool>,
                         spares: &mut Vec<Vec<u8>>,
                         pending: &mut VecDeque<(u32, Vec<u8>)>,
-                        received: &mut usize| {
+                        received: &mut usize|
+     -> Result<(), MeshError> {
         match link.rx.recv() {
             Ok(Frame::Slot { epoch: e, slot, data }) => {
                 if e == epoch {
                     store_slot(slot as usize, data, slots, have, spares, received);
-                } else {
-                    debug_assert_eq!(e, epoch + 1, "peer ran >1 collective ahead");
+                    Ok(())
+                } else if e == epoch + 1 {
                     pending.push_back((slot, data));
+                    Ok(())
+                } else {
+                    // statically impossible for verified schedules (skew
+                    // ≤ 1); enforced hard so a regression surfaces as an
+                    // error instead of silent misdelivery
+                    Err(MeshError::EpochSkew { rank, got: e, current: epoch })
                 }
             }
-            Ok(Frame::Chunk(_)) => panic!("protocol error: expected Slot, got Chunk"),
-            Err(_) => panic!("mesh peer disconnected mid-collective"),
+            Ok(Frame::Chunk(_)) => Err(MeshError::Protocol { rank, expected: "Slot" }),
+            Ok(Frame::Abort { from }) => Err(MeshError::PeerAborted { rank, from }),
+            Err(_) => Err(MeshError::PeerDisconnected { rank }),
         }
     };
     for hop in sched.hops() {
@@ -239,7 +319,7 @@ pub fn allgather_sched(
         // a forwarded slot's producing hop is strictly earlier: block
         // until it lands (storing whatever else arrives meanwhile)
         while !gs.have[slot] {
-            recv_one(slots, &mut gs.have, &mut gs.spares, &mut gs.pending, &mut received);
+            recv_one(slots, &mut gs.have, &mut gs.spares, &mut gs.pending, &mut received)?;
         }
         let mut spare = gs.spares.pop().unwrap_or_default();
         spare.clear();
@@ -250,13 +330,13 @@ pub fn allgather_sched(
         }
         link.txs[hop.dst as usize]
             .send(Frame::Slot { epoch, slot: hop.slot, data: spare })
-            .expect("mesh send");
+            .map_err(|_| MeshError::PeerDisconnected { rank: hop.dst as usize })?;
         sent.add(hop.level, bytes);
     }
     while received < expected {
-        recv_one(slots, &mut gs.have, &mut gs.spares, &mut gs.pending, &mut received);
+        recv_one(slots, &mut gs.have, &mut gs.spares, &mut gs.pending, &mut received)?;
     }
-    sent
+    Ok(sent)
 }
 
 /// Chunked ring AllReduce (sum), threaded: call from every rank's comm
@@ -274,10 +354,10 @@ pub fn ring_allreduce_threaded(
     buf: &mut [f32],
     link: &MeshLink,
     pacer: Option<&Pacer>,
-) -> usize {
+) -> Result<usize, MeshError> {
     let n = buf.len();
     if world <= 1 || n == 0 {
-        return 0;
+        return Ok(0);
     }
     let sched = RingSchedule::new(world, n);
     let next = (rank + 1) % world;
@@ -295,8 +375,10 @@ pub fn ring_allreduce_threaded(
             p.pace(bytes);
         }
         sent += bytes;
-        link.txs[next].send(Frame::Chunk(std::mem::take(&mut spare))).expect("ring send");
-        let inc = recv_chunk(link);
+        link.txs[next]
+            .send(Frame::Chunk(std::mem::take(&mut spare)))
+            .map_err(|_| MeshError::PeerDisconnected { rank: next })?;
+        let inc = recv_chunk(rank, link)?;
         let c_in = sched.rs_chunk(prev, s);
         let range = sched.chunk(c_in);
         debug_assert_eq!(inc.len(), range.len());
@@ -315,15 +397,17 @@ pub fn ring_allreduce_threaded(
             p.pace(bytes);
         }
         sent += bytes;
-        link.txs[next].send(Frame::Chunk(std::mem::take(&mut spare))).expect("ring send");
-        let inc = recv_chunk(link);
+        link.txs[next]
+            .send(Frame::Chunk(std::mem::take(&mut spare)))
+            .map_err(|_| MeshError::PeerDisconnected { rank: next })?;
+        let inc = recv_chunk(rank, link)?;
         let c_in = sched.ag_chunk(prev, s);
         let range = sched.chunk(c_in);
         debug_assert_eq!(inc.len(), range.len());
         buf[range].copy_from_slice(&inc);
         spare = inc;
     }
-    sent
+    Ok(sent)
 }
 
 /// Flat-ring frame AllGather — [`allgather_sched`] specialized to the
@@ -339,10 +423,18 @@ pub fn allgather_frames(
     gs: &mut GatherScratch,
     link: &MeshLink,
     pacer: Option<&Pacer>,
-) -> usize {
+) -> Result<usize, MeshError> {
     let sched = RING.allgather_schedule(ClusterSpec::new(world, 1));
-    allgather_sched(rank, &sched, mine, slots, gs, link, &PacerSet::uniform(pacer.copied()))
-        .total()
+    let lb = allgather_sched(
+        rank,
+        &sched,
+        mine,
+        slots,
+        gs,
+        link,
+        &PacerSet::uniform(pacer.copied()),
+    )?;
+    Ok(lb.total())
 }
 
 /// `Payload`-level oracle wrapper over [`allgather_frames`]: encode,
@@ -355,16 +447,16 @@ pub fn allgather_payloads(
     mine: Payload,
     link: &MeshLink,
     pacer: Option<&Pacer>,
-) -> (Vec<Payload>, usize) {
+) -> Result<(Vec<Payload>, usize), MeshError> {
     let frame = mine.encode();
     let mut slots: Vec<Vec<u8>> = (0..world).map(|_| Vec::new()).collect();
     let mut gs = GatherScratch::new();
-    let sent = allgather_frames(rank, world, &frame, &mut slots, &mut gs, link, pacer);
-    let gathered = slots
-        .iter()
-        .map(|f| Payload::decode(f).expect("corrupt mesh frame"))
-        .collect();
-    (gathered, sent)
+    let sent = allgather_frames(rank, world, &frame, &mut slots, &mut gs, link, pacer)?;
+    let mut gathered = Vec::with_capacity(world);
+    for (slot, f) in slots.iter().enumerate() {
+        gathered.push(Payload::decode(f).map_err(|_| MeshError::Corrupt { rank, slot })?);
+    }
+    Ok((gathered, sent))
 }
 
 #[cfg(test)]
@@ -386,7 +478,8 @@ mod tests {
                 .map(|(r, link)| {
                     let mut buf = bufs[r].clone();
                     s.spawn(move || {
-                        let sent = ring_allreduce_threaded(r, p, &mut buf, &link, None);
+                        let sent = ring_allreduce_threaded(r, p, &mut buf, &link, None)
+                            .expect("collective");
                         (buf, sent)
                     })
                 })
@@ -474,7 +567,8 @@ mod tests {
                         for frames in rounds {
                             last = allgather_sched(
                                 r, sched, &frames[r], &mut slots, &mut gs, &link, &pacers,
-                            );
+                            )
+                            .expect("collective");
                             got.push(slots.clone());
                         }
                         (got, last)
@@ -603,7 +697,9 @@ mod tests {
                 .zip(payloads)
                 .enumerate()
                 .map(|(r, (link, mine))| {
-                    s.spawn(move || allgather_payloads(r, p, mine, &link, None))
+                    s.spawn(move || {
+                        allgather_payloads(r, p, mine, &link, None).expect("collective")
+                    })
                 })
                 .collect();
             let mut out = Vec::with_capacity(p);
@@ -687,7 +783,8 @@ mod tests {
                         for frames in &rounds {
                             allgather_frames(
                                 r, p, &frames[r], &mut slots, &mut gs, &link, None,
-                            );
+                            )
+                            .expect("collective");
                             got.push(slots.clone());
                         }
                         got
@@ -716,7 +813,8 @@ mod tests {
             Payload::Dense(vec![1.0, 2.0]),
             &make_mesh(1).remove(0),
             None,
-        );
+        )
+        .expect("collective");
         assert_eq!(got.len(), 1);
         assert_eq!(got[0], Payload::Dense(vec![1.0, 2.0]));
         assert_eq!(sent, 0);
@@ -740,5 +838,53 @@ mod tests {
         assert!(intra.latency_s < inter.latency_s);
         assert!(PacerSet::from_net(0.0, &net).intra.is_none());
         assert!(PacerSet::from_net(0.0, &net).inter.is_none());
+    }
+
+    /// A peer that dies broadcasts [`Frame::Abort`]; a rank blocked in its
+    /// receive loop must fail fast with `PeerAborted` instead of hanging.
+    #[test]
+    fn abort_frame_fails_collective_instead_of_hanging() {
+        let mut links = make_mesh(2);
+        let l1 = links.pop().unwrap();
+        let l0 = links.pop().unwrap();
+        broadcast_abort(1, &l1);
+        let sched = RING.allgather_schedule(ClusterSpec::new(2, 1));
+        let mut slots = vec![Vec::new(), Vec::new()];
+        let mut gs = GatherScratch::new();
+        let r = allgather_sched(
+            0,
+            &sched,
+            &[1, 2, 3],
+            &mut slots,
+            &mut gs,
+            &l0,
+            &PacerSet::default(),
+        );
+        assert_eq!(r, Err(MeshError::PeerAborted { rank: 0, from: 1 }));
+    }
+
+    /// Epoch skew beyond the statically proven bound (one collective
+    /// ahead) is a hard protocol error, not a silent parking.
+    #[test]
+    fn far_future_epoch_is_rejected() {
+        let mut links = make_mesh(2);
+        let l1 = links.pop().unwrap();
+        let l0 = links.pop().unwrap();
+        l1.txs[0]
+            .send(Frame::Slot { epoch: 5, slot: 1, data: vec![9] })
+            .unwrap();
+        let sched = RING.allgather_schedule(ClusterSpec::new(2, 1));
+        let mut slots = vec![Vec::new(), Vec::new()];
+        let mut gs = GatherScratch::new();
+        let r = allgather_sched(
+            0,
+            &sched,
+            &[1, 2, 3],
+            &mut slots,
+            &mut gs,
+            &l0,
+            &PacerSet::default(),
+        );
+        assert_eq!(r, Err(MeshError::EpochSkew { rank: 0, got: 5, current: 0 }));
     }
 }

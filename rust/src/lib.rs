@@ -32,6 +32,7 @@
     clippy::type_complexity
 )]
 
+pub mod analysis;
 pub mod comm;
 pub mod compress;
 pub mod harness;

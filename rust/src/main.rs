@@ -16,6 +16,11 @@
 //!             backend: bitwise parity check + measured-vs-simulated
 //!             breakdown for both policies
 //!   schemes   list available GC schemes
+//!   verify-schedules  [--json PATH]
+//!             statically verify every collective topology's hop schedule
+//!             (deadlock-freedom, exactly-once delivery, strictly-earlier
+//!             sourcing, bounded in-flight frames, wire-byte conservation)
+//!             over cluster shapes up to P=1024; writes a bench doc
 //!
 //! train also accepts --backend analytic|threaded, --policy overlap|seq,
 //! --topology ring|hier|tree|auto (collective topology: flat ring,
@@ -56,6 +61,7 @@ fn main() -> Result<()> {
         Some("profile") => profile(&args),
         Some("simulate") => simulate(&args),
         Some("exec") => exec_cmd(&args),
+        Some("verify-schedules") => verify_schedules(&args),
         Some("schemes") => {
             for k in SchemeKind::evaluation_set() {
                 println!("{}", k.label());
@@ -66,7 +72,9 @@ fn main() -> Result<()> {
             if let Some(o) = other {
                 eprintln!("unknown subcommand '{o}'");
             }
-            eprintln!("usage: covap <smoke|train|profile|simulate|exec|schemes> [flags]");
+            eprintln!(
+                "usage: covap <smoke|train|profile|simulate|exec|verify-schedules|schemes> [flags]"
+            );
             std::process::exit(2);
         }
     }
@@ -193,6 +201,98 @@ fn exec_cmd(args: &Args) -> Result<()> {
         workers,
         cfg.pace_gbps
     ));
+    Ok(())
+}
+
+/// Statically verify every topology's hop schedule over a sweep of cluster
+/// shapes — no executor, no threads, pure schedule analysis (DESIGN.md
+/// §11). For each (topology, shape): prove deadlock-freedom, exactly-once
+/// slot delivery, strictly-earlier-round sourcing and the bounded
+/// in-flight-frame invariant via `analysis::verify_schedule`, then check
+/// wire-byte conservation against the codec arithmetic for every scheme in
+/// the evaluation set. Emits one bench-doc row per (topology, shape).
+fn verify_schedules(args: &Args) -> Result<()> {
+    use covap::analysis::{verify_frame_lengths, verify_schedule, wire_conservation};
+    use covap::comm::{Collective as _, TopologyKind};
+    use covap::util::json::Json;
+
+    let t0 = std::time::Instant::now();
+    // (nodes, gpus_per_node): degenerates (p=1, nodes=1, g=1), ragged
+    // shapes, and ECS-like scale points up to P = 1024.
+    let shapes: &[(usize, usize)] = &[
+        (1, 1),
+        (1, 2),
+        (2, 1),
+        (1, 8),
+        (8, 1),
+        (2, 2),
+        (3, 2),
+        (2, 3),
+        (5, 3),
+        (4, 8),
+        (3, 7),
+        (16, 8),
+        (32, 8),
+        (64, 8),
+        (128, 8),
+        (1024, 1),
+        (1, 64),
+    ];
+    const TENSOR_NUMEL: usize = 4096;
+    let mut rows: Vec<Json> = Vec::new();
+    let mut checked = 0usize;
+    let mut max_world = 0usize;
+    for kind in TopologyKind::all() {
+        for &(nodes, g) in shapes {
+            let c = ClusterSpec::new(nodes, g);
+            let p = c.world();
+            let topo = kind.resolve(c);
+            let sched = topo.allgather_schedule(c);
+            let report = verify_schedule(&sched).map_err(|v| {
+                anyhow::anyhow!("{} on {nodes}x{g}: INVALID schedule: {v}", topo.name())
+            })?;
+            let mut wire_total = 0usize;
+            for scheme in SchemeKind::evaluation_set() {
+                let len = covap::harness::wire_bytes(&scheme, TENSOR_NUMEL);
+                let lens = vec![len; p];
+                verify_frame_lengths(&scheme, TENSOR_NUMEL, &lens).map_err(|v| {
+                    anyhow::anyhow!("{}: frame-length check failed: {v}", scheme.label())
+                })?;
+                let wire = wire_conservation(&sched, &lens).map_err(|v| {
+                    anyhow::anyhow!(
+                        "{} on {nodes}x{g} ({}): wire conservation failed: {v}",
+                        topo.name(),
+                        scheme.label()
+                    )
+                })?;
+                wire_total = wire_total.max(wire.total_sent);
+            }
+            rows.push(Json::obj(vec![
+                ("topology", Json::Str(topo.name().to_string())),
+                ("nodes", Json::Num(nodes as f64)),
+                ("gpus_per_node", Json::Num(g as f64)),
+                ("world", Json::Num(p as f64)),
+                ("hops", Json::Num(report.hops as f64)),
+                ("rounds", Json::Num(report.rounds as f64)),
+                ("max_recv", Json::Num(report.max_recv as f64)),
+                ("max_in_flight", Json::Num(report.max_in_flight as f64)),
+                ("epoch_skew", Json::Num(report.epoch_skew as f64)),
+                ("wire_total_sent", Json::Num(wire_total as f64)),
+                ("verify_s", Json::Num(t0.elapsed().as_secs_f64())),
+            ]));
+            checked += 1;
+            max_world = max_world.max(p);
+        }
+    }
+    let out = args.get_or("json", "BENCH_schedule_verify.json");
+    covap::harness::write_bench_doc(Path::new(&out), "schedule_verify", rows)?;
+    println!(
+        "verify-schedules: {} topology x shape combinations OK (max P = {}) in {}",
+        checked,
+        max_world,
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+    println!("wrote {out}");
     Ok(())
 }
 

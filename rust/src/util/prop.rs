@@ -10,7 +10,15 @@ use super::rng::Rng;
 /// Run a property `f(case_rng)` for `cases` deterministic cases derived from
 /// `master_seed`. `f` should panic (assert!) on violation; the wrapper adds
 /// the reproducing seed to the panic message.
+/// The `COVAP_PROP_ITERS` env var caps the case count (floor 1) without
+/// touching call sites — slow interpreters (Miri in CI) set it to run
+/// every property at reduced depth instead of skipping them.
 pub fn check<F: Fn(&mut Rng)>(name: &str, master_seed: u64, cases: usize, f: F) {
+    let cases = std::env::var("COVAP_PROP_ITERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|cap| cases.min(cap.max(1)))
+        .unwrap_or(cases);
     let root = Rng::seed(master_seed);
     for case in 0..cases {
         let mut rng = root.fork(case as u64);

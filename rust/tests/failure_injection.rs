@@ -166,3 +166,62 @@ fn scheme_round_handles_zero_gradients() {
         }
     }
 }
+
+/// Satellite regression for the exec error sweep: a rank killed mid-run
+/// must surface as a `step()` error naming the rank — not a hung P-party
+/// barrier — and executor teardown must complete (no stuck joins).
+#[test]
+fn failing_rank_surfaces_error_instead_of_hanging() {
+    use std::sync::Arc;
+
+    use covap::comm::TopologyKind;
+    use covap::coordinator::CommTensor;
+    use covap::data::{DataShard, SyntheticCorpus};
+    use covap::exec::{PacerSet, ThreadedExec};
+    use covap::network::ClusterSpec;
+    use covap::runtime::{RankModel, SyntheticModel, SyntheticSpec};
+    use covap::sim::Policy;
+
+    let world = 3;
+    let seed = 7u64;
+    let n = 300usize;
+    let spec = SyntheticSpec::new(0xBEEF, 1);
+    let models: Vec<Box<dyn RankModel>> = (0..world)
+        .map(|_| Box::new(SyntheticModel::new(spec)) as Box<dyn RankModel>)
+        .collect();
+    let corpus = SyntheticCorpus::new(64);
+    let shards: Vec<DataShard> =
+        (0..world).map(|w| DataShard::new(corpus.clone(), seed, w, 2, 9)).collect();
+    let cluster = ClusterSpec::new(world, 1);
+    let sched = Arc::new(TopologyKind::Auto.resolve(cluster).allgather_schedule(cluster));
+    let mut exec = ThreadedExec::new(
+        covap::compress::SchemeKind::Baseline,
+        seed,
+        models,
+        shards,
+        sched,
+        PacerSet::default(),
+    );
+    let params = Arc::new(vec![0.02f32; n]);
+    let tensors = Arc::new(vec![
+        CommTensor { offset: 0, numel: n / 2, bucket: 0 },
+        CommTensor { offset: n / 2, numel: n - n / 2, bucket: 1 },
+    ]);
+
+    // a healthy step first: the fleet works
+    exec.step(0, params.clone(), tensors.clone(), Policy::Overlap)
+        .expect("healthy step");
+
+    // kill rank 1, then step: the error must name the rank and the reason
+    exec.fail_rank(1, "injected fault");
+    let err = exec
+        .step(1, params, tensors, Policy::Overlap)
+        .expect_err("step with a dead rank must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 1"), "error must name the failed rank: {msg}");
+    assert!(msg.contains("injected fault"), "error must carry the reason: {msg}");
+
+    // Drop must join all threads without hanging — reaching the end of
+    // this test (under the harness timeout) is the assertion.
+    drop(exec);
+}

@@ -1,0 +1,250 @@
+//! Static schedule verification, from the outside (DESIGN.md §11).
+//!
+//! Two halves:
+//! * an **independent hand-rolled oracle** — a direct simulation of the
+//!   executor's receive loop, written without looking at the verifier's
+//!   passes — cross-checked against `analysis::verify_schedule` over every
+//!   topology × cluster shape. The property tests inside the crate
+//!   delegate to the verifier; this file keeps one implementation that
+//!   does not, so a bug in the verifier can't silently vouch for itself.
+//! * **mutation tests**: take a valid builder schedule, corrupt it in
+//!   each of the ways the verifier claims to catch (drop a hop, duplicate
+//!   a delivery, introduce a round cycle, inflate a frame length, ...)
+//!   and assert the *specific* violation comes back — distinct and
+//!   actionable, not a generic "invalid".
+
+use covap::analysis::{verify_frame_lengths, verify_schedule, wire_conservation, ScheduleViolation};
+use covap::comm::topology::{Hop, HopSchedule, LinkLevel};
+use covap::comm::TopologyKind;
+use covap::compress::SchemeKind;
+use covap::network::ClusterSpec;
+
+fn shapes() -> Vec<ClusterSpec> {
+    vec![
+        ClusterSpec::new(1, 1),
+        ClusterSpec::new(1, 2),
+        ClusterSpec::new(2, 1),
+        ClusterSpec::new(1, 5),
+        ClusterSpec::new(5, 1),
+        ClusterSpec::new(2, 2),
+        ClusterSpec::new(2, 3),
+        ClusterSpec::new(3, 2),
+        ClusterSpec::new(5, 3),
+        ClusterSpec::new(4, 8),
+        ClusterSpec::new(16, 8),
+    ]
+}
+
+/// The oracle: replay the schedule round by round against per-rank slot
+/// sets, exactly as the executor's receive loop would store frames. No
+/// dependency graphs, no delivery maps — just the simulation.
+fn oracle(s: &HopSchedule) -> Result<(), String> {
+    let p = s.world();
+    // have[r][k] = true once rank r holds slot k (own slot from the start)
+    let mut have: Vec<Vec<bool>> = (0..p).map(|r| (0..p).map(|k| k == r).collect()).collect();
+    let mut recvs = vec![0usize; p];
+    for round in 0..s.rounds() as u32 {
+        // within a round, every send must be satisfiable from the holdings
+        // at the round's START — that is exactly deadlock-freedom under an
+        // executor that provides no intra-round ordering
+        let start = have.clone();
+        for h in s.hops().iter().filter(|h| h.round == round) {
+            let (src, dst, slot) = (h.src as usize, h.dst as usize, h.slot as usize);
+            if src >= p || dst >= p || slot >= p || src == dst {
+                return Err(format!("malformed hop {h:?}"));
+            }
+            if !start[src][slot] {
+                return Err(format!(
+                    "round {round}: rank {src} sends slot {slot} before holding it"
+                ));
+            }
+            if have[dst][slot] {
+                return Err(format!("round {round}: rank {dst} already holds slot {slot}"));
+            }
+            have[dst][slot] = true;
+            recvs[dst] += 1;
+        }
+    }
+    for (r, h) in have.iter().enumerate() {
+        if !h.iter().all(|&x| x) {
+            return Err(format!("rank {r} incomplete after the final round"));
+        }
+        if recvs[r] != s.recv_count(r) {
+            return Err(format!("rank {r}: recv cache disagrees with the replay"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn verifier_agrees_with_independent_oracle_on_all_builder_schedules() {
+    for c in shapes() {
+        for kind in TopologyKind::all() {
+            let s = kind.resolve(c).allgather_schedule(c);
+            oracle(&s).unwrap_or_else(|e| panic!("{} {c:?}: oracle: {e}", kind.spec()));
+            verify_schedule(&s).unwrap_or_else(|v| panic!("{} {c:?}: verifier: {v}", kind.spec()));
+        }
+    }
+}
+
+#[test]
+fn oracle_and_verifier_agree_on_rejection_too() {
+    // the mutants below must be rejected by BOTH implementations — the
+    // cross-check cuts in the failing direction as well
+    for mutant in [
+        drop_one_hop(),
+        duplicate_one_delivery(),
+        round_cycle(),
+        same_round_forward(),
+    ] {
+        assert!(oracle(&mutant).is_err(), "oracle accepted a mutant");
+        assert!(verify_schedule(&mutant).is_err(), "verifier accepted a mutant");
+    }
+}
+
+// ---- mutation constructions ------------------------------------------
+
+fn ring4() -> HopSchedule {
+    let c = ClusterSpec::new(4, 1);
+    TopologyKind::Ring.resolve(c).allgather_schedule(c)
+}
+
+/// Remove one forwarding hop from a valid ring schedule.
+fn drop_one_hop() -> HopSchedule {
+    let base = ring4();
+    let mut hops = base.hops().to_vec();
+    // drop a round-1 hop: its source acquired the slot in round 0, so the
+    // break shows up as an incomplete gather / missing-source downstream
+    let idx = hops.iter().position(|h| h.round == 1).expect("multi-round schedule");
+    hops.remove(idx);
+    HopSchedule::from_raw_hops(base.world(), hops)
+}
+
+/// Deliver one slot to the same destination twice.
+fn duplicate_one_delivery() -> HopSchedule {
+    let base = ring4();
+    let mut hops = base.hops().to_vec();
+    let h0 = hops[0];
+    // re-deliver the first hop's slot to the same dst in the last round
+    hops.push(Hop { round: base.rounds() as u32 - 1, ..h0 });
+    HopSchedule::from_raw_hops(base.world(), hops)
+}
+
+/// Two round-0 hops that each forward the slot only the other delivers:
+/// a genuine circular wait — the executor would deadlock.
+fn round_cycle() -> HopSchedule {
+    let hops = vec![
+        Hop { round: 0, src: 0, dst: 1, slot: 2, level: LinkLevel::Intra },
+        Hop { round: 0, src: 1, dst: 0, slot: 2, level: LinkLevel::Intra },
+    ];
+    HopSchedule::from_raw_hops(3, hops)
+}
+
+/// A forward of a slot acquired in the same round — acyclic, but only
+/// executable under intra-round ordering the executor does not provide.
+fn same_round_forward() -> HopSchedule {
+    let hops = vec![
+        Hop { round: 0, src: 0, dst: 1, slot: 0, level: LinkLevel::Intra },
+        Hop { round: 0, src: 1, dst: 2, slot: 0, level: LinkLevel::Intra },
+        Hop { round: 0, src: 1, dst: 0, slot: 1, level: LinkLevel::Intra },
+        Hop { round: 0, src: 2, dst: 0, slot: 2, level: LinkLevel::Intra },
+        Hop { round: 0, src: 2, dst: 1, slot: 2, level: LinkLevel::Intra },
+        Hop { round: 1, src: 0, dst: 2, slot: 1, level: LinkLevel::Intra },
+    ];
+    HopSchedule::from_raw_hops(3, hops)
+}
+
+#[test]
+fn dropped_hop_is_rejected_as_missing_source_or_incomplete() {
+    match verify_schedule(&drop_one_hop()) {
+        Err(ScheduleViolation::SourceMissingSlot { .. })
+        | Err(ScheduleViolation::IncompleteGather { .. }) => {}
+        other => panic!("expected missing-source/incomplete, got {other:?}"),
+    }
+}
+
+#[test]
+fn duplicated_delivery_is_rejected_as_exactly_once_violation() {
+    match verify_schedule(&duplicate_one_delivery()) {
+        Err(ScheduleViolation::DuplicateDelivery { dst, slot, .. }) => {
+            // the message must point at the offending (dst, slot) pair
+            let base = ring4();
+            let h0 = base.hops()[0];
+            assert_eq!((dst, slot), (h0.dst, h0.slot));
+        }
+        other => panic!("expected DuplicateDelivery, got {other:?}"),
+    }
+}
+
+#[test]
+fn round_cycle_is_rejected_as_deadlock() {
+    match verify_schedule(&round_cycle()) {
+        Err(v @ ScheduleViolation::RoundCycle { round: 0, ref hops }) => {
+            assert_eq!(hops.len(), 2, "both cycle participants named");
+            let msg = v.to_string();
+            assert!(msg.contains("deadlock"), "actionable message, got: {msg}");
+        }
+        other => panic!("expected RoundCycle, got {other:?}"),
+    }
+}
+
+#[test]
+fn same_round_forward_is_rejected_even_though_acyclic() {
+    match verify_schedule(&same_round_forward()) {
+        Err(ScheduleViolation::SameRoundForward { round: 0, src: 1, slot: 0 }) => {}
+        other => panic!("expected SameRoundForward, got {other:?}"),
+    }
+}
+
+#[test]
+fn inflated_frame_length_is_rejected_against_codec_arithmetic() {
+    let n = 2048;
+    for kind in SchemeKind::evaluation_set() {
+        let expected = covap::harness::wire_bytes(&kind, n);
+        let mut lens = vec![expected; 4];
+        lens[3] += 8; // a frame claiming more bytes than the codec emits
+        match verify_frame_lengths(&kind, n, &lens) {
+            Err(ScheduleViolation::WireByteMismatch { slot: 3, expected: e, got }) => {
+                assert_eq!(e, expected, "{}", kind.label());
+                assert_eq!(got, expected + 8, "{}", kind.label());
+            }
+            other => panic!("{}: expected WireByteMismatch, got {other:?}", kind.label()),
+        }
+    }
+}
+
+#[test]
+fn non_conserving_schedule_is_rejected_by_wire_check() {
+    // a schedule that forgot one delivery destroys that frame's bytes on
+    // the wire — the conservation check catches it independently of the
+    // structural verifier
+    let s = drop_one_hop();
+    let lens = vec![64usize; s.world()];
+    match wire_conservation(&s, &lens) {
+        Err(ScheduleViolation::WireNotConserved { expected, got, .. }) => {
+            assert_eq!(expected, 64 * (s.world() - 1));
+            assert_eq!(got, expected - 64);
+        }
+        other => panic!("expected WireNotConserved, got {other:?}"),
+    }
+}
+
+#[test]
+fn every_mutation_yields_a_distinct_violation() {
+    // the acceptance criterion verbatim: each corruption maps to its own
+    // variant, so CI output tells the schedule author exactly what broke
+    let kinds = [
+        std::mem::discriminant(&verify_schedule(&drop_one_hop()).unwrap_err()),
+        std::mem::discriminant(&verify_schedule(&duplicate_one_delivery()).unwrap_err()),
+        std::mem::discriminant(&verify_schedule(&round_cycle()).unwrap_err()),
+        std::mem::discriminant(&verify_schedule(&same_round_forward()).unwrap_err()),
+        std::mem::discriminant(
+            &verify_frame_lengths(&SchemeKind::Baseline, 128, &[1usize]).unwrap_err(),
+        ),
+    ];
+    for (i, a) in kinds.iter().enumerate() {
+        for b in kinds.iter().skip(i + 1) {
+            assert_ne!(a, b, "two corruptions collapsed into one violation kind");
+        }
+    }
+}

@@ -1,0 +1,620 @@
+//! `cargo run -p xtask -- lint` — the repo's hot-path invariant linter
+//! (DESIGN.md §11). Three rules, all enforced on a comment/string-blanked
+//! view of the source so tokens inside literals and docs never trip them:
+//!
+//! 1. **hot-path-alloc** — functions annotated `// xtask: hot-path` in
+//!    `compress/rank.rs`, `compress/mod.rs` and `exec/ring.rs` must not
+//!    call allocating constructors (`Vec::new`, `format!`, `.clone()`,
+//!    `.collect()`, ...). These are the steady-state codec/collective
+//!    functions whose allocation-freedom the perf-hotpath bench assumes.
+//! 2. **no-unwrap-in-worker** — `exec/ring.rs`, `exec/rank.rs` and
+//!    `exec/barrier.rs` must not call `.unwrap()` / `.expect(` outside
+//!    `#[cfg(test)]` regions: a panicking worker thread strands every
+//!    peer blocked on its channel and hangs the P-party barrier, so mesh
+//!    errors must be logged and propagated (`exec::rank::RankMsg`).
+//! 3. **no-stray-print** — `println!` / `eprintln!` are reserved for
+//!    `obs/log.rs` (the leveled logger), `main.rs` (CLI output) and
+//!    `util/bench.rs` (bench tables); everything else must use the
+//!    `obs::log` macros so verbosity stays centrally gated.
+//!
+//! Dependency-free by design: the "parser" is a hand-rolled lexer that
+//! blanks comments, strings and char literals (handling nested block
+//! comments, raw strings and lifetimes) while recording marker offsets.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Files whose `// xtask: hot-path` functions are allocation-checked.
+/// Each must contain at least one marker — losing them all silently
+/// (e.g. in a refactor) is itself a violation.
+const HOT_PATH_FILES: &[&str] = &["compress/rank.rs", "compress/mod.rs", "exec/ring.rs"];
+
+/// Worker-thread files where `.unwrap()` / `.expect(` are banned outside
+/// test regions.
+const NO_UNWRAP_FILES: &[&str] = &["exec/ring.rs", "exec/rank.rs", "exec/barrier.rs"];
+
+/// The only files allowed to print directly to stdout/stderr.
+const PRINT_ALLOWED: &[&str] = &["obs/log.rs", "main.rs", "util/bench.rs"];
+
+/// Allocating calls banned inside hot-path functions. Substring matches
+/// against blanked source, so comments/strings can't trip them.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new(",
+    "Vec::with_capacity(",
+    "String::new(",
+    "String::from(",
+    "Box::new(",
+    ".to_vec(",
+    ".to_owned(",
+    ".to_string(",
+    ".clone(",
+    ".collect(",
+    ".collect::",
+    "format!",
+    "vec!",
+];
+
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("lint") => {
+            let root = args
+                .get(1)
+                .map(PathBuf::from)
+                .unwrap_or_else(default_src_root);
+            let (files, violations) = lint_tree(&root);
+            if violations.is_empty() {
+                println!("xtask lint: {files} files OK ({})", root.display());
+            } else {
+                for v in &violations {
+                    eprintln!("{v}");
+                }
+                eprintln!("xtask lint: {} violation(s) in {files} files", violations.len());
+                std::process::exit(1);
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [src-root]");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// xtask lives at `rust/xtask`; the crate sources at `rust/src`.
+fn default_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent directory")
+        .join("src")
+}
+
+/// Walk `root` and lint every `.rs` file. Returns (file count, violations).
+fn lint_tree(root: &Path) -> (usize, Vec<Violation>) {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files);
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                out.push(Violation {
+                    file: rel,
+                    line: 0,
+                    rule: "io",
+                    msg: format!("unreadable: {e}"),
+                });
+                continue;
+            }
+        };
+        out.extend(lint_source(&rel, &src));
+    }
+    (files.len(), out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Apply every rule that covers `rel` (a `/`-separated path relative to
+/// the src root) to one file's source.
+fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let stripped = strip(src);
+    let tests = test_regions(&stripped.text);
+    let mut out = Vec::new();
+    if HOT_PATH_FILES.contains(&rel) {
+        hot_path_rule(rel, src, &stripped, &mut out);
+    }
+    if NO_UNWRAP_FILES.contains(&rel) {
+        token_ban_rule(
+            rel,
+            src,
+            &stripped.text,
+            &tests,
+            &[".unwrap()", ".expect("],
+            "no-unwrap-in-worker",
+            "worker threads must propagate errors (RankMsg::Failed), not panic",
+            &mut out,
+        );
+    }
+    if !PRINT_ALLOWED.contains(&rel) {
+        token_ban_rule(
+            rel,
+            src,
+            &stripped.text,
+            &tests,
+            &["println!", "eprintln!"],
+            "no-stray-print",
+            "use the obs::log macros so output stays centrally gated",
+            &mut out,
+        );
+    }
+    out
+}
+
+// ---- rule: hot-path allocation ban -----------------------------------
+
+fn hot_path_rule(rel: &str, src: &str, stripped: &Stripped, out: &mut Vec<Violation>) {
+    if stripped.markers.is_empty() {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: 1,
+            rule: "hot-path-alloc",
+            msg: "expected at least one `// xtask: hot-path` marker in this file".to_string(),
+        });
+        return;
+    }
+    let text = stripped.text.as_bytes();
+    for &m in &stripped.markers {
+        let Some(fn_kw) = find_word(&stripped.text, "fn", m) else {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: line_of(src, m),
+                rule: "hot-path-alloc",
+                msg: "marker is not followed by a function".to_string(),
+            });
+            continue;
+        };
+        let Some(open) = stripped.text[fn_kw..].find('{').map(|i| fn_kw + i) else {
+            continue; // trait method declaration — nothing to check
+        };
+        let close = match_brace(text, open);
+        let body = &stripped.text[open..close];
+        for tok in ALLOC_TOKENS {
+            let mut from = 0;
+            while let Some(i) = body[from..].find(tok) {
+                let at = open + from + i;
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: line_of(src, at),
+                    rule: "hot-path-alloc",
+                    msg: format!("`{tok}` in a `// xtask: hot-path` function"),
+                });
+                from += i + tok.len();
+            }
+        }
+    }
+}
+
+// ---- rule: banned tokens outside test regions ------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn token_ban_rule(
+    rel: &str,
+    src: &str,
+    blanked: &str,
+    tests: &[(usize, usize)],
+    tokens: &[&str],
+    rule: &'static str,
+    why: &str,
+    out: &mut Vec<Violation>,
+) {
+    for tok in tokens {
+        let mut from = 0;
+        while let Some(i) = blanked[from..].find(tok) {
+            let at = from + i;
+            if !tests.iter().any(|&(s, e)| at >= s && at < e) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: line_of(src, at),
+                    rule,
+                    msg: format!("`{tok}` outside #[cfg(test)]: {why}"),
+                });
+            }
+            from = at + tok.len();
+        }
+    }
+}
+
+// ---- lexer -----------------------------------------------------------
+
+/// The blanked view of a source file: comments, strings and char literals
+/// replaced by spaces (newlines kept, so offsets and line numbers carry
+/// over), plus the byte offsets of `// xtask: hot-path` markers.
+struct Stripped {
+    text: String,
+    markers: Vec<usize>,
+}
+
+fn strip(src: &str) -> Stripped {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut markers = Vec::new();
+    let mut i = 0;
+    while i < n {
+        match b[i] {
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let start = i;
+                while i < n && b[i] != b'\n' {
+                    i += 1;
+                }
+                if src[start + 2..i].trim() == "xtask: hot-path" {
+                    markers.push(start);
+                }
+                blank(&mut out, start, i);
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                blank(&mut out, start, i);
+            }
+            b'r' | b'b' if raw_string_len(b, i).is_some() => {
+                let len = raw_string_len(b, i).unwrap();
+                blank(&mut out, i, i + len);
+                i += len;
+            }
+            b'"' => {
+                let start = i;
+                i += 1;
+                while i < n {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                blank(&mut out, start, i);
+            }
+            b'\'' => {
+                if let Some(len) = char_literal_len(b, i) {
+                    blank(&mut out, i, i + len);
+                    i += len;
+                } else {
+                    i += 1; // lifetime / loop label: leave as-is
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    Stripped { text: String::from_utf8(out).expect("blanking preserves UTF-8"), markers }
+}
+
+fn blank(out: &mut [u8], from: usize, to: usize) {
+    for x in out[from..to.min(out.len())].iter_mut() {
+        if *x != b'\n' {
+            *x = b' ';
+        }
+    }
+}
+
+/// Length of a raw (byte) string literal starting at `i` (`r"..."`,
+/// `r#"..."#`, `br#"..."#`, ...), or None if `i` does not start one.
+fn raw_string_len(b: &[u8], i: usize) -> Option<usize> {
+    // must not be the tail of an identifier (`attr`, `subr`, ...)
+    if i > 0 && is_ident(b[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    // scan for `"` followed by `hashes` hash marks
+    while j < b.len() {
+        if b[j] == b'"' {
+            let tail = &b[j + 1..];
+            if tail.len() >= hashes && tail[..hashes].iter().all(|&c| c == b'#') {
+                return Some(j + 1 + hashes - i);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len() - i) // unterminated: blank to EOF
+}
+
+/// Length of a char/byte literal starting at the `'` at `i`, or None if
+/// it is a lifetime or loop label. A literal is `'\...'`, `'x'` (ASCII)
+/// or a multi-byte UTF-8 scalar in quotes; lifetimes are ASCII
+/// identifiers with no closing quote.
+fn char_literal_len(b: &[u8], i: usize) -> Option<usize> {
+    let n = b.len();
+    if i + 1 >= n {
+        return None;
+    }
+    if b[i + 1] == b'\\' {
+        // escape: skip the backslash and the escaped character (so `'\''`
+        // measures 4, not 3), then scan to the closing quote
+        let mut j = i + 3;
+        while j < n && b[j] != b'\'' {
+            j += 1;
+        }
+        return Some((j + 1).min(n) - i);
+    }
+    if b[i + 1] < 0x80 {
+        // ASCII: a literal iff exactly 'x'
+        if i + 2 < n && b[i + 2] == b'\'' {
+            return Some(3);
+        }
+        return None; // lifetime / label
+    }
+    // multi-byte scalar (lifetimes are ASCII): find the close within 4 bytes
+    for j in i + 2..(i + 6).min(n) {
+        if b[j] == b'\'' {
+            return Some(j + 1 - i);
+        }
+    }
+    None
+}
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+// ---- region / search helpers -----------------------------------------
+
+/// `[start, end)` byte ranges covered by `#[cfg(test)]` items in blanked
+/// source. The attribute's item is the next `{...}` block (brace-matched)
+/// unless a `;` closes a block-less item first.
+fn test_regions(blanked: &str) -> Vec<(usize, usize)> {
+    let b = blanked.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(i) = blanked[from..].find("#[cfg(test)]") {
+        let attr = from + i;
+        let after = attr + "#[cfg(test)]".len();
+        let open = blanked[after..].find('{').map(|k| after + k);
+        let semi = blanked[after..].find(';').map(|k| after + k);
+        let end = match (open, semi) {
+            (Some(o), Some(s)) if s < o => s + 1,
+            (Some(o), _) => match_brace(b, o),
+            (None, Some(s)) => s + 1,
+            (None, None) => blanked.len(),
+        };
+        out.push((attr, end));
+        from = end.max(after);
+    }
+    out
+}
+
+/// Offset just past the brace matching the `{` at `open` (blanked input,
+/// so literal/comment braces are already spaces).
+fn match_brace(b: &[u8], open: usize) -> usize {
+    debug_assert_eq!(b[open], b'{');
+    let mut depth = 0usize;
+    for (k, &c) in b.iter().enumerate().skip(open) {
+        match c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    b.len()
+}
+
+/// First occurrence of `word` at or after `from` with non-identifier
+/// characters on both sides.
+fn find_word(text: &str, word: &str, from: usize) -> Option<usize> {
+    let b = text.as_bytes();
+    let mut at = from;
+    while let Some(i) = text[at..].find(word) {
+        let s = at + i;
+        let e = s + word.len();
+        let left_ok = s == 0 || !is_ident(b[s - 1]);
+        let right_ok = e >= b.len() || !is_ident(b[e]);
+        if left_ok && right_ok {
+            return Some(s);
+        }
+        at = e;
+    }
+    None
+}
+
+fn line_of(src: &str, offset: usize) -> usize {
+    src.as_bytes()[..offset.min(src.len())]
+        .iter()
+        .filter(|&&c| c == b'\n')
+        .count()
+        + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_and_comments_never_trip_rules() {
+        let src = r####"
+// Vec::new() in a comment is fine; so is .unwrap() and println!
+/* block with format! and /* nested .expect( */ still fine */
+pub fn clean() -> &'static str {
+    let s = "Vec::new() .unwrap() println!(\"x\")";
+    let r = r#"also .expect( and vec![] here"#;
+    let c = '"';
+    let _ = (s, r, c);
+    "ok"
+}
+"####;
+        assert!(lint_source("exec/rank.rs", src).is_empty());
+    }
+
+    #[test]
+    fn seeded_hot_path_allocation_fails() {
+        let src = "
+// xtask: hot-path
+fn hot(x: &[u8]) -> usize {
+    let v = Vec::new();
+    let w = x.to_vec();
+    v.len() + w.len()
+}
+";
+        let v = lint_source("exec/ring.rs", src);
+        let msgs: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("hot-path-alloc") && m.contains("Vec::new(")),
+            "{msgs:?}"
+        );
+        assert!(msgs.iter().any(|m| m.contains(".to_vec(")), "{msgs:?}");
+        // line numbers point at the offending calls
+        assert!(v.iter().any(|x| x.line == 4), "{msgs:?}");
+    }
+
+    #[test]
+    fn unmarked_function_may_allocate() {
+        let src = "
+// xtask: hot-path
+fn hot() -> usize { 1 }
+
+fn cold() -> Vec<u8> {
+    Vec::new()
+}
+";
+        assert!(lint_source("exec/ring.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_file_without_markers_is_itself_a_violation() {
+        let v = lint_source("compress/rank.rs", "fn f() {}\n");
+        assert_eq!(v.len(), 1);
+        assert!(v[0].to_string().contains("at least one"), "{}", v[0]);
+    }
+
+    #[test]
+    fn unwrap_in_worker_fails_but_tests_are_exempt() {
+        let src = "
+fn worker(x: Option<u8>) -> u8 {
+    x.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1u8).unwrap();
+        None::<u8>.expect(\"boom\");
+    }
+}
+";
+        let v = lint_source("exec/barrier.rs", src);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|x| x.to_string()).collect::<Vec<_>>());
+        assert_eq!(v[0].line, 3);
+        assert!(v[0].to_string().contains("no-unwrap-in-worker"));
+        // unwrap_or_else / unwrap_or are fine — only bare unwrap panics
+        let ok = "fn f(x: Option<u8>) -> u8 { x.unwrap_or_else(|| 0) }\n";
+        assert!(lint_source("exec/barrier.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn stray_println_fails_except_in_allowed_files() {
+        let src = "fn f() { println!(\"hi\"); }\n";
+        let v = lint_source("covap/mod.rs", src);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].to_string().contains("no-stray-print"));
+        assert!(lint_source("main.rs", src).is_empty());
+        assert!(lint_source("util/bench.rs", src).is_empty());
+        assert!(lint_source("obs/log.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lifetimes_do_not_confuse_the_lexer() {
+        let src = "
+fn f<'a, 'b>(x: &'a str, y: &'b [u8]) -> &'a str {
+    let c = 'x';
+    let esc = '\\'';
+    let uni = '∞';
+    'outer: for _ in y {
+        break 'outer;
+    }
+    let _ = (c, esc, uni);
+    x
+}
+";
+        let s = strip(src);
+        // every quote-delimited literal is blanked; lifetimes survive
+        assert!(s.text.contains("&'a str"));
+        assert!(!s.text.contains('∞'));
+        assert!(lint_source("exec/rank.rs", src).is_empty());
+    }
+
+    #[test]
+    fn the_real_tree_passes() {
+        let root = default_src_root();
+        let (files, violations) = lint_tree(&root);
+        assert!(files > 30, "expected the covap sources under {}", root.display());
+        assert!(
+            violations.is_empty(),
+            "lint violations:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
