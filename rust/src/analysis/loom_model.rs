@@ -13,12 +13,15 @@
 //! hand-rolled unbounded channel on `loom::sync::{Mutex, Condvar}` — and
 //! checks the protocol-level invariants the real code relies on. What is
 //! modeled: epoch-tagged parking and the circulating spare pool of
-//! `allgather_sched` (model A, 2 ranks × 3 back-to-back epochs), and the
+//! `allgather_sched` (model A, 2 ranks × 3 back-to-back epochs), the
 //! comm→compute recycle channel racing `Cmd::Reconfigure` through the
-//! FIFO work queue (model B, one rank's thread pair). What is **not**
-//! modeled: frame payload encoding, pacing/time, worlds beyond 2–3
-//! ranks, or mpsc's internals (assumed linearizable FIFO — the same
-//! assumption the std documentation guarantees).
+//! FIFO work queue (model B, one rank's thread pair), and a rank failure
+//! racing the engine's `Cmd::Reconfigure` → `Cmd::ExportState` sequence
+//! during an elastic re-world (model C — the fail-during-reconfigure
+//! hazard of DESIGN.md §12). What is **not** modeled: frame payload
+//! encoding, pacing/time, worlds beyond 2–3 ranks, or mpsc's internals
+//! (assumed linearizable FIFO — the same assumption the std
+//! documentation guarantees).
 
 use std::collections::VecDeque;
 
@@ -224,6 +227,92 @@ mod tests {
                 parked += 1;
             }
             assert_eq!(parked, allocs, "buffer conservation through the recycle loop");
+        });
+    }
+
+    /// Command-queue items as model C sees them (`exec::rank::Cmd`
+    /// skeleton during an elastic re-world): a shard-layout swap, a state
+    /// export request, an injected failure, shutdown.
+    enum Cmd {
+        Reconfig(u8),
+        Export,
+        Fail,
+        Stop,
+    }
+
+    /// Replies as the engine's `export_states` collector sees them.
+    enum Msg {
+        State(u8),
+        Failed,
+        Stopped,
+    }
+
+    /// Model C — `fail_rank` racing `Cmd::Reconfigure` → `Cmd::ExportState`
+    /// during an elastic membership change (one rank's compute thread vs
+    /// the engine and a failure injector). The production invariants,
+    /// checked in every interleaving:
+    /// * **no stale export**: because each rank's command queue is a
+    ///   single FIFO and the engine enqueues the reconfigure before the
+    ///   export, any state the engine receives reflects the *new* shard
+    ///   layout — a failure can suppress the export but never reorder it;
+    /// * **no deadlocked collector**: every compute-thread exit path
+    ///   (failure, shutdown) emits a terminal message first, so the
+    ///   engine-side `export_states` loop always terminates — the dead
+    ///   rank falls to the deterministic surrogate instead of a hang.
+    #[test]
+    fn export_never_observes_stale_layout_under_failure_race() {
+        loom::model(|| {
+            let cmd = Arc::new(Chan::<Cmd>::new());
+            let res = Arc::new(Chan::<Msg>::new());
+
+            // the rank's compute thread: owns the layout, drains the FIFO
+            let compute = {
+                let cmd = cmd.clone();
+                let res = res.clone();
+                thread::spawn(move || {
+                    let mut layout = 0u8;
+                    loop {
+                        match cmd.recv() {
+                            Cmd::Reconfig(v) => layout = v,
+                            Cmd::Export => res.send(Msg::State(layout)),
+                            Cmd::Fail => {
+                                res.send(Msg::Failed);
+                                return;
+                            }
+                            Cmd::Stop => {
+                                res.send(Msg::Stopped);
+                                return;
+                            }
+                        }
+                    }
+                })
+            };
+
+            // the failure injector races the engine's whole sequence
+            let injector = {
+                let cmd = cmd.clone();
+                thread::spawn(move || cmd.send(Cmd::Fail))
+            };
+
+            // the engine: re-shard, request state for the re-world, stop
+            cmd.send(Cmd::Reconfig(1));
+            cmd.send(Cmd::Export);
+            cmd.send(Cmd::Stop);
+
+            // collect until a terminal message (the export_states loop)
+            loop {
+                match res.recv() {
+                    Msg::State(layout) => {
+                        assert_eq!(layout, 1, "export observed a pre-reconfigure layout");
+                    }
+                    // dead before exporting: the engine saw it and falls
+                    // back to the surrogate — or a clean stop after a
+                    // fresh export. Either way the loop ends.
+                    Msg::Failed | Msg::Stopped => break,
+                }
+            }
+            injector.join().unwrap();
+            compute.join().unwrap();
         });
     }
 }

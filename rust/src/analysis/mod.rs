@@ -31,10 +31,12 @@
 //! `tests/schedule_verify.rs`.
 //!
 //! [`loom_model`] (compiled only under `RUSTFLAGS="--cfg loom"`) holds
-//! exhaustive-interleaving models of the two riskiest dynamic protocols:
+//! exhaustive-interleaving models of the riskiest dynamic protocols:
 //! the circulating spare-buffer pool with epoch parking
-//! (`exec::ring::allgather_sched`) and the comm→compute recycle channel
-//! racing `Cmd::Reconfigure` (`exec::rank`).
+//! (`exec::ring::allgather_sched`), the comm→compute recycle channel
+//! racing `Cmd::Reconfigure` (`exec::rank`), and a rank failure racing
+//! the elastic re-world's reconfigure→export sequence
+//! (`exec::ThreadedExec::export_states`).
 
 pub mod verifier;
 

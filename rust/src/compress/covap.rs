@@ -119,6 +119,37 @@ impl RankCompressor for CovapCompressor {
         true
     }
 
+    /// Flatten the residual map over `layout` — the same scatter
+    /// [`CovapCompressor::reconfigure`] performs, exposed so the membership
+    /// controller can hand a departing rank's error mass to a survivor.
+    fn export_residuals(&self, layout: &[(usize, usize)]) -> Option<Vec<f32>> {
+        let span = layout.iter().map(|&(o, n)| o + n).max().unwrap_or(0);
+        let mut flat = vec![0.0f32; span];
+        for (slot, &(off, numel)) in layout.iter().enumerate() {
+            if let Some(r) = self.residuals.get(&slot) {
+                let n = r.len().min(numel);
+                flat[off..off + n].copy_from_slice(&r[..n]);
+            }
+        }
+        Some(flat)
+    }
+
+    /// Adopt a flat residual vector as this rank's EF state, sliced by
+    /// `layout`. Slots reaching past `flat` (a shorter donor) fill with
+    /// zeros — missing error mass is simply absent, never invented.
+    fn import_residuals(&mut self, flat: &[f32], layout: &[(usize, usize)]) -> bool {
+        self.residuals.clear();
+        for (slot, &(off, numel)) in layout.iter().enumerate() {
+            let mut r = vec![0.0f32; numel];
+            if off < flat.len() {
+                let n = numel.min(flat.len() - off);
+                r[..n].copy_from_slice(&flat[off..off + n]);
+            }
+            self.residuals.insert(slot, r);
+        }
+        true
+    }
+
     fn reset(&mut self) {
         self.residuals.clear();
     }
@@ -265,6 +296,33 @@ mod tests {
         // and back: still the identical flat residual vector
         assert!(c.reconfigure(&SchemeKind::Covap { interval: 3, ef }, &new, &old));
         assert_eq!(flat_residuals(&c, &old), before);
+    }
+
+    /// Elastic handoff primitive: export flattens exactly like the test
+    /// oracle, import slices it back, and the round trip is the bitwise
+    /// identity — including across a *different* layout (re-world + re-shard
+    /// in one move).
+    #[test]
+    fn export_import_roundtrips_bitwise() {
+        let ef = EfScheduler::constant(1.0);
+        let mut c = CovapCompressor::new(3, ef);
+        let old = [(0usize, 8usize), (8, 4)];
+        let g0: Vec<f32> = (0..8).map(|i| 0.5 * i as f32 - 1.7).collect();
+        let g1: Vec<f32> = (0..4).map(|i| 0.3 * i as f32 + 0.2).collect();
+        for (t, g) in [(0usize, &g0), (1, &g1)] {
+            assert!(matches!(c.compress(t, 1, g), Payload::Empty));
+        }
+        let flat = c.export_residuals(&old).expect("covap state is portable");
+        let bits: Vec<u32> = flat.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, flat_residuals(&c, &old), "export matches the oracle");
+
+        let new = [(0usize, 5usize), (5, 7)];
+        let mut fresh = CovapCompressor::new(3, ef);
+        assert!(fresh.import_residuals(&flat, &new));
+        assert_eq!(flat_residuals(&fresh, &new), bits, "import preserves bits");
+        // re-export under the new layout: still the identical flat vector
+        let back = fresh.export_residuals(&new).unwrap();
+        assert_eq!(back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), bits);
     }
 
     /// A remapped compressor behaves exactly like one that accumulated

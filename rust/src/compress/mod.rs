@@ -127,6 +127,21 @@ pub trait Scheme: Send {
         false
     }
 
+    /// Elastic-membership hook: flatten `rank`'s long-lived per-tensor
+    /// state (EF residuals) over the slot `layout` into flat parameter
+    /// space (see [`RankCompressor::export_residuals`]). `None` = no
+    /// portable state.
+    fn export_residuals(&self, _rank: usize, _layout: &[(usize, usize)]) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// Elastic-membership hook: adopt `flat` as `rank`'s per-tensor state,
+    /// sliced by `layout` (see [`RankCompressor::import_residuals`]).
+    /// Returns false when ignored (stateless scheme).
+    fn import_residuals(&mut self, _rank: usize, _flat: &[f32], _layout: &[(usize, usize)]) -> bool {
+        false
+    }
+
     /// Reset all error-feedback / iteration state (new training run).
     fn reset(&mut self);
 }
@@ -240,6 +255,17 @@ impl Scheme for LockstepDriver {
             self.label = kind.label();
         }
         ok
+    }
+
+    fn export_residuals(&self, rank: usize, layout: &[(usize, usize)]) -> Option<Vec<f32>> {
+        self.compressors.get(rank)?.export_residuals(layout)
+    }
+
+    fn import_residuals(&mut self, rank: usize, flat: &[f32], layout: &[(usize, usize)]) -> bool {
+        match self.compressors.get_mut(rank) {
+            Some(c) => c.import_residuals(flat, layout),
+            None => false,
+        }
     }
 
     fn reset(&mut self) {

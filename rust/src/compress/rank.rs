@@ -497,6 +497,25 @@ pub trait RankCompressor: Send {
         false
     }
 
+    /// Elastic-membership hook: flatten this rank's long-lived per-tensor
+    /// state (EF residuals) over the slot `layout` into one dense vector in
+    /// flat parameter space. `None` (the default) means "no portable
+    /// state" — stateless schemes hand nothing over when their rank leaves
+    /// the world. The inverse is [`RankCompressor::import_residuals`];
+    /// `import(export(x)) = x` bitwise for layouts covering the state.
+    fn export_residuals(&self, _layout: &[(usize, usize)]) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// Elastic-membership hook: adopt `flat` (a vector in flat parameter
+    /// space, e.g. a departed rank's exported residuals folded into this
+    /// rank's) as this compressor's per-tensor state, sliced by `layout`.
+    /// Returns false (the default) when the scheme carries no portable
+    /// state and the import was ignored.
+    fn import_residuals(&mut self, _flat: &[f32], _layout: &[(usize, usize)]) -> bool {
+        false
+    }
+
     fn reset(&mut self);
 }
 

@@ -8,6 +8,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::comm::TopologyKind;
 use crate::compress::SchemeKind;
+use crate::coordinator::membership::{
+    parse_membership_schedule, world_evolution, MembershipEvent,
+};
 use crate::covap::EfScheduler;
 use crate::network::{ClusterSpec, NetworkModel};
 use crate::sim::Policy;
@@ -141,6 +144,23 @@ pub struct RunConfig {
     /// Synthetic model: per-element compute inflation factor (>= 1). Does
     /// not change any numeric result, only backward-pass cost.
     pub synth_work: u32,
+    /// Scripted membership events (`--membership-schedule
+    /// "step:fail:rank,step:leave:rank,step:join[:count]"`): each fires at
+    /// its step boundary and re-worlds the run live — residuals
+    /// redistributed, hop schedule re-derived and re-verified (DESIGN.md
+    /// §12). Validated against the evolving world at load time.
+    pub membership_schedule: Vec<MembershipEvent>,
+    /// Elastic recovery: when a rank failure is *detected* mid-run, evict
+    /// the rank and re-world instead of aborting. Off by default — the
+    /// pre-elastic fail-fast behavior is preserved exactly.
+    pub elastic: bool,
+    /// Threaded mesh: bounded receive retries before a silent peer is
+    /// declared failed (0 = fail-fast on disconnect only, the default).
+    pub comm_retry: u32,
+    /// Threaded mesh: base receive timeout in milliseconds for the retry
+    /// ladder (attempt k waits `comm_timeout_ms << k`). 0 disables
+    /// timeouts entirely (blocking receives — the default).
+    pub comm_timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -172,6 +192,10 @@ impl Default for RunConfig {
             policy: Policy::Overlap,
             pace_gbps: 0.0,
             synth_work: 1,
+            membership_schedule: Vec::new(),
+            elastic: false,
+            comm_retry: 0,
+            comm_timeout_ms: 0,
         }
     }
 }
@@ -288,6 +312,14 @@ impl RunConfig {
         cfg.pace_gbps = j.get_or("pace_gbps", &Json::from(0.0)).as_f64()?;
         cfg.synth_work =
             j.get_or("synth_work", &Json::from(1usize)).as_usize()? as u32;
+        if let Ok(m) = j.get("membership_schedule") {
+            cfg.membership_schedule = parse_membership_schedule(m.as_str()?)?;
+        }
+        cfg.elastic = j.get_or("elastic", &Json::from(false)).as_bool()?;
+        cfg.comm_retry =
+            j.get_or("comm_retry", &Json::from(0usize)).as_usize()? as u32;
+        cfg.comm_timeout_ms =
+            j.get_or("comm_timeout_ms", &Json::from(0usize)).as_usize()? as u64;
         Ok(cfg)
     }
 
@@ -373,6 +405,12 @@ impl RunConfig {
         }
         self.pace_gbps = a.get_parsed("pace-gbps", self.pace_gbps)?;
         self.synth_work = a.get_parsed("synth-work", self.synth_work)?;
+        if let Some(spec) = a.get("membership-schedule") {
+            self.membership_schedule = parse_membership_schedule(spec)?;
+        }
+        self.elastic = a.get_parsed("elastic", self.elastic)?;
+        self.comm_retry = a.get_parsed("comm-retry", self.comm_retry)?;
+        self.comm_timeout_ms = a.get_parsed("comm-timeout-ms", self.comm_timeout_ms)?;
         Ok(())
     }
 
@@ -409,9 +447,31 @@ impl RunConfig {
                 bail!("pace_schedule[{i}]: gbps must be finite and > 0, got {gbps}");
             }
         }
+        // The membership script is validated against the world it evolves
+        // (ranks in range *at event time*, never-empty, ordered steps) and
+        // yields the world-size bounds scenario scripts are checked
+        // against: a straggler rank valid in *no* world of the run is a
+        // config error; one valid only in a future (post-join) world is
+        // legal but suspicious, so it warns.
+        let (min_world, max_world) =
+            world_evolution(self.workers, &self.membership_schedule)?;
         for s in &self.stragglers {
-            if s.rank >= self.workers {
-                bail!("straggler rank {} out of range (workers {})", s.rank, self.workers);
+            if s.rank >= max_world {
+                bail!(
+                    "straggler rank {} out of range (workers {}, max world {})",
+                    s.rank,
+                    self.workers,
+                    max_world
+                );
+            }
+            if s.rank >= min_world {
+                crate::log_warn!(
+                    target: "config",
+                    "straggler rank {} only exists in part of the run (world \
+                     ranges {min_world}..={max_world} under the membership \
+                     schedule); its window is inert while the rank is absent",
+                    s.rank
+                );
             }
             if s.work_factor == 0 {
                 bail!("straggler work_factor must be >= 1");
@@ -447,6 +507,14 @@ impl RunConfig {
                  scheme will NOT be swapped (use --scheme covap@auto for adaptive mode)",
                 self.profile_steps,
                 self.scheme.spec()
+            );
+        }
+        if self.comm_retry > 0 && self.comm_timeout_ms == 0 {
+            crate::log_warn!(
+                target: "config",
+                "comm_retry={} with comm_timeout_ms=0 is inert (blocking \
+                 receives never time out; set --comm-timeout-ms > 0)",
+                self.comm_retry
             );
         }
         Ok(())
@@ -896,6 +964,98 @@ mod tests {
         assert!(cfg.apply_args(&bad).is_err());
         let j = Json::parse(r#"{"log_level": "loud"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    /// Elastic knobs parse from CLI and JSON and default to off (bounded
+    /// retry preserves fail-fast, membership schedule empty).
+    #[test]
+    fn elastic_knobs_parse_everywhere() {
+        let d = RunConfig::default();
+        assert!(d.membership_schedule.is_empty());
+        assert!(!d.elastic);
+        assert_eq!((d.comm_retry, d.comm_timeout_ms), (0, 0));
+
+        let args = Args::parse(
+            [
+                "--membership-schedule", "3:fail:1,6:join:2",
+                "--elastic",
+                "--comm-retry", "3",
+                "--comm-timeout-ms", "50",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(
+            cfg.membership_schedule,
+            vec![
+                MembershipEvent { at_step: 3, action: crate::coordinator::membership::MembershipAction::Fail { rank: 1 } },
+                MembershipEvent { at_step: 6, action: crate::coordinator::membership::MembershipAction::Join { count: 2 } },
+            ]
+        );
+        assert!(cfg.elastic);
+        assert_eq!((cfg.comm_retry, cfg.comm_timeout_ms), (3, 50));
+        cfg.validate().unwrap();
+
+        let j = Json::parse(
+            r#"{"workers": 4, "membership_schedule": "2:leave:0",
+                "elastic": true, "comm_retry": 2, "comm_timeout_ms": 25}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.membership_schedule.len(), 1);
+        assert!(cfg.elastic);
+        assert_eq!((cfg.comm_retry, cfg.comm_timeout_ms), (2, 25));
+        cfg.validate().unwrap();
+
+        // malformed scripts are rejected, not silently dropped
+        let bad = Args::parse(
+            ["--membership-schedule", "3:evict:1"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_args(&bad).is_err());
+    }
+
+    /// Satellite regression: scenario scripts are validated against the
+    /// *evolving* world, not just the starting one. A membership event
+    /// naming a rank outside the world at its step is an error; a
+    /// straggler rank valid in no world of the run is an error; one valid
+    /// only in a future (post-join) world passes with a warning.
+    #[test]
+    fn membership_schedule_validates_against_evolving_world() {
+        // event rank outside the world at event time (rank 1 already gone)
+        let mut cfg = RunConfig { workers: 2, ..RunConfig::default() };
+        cfg.membership_schedule = parse_membership_schedule("1:fail:1,2:fail:1").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("outside the world"), "{err}");
+
+        // straggler rank valid in *no* world -> error
+        let mut cfg = RunConfig { workers: 2, ..RunConfig::default() };
+        cfg.membership_schedule = parse_membership_schedule("1:join:3").unwrap();
+        cfg.stragglers =
+            vec![Straggler { rank: 9, work_factor: 2, from_step: 0, until_step: 5 }];
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("max world 5"), "{err}");
+
+        // straggler rank valid only after the join -> warns but validates
+        let mut cfg = RunConfig { workers: 2, ..RunConfig::default() };
+        cfg.membership_schedule = parse_membership_schedule("1:join:3").unwrap();
+        cfg.stragglers =
+            vec![Straggler { rank: 4, work_factor: 2, from_step: 2, until_step: 5 }];
+        cfg.validate().unwrap();
+
+        // emptying the world is rejected
+        let mut cfg = RunConfig { workers: 1, ..RunConfig::default() };
+        cfg.membership_schedule = parse_membership_schedule("1:leave:0").unwrap();
+        assert!(cfg.validate().is_err());
+
+        // out-of-order schedules are rejected
+        let mut cfg = RunConfig::default();
+        cfg.membership_schedule = parse_membership_schedule("5:join,2:join").unwrap();
+        assert!(cfg.validate().is_err());
     }
 
     /// Satellite regression: a non-COVAP scheme plus profile_steps must

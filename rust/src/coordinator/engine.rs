@@ -23,13 +23,18 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::analysis::verify_schedule;
 use crate::comm::topology::{Collective, LevelBytes};
 use crate::compress::{CommRecord, Scheme, SchemeKind};
 use crate::config::{ExecBackend, Optimizer, RunConfig};
 use crate::coordinator::bucketizer::{bucketize, Bucket};
+use crate::coordinator::membership::{redistribute, MembershipAction};
 use crate::covap::{shard_buckets, EfScheduler, IntervalController, IntervalDecision};
 use crate::data::{DataShard, SyntheticCorpus};
-use crate::exec::{MeasuredBreakdown, PacerSet, RankTimeline, Span, SpanKind, ThreadedExec};
+use crate::exec::{
+    MeasuredBreakdown, PacerSet, RankFailure, RankTimeline, RetryPolicy, Span, SpanKind,
+    ThreadedExec,
+};
 use crate::network::ClusterSpec;
 use crate::obs::log::{emit_kv, LogLevel};
 use crate::obs::{registry, TraceBuilder, TID_COMM, TID_COMPUTE};
@@ -123,6 +128,19 @@ pub struct DpEngine {
     /// Perfetto trace accumulator (only when `cfg.trace_out` is set —
     /// tracing is strictly zero-cost otherwise).
     trace: Option<TraceBuilder>,
+    /// The most recent combined update (bitwise-identical on both
+    /// backends) — the deterministic surrogate for a *failed* rank's
+    /// unrecoverable EF residuals (DESIGN.md §12).
+    last_combined: Vec<f32>,
+    /// World generation: bumped by every membership event. Mixed into the
+    /// post-event shard/scheme seed so a re-world never replays the
+    /// pre-event data stream — identically on both backends.
+    generation: u64,
+    /// Cursor into `cfg.membership_schedule` (events already fired).
+    membership_idx: usize,
+    /// Analytic-backend injected failure, surfaced at the next `step()`
+    /// exactly like a detected threaded failure (parity for chaos tests).
+    pending_failure: Option<(usize, String)>,
 }
 
 impl DpEngine {
@@ -190,15 +208,22 @@ impl DpEngine {
                 let sched = Arc::new(
                     cfg.topology.resolve(exec_cluster).allgather_schedule(exec_cluster),
                 );
+                let retry = RetryPolicy {
+                    retries: cfg.comm_retry,
+                    timeout_ms: cfg.comm_timeout_ms,
+                };
                 // the executor gets its own identical shard streams; the
                 // engine's copies go unused in this mode
-                Some(ThreadedExec::new(
+                Some(ThreadedExec::with_state(
                     cfg.scheme.clone(),
                     cfg.seed,
                     models,
                     make_shards(),
                     sched,
                     pacers,
+                    retry,
+                    (0..cfg.workers).map(|_| None).collect(),
+                    Vec::new(),
                 ))
             }
         };
@@ -222,6 +247,10 @@ impl DpEngine {
             exec,
             controller,
             chosen_interval: None,
+            last_combined: Vec::new(),
+            generation: 0,
+            membership_idx: 0,
+            pending_failure: None,
         })
     }
 
@@ -244,6 +273,31 @@ impl DpEngine {
     /// Run one synchronous DP step.
     pub fn step(&mut self) -> Result<StepOutput> {
         let wall0 = Instant::now();
+        // ---- elastic membership: scheduled events land on this step
+        // boundary, before any rank computes (DESIGN.md §12) ----
+        while let Some(ev) = self.cfg.membership_schedule.get(self.membership_idx).copied()
+        {
+            if ev.at_step > self.step {
+                break;
+            }
+            self.membership_idx += 1;
+            self.apply_membership(ev.action)?;
+        }
+        // analytic-backend injected failure: surfaces here exactly like a
+        // detected threaded one — recover when elastic, abort otherwise
+        if let Some((rank, reason)) = self.pending_failure.take() {
+            if self.cfg.elastic {
+                self.apply_membership(MembershipAction::Fail { rank })?;
+            } else {
+                return Err(RankFailure {
+                    rank,
+                    step: self.step,
+                    during: false,
+                    reason,
+                }
+                .into());
+            }
+        }
         // remember whether a scheduled pacer change fires this step (the
         // trace marks it as an instant event)
         let pace_event = self
@@ -253,12 +307,43 @@ impl DpEngine {
             .find(|(at, _)| *at == self.step)
             .map(|&(_, gbps)| gbps);
         self.apply_scenario();
-        let (losses, comp_walls, mut records, reduced, measured, timelines) =
-            if self.exec.is_some() {
-                self.step_threaded()?
-            } else {
-                self.step_analytic()?
-            };
+        let attempt = if self.exec.is_some() {
+            self.step_threaded()
+        } else {
+            self.step_analytic()
+        };
+        let (losses, comp_walls, mut records, reduced, measured, timelines) = match attempt
+        {
+            Ok(data) => data,
+            // Elastic recovery: a detected rank failure aborted the
+            // in-flight step before any rank applied it (the barrier
+            // poison makes survivors skip it bitwise-uniformly), so evict
+            // the dead rank, re-world, and run the step on the new fleet.
+            Err(e) => {
+                let detected = match e.downcast_ref::<RankFailure>() {
+                    Some(f) if self.cfg.elastic => Some((f.rank, f.reason.clone())),
+                    _ => None,
+                };
+                let Some((rank, reason)) = detected else { return Err(e) };
+                crate::log_warn!(
+                    target: "membership",
+                    "rank {rank} failed at step {} ({reason}): evicting and \
+                     re-worlding instead of aborting",
+                    self.step
+                );
+                self.apply_membership(MembershipAction::Fail { rank })?;
+                if self.exec.is_some() {
+                    self.step_threaded()?
+                } else {
+                    self.step_analytic()?
+                }
+            }
+        };
+        // retain the combined update: the deterministic surrogate for a
+        // failed rank's unrecoverable residuals (identical on both
+        // backends, so parity survives a crash)
+        self.last_combined.clear();
+        self.last_combined.extend_from_slice(&reduced);
 
         // Per-level wire accounting: route every record's measured frame
         // length through the topology's hop schedule over the modeled
@@ -639,6 +724,212 @@ impl DpEngine {
         }
         self.cfg.scheme = kind;
         self.tensors = new_tensors;
+    }
+
+    /// Apply one membership action *now*, at the current step boundary:
+    /// export every old rank's flattened EF residuals, redistribute them
+    /// into the new world ([`redistribute`] — survivors bitwise, orphaned
+    /// error mass folded into new rank 0, joiners clean), re-derive the
+    /// collective hop schedule for the new `ClusterSpec` and gate it
+    /// through [`verify_schedule`] before any rank runs on it, then
+    /// rebuild scheme/shards/executor from the new `(world, generation)`
+    /// pair. Both backends reach bitwise-identical post-event state from
+    /// identical inputs (DESIGN.md §12).
+    pub fn apply_membership(&mut self, action: MembershipAction) -> Result<()> {
+        let t0 = Instant::now();
+        let old_world = self.cfg.workers;
+        let new_world = action.next_world(old_world);
+        ensure!(
+            new_world >= 1,
+            "membership action {} would empty the world",
+            action.spec()
+        );
+        if let MembershipAction::Fail { rank } | MembershipAction::Leave { rank } = action {
+            ensure!(
+                rank < old_world,
+                "membership action {}: rank outside the world of {old_world}",
+                action.spec()
+            );
+        }
+
+        // 1. export: every old rank's EF residuals, flattened over the
+        //    current tensor layout. A *failed* rank's threads may already
+        //    be dead, so the threaded collector never waits on it (its
+        //    export is discarded by the redistribution rule either way).
+        let layout: Vec<(usize, usize)> =
+            self.tensors.iter().map(|t| (t.offset, t.numel)).collect();
+        let states: Vec<Option<Vec<f32>>> = match self.exec.as_mut() {
+            Some(exec) => {
+                let skip = match action {
+                    MembershipAction::Fail { rank } => Some(rank),
+                    _ => None,
+                };
+                exec.export_states(&layout, skip)
+            }
+            None => (0..old_world)
+                .map(|r| self.scheme.export_residuals(r, &layout))
+                .collect(),
+        };
+
+        // 2. redistribute into the new world (pure + deterministic)
+        let states = redistribute(states, action, &self.last_combined);
+
+        // 3. re-world the config and re-derive the modeled topology; the
+        //    fresh accounting schedule is verified before use
+        self.generation += 1;
+        self.cfg.workers = new_world;
+        let gpn = self.cfg.cluster.gpus_per_node.max(1);
+        self.cfg.cluster = if new_world % gpn == 0 {
+            ClusterSpec::new(new_world / gpn, gpn)
+        } else {
+            ClusterSpec::new(new_world, 1)
+        };
+        self.topo = self.cfg.topology.resolve(self.cfg.cluster);
+        let acct_sched = self.topo.allgather_schedule(self.cfg.cluster);
+        verify_schedule(&acct_sched).map_err(|v| {
+            anyhow::anyhow!("re-derived accounting schedule rejected: {v}")
+        })?;
+        self.acct_hops = acct_sched.max_level_hops();
+
+        // 4. fresh deterministic shards for the new generation (the
+        //    generation-mixed seed keeps both backends identical while
+        //    never replaying the pre-event stream)
+        let gseed =
+            self.cfg.seed ^ self.generation.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let dims = self.arts.manifest.dims.clone();
+        let corpus = SyntheticCorpus::new(dims.vocab);
+        let make_shards = || -> Vec<DataShard> {
+            (0..new_world)
+                .map(|w| {
+                    DataShard::new(corpus.clone(), gseed, w, dims.batch, dims.seq_len + 1)
+                })
+                .collect()
+        };
+        self.shards = make_shards();
+
+        // 5. rebuild the scheme for the new world and import the
+        //    redistributed residuals (survivors bitwise)
+        let mut scheme = self.cfg.scheme.build(new_world, gseed);
+        for (r, st) in states.iter().enumerate() {
+            if let Some(flat) = st {
+                scheme.import_residuals(r, flat, &layout);
+            }
+        }
+        self.scheme = scheme;
+
+        // 6. threaded backend: join the old fleet, verify the re-derived
+        //    executor schedule, and spawn the new world with the imported
+        //    per-rank states
+        if self.exec.is_some() {
+            self.exec = None; // Drop joins the old rank threads
+            let models = self.arts.rank_models(new_world)?;
+            let pacers = PacerSet::from_net(self.cfg.pace_gbps, &self.cfg.net);
+            let exec_cluster = if self.cfg.cluster.world() == new_world {
+                self.cfg.cluster
+            } else {
+                ClusterSpec::new(new_world, 1)
+            };
+            let sched =
+                self.cfg.topology.resolve(exec_cluster).allgather_schedule(exec_cluster);
+            verify_schedule(&sched).map_err(|v| {
+                anyhow::anyhow!("re-derived executor schedule rejected: {v}")
+            })?;
+            let retry = RetryPolicy {
+                retries: self.cfg.comm_retry,
+                timeout_ms: self.cfg.comm_timeout_ms,
+            };
+            self.exec = Some(ThreadedExec::with_state(
+                self.cfg.scheme.clone(),
+                gseed,
+                models,
+                make_shards(),
+                Arc::new(sched),
+                pacers,
+                retry,
+                states,
+                layout,
+            ));
+        }
+
+        // 7. per-rank scenario state and the profiler follow the new world
+        self.rank_work = vec![self.cfg.synth_work; new_world];
+        self.profile = Profile::for_world(new_world);
+
+        let cost_s = t0.elapsed().as_secs_f64();
+        let spec = action.spec();
+        registry::with_global(|r| {
+            r.counter_add("membership_events", 1);
+            r.counter_add(
+                match action {
+                    MembershipAction::Fail { .. } => "membership_failures",
+                    MembershipAction::Leave { .. } => "membership_leaves",
+                    MembershipAction::Join { .. } => "membership_joins",
+                },
+                1,
+            );
+            r.gauge_set("world", new_world as f64);
+            r.observe("reconfig_cost_s", cost_s);
+        });
+        emit_kv(
+            LogLevel::Info,
+            "membership",
+            "reworld",
+            &[
+                ("action", spec.clone()),
+                ("step", self.step.to_string()),
+                ("world", format!("{old_world}->{new_world}")),
+                ("generation", self.generation.to_string()),
+                ("cost_s", format!("{cost_s:.6}")),
+            ],
+        );
+        if let Some(trace) = self.trace.as_mut() {
+            trace.process(new_world, "sim (predicted)");
+            trace.thread(new_world, TID_COMPUTE, "compute");
+            trace.instant(
+                new_world,
+                TID_COMPUTE,
+                "membership",
+                0.0,
+                vec![
+                    ("step", Json::from(self.step as usize)),
+                    ("action", Json::from(spec.as_str())),
+                    ("world", Json::from(new_world)),
+                    ("cost_s", Json::from(cost_s)),
+                ],
+            );
+        }
+        Ok(())
+    }
+
+    /// Inject a rank failure (chaos tests / the elastic bench). Threaded:
+    /// the rank's threads actually die mid-protocol. Analytic: the
+    /// failure is recorded and surfaces at the next [`Self::step`]
+    /// exactly like a detected one — keeping backend parity for recovery
+    /// tests.
+    pub fn inject_failure(&mut self, rank: usize, reason: &str) {
+        match &self.exec {
+            Some(exec) => exec.fail_rank(rank, reason),
+            None => self.pending_failure = Some((rank, reason.to_string())),
+        }
+    }
+
+    /// Snapshot every rank's flattened EF residual state over the current
+    /// tensor layout (`None` = stateless scheme). Non-destructive — the
+    /// parity oracle for the elastic tests.
+    pub fn residual_state(&mut self) -> Vec<Option<Vec<f32>>> {
+        let layout: Vec<(usize, usize)> =
+            self.tensors.iter().map(|t| (t.offset, t.numel)).collect();
+        match self.exec.as_mut() {
+            Some(exec) => exec.export_states(&layout, None),
+            None => (0..self.cfg.workers)
+                .map(|r| self.scheme.export_residuals(r, &layout))
+                .collect(),
+        }
+    }
+
+    /// World generation (membership events applied so far).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// CCR report of the warmup profile (for logging).
@@ -1124,6 +1415,98 @@ mod tests {
                 "{backend:?}: measured spans only on the threaded backend"
             );
         }
+    }
+
+    fn bits_of(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The elastic tentpole, engine level: a scripted fail → scale-out →
+    /// leave run re-worlds live on BOTH backends, every step stays
+    /// bitwise-identical across them, and the post-run EF residual states
+    /// match bitwise (the conservation criterion).
+    #[test]
+    fn scheduled_membership_keeps_backends_bitwise() {
+        if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+            return;
+        }
+        let schedule = crate::coordinator::membership::parse_membership_schedule(
+            "1:fail:2,3:join:2,5:leave:0",
+        )
+        .unwrap();
+        let mk = |backend| {
+            let mut cfg = synth_cfg(
+                SchemeKind::Covap { interval: 2, ef: EfScheduler::default() },
+                backend,
+                7,
+            );
+            cfg.workers = 3;
+            cfg.cluster = crate::config::default_cluster(3);
+            cfg.membership_schedule = schedule.clone();
+            DpEngine::new(cfg, ModelArtifacts::synthetic("tiny")).unwrap()
+        };
+        let mut a = mk(ExecBackend::Analytic);
+        let mut b = mk(ExecBackend::Threaded);
+        for s in 0..7 {
+            let oa = a.step().unwrap();
+            let ob = b.step().unwrap();
+            assert_eq!(oa.loss.to_bits(), ob.loss.to_bits(), "loss diverged at step {s}");
+        }
+        // worlds: 3 -> 2 (fail) -> 4 (join 2) -> 3 (leave)
+        assert_eq!((a.generation(), a.cfg.workers), (3, 3));
+        assert_eq!((b.generation(), b.cfg.workers), (3, 3));
+        let (ra, rb) = (a.residual_state(), b.residual_state());
+        assert_eq!(ra.len(), rb.len());
+        for (r, (x, y)) in ra.iter().zip(rb.iter()).enumerate() {
+            let x = x.as_ref().expect("covap exports residuals");
+            let y = y.as_ref().expect("covap exports residuals");
+            assert_eq!(bits_of(x), bits_of(y), "rank {r} residuals diverged");
+        }
+        assert_eq!(a.params(), b.params());
+    }
+
+    /// A mid-run *detected* rank failure under `elastic: true` completes
+    /// the run instead of aborting, and the recovered trajectory matches
+    /// the analytic twin (same injection) bitwise. With elastic off the
+    /// typed failure still surfaces — fail-fast behavior is preserved.
+    #[test]
+    fn reactive_failure_recovers_and_matches_analytic() {
+        if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+            return;
+        }
+        let mk = |backend, elastic| {
+            let mut cfg = synth_cfg(
+                SchemeKind::Covap { interval: 2, ef: EfScheduler::default() },
+                backend,
+                4,
+            );
+            cfg.workers = 3;
+            cfg.cluster = crate::config::default_cluster(3);
+            cfg.elastic = elastic;
+            DpEngine::new(cfg, ModelArtifacts::synthetic("tiny")).unwrap()
+        };
+        let mut a = mk(ExecBackend::Analytic, true);
+        let mut b = mk(ExecBackend::Threaded, true);
+        let (oa, ob) = (a.step().unwrap(), b.step().unwrap());
+        assert_eq!(oa.loss.to_bits(), ob.loss.to_bits());
+        a.inject_failure(1, "chaos");
+        b.inject_failure(1, "chaos");
+        for s in 1..4 {
+            let oa = a.step().unwrap();
+            let ob = b.step().unwrap();
+            assert_eq!(oa.loss.to_bits(), ob.loss.to_bits(), "diverged at step {s}");
+        }
+        assert_eq!((a.generation(), a.cfg.workers), (1, 2));
+        assert_eq!((b.generation(), b.cfg.workers), (1, 2));
+        assert_eq!(a.params(), b.params());
+
+        let mut c = mk(ExecBackend::Threaded, false);
+        c.step().unwrap();
+        c.inject_failure(0, "hard fault");
+        let err = c.step().unwrap_err();
+        let f = err.downcast_ref::<RankFailure>().expect("typed failure");
+        assert_eq!(f.rank, 0);
+        assert!(f.reason.contains("hard fault"));
     }
 
     /// Scenario knobs (mid-run pace change + straggler injection) must

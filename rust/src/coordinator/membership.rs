@@ -1,0 +1,348 @@
+//! Elastic membership: turn a rank failure, a straggler eviction, or an
+//! operator-requested scale-out into a live world reconfiguration instead
+//! of an abort.
+//!
+//! The controller's contract has three parts, all deterministic:
+//!
+//! 1. **Quiesce** — membership changes land at step boundaries. Scheduled
+//!    events (from `--membership-schedule`) fire before the step they name
+//!    executes; a *detected* failure aborts the in-flight step (no rank
+//!    applies its update — the barrier poison makes survivors skip it
+//!    bitwise-uniformly, see `exec::rank::run_step`), so the re-world
+//!    still happens on a clean boundary.
+//! 2. **Redistribute** — [`redistribute`] maps the old world's per-rank
+//!    error-feedback residual vectors (flattened over the tensor layout)
+//!    into the new world. Survivors keep their residuals bitwise; a
+//!    departed rank's error mass is folded into the new rank 0; joiners
+//!    start clean. A rank that *left* cleanly hands over its exact
+//!    residuals; a rank that *died* hands over nothing recoverable, so
+//!    both backends reconstruct the same deterministic surrogate from the
+//!    engine's retained last-combined update — keeping analytic/threaded
+//!    parity exact even through a crash.
+//! 3. **Re-derive** — the new world's `ClusterSpec` yields a fresh
+//!    `HopSchedule` which must pass `analysis::verify_schedule` before any
+//!    rank thread is spawned onto it.
+//!
+//! The parity argument: both backends export bitwise-identical states
+//! (the live checksum invariant guarantees they agree before the event),
+//! run this module's *pure* redistribution, and rebuild scheme/shard
+//! state from identical `(kind, world, seed, generation)` inputs — so
+//! post-event parity is structural, not coincidental.
+
+use anyhow::{bail, Result};
+
+/// One membership change, applied at a step boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipAction {
+    /// Rank dies without warning (crash, OOM, fabric partition). Its
+    /// residuals are unrecoverable; the deterministic surrogate rule
+    /// applies (see [`redistribute`]).
+    Fail { rank: usize },
+    /// Rank leaves cleanly (straggler eviction, planned drain): it hands
+    /// its exact residuals over before departing.
+    Leave { rank: usize },
+    /// `count` fresh ranks join with zero residuals (scale-out).
+    Join { count: usize },
+}
+
+impl MembershipAction {
+    pub fn spec(&self) -> String {
+        match self {
+            MembershipAction::Fail { rank } => format!("fail:{rank}"),
+            MembershipAction::Leave { rank } => format!("leave:{rank}"),
+            MembershipAction::Join { count } => format!("join:{count}"),
+        }
+    }
+
+    /// World size after applying this action to a `world`-rank fleet.
+    pub fn next_world(&self, world: usize) -> usize {
+        match self {
+            MembershipAction::Fail { .. } | MembershipAction::Leave { .. } => {
+                world.saturating_sub(1)
+            }
+            MembershipAction::Join { count } => world + count,
+        }
+    }
+}
+
+/// A scheduled membership event: `action` fires before step `at_step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MembershipEvent {
+    pub at_step: u64,
+    pub action: MembershipAction,
+}
+
+/// Parse a `--membership-schedule` script:
+/// `"step:fail:rank,step:leave:rank,step:join[:count]"` — e.g.
+/// `"3:fail:1,6:join:2,9:leave:0"`. Events must be sorted by step
+/// (validated later against the starting world by [`world_evolution`]).
+pub fn parse_membership_schedule(s: &str) -> Result<Vec<MembershipEvent>> {
+    let mut events = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let fields: Vec<&str> = part.trim().split(':').collect();
+        let err = || format!("bad membership event '{part}' (want step:fail|leave:rank or step:join[:count])");
+        if fields.len() < 2 || fields.len() > 3 {
+            bail!("{}", err());
+        }
+        let at_step: u64 = fields[0].parse().map_err(|_| anyhow::anyhow!("{}", err()))?;
+        let action = match (fields[1], fields.get(2)) {
+            ("fail", Some(r)) => MembershipAction::Fail {
+                rank: r.parse().map_err(|_| anyhow::anyhow!("{}", err()))?,
+            },
+            ("leave", Some(r)) => MembershipAction::Leave {
+                rank: r.parse().map_err(|_| anyhow::anyhow!("{}", err()))?,
+            },
+            ("join", None) => MembershipAction::Join { count: 1 },
+            ("join", Some(c)) => {
+                let count: usize = c.parse().map_err(|_| anyhow::anyhow!("{}", err()))?;
+                if count == 0 {
+                    bail!("membership event '{part}': join count must be >= 1");
+                }
+                MembershipAction::Join { count }
+            }
+            _ => bail!("{}", err()),
+        };
+        events.push(MembershipEvent { at_step, action });
+    }
+    Ok(events)
+}
+
+/// Walk a schedule from `initial` workers, validating every event against
+/// the world it will actually see: ranks must be in range at event time,
+/// the world must never empty, and steps must be non-decreasing. Returns
+/// `(min_world, max_world)` over the whole run — the bounds config
+/// validation checks straggler/pace scripts against (a straggler rank
+/// valid only in a *future* world is a warning upstream; one valid in
+/// *no* world is an error).
+pub fn world_evolution(initial: usize, events: &[MembershipEvent]) -> Result<(usize, usize)> {
+    let mut world = initial;
+    let (mut min_w, mut max_w) = (initial, initial);
+    let mut last_step = 0u64;
+    for e in events {
+        if e.at_step < last_step {
+            bail!(
+                "membership schedule out of order: step {} after step {last_step}",
+                e.at_step
+            );
+        }
+        last_step = e.at_step;
+        match e.action {
+            MembershipAction::Fail { rank } | MembershipAction::Leave { rank } => {
+                if rank >= world {
+                    bail!(
+                        "membership event '{}' at step {}: rank {rank} outside the \
+                         world of {world} at that point",
+                        e.action.spec(),
+                        e.at_step
+                    );
+                }
+                if world == 1 {
+                    bail!(
+                        "membership event '{}' at step {}: cannot empty the world",
+                        e.action.spec(),
+                        e.at_step
+                    );
+                }
+            }
+            MembershipAction::Join { .. } => {}
+        }
+        world = e.action.next_world(world);
+        min_w = min_w.min(world);
+        max_w = max_w.max(world);
+    }
+    Ok((min_w, max_w))
+}
+
+/// The pure heart of the re-world: map the old world's per-rank flattened
+/// EF residual states into the new world's.
+///
+/// * `states[r]` is old rank `r`'s residuals flattened over the tensor
+///   layout (`None` = unknown: dead rank, or a stateless scheme).
+/// * `last_combined` is the engine's retained copy of the most recent
+///   combined update — bitwise-identical on both backends — used as the
+///   deterministic surrogate for a *failed* rank's unrecoverable state.
+///
+/// Rules (the residual-handoff contract, DESIGN.md §12):
+/// * **Survivors keep their residuals bitwise**, reindexed in survivor
+///   order. Elasticity must not perturb ranks that didn't move.
+/// * **Leave**: the departing rank's exported residuals are the orphan.
+/// * **Fail**: nothing was exported; the orphan is reconstructed as the
+///   retained `last_combined` update — the same deterministic rule on
+///   both backends, so parity survives the crash. (The true state is
+///   gone; any recovery is an estimate, and this one restores the error
+///   mass the dead rank most recently contributed to.)
+/// * The orphan folds element-wise into **new rank 0**'s residuals (one
+///   deterministic donor beats smearing rounding error across the fleet).
+/// * **Join**: new ranks start with no state (`None` → zero residuals).
+pub fn redistribute(
+    mut states: Vec<Option<Vec<f32>>>,
+    action: MembershipAction,
+    last_combined: &[f32],
+) -> Vec<Option<Vec<f32>>> {
+    match action {
+        MembershipAction::Join { count } => {
+            for _ in 0..count {
+                states.push(None);
+            }
+            states
+        }
+        MembershipAction::Leave { rank } | MembershipAction::Fail { rank } => {
+            if rank >= states.len() {
+                return states;
+            }
+            let exported = states.remove(rank);
+            let orphan: Option<Vec<f32>> = match action {
+                MembershipAction::Leave { .. } => exported,
+                // dead rank: deterministic surrogate (see doc above)
+                MembershipAction::Fail { .. } => {
+                    if last_combined.is_empty() {
+                        None
+                    } else {
+                        Some(last_combined.to_vec())
+                    }
+                }
+                MembershipAction::Join { .. } => unreachable!(),
+            };
+            if let Some(orphan) = orphan {
+                let donor = match states.first_mut() {
+                    Some(d) => d,
+                    None => return states,
+                };
+                match donor {
+                    Some(d) => {
+                        if d.len() < orphan.len() {
+                            d.resize(orphan.len(), 0.0);
+                        }
+                        for (di, oi) in d.iter_mut().zip(orphan.iter()) {
+                            *di += *oi;
+                        }
+                    }
+                    None => *donor = Some(orphan),
+                }
+            }
+            states
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_schedule_grammar() {
+        let ev = parse_membership_schedule("3:fail:1,6:join:2,9:leave:0,12:join").unwrap();
+        assert_eq!(
+            ev,
+            vec![
+                MembershipEvent { at_step: 3, action: MembershipAction::Fail { rank: 1 } },
+                MembershipEvent { at_step: 6, action: MembershipAction::Join { count: 2 } },
+                MembershipEvent { at_step: 9, action: MembershipAction::Leave { rank: 0 } },
+                MembershipEvent { at_step: 12, action: MembershipAction::Join { count: 1 } },
+            ]
+        );
+        assert!(parse_membership_schedule("").unwrap().is_empty());
+        for bad in ["x:fail:1", "3:evict:1", "3:fail", "3:join:0", "3:fail:1:9", "3"] {
+            assert!(parse_membership_schedule(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn world_evolution_validates_against_evolving_world() {
+        // 2 ranks: fail rank 1 (world 1), join 3 (world 4), leave rank 3
+        let ev = parse_membership_schedule("1:fail:1,2:join:3,5:leave:3").unwrap();
+        assert_eq!(world_evolution(2, &ev).unwrap(), (1, 4));
+
+        // rank valid initially but not at event time
+        let ev = parse_membership_schedule("1:fail:1,2:fail:1").unwrap();
+        let err = world_evolution(2, &ev).unwrap_err().to_string();
+        assert!(err.contains("outside the world"), "{err}");
+
+        // emptying the world
+        let ev = parse_membership_schedule("1:fail:0").unwrap();
+        assert!(world_evolution(1, &ev).is_err());
+
+        // out-of-order steps
+        let ev = parse_membership_schedule("5:join,2:join").unwrap();
+        assert!(world_evolution(2, &ev).is_err());
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The conservation criterion: survivors bitwise unchanged, and the
+    /// new rank 0 holds exactly old-rank-0 + orphan.
+    #[test]
+    fn leave_folds_exact_residuals_into_rank0() {
+        let s0 = vec![0.5f32, -1.25, 2.0];
+        let s1 = vec![0.125f32, 3.5, -0.75];
+        let s2 = vec![1.0f32, 0.0, -2.5];
+        let out = redistribute(
+            vec![Some(s0.clone()), Some(s1.clone()), Some(s2.clone())],
+            MembershipAction::Leave { rank: 1 },
+            &[9.0, 9.0, 9.0], // ignored on Leave
+        );
+        assert_eq!(out.len(), 2);
+        let want0: Vec<f32> = s0.iter().zip(s1.iter()).map(|(a, b)| a + b).collect();
+        assert_eq!(bits(out[0].as_ref().unwrap()), bits(&want0));
+        // the other survivor is bitwise untouched, reindexed 2 -> 1
+        assert_eq!(bits(out[1].as_ref().unwrap()), bits(&s2));
+    }
+
+    #[test]
+    fn fail_reconstructs_orphan_from_last_combined() {
+        let s0 = vec![1.0f32, 2.0];
+        let s2 = vec![-1.0f32, 4.0];
+        let last = vec![0.25f32, -0.5];
+        let out = redistribute(
+            vec![Some(s0.clone()), Some(vec![7.0, 7.0]), Some(s2.clone())],
+            MembershipAction::Fail { rank: 1 },
+            &last,
+        );
+        // the dead rank's true state (7.0s) is gone; the surrogate is last_combined
+        let want0: Vec<f32> = s0.iter().zip(last.iter()).map(|(a, b)| a + b).collect();
+        assert_eq!(bits(out[0].as_ref().unwrap()), bits(&want0));
+        assert_eq!(bits(out[1].as_ref().unwrap()), bits(&s2));
+    }
+
+    #[test]
+    fn join_appends_clean_ranks() {
+        let s0 = vec![1.5f32];
+        let out = redistribute(
+            vec![Some(s0.clone())],
+            MembershipAction::Join { count: 2 },
+            &[],
+        );
+        assert_eq!(out.len(), 3);
+        assert_eq!(bits(out[0].as_ref().unwrap()), bits(&s0));
+        assert!(out[1].is_none() && out[2].is_none());
+    }
+
+    #[test]
+    fn stateless_donor_adopts_the_orphan() {
+        // rank 0 had no portable state (stateless scheme / fresh joiner):
+        // the orphan becomes its state rather than being dropped
+        let out = redistribute(
+            vec![None, Some(vec![2.0f32, -2.0])],
+            MembershipAction::Leave { rank: 1 },
+            &[],
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(bits(out[0].as_ref().unwrap()), bits(&[2.0, -2.0]));
+    }
+
+    #[test]
+    fn fail_of_rank0_donates_to_new_rank0() {
+        let s1 = vec![1.0f32, 1.0];
+        let last = vec![0.5f32, 0.25];
+        let out = redistribute(
+            vec![Some(vec![3.0, 3.0]), Some(s1.clone())],
+            MembershipAction::Fail { rank: 0 },
+            &last,
+        );
+        assert_eq!(out.len(), 1);
+        let want: Vec<f32> = s1.iter().zip(last.iter()).map(|(a, b)| a + b).collect();
+        assert_eq!(bits(out[0].as_ref().unwrap()), bits(&want));
+    }
+}

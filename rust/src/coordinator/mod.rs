@@ -9,6 +9,10 @@
 
 pub mod bucketizer;
 pub mod engine;
+pub mod membership;
 
 pub use bucketizer::{bucketize, bucketize_layers, Bucket};
 pub use engine::{CommTensor, DpEngine, StepOutput};
+pub use membership::{
+    parse_membership_schedule, redistribute, world_evolution, MembershipAction, MembershipEvent,
+};

@@ -70,6 +70,20 @@ impl Barrier {
         t0.elapsed()
     }
 
+    /// True once [`abort`](Barrier::abort) poisoned the barrier. A waiter
+    /// released by `wait()` cannot tell a normal release from an abort (the
+    /// return value is its wait time either way), so compute threads check
+    /// this immediately after the rendezvous: on an aborted barrier they
+    /// must *skip* the step — no gradient, no EF accumulate, no shard
+    /// advance — and stay alive for the membership controller's state
+    /// export instead of marching into a dead mesh.
+    pub fn is_aborted(&self) -> bool {
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .aborted
+    }
+
     /// Poison the barrier: release every current waiter and make all
     /// future waits return immediately. Used during executor teardown so
     /// a dead rank can never strand its peers in the rendezvous — the
@@ -159,6 +173,18 @@ mod tests {
         waiter.join().expect("waiter released, not stuck");
         // post-abort waits return immediately even with 2 parties
         assert!(b.wait() < Duration::from_millis(5));
+    }
+
+    /// The abort flag is observable after release — how a compute thread
+    /// distinguishes "step begins" from "world is tearing down".
+    #[test]
+    fn abort_is_observable_after_release() {
+        let b = Barrier::new(2);
+        assert!(!b.is_aborted());
+        b.abort();
+        assert!(b.is_aborted());
+        b.wait();
+        assert!(b.is_aborted(), "abort is permanent");
     }
 
     #[test]

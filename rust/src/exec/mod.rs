@@ -39,7 +39,7 @@ pub use barrier::Barrier;
 pub use rank::{fnv1a_f32, Cmd, RankMsg, RankStepResult, StepSpec};
 pub use ring::{
     allgather_frames, allgather_payloads, allgather_sched, broadcast_abort, make_mesh,
-    ring_allreduce_threaded, GatherScratch, MeshError, MeshLink, Pacer, PacerSet,
+    ring_allreduce_threaded, GatherScratch, MeshError, MeshLink, Pacer, PacerSet, RetryPolicy,
 };
 pub use timeline::{aggregate, breakdown, MeasuredBreakdown, RankTimeline, Span, SpanKind};
 pub use validate::{compare_backends, BackendComparison};
@@ -57,6 +57,34 @@ use crate::coordinator::CommTensor;
 use crate::data::DataShard;
 use crate::runtime::RankModel;
 use crate::sim::Policy;
+
+/// A named rank failure surfaced by [`ThreadedExec::step`]. Carried as the
+/// anyhow error's root cause so the engine's membership controller can
+/// downcast it, identify the dead rank, and re-world the fleet instead of
+/// aborting the run. `Display` keeps the exact pre-elastic message text —
+/// callers that only format the error see no change.
+#[derive(Debug, Clone)]
+pub struct RankFailure {
+    pub rank: usize,
+    pub step: u64,
+    /// True when the failure surfaced mid-step (after the step was issued
+    /// to the fleet), false when the rank was already dead beforehand.
+    pub during: bool,
+    pub reason: String,
+}
+
+impl std::fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let RankFailure { rank, step, reason, .. } = self;
+        if self.during {
+            write!(f, "rank {rank} failed during step {step}: {reason}")
+        } else {
+            write!(f, "rank {rank} failed before step {step}: {reason}")
+        }
+    }
+}
+
+impl std::error::Error for RankFailure {}
 
 /// One step's outputs from the threaded executor.
 pub struct ExecStepOutput {
@@ -99,9 +127,41 @@ impl ThreadedExec {
         pacers: PacerSet,
     ) -> ThreadedExec {
         let world = models.len();
+        Self::with_state(
+            kind,
+            seed,
+            models,
+            shards,
+            sched,
+            pacers,
+            RetryPolicy::default(),
+            (0..world).map(|_| None).collect(),
+            Vec::new(),
+        )
+    }
+
+    /// [`ThreadedExec::new`] plus the elastic-membership extras: a mesh
+    /// receive [`RetryPolicy`] and per-rank initial EF residuals (`states`,
+    /// rank-major, each a flat parameter-space vector sliced by `layout` at
+    /// spawn — the redistributed handoff from a previous world). `None`
+    /// entries start clean.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_state(
+        kind: SchemeKind,
+        seed: u64,
+        models: Vec<Box<dyn RankModel>>,
+        shards: Vec<DataShard>,
+        sched: Arc<HopSchedule>,
+        pacers: PacerSet,
+        retry: RetryPolicy,
+        mut states: Vec<Option<Vec<f32>>>,
+        layout: Vec<(usize, usize)>,
+    ) -> ThreadedExec {
+        let world = models.len();
         assert!(world >= 1);
         assert_eq!(shards.len(), world);
         assert_eq!(sched.world(), world, "schedule must cover exactly the rank fleet");
+        states.resize_with(world, || None);
         let barrier = Arc::new(Barrier::new(world));
         let links = make_mesh(world);
         let (res_tx, res_rx) = channel::<RankMsg>();
@@ -126,6 +186,8 @@ impl ThreadedExec {
                 shard,
                 cmd_rx: rx,
                 barrier: barrier.clone(),
+                res_tx: res_tx.clone(),
+                init_state: states[r].take().map(|flat| (flat, layout.clone())),
             };
             let comm = rank::CommCtx {
                 rank: r,
@@ -135,6 +197,7 @@ impl ThreadedExec {
                 link,
                 sched: sched.clone(),
                 pacers,
+                retry,
                 res_tx: res_tx.clone(),
             };
             let (th, ch) = rank::spawn_rank(compute, comm)
@@ -190,6 +253,65 @@ impl ThreadedExec {
         }
     }
 
+    /// Collect every surviving rank's EF residuals, flattened over
+    /// `layout` — the quiesce half of a membership change. Robust to dead
+    /// ranks by construction: `skip` names a rank already known dead (no
+    /// request is sent), a send onto a closed command channel marks the
+    /// rank dead immediately, stale `RankMsg::Step`/`Failed` messages in
+    /// the result queue are drained past, and a rank that dies between
+    /// the send and its reply falls to the timeout. Because each rank's
+    /// command queue is FIFO, any in-flight `Cmd::Reconfigure` is applied
+    /// *before* the export — the returned states are never sliced by a
+    /// stale shard layout, which is the `fail_rank`-during-reconfigure
+    /// race this protocol closes (modeled in `analysis::loom_model`).
+    ///
+    /// Returns rank-major states; `None` = dead rank or stateless scheme.
+    pub fn export_states(
+        &mut self,
+        layout: &[(usize, usize)],
+        skip: Option<usize>,
+    ) -> Vec<Option<Vec<f32>>> {
+        let world = self.world;
+        let mut out: Vec<Option<Vec<f32>>> = (0..world).map(|_| None).collect();
+        let mut pending = vec![false; world];
+        let mut waiting = 0usize;
+        for (r, tx) in self.cmd_tx.iter().enumerate() {
+            if Some(r) == skip {
+                continue;
+            }
+            if tx.send(Cmd::ExportState { layout: layout.to_vec() }).is_ok() {
+                pending[r] = true;
+                waiting += 1;
+            }
+        }
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        while waiting > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.res_rx.recv_timeout(deadline - now) {
+                Ok(RankMsg::State { rank, residuals }) => {
+                    if rank < world && pending[rank] {
+                        pending[rank] = false;
+                        waiting -= 1;
+                        out[rank] = residuals;
+                    }
+                }
+                Ok(RankMsg::Failed { rank, .. }) => {
+                    // late death notice: that rank will never reply
+                    if rank < world && pending[rank] {
+                        pending[rank] = false;
+                        waiting -= 1;
+                    }
+                }
+                Ok(RankMsg::Step(_)) => {} // stale result from an aborted step
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
     /// Run one synchronous step across all ranks.
     pub fn step(
         &mut self,
@@ -210,7 +332,9 @@ impl ThreadedExec {
                 // queue — surface it instead of a generic death notice
                 while let Ok(msg) = self.res_rx.try_recv() {
                     if let RankMsg::Failed { rank, reason } = msg {
-                        anyhow::bail!("rank {rank} failed before step {step}: {reason}");
+                        return Err(
+                            RankFailure { rank, step, during: false, reason }.into()
+                        );
                     }
                 }
                 anyhow::bail!("rank thread died before step {step}");
@@ -218,12 +342,18 @@ impl ThreadedExec {
         }
         let mut results: Vec<Option<RankStepResult>> =
             (0..self.world).map(|_| None).collect();
-        for _ in 0..self.world {
+        let mut collected = 0usize;
+        while collected < self.world {
             let r = match self.res_rx.recv() {
                 Ok(RankMsg::Step(r)) => r,
                 Ok(RankMsg::Failed { rank, reason }) => {
                     self.barrier.abort();
-                    anyhow::bail!("rank {rank} failed during step {step}: {reason}");
+                    return Err(RankFailure { rank, step, during: true, reason }.into());
+                }
+                Ok(RankMsg::State { .. }) => {
+                    // can't happen in a well-ordered protocol (exports are
+                    // only requested between steps); ignore defensively
+                    continue;
                 }
                 Err(_) => {
                     self.barrier.abort();
@@ -233,6 +363,7 @@ impl ThreadedExec {
             let idx = r.rank;
             ensure!(results[idx].is_none(), "duplicate result from rank {idx}");
             results[idx] = Some(r);
+            collected += 1;
         }
         let results: Vec<RankStepResult> =
             results.into_iter().map(|o| o.expect("all ranks reported")).collect();
@@ -445,6 +576,64 @@ mod tests {
                     kind.label()
                 );
             }
+        }
+    }
+
+    /// The quiesce half of a membership change: residuals export without
+    /// disturbing the fleet, re-import bitwise through `with_state`, and
+    /// the donor fleet keeps stepping afterwards.
+    #[test]
+    fn export_states_roundtrip_through_new_world() {
+        use crate::comm::TopologyKind;
+        use crate::network::ClusterSpec;
+        let kind =
+            SchemeKind::Covap { interval: 2, ef: crate::covap::EfScheduler::constant(1.0) };
+        let seed = 21u64;
+        let (mut exec, n) = setup(2, &kind, seed);
+        let params = Arc::new(vec![0.05f32; n]);
+        let tensors = tensors_of(n);
+        // step 0: tensor 1 is dropped (interval 2) — residuals park
+        exec.step(0, params.clone(), tensors.clone(), Policy::Overlap).unwrap();
+        let layout: Vec<(usize, usize)> =
+            tensors.iter().map(|t| (t.offset, t.numel)).collect();
+        let states = exec.export_states(&layout, None);
+        assert_eq!(states.len(), 2);
+        let bits = |s: &Option<Vec<f32>>| {
+            s.as_ref().map(|v| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>())
+        };
+        for s in &states {
+            let flat = s.as_ref().expect("covap state is portable");
+            assert_eq!(flat.len(), n);
+            assert!(flat.iter().any(|x| *x != 0.0), "dropped tensor parked residuals");
+        }
+        // export is non-destructive: the donor fleet keeps stepping
+        exec.step(1, params, tensors, Policy::Overlap).unwrap();
+
+        // adopt the states in a fresh fleet; re-export must be bitwise
+        let spec = SyntheticSpec::new(0xBEEF, 1);
+        let models: Vec<Box<dyn RankModel>> = (0..2)
+            .map(|_| Box::new(SyntheticModel::new(spec)) as Box<dyn RankModel>)
+            .collect();
+        let corpus = SyntheticCorpus::new(64);
+        let shards: Vec<DataShard> =
+            (0..2).map(|w| DataShard::new(corpus.clone(), seed, w, 2, 9)).collect();
+        let cluster = ClusterSpec::new(2, 1);
+        let sched =
+            Arc::new(TopologyKind::Auto.resolve(cluster).allgather_schedule(cluster));
+        let mut adopted = ThreadedExec::with_state(
+            kind,
+            seed,
+            models,
+            shards,
+            sched,
+            PacerSet::default(),
+            RetryPolicy::default(),
+            states.clone(),
+            layout.clone(),
+        );
+        let re = adopted.export_states(&layout, None);
+        for (r, (a, b)) in states.iter().zip(re.iter()).enumerate() {
+            assert_eq!(bits(a), bits(b), "rank {r}: handoff must preserve bits");
         }
     }
 

@@ -34,7 +34,9 @@ use crate::compress::{CommRecord, SchemeKind};
 use crate::coordinator::CommTensor;
 use crate::data::DataShard;
 use crate::exec::barrier::Barrier;
-use crate::exec::ring::{allgather_sched, broadcast_abort, GatherScratch, MeshLink, PacerSet};
+use crate::exec::ring::{
+    allgather_sched, broadcast_abort, GatherScratch, MeshLink, PacerSet, RetryPolicy,
+};
 use crate::exec::timeline::{RankTimeline, Span, SpanKind};
 use crate::runtime::RankModel;
 use crate::sim::Policy;
@@ -63,6 +65,14 @@ pub enum Cmd {
     /// told via [`RankMsg::Failed`] — `step()` surfaces an error naming
     /// the rank instead of hanging the barrier.
     Fail { reason: String },
+    /// Elastic membership: flatten this rank's EF residuals over `layout`
+    /// and reply with [`RankMsg::State`]. Handled by the **compute**
+    /// thread (the residuals' owner), so the export still works after a
+    /// peer failure killed the comm fleet. Per-rank command FIFO ordering
+    /// guarantees any in-flight [`Cmd::Reconfigure`] lands first, so the
+    /// exported state can never be sliced by a stale shard layout — the
+    /// `fail_rank`-during-reconfigure hazard is ordering, not locking.
+    ExportState { layout: Vec<(usize, usize)> },
     Shutdown,
 }
 
@@ -85,6 +95,10 @@ pub struct StepSpec {
 pub enum RankMsg {
     Step(RankStepResult),
     Failed { rank: usize, reason: String },
+    /// Reply to [`Cmd::ExportState`]: this rank's EF residuals flattened
+    /// over the requested layout (`None` = the scheme carries no portable
+    /// state). Sent by the compute thread.
+    State { rank: usize, residuals: Option<Vec<f32>> },
 }
 
 /// What a rank reports back after one step.
@@ -136,6 +150,12 @@ pub(crate) struct ComputeCtx {
     pub shard: DataShard,
     pub cmd_rx: Receiver<Cmd>,
     pub barrier: Arc<Barrier>,
+    /// Reply channel for [`Cmd::ExportState`] (clone of the engine's
+    /// result receiver's sender; the comm thread holds its own clone).
+    pub res_tx: Sender<RankMsg>,
+    /// Residuals to adopt at spawn (elastic re-world handoff): a flat
+    /// vector in parameter space plus the slot layout to slice it by.
+    pub init_state: Option<(Vec<f32>, Vec<(usize, usize)>)>,
 }
 
 pub(crate) struct CommCtx {
@@ -148,6 +168,8 @@ pub(crate) struct CommCtx {
     /// executor; identical on every rank).
     pub sched: Arc<HopSchedule>,
     pub pacers: PacerSet,
+    /// Bounded patience on mesh receives (default: fail fast).
+    pub retry: RetryPolicy,
     pub res_tx: Sender<RankMsg>,
 }
 
@@ -180,6 +202,11 @@ fn compute_main(
     recycle_rx: Receiver<Vec<u8>>,
 ) {
     let (mut compressor, _) = build_rank_pair(&ctx.kind, ctx.workers, ctx.seed);
+    if let Some((flat, layout)) = ctx.init_state.take() {
+        // elastic re-world handoff: adopt the redistributed residuals
+        // before the first step; stateless schemes simply ignore them
+        compressor.import_residuals(&flat, &layout);
+    }
     let mut gbuf: Vec<f32> = Vec::new();
     let mut scratch = Scratch::new();
     while let Ok(cmd) = ctx.cmd_rx.recv() {
@@ -203,6 +230,16 @@ fn compute_main(
                 let _ = work_tx.send(Work::SetPacer(p));
             }
             Cmd::SetWork(w) => ctx.model.set_work(w),
+            Cmd::ExportState { layout } => {
+                let residuals = compressor.export_residuals(&layout);
+                if ctx
+                    .res_tx
+                    .send(RankMsg::State { rank: ctx.rank, residuals })
+                    .is_err()
+                {
+                    return; // engine gone
+                }
+            }
             Cmd::Fail { reason } => {
                 crate::log_error!(
                     target: "exec",
@@ -259,6 +296,22 @@ fn run_step(
     gbuf.clear();
     gbuf.resize(n, 0.0);
     let barrier_wait = ctx.barrier.wait().as_secs_f64();
+    if ctx.barrier.is_aborted() {
+        // A peer failed and the engine poisoned the rendezvous: skip the
+        // step entirely — no shard advance, no gradient, no EF accumulate
+        // — so every survivor's residual state stays bitwise uniform, and
+        // stay alive to serve the membership controller's `ExportState`.
+        // (Before this check, released survivors marched into the dead
+        // mesh, hit the broken work channel, and exited — taking their
+        // residuals with them.)
+        crate::log_warn!(
+            target: "exec",
+            "rank {}: barrier aborted — skipping step {} and awaiting membership decision",
+            ctx.rank,
+            spec.step
+        );
+        return true;
+    }
     if work_tx
         .send(Work::Begin { step: spec.step, epoch: spec.epoch, param_len: n })
         .is_err()
@@ -397,6 +450,7 @@ fn comm_main(
                     &mut gather,
                     &ctx.link,
                     &ctx.pacers,
+                    &ctx.retry,
                 ) {
                     Ok(lb) => lb,
                     Err(e) => {

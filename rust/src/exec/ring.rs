@@ -40,7 +40,7 @@
 //! wrappers retained for tests and one-shot callers.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
 use crate::comm::topology::{Collective, HopSchedule, LevelBytes, LinkLevel, RING};
@@ -83,6 +83,10 @@ pub enum MeshError {
     EpochSkew { rank: usize, got: u64, current: u64 },
     /// A gathered frame failed to decode (oracle wrappers only).
     Corrupt { rank: usize, slot: usize },
+    /// No frame arrived within the configured [`RetryPolicy`]'s bounded
+    /// retry-with-backoff budget — the peer is declared failed by timer
+    /// rather than by an explicit [`Frame::Abort`].
+    Timeout { rank: usize, attempts: u32 },
 }
 
 impl std::fmt::Display for MeshError {
@@ -105,6 +109,10 @@ impl std::fmt::Display for MeshError {
             MeshError::Corrupt { rank, slot } => {
                 write!(f, "rank {rank}: gathered frame for slot {slot} failed to decode")
             }
+            MeshError::Timeout { rank, attempts } => write!(
+                f,
+                "rank {rank}: mesh receive timed out after {attempts} bounded attempt(s)"
+            ),
         }
     }
 }
@@ -199,6 +207,59 @@ impl PacerSet {
     }
 }
 
+/// Bounded patience on the mesh receive path: how long a collective waits
+/// for a silent peer before declaring it failed, instead of blocking
+/// forever. The default (`timeout_ms == 0`) preserves the PR 7 fail-fast
+/// contract exactly — receives block until a frame or an explicit
+/// [`Frame::Abort`] arrives, and no timer can evict a merely-slow rank.
+/// With a timeout set, attempt `k` waits `timeout_ms << k` (exponential
+/// backoff) and the peer is declared [`MeshError::Timeout`] only after
+/// `retries` extra attempts — so transient stalls (GC pause, pacer burst,
+/// scheduler hiccup) ride out the backoff instead of triggering eviction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Extra receive attempts after the first timed-out wait.
+    pub retries: u32,
+    /// First attempt's receive timeout in milliseconds; doubles per
+    /// retry. 0 disables the timer entirely (block forever — default).
+    pub timeout_ms: u64,
+}
+
+impl RetryPolicy {
+    /// Total worst-case patience across all attempts, for sizing test
+    /// timeout guards and the simulator's reconfiguration pricing.
+    pub fn max_wait_ms(&self) -> u64 {
+        (0..=self.retries)
+            .map(|k| self.timeout_ms.saturating_mul(1u64 << k.min(16)))
+            .fold(0u64, u64::saturating_add)
+    }
+}
+
+/// One mesh receive under `retry`: blocking when the policy is fail-fast,
+/// bounded retry-with-backoff otherwise.
+// xtask: hot-path
+fn recv_frame(rank: usize, link: &MeshLink, retry: &RetryPolicy) -> Result<Frame, MeshError> {
+    if retry.timeout_ms == 0 {
+        return link.rx.recv().map_err(|_| MeshError::PeerDisconnected { rank });
+    }
+    let mut attempt = 0u32;
+    loop {
+        let wait = Duration::from_millis(retry.timeout_ms.saturating_mul(1u64 << attempt.min(16)));
+        match link.rx.recv_timeout(wait) {
+            Ok(f) => return Ok(f),
+            Err(RecvTimeoutError::Timeout) => {
+                if attempt >= retry.retries {
+                    return Err(MeshError::Timeout { rank, attempts: attempt + 1 });
+                }
+                attempt += 1;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(MeshError::PeerDisconnected { rank });
+            }
+        }
+    }
+}
+
 /// Per-thread reusable state for [`allgather_sched`]: the slot-arrival
 /// bitmap, the circulating spare-buffer pool, the parking queue for
 /// frames that arrive one collective early, and the epoch counter (all
@@ -255,6 +316,7 @@ fn store_slot(
 /// beyond the parking contract). On error the scratch state is stale;
 /// callers must treat the executor as poisoned.
 // xtask: hot-path
+#[allow(clippy::too_many_arguments)]
 pub fn allgather_sched(
     rank: usize,
     sched: &HopSchedule,
@@ -263,6 +325,7 @@ pub fn allgather_sched(
     gs: &mut GatherScratch,
     link: &MeshLink,
     pacers: &PacerSet,
+    retry: &RetryPolicy,
 ) -> Result<LevelBytes, MeshError> {
     let p = sched.world();
     assert_eq!(slots.len(), p, "one slot per rank");
@@ -291,7 +354,7 @@ pub fn allgather_sched(
                         pending: &mut VecDeque<(u32, Vec<u8>)>,
                         received: &mut usize|
      -> Result<(), MeshError> {
-        match link.rx.recv() {
+        match recv_frame(rank, link, retry) {
             Ok(Frame::Slot { epoch: e, slot, data }) => {
                 if e == epoch {
                     store_slot(slot as usize, data, slots, have, spares, received);
@@ -308,7 +371,7 @@ pub fn allgather_sched(
             }
             Ok(Frame::Chunk(_)) => Err(MeshError::Protocol { rank, expected: "Slot" }),
             Ok(Frame::Abort { from }) => Err(MeshError::PeerAborted { rank, from }),
-            Err(_) => Err(MeshError::PeerDisconnected { rank }),
+            Err(e) => Err(e),
         }
     };
     for hop in sched.hops() {
@@ -433,6 +496,7 @@ pub fn allgather_frames(
         gs,
         link,
         &PacerSet::uniform(pacer.copied()),
+        &RetryPolicy::default(),
     )?;
     Ok(lb.total())
 }
@@ -566,7 +630,14 @@ mod tests {
                         let pacers = PacerSet::default();
                         for frames in rounds {
                             last = allgather_sched(
-                                r, sched, &frames[r], &mut slots, &mut gs, &link, &pacers,
+                                r,
+                                sched,
+                                &frames[r],
+                                &mut slots,
+                                &mut gs,
+                                &link,
+                                &pacers,
+                                &RetryPolicy::default(),
                             )
                             .expect("collective");
                             got.push(slots.clone());
@@ -859,6 +930,7 @@ mod tests {
             &mut gs,
             &l0,
             &PacerSet::default(),
+            &RetryPolicy::default(),
         );
         assert_eq!(r, Err(MeshError::PeerAborted { rank: 0, from: 1 }));
     }
@@ -884,7 +956,84 @@ mod tests {
             &mut gs,
             &l0,
             &PacerSet::default(),
+            &RetryPolicy::default(),
         );
         assert_eq!(r, Err(MeshError::EpochSkew { rank: 0, got: 5, current: 0 }));
+    }
+
+    /// A configured retry budget declares a silent peer failed by timer —
+    /// after the full backoff ladder, not the first stall — while the
+    /// default policy keeps the fail-fast semantics (exercised by every
+    /// other test in this module, which would hang here instead).
+    #[test]
+    fn bounded_retry_times_out_on_silent_peer() {
+        use std::time::Instant;
+        let mut links = make_mesh(2);
+        let _l1 = links.pop().unwrap();
+        let l0 = links.pop().unwrap();
+        let sched = RING.allgather_schedule(ClusterSpec::new(2, 1));
+        let mut slots = vec![Vec::new(), Vec::new()];
+        let mut gs = GatherScratch::new();
+        let retry = RetryPolicy { retries: 2, timeout_ms: 10 };
+        let t0 = Instant::now();
+        let r = allgather_sched(
+            0,
+            &sched,
+            &[1, 2, 3],
+            &mut slots,
+            &mut gs,
+            &l0,
+            &PacerSet::default(),
+            &retry,
+        );
+        // rank 1 never speaks: 10 + 20 + 40 ms of patience, then Timeout
+        assert_eq!(r, Err(MeshError::Timeout { rank: 0, attempts: 3 }));
+        assert!(t0.elapsed() >= Duration::from_millis(50), "backoff ladder ran");
+        assert_eq!(retry.max_wait_ms(), 70);
+    }
+
+    /// A transient stall shorter than the budget does NOT evict the peer:
+    /// the late frame is consumed on a retry attempt and the collective
+    /// completes normally.
+    #[test]
+    fn transient_stall_survives_within_retry_budget() {
+        let mut links = make_mesh(2);
+        let l1 = links.pop().unwrap();
+        let l0 = links.pop().unwrap();
+        let sched = RING.allgather_schedule(ClusterSpec::new(2, 1));
+        let retry = RetryPolicy { retries: 4, timeout_ms: 10 };
+        let peer = std::thread::spawn(move || {
+            // stall past the first attempt, inside the total budget
+            std::thread::sleep(Duration::from_millis(25));
+            let mut slots = vec![Vec::new(), Vec::new()];
+            let mut gs = GatherScratch::new();
+            allgather_sched(
+                1,
+                &sched,
+                &[9, 9],
+                &mut slots,
+                &mut gs,
+                &l1,
+                &PacerSet::default(),
+                &RetryPolicy::default(),
+            )
+            .expect("late rank still completes");
+        });
+        let sched0 = RING.allgather_schedule(ClusterSpec::new(2, 1));
+        let mut slots = vec![Vec::new(), Vec::new()];
+        let mut gs = GatherScratch::new();
+        allgather_sched(
+            0,
+            &sched0,
+            &[1, 2, 3],
+            &mut slots,
+            &mut gs,
+            &l0,
+            &PacerSet::default(),
+            &retry,
+        )
+        .expect("stall rides out the backoff instead of evicting");
+        assert_eq!(slots[1], vec![9, 9]);
+        peer.join().expect("peer thread");
     }
 }

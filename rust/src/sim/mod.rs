@@ -269,6 +269,46 @@ fn simulate_core(
     }
 }
 
+/// Modeled cost of one elastic membership reconfiguration (DESIGN.md §12).
+///
+/// Three phases, priced on the α–β model: **quiesce** the old world at a
+/// step boundary (one synchronous rendezvous over the old cluster — every
+/// rank must agree the step finished before state is exported),
+/// **state-move** the departed/joined ranks' error-feedback residuals
+/// (`moved_bytes` over the inter-node fabric), and **resync** the new
+/// world (one rendezvous over the new cluster before its first
+/// collective). The bench harness compares this prediction against the
+/// engine's measured `reconfig_cost_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconfigCost {
+    pub quiesce_s: f64,
+    pub state_move_s: f64,
+    pub resync_s: f64,
+    pub total_s: f64,
+}
+
+/// Price one membership reconfiguration between two cluster shapes.
+pub fn price_reconfiguration(
+    net: &NetworkModel,
+    old_cluster: ClusterSpec,
+    new_cluster: ClusterSpec,
+    moved_bytes: usize,
+) -> ReconfigCost {
+    let quiesce_s = net.sync_round_s(old_cluster);
+    let state_move_s = if moved_bytes == 0 {
+        0.0
+    } else {
+        net.latency_s + moved_bytes as f64 / net.effective_bps()
+    };
+    let resync_s = net.sync_round_s(new_cluster);
+    ReconfigCost {
+        quiesce_s,
+        state_move_s,
+        resync_s,
+        total_s: quiesce_s + state_move_s + resync_s,
+    }
+}
+
 /// Convenience: uniform dense tensors for a workload of `n` buckets.
 pub fn dense_tensors(
     bucket_elems: &[usize],
@@ -444,6 +484,29 @@ mod tests {
         }
         assert!(spans.iter().map(|s| s.end_s).fold(0.0, f64::max) <= with.total_s + 1e-9);
     }
+
+    #[test]
+    fn reconfig_price_is_monotonic_and_additive() {
+        let net = net();
+        let (old_c, new_c) = (ClusterSpec::ecs(64), ClusterSpec::ecs(56));
+        let small = price_reconfiguration(&net, old_c, new_c, MB);
+        let large = price_reconfiguration(&net, old_c, new_c, 64 * MB);
+        // moving more residual state can never be cheaper
+        assert!(large.state_move_s > small.state_move_s);
+        assert!(large.total_s > small.total_s);
+        // phases add up exactly
+        for c in [small, large] {
+            assert!(
+                (c.total_s - (c.quiesce_s + c.state_move_s + c.resync_s)).abs() < 1e-12
+            );
+        }
+        // quiesce prices the OLD world, resync the NEW one
+        let shrink = price_reconfiguration(&net, ClusterSpec::ecs(64), ClusterSpec::ecs(16), 0);
+        assert!(shrink.quiesce_s > shrink.resync_s);
+        assert_eq!(shrink.state_move_s, 0.0);
+    }
+
+    const MB: usize = 1 << 20;
 
     #[test]
     fn table1_overlap_speedups_reproduce() {

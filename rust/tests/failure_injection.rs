@@ -225,3 +225,140 @@ fn failing_rank_surfaces_error_instead_of_hanging() {
     // this test (under the harness timeout) is the assertion.
     drop(exec);
 }
+
+// ---- elastic worlds (DESIGN.md §12) ------------------------------------
+
+/// Run `f` on a watchdog thread: a deadlocked barrier or a hung
+/// `export_states` collector becomes a named test failure instead of a
+/// stuck CI job.
+fn with_deadline<F: FnOnce() + Send + 'static>(secs: u64, name: &'static str, f: F) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(std::time::Duration::from_secs(secs)) {
+        Ok(()) => t.join().unwrap(),
+        Err(_) => panic!("{name}: no completion within {secs}s — membership event hung"),
+    }
+}
+
+fn elastic_engine(
+    backend: covap::config::ExecBackend,
+    topology: covap::comm::TopologyKind,
+    cluster: covap::network::ClusterSpec,
+    schedule: &str,
+    elastic: bool,
+    steps: u64,
+) -> covap::coordinator::DpEngine {
+    use covap::compress::SchemeKind;
+    use covap::covap::EfScheduler;
+
+    let mut cfg = RunConfig::default();
+    cfg.workers = cluster.world();
+    cfg.cluster = cluster;
+    cfg.topology = topology;
+    cfg.steps = steps;
+    cfg.lr = 0.1;
+    cfg.optimizer = covap::config::Optimizer::Sgd;
+    cfg.scheme = SchemeKind::Covap { interval: 2, ef: EfScheduler::default() };
+    cfg.seed = 77;
+    cfg.backend = backend;
+    cfg.bucket_bytes = 16 * 1024;
+    cfg.membership_schedule = covap::coordinator::parse_membership_schedule(schedule).unwrap();
+    cfg.elastic = elastic;
+    cfg.validate().unwrap();
+    covap::coordinator::DpEngine::new(cfg, ModelArtifacts::synthetic("tiny")).unwrap()
+}
+
+fn assert_residual_parity(a: &mut covap::coordinator::DpEngine, b: &mut covap::coordinator::DpEngine, ctx: &str) {
+    let (ra, rb) = (a.residual_state(), b.residual_state());
+    assert_eq!(ra.len(), rb.len(), "{ctx}: world sizes diverged");
+    for (r, (x, y)) in ra.iter().zip(rb.iter()).enumerate() {
+        let x = x.as_ref().expect("covap exports residuals");
+        let y = y.as_ref().expect("covap exports residuals");
+        let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "{ctx}: rank {r} EF residuals diverged");
+    }
+}
+
+/// The elastic tentpole across topologies: a scripted fail → scale-out →
+/// evict run re-worlds live on ring, hierarchical, and tree collectives;
+/// every step is bitwise-identical across backends and the EF residual
+/// state is conserved bitwise through all three membership events.
+#[test]
+fn elastic_membership_survives_on_every_topology() {
+    use covap::comm::TopologyKind;
+    use covap::network::ClusterSpec;
+
+    if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+        return;
+    }
+    for (name, topo, cluster) in [
+        ("ring", TopologyKind::Ring, ClusterSpec::new(4, 1)),
+        ("hier", TopologyKind::Hier, ClusterSpec::new(2, 2)),
+        ("tree", TopologyKind::Tree, ClusterSpec::new(4, 1)),
+    ] {
+        with_deadline(300, "elastic membership sweep", move || {
+            use covap::config::ExecBackend;
+            // worlds: 4 -> 3 (fail) -> 4 (join) -> 3 (leave)
+            let schedule = "1:fail:3,2:join:1,4:leave:0";
+            let mut a =
+                elastic_engine(ExecBackend::Analytic, topo, cluster, schedule, false, 5);
+            let mut b =
+                elastic_engine(ExecBackend::Threaded, topo, cluster, schedule, false, 5);
+            for s in 0..5 {
+                let oa = a.step().unwrap_or_else(|e| panic!("{name} analytic step {s}: {e:#}"));
+                let ob = b.step().unwrap_or_else(|e| panic!("{name} threaded step {s}: {e:#}"));
+                assert_eq!(
+                    oa.loss.to_bits(),
+                    ob.loss.to_bits(),
+                    "{name}: loss diverged at step {s}"
+                );
+            }
+            assert_eq!(a.generation(), 3, "{name}");
+            assert_eq!(b.generation(), 3, "{name}");
+            assert_residual_parity(&mut a, &mut b, name);
+            assert_eq!(a.params(), b.params(), "{name}: params diverged");
+        });
+    }
+}
+
+/// Mid-step *detected* failure, then a scheduled rejoin: the threaded
+/// fleet loses rank 1 to a real mid-protocol crash, recovers under
+/// `elastic`, and a scale-out restores the world — all bitwise against
+/// the analytic twin carrying the same injection.
+#[test]
+fn detected_failure_then_rejoin_completes_with_parity() {
+    use covap::comm::TopologyKind;
+    use covap::config::ExecBackend;
+    use covap::network::ClusterSpec;
+
+    if !ModelArtifacts::synthetic("tiny").is_synthetic() {
+        return;
+    }
+    with_deadline(300, "failure then rejoin", || {
+        let cluster = ClusterSpec::new(3, 1);
+        // the rejoin is scheduled; the failure is *detected* at step 1
+        let schedule = "3:join:1";
+        let mut a =
+            elastic_engine(ExecBackend::Analytic, TopologyKind::Auto, cluster, schedule, true, 5);
+        let mut b =
+            elastic_engine(ExecBackend::Threaded, TopologyKind::Auto, cluster, schedule, true, 5);
+        let (oa, ob) = (a.step().unwrap(), b.step().unwrap());
+        assert_eq!(oa.loss.to_bits(), ob.loss.to_bits());
+        a.inject_failure(1, "mid-run crash");
+        b.inject_failure(1, "mid-run crash");
+        for s in 1..5 {
+            let oa = a.step().unwrap_or_else(|e| panic!("analytic step {s}: {e:#}"));
+            let ob = b.step().unwrap_or_else(|e| panic!("threaded step {s}: {e:#}"));
+            assert_eq!(oa.loss.to_bits(), ob.loss.to_bits(), "loss diverged at step {s}");
+        }
+        // 3 -> 2 (detected fail) -> 3 (scheduled rejoin)
+        assert_eq!(a.generation(), 2);
+        assert_eq!(b.generation(), 2);
+        assert_residual_parity(&mut a, &mut b, "fail+rejoin");
+        assert_eq!(a.params(), b.params());
+    });
+}
