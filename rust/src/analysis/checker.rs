@@ -1,0 +1,548 @@
+//! Explicit-state model checker for the elastic membership protocol.
+//!
+//! A dependency-free, stateright-style breadth-first exploration of the
+//! [`crate::analysis::model`] state machine: starting from
+//! [`ProtocolState::initial`], every enabled [`Action`] is applied at
+//! every reachable state, deduplicated through a hash set, until the
+//! frontier empties or the state budget trips. Safety invariants are
+//! checked inside [`ProtocolState::apply`] on **every** transition
+//! (EF-mass conservation as exact token-multiset arithmetic,
+//! exactly-once export, FIFO reconfigure/export ordering, uniform
+//! torn-step skipping, stale-layout steps); liveness is checked by
+//! classifying every terminal state (clean quiescence, no deadlock with
+//! pending work).
+//!
+//! Because the model delegates every re-world decision through
+//! [`Transitions::real`] to the production functions in
+//! `coordinator::membership` and `exec::rank`, a clean sweep is a proof
+//! about the shipped transition code at the explored bounds — and the
+//! seeded mutants in [`mutants`] demonstrate the proof has teeth: each
+//! swaps exactly one function pointer for a plausibly-wrong variant and
+//! must be rejected with its own distinct [`ProtocolViolation`] kind.
+//!
+//! Entry points: `covap check-protocol` (world sweep + mutant
+//! self-test, JSON report) and the `protocol_check` integration test.
+
+use std::collections::HashSet;
+
+use crate::analysis::model::{ProtocolState, ProtocolViolation, Script, Transitions};
+use crate::coordinator::membership::{world_evolution, MembershipAction, MembershipEvent};
+
+/// Exploration limits. `max_states` bounds memory, not correctness: if
+/// it trips, the checker reports [`ProtocolViolation::StateBoundExceeded`]
+/// rather than silently passing on a truncated space.
+#[derive(Debug, Clone, Copy)]
+pub struct Bounds {
+    pub max_states: usize,
+}
+
+impl Default for Bounds {
+    fn default() -> Bounds {
+        Bounds { max_states: 500_000 }
+    }
+}
+
+/// What one exhaustive exploration covered.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CheckReport {
+    /// Distinct reachable states.
+    pub states: usize,
+    /// BFS frontier depth at exhaustion (longest shortest-path).
+    pub depth: usize,
+    /// Terminal (quiescent) states classified.
+    pub terminals: usize,
+    /// Transitions taken (edges explored, including duplicates).
+    pub transitions: usize,
+}
+
+/// Aggregate over every auto-enumerated script of one world size.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorldReport {
+    pub world: usize,
+    pub scripts: usize,
+    pub states: usize,
+    pub max_depth: usize,
+    pub terminals: usize,
+    pub transitions: usize,
+}
+
+/// Exhaustively explore every interleaving of `script` under `t`.
+/// `Ok` means every reachable state satisfied every invariant and every
+/// terminal is a clean quiescence; `Err` carries the first (BFS-order,
+/// deterministic) violation.
+pub fn check_script(
+    script: &Script,
+    t: &Transitions,
+    bounds: &Bounds,
+) -> Result<CheckReport, ProtocolViolation> {
+    let init = ProtocolState::initial(script);
+    let mut seen: HashSet<ProtocolState> = HashSet::new();
+    seen.insert(init.clone());
+    let mut frontier = vec![init];
+    let mut report = CheckReport::default();
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for state in &frontier {
+            let actions = state.enabled_actions(script);
+            if actions.is_empty() {
+                report.terminals += 1;
+                state.classify_terminal(script)?;
+                continue;
+            }
+            for action in actions {
+                report.transitions += 1;
+                let succ = state.apply(action, script, t)?;
+                if seen.insert(succ.clone()) {
+                    if seen.len() > bounds.max_states {
+                        return Err(ProtocolViolation::StateBoundExceeded {
+                            states: seen.len(),
+                        });
+                    }
+                    next.push(succ);
+                }
+            }
+        }
+        if !next.is_empty() {
+            report.depth += 1;
+        }
+        frontier = next;
+    }
+    report.states = seen.len();
+    Ok(report)
+}
+
+/// Auto-enumerate the event scripts the sweep proves: the quiet
+/// baseline, every single scheduled fail/leave/join at every step
+/// boundary (first and last rank — the two positions `redistribute`
+/// treats differently), detected failures firing at *any* explored
+/// point, and the validated two-event combinations (shrink-then-grow,
+/// grow-then-shrink, double shrink, detected racing a scheduled join).
+pub fn enumerate_scripts(world: usize, steps: u8) -> Vec<Script> {
+    // exercise both branches of next_cluster across the sweep
+    let gpn = if world % 2 == 0 { 2 } else { 1 };
+    let mk = |scheduled: Vec<(u8, MembershipAction)>, detected: Vec<usize>| Script {
+        world,
+        gpn,
+        steps,
+        scheduled,
+        detected,
+    };
+    let mut out = vec![mk(vec![], vec![])];
+
+    let mut singles = vec![
+        MembershipAction::Fail { rank: 0 },
+        MembershipAction::Join { count: 1 },
+    ];
+    if world > 1 {
+        singles.push(MembershipAction::Fail { rank: world - 1 });
+        singles.push(MembershipAction::Leave { rank: 0 });
+        singles.push(MembershipAction::Leave { rank: world - 1 });
+    }
+    for at in 0..steps {
+        for &a in &singles {
+            out.push(mk(vec![(at, a)], vec![]));
+        }
+    }
+
+    // two scheduled events, kept only if the evolving world stays valid
+    let pairs = [
+        (MembershipAction::Fail { rank: 0 }, MembershipAction::Join { count: 1 }),
+        (MembershipAction::Leave { rank: world.saturating_sub(1) }, MembershipAction::Join { count: 1 }),
+        (MembershipAction::Join { count: 1 }, MembershipAction::Fail { rank: 0 }),
+        (MembershipAction::Fail { rank: 0 }, MembershipAction::Fail { rank: 0 }),
+    ];
+    for &(a, b) in &pairs {
+        let events = [
+            MembershipEvent { at_step: 0, action: a },
+            MembershipEvent { at_step: 1, action: b },
+        ];
+        if steps >= 2 && world_evolution(world, &events).is_ok() {
+            out.push(mk(vec![(0, a), (1, b)], vec![]));
+        }
+    }
+
+    // detected failures: may strike anywhere, including mid-barrier
+    out.push(mk(vec![], vec![0]));
+    if world > 1 {
+        out.push(mk(vec![], vec![world - 1]));
+    }
+    if world >= 3 {
+        out.push(mk(vec![], vec![0, 1]));
+    }
+    // a detected failure racing a scheduled join
+    out.push(mk(vec![(0, MembershipAction::Join { count: 1 })], vec![0]));
+    out
+}
+
+/// Run the full auto-enumerated sweep for one world size. On violation,
+/// the label of the offending script rides along with the diagnosis.
+pub fn check_world(
+    world: usize,
+    steps: u8,
+    t: &Transitions,
+    bounds: &Bounds,
+) -> Result<WorldReport, (String, ProtocolViolation)> {
+    let mut agg = WorldReport { world, ..WorldReport::default() };
+    for script in enumerate_scripts(world, steps) {
+        let rep =
+            check_script(&script, t, bounds).map_err(|v| (script.label(), v))?;
+        agg.scripts += 1;
+        agg.states += rep.states;
+        agg.max_depth = agg.max_depth.max(rep.depth);
+        agg.terminals += rep.terminals;
+        agg.transitions += rep.transitions;
+    }
+    Ok(agg)
+}
+
+/// Seeded mutants: each swaps exactly one [`Transitions`] pointer (or
+/// flag) for a plausibly-wrong implementation of the same contract. The
+/// checker must reject every one with the distinct violation kind named
+/// in [`SELF_TEST_CASES`] — that is the proof the invariants are live.
+pub mod mutants {
+    use super::*;
+    use crate::coordinator::membership;
+    use crate::exec::rank::CmdTag;
+
+    fn fold_into(slot: &mut Option<Vec<f32>>, orphan: &[f32]) {
+        let dst = slot.get_or_insert_with(Vec::new);
+        if dst.len() < orphan.len() {
+            dst.resize(orphan.len(), 0.0);
+        }
+        for (d, o) in dst.iter_mut().zip(orphan) {
+            *d += *o;
+        }
+    }
+
+    fn redistribute_lost_orphan(
+        mut states: Vec<Option<Vec<f32>>>,
+        action: MembershipAction,
+        _last_combined: &[f32],
+    ) -> Vec<Option<Vec<f32>>> {
+        match action {
+            MembershipAction::Join { count } => {
+                states.extend(std::iter::repeat_with(|| None).take(count));
+                states
+            }
+            MembershipAction::Leave { rank } | MembershipAction::Fail { rank } => {
+                // the bug: evict the rank, drop its residuals on the floor
+                if rank < states.len() {
+                    states.remove(rank);
+                }
+                states
+            }
+        }
+    }
+
+    /// Tentpole mutant 1: residuals of an evicted rank are never folded.
+    pub fn lost_residual_on_eviction() -> Transitions {
+        Transitions { redistribute: redistribute_lost_orphan, ..Transitions::real() }
+    }
+
+    fn quiesce_reconfigure_first(_action: MembershipAction) -> Vec<CmdTag> {
+        // the bug: the rank rebuilds its layout before serving the export
+        vec![CmdTag::Reconfigure, CmdTag::ExportState]
+    }
+
+    /// Tentpole mutant 2: export requested after the layout rebuild, so
+    /// the reply reflects the post-event generation.
+    pub fn export_after_rebuild() -> Transitions {
+        Transitions { quiesce_cmds: quiesce_reconfigure_first, ..Transitions::real() }
+    }
+
+    fn redistribute_double_surrogate(
+        states: Vec<Option<Vec<f32>>>,
+        action: MembershipAction,
+        last_combined: &[f32],
+    ) -> Vec<Option<Vec<f32>>> {
+        let mut out = membership::redistribute(states, action, last_combined);
+        if matches!(action, MembershipAction::Fail { .. }) {
+            // the bug: the surrogate is applied a second time
+            if let Some(slot) = out.first_mut() {
+                fold_into(slot, last_combined);
+            }
+        }
+        out
+    }
+
+    /// Tentpole mutant 3: the last-combined surrogate is folded twice.
+    pub fn double_fold_surrogate() -> Transitions {
+        Transitions { redistribute: redistribute_double_surrogate, ..Transitions::real() }
+    }
+
+    /// Tentpole mutant 4: ranks already at a poisoned barrier apply the
+    /// torn step instead of skipping it uniformly.
+    pub fn barrier_skip_divergence() -> Transitions {
+        Transitions { abort_advances_arrived: true, ..Transitions::real() }
+    }
+
+    fn redistribute_drop_survivor(
+        states: Vec<Option<Vec<f32>>>,
+        action: MembershipAction,
+        last_combined: &[f32],
+    ) -> Vec<Option<Vec<f32>>> {
+        let mut out = membership::redistribute(states, action, last_combined);
+        // the bug: the highest-numbered survivor comes back empty
+        if out.len() > 1 {
+            let i = out.len() - 1;
+            out[i] = Some(Vec::new());
+        }
+        out
+    }
+
+    /// Satellite mutant: a survivor's residual state is wiped in transit.
+    pub fn drop_survivor_residual() -> Transitions {
+        Transitions { redistribute: redistribute_drop_survivor, ..Transitions::real() }
+    }
+
+    fn redistribute_misroute(
+        states: Vec<Option<Vec<f32>>>,
+        action: MembershipAction,
+        last_combined: &[f32],
+    ) -> Vec<Option<Vec<f32>>> {
+        match action {
+            MembershipAction::Join { .. } => {
+                membership::redistribute(states, action, last_combined)
+            }
+            MembershipAction::Leave { rank } | MembershipAction::Fail { rank } => {
+                let mut s = states;
+                let exported = if rank < s.len() { s.remove(rank) } else { None };
+                let orphan = exported.unwrap_or_else(|| last_combined.to_vec());
+                // the bug: the orphan lands on the last rank, not rank 0
+                if let Some(slot) = s.last_mut() {
+                    fold_into(slot, &orphan);
+                }
+                s
+            }
+        }
+    }
+
+    /// Satellite mutant: the leaver's export is folded into the wrong
+    /// (highest-numbered) surviving rank.
+    pub fn misroute_fold() -> Transitions {
+        Transitions { redistribute: redistribute_misroute, ..Transitions::real() }
+    }
+
+    fn skip_every_leaver(action: MembershipAction) -> Option<usize> {
+        match action {
+            MembershipAction::Fail { rank }
+            | MembershipAction::Leave { rank } => Some(rank),
+            MembershipAction::Join { .. } => None,
+        }
+    }
+
+    /// Extra mutant: the collector never waits for a clean leaver's
+    /// export, so the fold runs without it.
+    pub fn skip_leaver_export() -> Transitions {
+        Transitions { export_skip: skip_every_leaver, ..Transitions::real() }
+    }
+
+    fn quiesce_double_export(_action: MembershipAction) -> Vec<CmdTag> {
+        vec![CmdTag::ExportState, CmdTag::ExportState]
+    }
+
+    /// Extra mutant: every rank is asked for its state twice per quiesce.
+    pub fn double_export_request() -> Transitions {
+        Transitions { quiesce_cmds: quiesce_double_export, ..Transitions::real() }
+    }
+}
+
+/// The seeded-mutant battery the CLI and CI run: (name, constructor,
+/// script, violation kind the checker must answer with). Worlds of 3
+/// guarantee a non-donor survivor so misrouting/wiping is observable.
+#[allow(clippy::type_complexity)]
+pub fn self_test_cases() -> Vec<(&'static str, Transitions, Script, &'static str)> {
+    let fail0 = Script {
+        world: 3,
+        gpn: 1,
+        steps: 2,
+        scheduled: vec![(0, MembershipAction::Fail { rank: 0 })],
+        detected: vec![],
+    };
+    let leave0 = Script {
+        world: 3,
+        gpn: 1,
+        steps: 2,
+        scheduled: vec![(0, MembershipAction::Leave { rank: 0 })],
+        detected: vec![],
+    };
+    let detected = Script {
+        world: 3,
+        gpn: 1,
+        steps: 2,
+        scheduled: vec![],
+        detected: vec![2],
+    };
+    vec![
+        (
+            "lost-residual-on-eviction",
+            mutants::lost_residual_on_eviction(),
+            fail0.clone(),
+            "mass-not-conserved",
+        ),
+        (
+            "export-after-rebuild",
+            mutants::export_after_rebuild(),
+            leave0.clone(),
+            "stale-export",
+        ),
+        (
+            "double-fold-surrogate",
+            mutants::double_fold_surrogate(),
+            fail0.clone(),
+            "mass-duplicated",
+        ),
+        (
+            "barrier-skip-divergence",
+            mutants::barrier_skip_divergence(),
+            detected,
+            "torn-step-divergence",
+        ),
+        (
+            "drop-survivor-residual",
+            mutants::drop_survivor_residual(),
+            leave0.clone(),
+            "survivor-state-changed",
+        ),
+        ("misroute-fold", mutants::misroute_fold(), leave0.clone(), "misrouted-fold"),
+        (
+            "skip-leaver-export",
+            mutants::skip_leaver_export(),
+            leave0,
+            "export-missed",
+        ),
+        (
+            "double-export-request",
+            mutants::double_export_request(),
+            fail0,
+            "duplicate-export",
+        ),
+    ]
+}
+
+/// Run the whole seeded-mutant battery. `Ok` returns (mutant, caught
+/// kind) pairs; `Err` names the first mutant that escaped or was caught
+/// with the wrong diagnosis.
+pub fn run_self_test(bounds: &Bounds) -> Result<Vec<(&'static str, &'static str)>, String> {
+    let mut caught = Vec::new();
+    for (name, t, script, want) in self_test_cases() {
+        match check_script(&script, &t, bounds) {
+            Ok(rep) => {
+                return Err(format!(
+                    "mutant '{name}' escaped: {} states explored on {} with no \
+                     violation",
+                    rep.states,
+                    script.label()
+                ));
+            }
+            Err(v) if v.kind() == want => caught.push((name, want)),
+            Err(v) => {
+                return Err(format!(
+                    "mutant '{name}' caught with '{}' (wanted '{want}'): {v}",
+                    v.kind()
+                ));
+            }
+        }
+    }
+    Ok(caught)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::CoordPhase;
+
+    #[test]
+    fn real_transitions_survive_a_small_world_sweep() {
+        let rep = check_world(2, 2, &Transitions::real(), &Bounds::default())
+            .expect("real protocol must be violation-free");
+        assert!(rep.scripts >= 8, "enumeration shrank: {} scripts", rep.scripts);
+        assert!(rep.states > rep.scripts, "exploration is degenerate");
+        assert!(rep.terminals > 0, "no terminal states classified");
+    }
+
+    #[test]
+    fn quiet_script_state_space_is_tiny_and_exact() {
+        let script =
+            Script { world: 2, gpn: 1, steps: 1, scheduled: vec![], detected: vec![] };
+        let rep = check_script(&script, &Transitions::real(), &Bounds::default())
+            .expect("quiet script is violation-free");
+        // issue, two deliveries in either order, barrier: a handful of
+        // states — if this grows, the model sprouted accidental branching
+        assert!(rep.states <= 8, "quiet world-2 space exploded: {}", rep.states);
+        assert_eq!(rep.terminals, 1);
+    }
+
+    #[test]
+    fn state_budget_trips_as_a_typed_violation() {
+        let script =
+            Script { world: 4, gpn: 1, steps: 2, scheduled: vec![], detected: vec![0] };
+        let got = check_script(&script, &Transitions::real(), &Bounds { max_states: 10 });
+        assert!(matches!(
+            got,
+            Err(ProtocolViolation::StateBoundExceeded { states }) if states > 10
+        ));
+    }
+
+    #[test]
+    fn every_seeded_mutant_is_caught_with_its_own_kind() {
+        let caught = run_self_test(&Bounds::default()).expect("self-test must pass");
+        assert_eq!(caught.len(), self_test_cases().len());
+        let kinds: std::collections::HashSet<&str> =
+            caught.iter().map(|&(_, k)| k).collect();
+        assert_eq!(
+            kinds.len(),
+            caught.len(),
+            "each mutant must map to a distinct violation kind"
+        );
+    }
+
+    #[test]
+    fn self_test_scripts_are_clean_under_the_real_transitions() {
+        for (name, _, script, _) in self_test_cases() {
+            let rep = check_script(&script, &Transitions::real(), &Bounds::default());
+            assert!(rep.is_ok(), "script for mutant '{name}' dirty on real code");
+        }
+    }
+
+    #[test]
+    fn enumeration_scales_with_world_and_stays_valid() {
+        for world in 2..=5 {
+            let scripts = enumerate_scripts(world, 2);
+            assert!(scripts.len() >= 10, "world {world}: {} scripts", scripts.len());
+            for s in &scripts {
+                assert_eq!(s.world, world);
+                assert!(s.scheduled.len() + s.detected.len() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn deadlock_classification_names_the_stuck_work() {
+        let script =
+            Script { world: 2, gpn: 1, steps: 3, scheduled: vec![], detected: vec![] };
+        let state = crate::analysis::model::ProtocolState::initial(&script);
+        // a terminal before the target depth is a liveness failure
+        let got = state.classify_terminal(&script);
+        match got {
+            Err(ProtocolViolation::Deadlock { detail }) => {
+                assert!(detail.contains("steps"), "detail: {detail}")
+            }
+            other => panic!("wanted Deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mid_protocol_terminal_is_a_deadlock() {
+        let script =
+            Script { world: 2, gpn: 1, steps: 0, scheduled: vec![], detected: vec![] };
+        let mut state = crate::analysis::model::ProtocolState::initial(&script);
+        state.coord = CoordPhase::Collecting {
+            action: MembershipAction::Join { count: 1 },
+            got: vec![None, None],
+            need: vec![false, false],
+        };
+        let got = state.classify_terminal(&script);
+        assert!(matches!(got, Err(ProtocolViolation::Deadlock { .. })));
+    }
+}

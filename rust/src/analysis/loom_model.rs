@@ -15,13 +15,17 @@
 //! modeled: epoch-tagged parking and the circulating spare pool of
 //! `allgather_sched` (model A, 2 ranks × 3 back-to-back epochs), the
 //! comm→compute recycle channel racing `Cmd::Reconfigure` through the
-//! FIFO work queue (model B, one rank's thread pair), and a rank failure
+//! FIFO work queue (model B, one rank's thread pair), a rank failure
 //! racing the engine's `Cmd::Reconfigure` → `Cmd::ExportState` sequence
 //! during an elastic re-world (model C — the fail-during-reconfigure
-//! hazard of DESIGN.md §12). What is **not** modeled: frame payload
-//! encoding, pacing/time, worlds beyond 2–3 ranks, or mpsc's internals
-//! (assumed linearizable FIFO — the same assumption the std
-//! documentation guarantees).
+//! hazard of DESIGN.md §12), and a detected failure on one rank racing a
+//! *different* rank's in-flight `Cmd::ExportState` inside the same
+//! quiesce window (model D — the cross-rank window the explicit-state
+//! protocol checker of DESIGN.md §13 deliberately leaves to loom, since
+//! it disables detected failures while collecting). What is **not**
+//! modeled: frame payload encoding, pacing/time, worlds beyond 2–3
+//! ranks, or mpsc's internals (assumed linearizable FIFO — the same
+//! assumption the std documentation guarantees).
 
 use std::collections::VecDeque;
 
@@ -313,6 +317,93 @@ mod tests {
             }
             injector.join().unwrap();
             compute.join().unwrap();
+        });
+    }
+
+    /// Model D — a detected failure on rank B racing rank A's in-flight
+    /// `Cmd::ExportState` inside the *same* quiesce window (two rank
+    /// compute threads vs the engine's collector and a failure injector).
+    /// This is the cross-rank window the explicit-state protocol checker
+    /// (`analysis::checker`, DESIGN.md §13) deliberately excludes — it
+    /// disables detected failures while collecting — so loom carries the
+    /// proof here. Checked in every interleaving:
+    /// * **live exports are isolated**: rank A is healthy, so its export
+    ///   arrives exactly once and observes the post-reconfigure layout,
+    ///   no matter where B's failure lands;
+    /// * **no duplicate export from the dying rank**: B contributes at
+    ///   most one state (FIFO: its export either precedes the failure or
+    ///   is suppressed by it, never both);
+    /// * **EF-mass conservation**: each rank hands over exactly one unit
+    ///   of residual state — A's export, and B's export *or* the
+    ///   deterministic surrogate when the failure wins the race;
+    /// * **no deadlocked collector**: both ranks always resolve
+    ///   terminally, so the collect loop exits.
+    #[test]
+    fn export_races_detected_failure_on_peer_rank() {
+        loom::model(|| {
+            let cmd_a = Arc::new(Chan::<Cmd>::new());
+            let cmd_b = Arc::new(Chan::<Cmd>::new());
+            let res = Arc::new(Chan::<(u8, Msg)>::new());
+
+            fn spawn_rank(
+                id: u8,
+                cmd: Arc<Chan<Cmd>>,
+                res: Arc<Chan<(u8, Msg)>>,
+            ) -> thread::JoinHandle<()> {
+                thread::spawn(move || {
+                    let mut layout = 0u8;
+                    loop {
+                        match cmd.recv() {
+                            Cmd::Reconfig(v) => layout = v,
+                            Cmd::Export => res.send((id, Msg::State(layout))),
+                            Cmd::Fail => {
+                                res.send((id, Msg::Failed));
+                                return;
+                            }
+                            Cmd::Stop => {
+                                res.send((id, Msg::Stopped));
+                                return;
+                            }
+                        }
+                    }
+                })
+            }
+            let ra = spawn_rank(0, cmd_a.clone(), res.clone());
+            let rb = spawn_rank(1, cmd_b.clone(), res.clone());
+
+            // the detected failure strikes rank B anywhere in the window
+            let injector = {
+                let cmd_b = cmd_b.clone();
+                thread::spawn(move || cmd_b.send(Cmd::Fail))
+            };
+
+            // the engine's quiesce: reconfigure-then-export, both ranks
+            for c in [&cmd_a, &cmd_b] {
+                c.send(Cmd::Reconfig(1));
+                c.send(Cmd::Export);
+                c.send(Cmd::Stop);
+            }
+
+            // collect until both ranks resolve terminally
+            let mut states = [0usize; 2];
+            let mut done = [false, false];
+            while !(done[0] && done[1]) {
+                let (id, msg) = res.recv();
+                match msg {
+                    Msg::State(layout) => {
+                        assert_eq!(layout, 1, "export observed a pre-reconfigure layout");
+                        states[id as usize] += 1;
+                    }
+                    Msg::Failed | Msg::Stopped => done[id as usize] = true,
+                }
+            }
+            assert_eq!(states[0], 1, "peer failure lost or duplicated a live export");
+            assert!(states[1] <= 1, "failed rank exported twice in one quiesce");
+            let mass = states[0] + states[1] + usize::from(states[1] == 0);
+            assert_eq!(mass, 2, "EF mass not conserved across the quiesce window");
+            injector.join().unwrap();
+            ra.join().unwrap();
+            rb.join().unwrap();
         });
     }
 }

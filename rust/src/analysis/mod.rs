@@ -30,19 +30,43 @@
 //! sweep, and the mutation-style negative tests in
 //! `tests/schedule_verify.rs`.
 //!
+//! [`model`] + [`checker`] extend the same static story to the elastic
+//! membership protocol (DESIGN.md §13): a small-step state machine over
+//! per-rank command FIFOs, layout generations and EF residual mass as
+//! exact token multisets, explored exhaustively (stateright-style BFS)
+//! over every interleaving of scheduled and detected fail/join/leave
+//! events. Because the model delegates every re-world decision to the
+//! production functions ([`crate::coordinator::membership`],
+//! [`crate::exec::fifo_layout_gen_at`]) through
+//! [`model::Transitions::real`], a clean sweep proves, at the explored
+//! bounds: EF-mass conservation across folds, exactly-once export per
+//! leaver, no step against a stale shard layout, uniform torn-step
+//! skipping, and deadlock-free quiescence. Seeded mutants
+//! ([`checker::mutants`]) prove each invariant is live.
+//!
 //! [`loom_model`] (compiled only under `RUSTFLAGS="--cfg loom"`) holds
 //! exhaustive-interleaving models of the riskiest dynamic protocols:
 //! the circulating spare-buffer pool with epoch parking
 //! (`exec::ring::allgather_sched`), the comm→compute recycle channel
-//! racing `Cmd::Reconfigure` (`exec::rank`), and a rank failure racing
+//! racing `Cmd::Reconfigure` (`exec::rank`), a rank failure racing
 //! the elastic re-world's reconfigure→export sequence
-//! (`exec::ThreadedExec::export_states`).
+//! (`exec::ThreadedExec::export_states`), and an `ExportState` racing a
+//! detected failure on a *different* rank inside one quiesce window —
+//! the two windows the explicit-state checker deliberately leaves to
+//! loom (it disables detected failures while collecting).
 
+pub mod checker;
+pub mod model;
 pub mod verifier;
 
 #[cfg(loom)]
 pub mod loom_model;
 
+pub use checker::{
+    check_script, check_world, enumerate_scripts, run_self_test, Bounds, CheckReport,
+    WorldReport,
+};
+pub use model::{ProtocolState, ProtocolViolation, Script, Transitions};
 pub use verifier::{
     verify_frame_lengths, verify_schedule, wire_conservation, ScheduleReport, ScheduleViolation,
     WireReport,

@@ -1,0 +1,964 @@
+//! Small-step state machine of the elastic membership protocol
+//! (DESIGN.md §13) — the model half of the explicit-state checker in
+//! [`crate::analysis::checker`].
+//!
+//! One [`ProtocolState`] captures everything the re-world protocol's
+//! correctness depends on: per-rank command FIFOs ([`CmdTag`] — the same
+//! vocabulary `exec::rank::Cmd` ships), per-rank shard-layout
+//! generations, step counters, the step barrier with poison, the
+//! coordinator's quiesce/collect/fold phases, and per-rank error-feedback
+//! residual mass as **token multisets** (dense `u8` count vectors — an
+//! exact, hashable stand-in for the engine's `f32` residual vectors, so
+//! "mass conserved" is integer arithmetic, not float tolerance).
+//!
+//! The machine is **shared-implementation, not hand-mirrored**: every
+//! re-world decision is delegated through [`Transitions`], whose
+//! [`Transitions::real`] wiring points straight at the production
+//! functions — [`membership::redistribute`],
+//! [`membership::validated_next_world`], [`membership::export_skip`],
+//! [`membership::next_cluster`], [`membership::generation_seed`] and
+//! [`crate::exec::fifo_layout_gen_at`]. The checker therefore proves
+//! properties of the code the engine runs; seeded mutants (see
+//! [`crate::analysis::checker::mutants`]) swap individual function
+//! pointers to prove the checker would notice if that code regressed.
+//!
+//! Nondeterminism = one [`Action`] per enabled choice: rank queue
+//! deliveries interleave freely, detected failures fire at any point
+//! outside a quiesce window, barrier completion races poison. The BFS in
+//! `checker` explores all of it; [`ProtocolState::apply`] reports any
+//! invariant breach as a typed [`ProtocolViolation`].
+
+use std::fmt;
+
+use crate::coordinator::membership::{self as membership, MembershipAction};
+use crate::exec::rank::CmdTag;
+
+/// A residual-mass multiset: `bag[t]` = how many copies of token `t` this
+/// rank holds. All bags in one run share a fixed token universe
+/// (`minted` ids: one per initial rank, plus the surrogate token the
+/// retained last-combined update stands for), so element-wise `u8`
+/// arithmetic is the exact multiset union the conservation proof needs.
+pub type TokenBag = Vec<u8>;
+
+fn bag_add(a: &TokenBag, b: &TokenBag) -> TokenBag {
+    let mut out = a.clone();
+    if out.len() < b.len() {
+        out.resize(b.len(), 0);
+    }
+    for (o, x) in out.iter_mut().zip(b.iter()) {
+        *o = o.saturating_add(*x);
+    }
+    out
+}
+
+fn bag_total(b: &TokenBag) -> u32 {
+    b.iter().map(|&c| c as u32).sum()
+}
+
+fn bag_is_zero(b: &TokenBag) -> bool {
+    b.iter().all(|&c| c == 0)
+}
+
+/// Lower a token bag into the `f32` residual-vector shape the production
+/// [`membership::redistribute`] operates on (counts are small integers,
+/// exact in f32).
+pub fn bag_to_f32(b: &TokenBag) -> Vec<f32> {
+    b.iter().map(|&c| c as f32).collect()
+}
+
+/// Lift a redistributed `f32` vector back into a token bag. `None` if the
+/// vector is not a valid multiset over the minted universe — negative,
+/// fractional or overflowing counts mean the transition manufactured or
+/// shredded mass in a way no token reshuffle can express.
+pub fn f32_to_bag(v: &[f32], minted: usize) -> Option<TokenBag> {
+    if v.len() > minted {
+        return None;
+    }
+    let mut out = vec![0u8; minted];
+    for (i, &x) in v.iter().enumerate() {
+        if !(0.0..=255.0).contains(&x) || x.fract() != 0.0 {
+            return None;
+        }
+        out[i] = x as u8;
+    }
+    Some(out)
+}
+
+/// One membership disturbance in a checker script.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProtocolEvent {
+    /// Fires deterministically at the named step boundary, like a
+    /// `--membership-schedule` entry.
+    Scheduled { at_step: u8, action: MembershipAction },
+    /// A crash the engine *detects*: may fire at any explored point
+    /// outside a quiesce window (including mid-barrier, where it poisons
+    /// the step) — or never. `rank` indexes the world current at fire
+    /// time.
+    Detected { rank: usize },
+}
+
+/// One bounded exploration: an initial world plus the disturbances the
+/// BFS interleaves against `steps` completed barriers.
+#[derive(Debug, Clone)]
+pub struct Script {
+    pub world: usize,
+    /// Initial gpus-per-node of the modeled cluster (re-derived through
+    /// [`membership::next_cluster`] on every fold).
+    pub gpn: usize,
+    /// Barriers the coordinator must complete (the depth bound).
+    pub steps: u8,
+    pub scheduled: Vec<(u8, MembershipAction)>,
+    /// Ranks whose detected failure the BFS may fire at any point.
+    pub detected: Vec<usize>,
+}
+
+impl Script {
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = self
+            .scheduled
+            .iter()
+            .map(|(s, a)| format!("{s}:{}", a.spec()))
+            .collect();
+        parts.extend(self.detected.iter().map(|r| format!("det:{r}")));
+        if parts.is_empty() {
+            parts.push("quiet".to_string());
+        }
+        format!("w{}g{} s{} [{}]", self.world, self.gpn, self.steps, parts.join(","))
+    }
+
+    /// Token universe: one id per initial rank + the surrogate token.
+    pub fn minted(&self) -> usize {
+        self.world + 1
+    }
+}
+
+/// What one rank's export reply carried: its residual bag and the shard
+/// layout generation the FIFO says the export observed.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ExportReply {
+    pub bag: TokenBag,
+    pub observed_gen: u8,
+}
+
+/// One rank as the model sees it.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RankState {
+    pub alive: bool,
+    /// Shard-layout generation this rank's compressor holds.
+    pub layout_gen: u8,
+    /// Steps this rank has applied (must track the coordinator's).
+    pub steps_done: u8,
+    /// Pending commands, FIFO. Processed head-first by [`Action::Deliver`].
+    pub queue: Vec<CmdTag>,
+    /// EF residual mass.
+    pub bag: TokenBag,
+    /// Export replies served for the quiesce in progress.
+    pub exports_served: u8,
+}
+
+/// Coordinator phase.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum CoordPhase {
+    Idle,
+    /// A step barrier is in flight.
+    Stepping { arrived: Vec<bool>, poisoned: bool },
+    /// Quiesce: exports requested, waiting for every `need`ed reply.
+    Collecting {
+        action: MembershipAction,
+        got: Vec<Option<ExportReply>>,
+        need: Vec<bool>,
+    },
+}
+
+/// One nondeterministic choice at a state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Coordinator broadcasts `Step` to every live rank.
+    IssueStep,
+    /// Rank `r` processes its queue head.
+    Deliver(usize),
+    /// All live ranks arrived: the barrier releases and the step applies.
+    CompleteBarrier,
+    /// The poisoned barrier releases: the torn step is skipped.
+    AbortBarrier,
+    /// The due scheduled event begins its quiesce.
+    FireScheduled,
+    /// Detected failure `i` strikes now.
+    FireDetected(usize),
+    /// Coordinator reacts to a detected failure: quiesce for the re-world.
+    HandleFailure,
+    /// All exports in: redistribute, verify, rebuild the world.
+    Fold,
+}
+
+/// The membership protocol's transition implementation, as function
+/// pointers so the checker and the engine run the *same* code —
+/// [`Transitions::real`] — while seeded mutants swap exactly one pointer.
+#[derive(Clone, Copy)]
+pub struct Transitions {
+    /// [`membership::redistribute`] — the residual-mass handoff.
+    pub redistribute:
+        fn(Vec<Option<Vec<f32>>>, MembershipAction, &[f32]) -> Vec<Option<Vec<f32>>>,
+    /// [`membership::validated_next_world`] — world-size guard.
+    pub next_world: fn(usize, MembershipAction) -> anyhow::Result<usize>,
+    /// [`membership::export_skip`] — who the collector must not wait on.
+    pub export_skip: fn(MembershipAction) -> Option<usize>,
+    /// [`membership::next_cluster`] — re-worlded cluster shape.
+    pub next_cluster: fn(usize, usize) -> (usize, usize),
+    /// [`membership::generation_seed`] — the never-replay seed mix.
+    pub generation_seed: fn(u64, u64) -> u64,
+    /// [`crate::exec::fifo_layout_gen_at`] — per-rank FIFO semantics: the
+    /// layout generation a queued command observes.
+    pub observed_gen: fn(u8, &[CmdTag], usize) -> u8,
+    /// What the coordinator enqueues to each surviving rank at quiesce
+    /// (the pure mirror of `ThreadedExec::export_states`' send loop).
+    pub quiesce_cmds: fn(MembershipAction) -> Vec<CmdTag>,
+    /// Seeded-mutant knob for the barrier-poison rule. The real abort
+    /// path skips the torn step on *every* survivor; `true` models a
+    /// broken runtime where ranks already at the barrier apply it.
+    pub abort_advances_arrived: bool,
+}
+
+fn real_quiesce_cmds(_action: MembershipAction) -> Vec<CmdTag> {
+    vec![CmdTag::ExportState]
+}
+
+impl Transitions {
+    /// The production protocol: every pointer is the function the engine
+    /// itself calls from `DpEngine::apply_membership` / `exec::rank`.
+    pub fn real() -> Transitions {
+        Transitions {
+            redistribute: membership::redistribute,
+            next_world: membership::validated_next_world,
+            export_skip: membership::export_skip,
+            next_cluster: membership::next_cluster,
+            generation_seed: membership::generation_seed,
+            observed_gen: crate::exec::rank::fifo_layout_gen_at,
+            quiesce_cmds: real_quiesce_cmds,
+            abort_advances_arrived: false,
+        }
+    }
+}
+
+/// Base seed the generation-seed invariant is checked against (the value
+/// is arbitrary — the invariant is `generation_seed(seed, g) != seed` for
+/// every g >= 1).
+pub const MODEL_SEED: u64 = 0x5EED_C0DE;
+
+/// A safety or liveness breach, one variant per invariant — the protocol
+/// analogue of [`crate::analysis::ScheduleViolation`]. Every message
+/// names the state that broke and the contract it broke.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolViolation {
+    /// Residual token mass vanished across a fold: the conservation
+    /// contract (survivors bitwise + orphan folded into new rank 0) lost
+    /// `missing` tokens.
+    MassNotConserved { action: String, missing: u32 },
+    /// Residual token mass was manufactured across a fold — some donor
+    /// was folded more than once.
+    MassDuplicated { action: String, excess: u32 },
+    /// A survivor's residual bag changed across a fold in a way the
+    /// handoff contract does not allow (survivors keep state bitwise).
+    SurvivorStateChanged { action: String, rank: usize },
+    /// The orphaned residual mass was folded into a rank other than the
+    /// deterministic donor (new rank 0).
+    MisroutedFold { action: String, rank: usize },
+    /// An export reply observed shard layout generation `observed` while
+    /// the fold assumed `expected` — the reconfigure/export FIFO ordering
+    /// was broken.
+    StaleExport { rank: usize, observed: u8, expected: u8 },
+    /// A rank executed a training step against a stale shard layout.
+    StaleLayoutStep { rank: usize, have: u8, want: u8 },
+    /// After a poisoned barrier, survivors disagreed about the torn step
+    /// (some applied it, some skipped) — or a rank's step counter
+    /// diverged from the coordinator's.
+    TornStepDivergence { rank: usize, steps_done: u8, step: u8 },
+    /// A leaver's exactly-once export never arrived before the fold.
+    ExportMissed { rank: usize },
+    /// A rank served more than one export for a single quiesce window.
+    DuplicateExport { rank: usize },
+    /// A terminal state with unfinished work: pending commands, an open
+    /// quiesce, an unhandled failure or an unfired scheduled event.
+    Deadlock { detail: String },
+    /// A transition produced an impossible world (guard rejected it, or
+    /// the re-derived cluster shape does not cover the world).
+    WorldInvalid { detail: String },
+    /// `redistribute` returned a state vector of the wrong world size.
+    ShapeMismatch { got: usize, want: usize },
+    /// The generation-mixed seed replayed the base stream.
+    SeedReplay { generation: u64 },
+    /// The explorer hit its state budget before exhausting the space —
+    /// not a protocol bug, but the proof is incomplete at these bounds.
+    StateBoundExceeded { states: usize },
+}
+
+impl ProtocolViolation {
+    /// Stable variant name, for reporting and mutant self-tests.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ProtocolViolation::MassNotConserved { .. } => "mass-not-conserved",
+            ProtocolViolation::MassDuplicated { .. } => "mass-duplicated",
+            ProtocolViolation::SurvivorStateChanged { .. } => "survivor-state-changed",
+            ProtocolViolation::MisroutedFold { .. } => "misrouted-fold",
+            ProtocolViolation::StaleExport { .. } => "stale-export",
+            ProtocolViolation::StaleLayoutStep { .. } => "stale-layout-step",
+            ProtocolViolation::TornStepDivergence { .. } => "torn-step-divergence",
+            ProtocolViolation::ExportMissed { .. } => "export-missed",
+            ProtocolViolation::DuplicateExport { .. } => "duplicate-export",
+            ProtocolViolation::Deadlock { .. } => "deadlock",
+            ProtocolViolation::WorldInvalid { .. } => "world-invalid",
+            ProtocolViolation::ShapeMismatch { .. } => "shape-mismatch",
+            ProtocolViolation::SeedReplay { .. } => "seed-replay",
+            ProtocolViolation::StateBoundExceeded { .. } => "state-bound-exceeded",
+        }
+    }
+}
+
+impl fmt::Display for ProtocolViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolViolation::MassNotConserved { action, missing } => write!(
+                f,
+                "EF residual mass not conserved across '{action}': {missing} token(s) \
+                 lost — the orphaned state was dropped instead of folded into the donor"
+            ),
+            ProtocolViolation::MassDuplicated { action, excess } => write!(
+                f,
+                "EF residual mass manufactured across '{action}': {excess} surplus \
+                 token(s) — an orphan/surrogate was folded more than once"
+            ),
+            ProtocolViolation::SurvivorStateChanged { action, rank } => write!(
+                f,
+                "survivor rank {rank}'s residuals changed across '{action}' — the \
+                 handoff contract requires survivors to keep their state bitwise"
+            ),
+            ProtocolViolation::MisroutedFold { action, rank } => write!(
+                f,
+                "orphaned residual mass from '{action}' was folded into rank {rank} — \
+                 the deterministic donor is new rank 0, anything else breaks \
+                 analytic/threaded parity"
+            ),
+            ProtocolViolation::StaleExport { rank, observed, expected } => write!(
+                f,
+                "rank {rank}'s export observed shard layout generation {observed}, but \
+                 the fold assumed generation {expected} — the reconfigure-before-export \
+                 FIFO ordering was violated"
+            ),
+            ProtocolViolation::StaleLayoutStep { rank, have, want } => write!(
+                f,
+                "rank {rank} executed a step holding shard layout generation {have} \
+                 while the world is at generation {want} — its update would be sliced \
+                 by a stale layout"
+            ),
+            ProtocolViolation::TornStepDivergence { rank, steps_done, step } => write!(
+                f,
+                "rank {rank} has applied {steps_done} step(s) while the coordinator \
+                 completed {step} — a torn (barrier-poisoned) step must be skipped by \
+                 every survivor uniformly"
+            ),
+            ProtocolViolation::ExportMissed { rank } => write!(
+                f,
+                "leaving rank {rank}'s residual export never arrived — a clean leave \
+                 must hand its state over exactly once before departing"
+            ),
+            ProtocolViolation::DuplicateExport { rank } => write!(
+                f,
+                "rank {rank} served more than one export in a single quiesce window — \
+                 exactly-once export is what makes the fold arithmetic exact"
+            ),
+            ProtocolViolation::Deadlock { detail } => write!(
+                f,
+                "terminal state with unfinished work ({detail}) — every schedule must \
+                 quiesce with empty queues and all events applied"
+            ),
+            ProtocolViolation::WorldInvalid { detail } => {
+                write!(f, "membership transition produced an invalid world: {detail}")
+            }
+            ProtocolViolation::ShapeMismatch { got, want } => write!(
+                f,
+                "redistribute returned {got} rank state(s) for a world of {want}"
+            ),
+            ProtocolViolation::SeedReplay { generation } => write!(
+                f,
+                "generation {generation}'s mixed seed equals the base seed — the \
+                 re-world would replay the pre-event sample stream"
+            ),
+            ProtocolViolation::StateBoundExceeded { states } => write!(
+                f,
+                "state budget exhausted after {states} states — raise the bound or \
+                 shrink the script; the proof is incomplete at these bounds"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolViolation {}
+
+/// One explored configuration of the whole protocol. `Hash`/`Eq` make the
+/// BFS's visited set exact — two states are the same iff every queue,
+/// bag, counter and phase is the same.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProtocolState {
+    /// Completed barriers.
+    pub step: u8,
+    /// Membership generation == shard-layout generation in force.
+    pub gen: u8,
+    /// Current gpus-per-node (evolves through `next_cluster`).
+    pub gpn: u8,
+    pub ranks: Vec<RankState>,
+    pub coord: CoordPhase,
+    /// Index of the next unfired scheduled event.
+    pub next_scheduled: usize,
+    pub detected_fired: Vec<bool>,
+    /// A detected failure awaiting the coordinator's re-world.
+    pub pending_fail: Option<usize>,
+    /// The retained last-combined update (the Fail surrogate), as mass.
+    pub last_combined: TokenBag,
+}
+
+impl ProtocolState {
+    /// The pre-disturbance world: rank `r` holds one copy of token `r`,
+    /// the retained last-combined update holds the surrogate token.
+    pub fn initial(script: &Script) -> ProtocolState {
+        let minted = script.minted();
+        let ranks = (0..script.world)
+            .map(|r| {
+                let mut bag = vec![0u8; minted];
+                bag[r] = 1;
+                RankState {
+                    alive: true,
+                    layout_gen: 0,
+                    steps_done: 0,
+                    queue: Vec::new(),
+                    bag,
+                    exports_served: 0,
+                }
+            })
+            .collect();
+        let mut last_combined = vec![0u8; minted];
+        last_combined[script.world] = 1;
+        ProtocolState {
+            step: 0,
+            gen: 0,
+            gpn: script.gpn.min(255) as u8,
+            ranks,
+            coord: CoordPhase::Idle,
+            next_scheduled: 0,
+            detected_fired: vec![false; script.detected.len()],
+            pending_fail: None,
+            last_combined,
+        }
+    }
+
+    fn scheduled_due(&self, script: &Script) -> bool {
+        script
+            .scheduled
+            .get(self.next_scheduled)
+            .is_some_and(|&(at, _)| at <= self.step)
+    }
+
+    /// Every action enabled at this state — the BFS's branching.
+    pub fn enabled_actions(&self, script: &Script) -> Vec<Action> {
+        let mut out = Vec::new();
+        for (r, rk) in self.ranks.iter().enumerate() {
+            if rk.alive && !rk.queue.is_empty() {
+                out.push(Action::Deliver(r));
+            }
+        }
+        match &self.coord {
+            CoordPhase::Idle => {
+                if self.pending_fail.is_some() {
+                    out.push(Action::HandleFailure);
+                } else if self.scheduled_due(script) {
+                    out.push(Action::FireScheduled);
+                } else if self.step < script.steps {
+                    out.push(Action::IssueStep);
+                }
+            }
+            CoordPhase::Stepping { arrived, poisoned } => {
+                if *poisoned {
+                    out.push(Action::AbortBarrier);
+                } else if self
+                    .ranks
+                    .iter()
+                    .enumerate()
+                    .all(|(r, rk)| !rk.alive || arrived.get(r).copied().unwrap_or(false))
+                {
+                    out.push(Action::CompleteBarrier);
+                }
+            }
+            CoordPhase::Collecting { got, need, .. } => {
+                if need
+                    .iter()
+                    .enumerate()
+                    .all(|(r, &n)| !n || got.get(r).is_some_and(|g| g.is_some()))
+                {
+                    out.push(Action::Fold);
+                }
+            }
+        }
+        // detected failures strike at any explored point outside a
+        // quiesce window (the in-window race is loom model C/D territory)
+        if self.pending_fail.is_none()
+            && !matches!(self.coord, CoordPhase::Collecting { .. })
+        {
+            for (i, &fired) in self.detected_fired.iter().enumerate() {
+                if fired {
+                    continue;
+                }
+                let rank = script.detected[i];
+                if self.ranks.get(rank).is_some_and(|rk| rk.alive) {
+                    out.push(Action::FireDetected(i));
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply one action, checking every invariant the transition can
+    /// break. Pure: returns the successor state or the violation.
+    pub fn apply(
+        &self,
+        action: Action,
+        script: &Script,
+        t: &Transitions,
+    ) -> Result<ProtocolState, ProtocolViolation> {
+        let mut s = self.clone();
+        match action {
+            Action::IssueStep => {
+                for rk in s.ranks.iter_mut().filter(|rk| rk.alive) {
+                    rk.queue.push(CmdTag::Step);
+                }
+                let n = s.ranks.len();
+                s.coord = CoordPhase::Stepping { arrived: vec![false; n], poisoned: false };
+            }
+            Action::Deliver(r) => s.deliver(r, t)?,
+            Action::CompleteBarrier => {
+                for (r, rk) in s.ranks.iter().enumerate() {
+                    if rk.alive && rk.steps_done != s.step {
+                        return Err(ProtocolViolation::TornStepDivergence {
+                            rank: r,
+                            steps_done: rk.steps_done,
+                            step: s.step,
+                        });
+                    }
+                }
+                for rk in s.ranks.iter_mut().filter(|rk| rk.alive) {
+                    rk.steps_done = rk.steps_done.saturating_add(1);
+                }
+                s.step = s.step.saturating_add(1);
+                s.coord = CoordPhase::Idle;
+            }
+            Action::AbortBarrier => {
+                let arrived = match &s.coord {
+                    CoordPhase::Stepping { arrived, .. } => arrived.clone(),
+                    _ => vec![],
+                };
+                for (r, rk) in s.ranks.iter_mut().enumerate() {
+                    if !rk.alive {
+                        continue;
+                    }
+                    if t.abort_advances_arrived && arrived.get(r).copied().unwrap_or(false)
+                    {
+                        // seeded mutant: a survivor applies the torn step
+                        rk.steps_done = rk.steps_done.saturating_add(1);
+                    }
+                    rk.queue.retain(|c| !matches!(c, CmdTag::Step));
+                }
+                s.coord = CoordPhase::Idle;
+            }
+            Action::FireScheduled => {
+                let (_, act) = script.scheduled[self.next_scheduled];
+                s.next_scheduled += 1;
+                if let MembershipAction::Fail { rank } = act {
+                    if let Some(rk) = s.ranks.get_mut(rank) {
+                        rk.alive = false;
+                        rk.queue.clear();
+                    }
+                }
+                s.begin_quiesce(act, t);
+            }
+            Action::FireDetected(i) => {
+                let rank = script.detected[i];
+                s.detected_fired[i] = true;
+                if let Some(rk) = s.ranks.get_mut(rank) {
+                    rk.alive = false;
+                    rk.queue.clear();
+                }
+                s.pending_fail = Some(rank);
+                if let CoordPhase::Stepping { poisoned, .. } = &mut s.coord {
+                    *poisoned = true;
+                }
+            }
+            Action::HandleFailure => {
+                let rank = match s.pending_fail.take() {
+                    Some(r) => r,
+                    None => return Ok(s),
+                };
+                s.begin_quiesce(MembershipAction::Fail { rank }, t);
+            }
+            Action::Fold => s.fold(script, t)?,
+        }
+        Ok(s)
+    }
+
+    /// Rank `r` processes its FIFO head. The observed layout generation
+    /// comes from the shared [`crate::exec::fifo_layout_gen_at`], so the
+    /// model's delivery semantics are the executor's by construction.
+    fn deliver(&mut self, r: usize, t: &Transitions) -> Result<(), ProtocolViolation> {
+        let (head, observed) = {
+            let rk = &self.ranks[r];
+            match rk.queue.first() {
+                Some(&h) => (h, (t.observed_gen)(rk.layout_gen, &rk.queue, 0)),
+                None => return Ok(()),
+            }
+        };
+        self.ranks[r].queue.remove(0);
+        match head {
+            CmdTag::Step => {
+                if observed != self.gen {
+                    return Err(ProtocolViolation::StaleLayoutStep {
+                        rank: r,
+                        have: observed,
+                        want: self.gen,
+                    });
+                }
+                if let CoordPhase::Stepping { arrived, .. } = &mut self.coord {
+                    if let Some(a) = arrived.get_mut(r) {
+                        *a = true;
+                    }
+                }
+            }
+            CmdTag::Reconfigure => {
+                self.ranks[r].layout_gen = observed.saturating_add(1);
+            }
+            CmdTag::ExportState => {
+                let reply = ExportReply {
+                    bag: self.ranks[r].bag.clone(),
+                    observed_gen: observed,
+                };
+                self.ranks[r].exports_served =
+                    self.ranks[r].exports_served.saturating_add(1);
+                if self.ranks[r].exports_served > 1 {
+                    return Err(ProtocolViolation::DuplicateExport { rank: r });
+                }
+                if let CoordPhase::Collecting { got, .. } = &mut self.coord {
+                    if let Some(slot) = got.get_mut(r) {
+                        *slot = Some(reply);
+                    }
+                }
+            }
+            // not part of the membership protocol's quiesce vocabulary
+            CmdTag::SetPacer | CmdTag::SetWork | CmdTag::Fail | CmdTag::Shutdown => {}
+        }
+        Ok(())
+    }
+
+    /// Enter the quiesce for `action`: enqueue the coordinator's command
+    /// sequence to every live rank and start collecting.
+    fn begin_quiesce(&mut self, action: MembershipAction, t: &Transitions) {
+        let skip = (t.export_skip)(action);
+        let cmds = (t.quiesce_cmds)(action);
+        let world = self.ranks.len();
+        let mut need = vec![false; world];
+        for (r, rk) in self.ranks.iter_mut().enumerate() {
+            if !rk.alive || Some(r) == skip {
+                continue;
+            }
+            rk.exports_served = 0;
+            rk.queue.extend(cmds.iter().copied());
+            need[r] = true;
+        }
+        self.coord = CoordPhase::Collecting { action, got: vec![None; world], need };
+    }
+
+    /// The fold: run the production `redistribute` on the collected
+    /// exports and verify the result against the independently-computed
+    /// specification mapping (survivors bitwise, orphan into new rank 0,
+    /// joiners clean, total mass conserved), then rebuild the world.
+    fn fold(&mut self, script: &Script, t: &Transitions) -> Result<(), ProtocolViolation> {
+        let (action, got) = match &self.coord {
+            CoordPhase::Collecting { action, got, .. } => (*action, got.clone()),
+            _ => return Ok(()),
+        };
+        let minted = script.minted();
+        let world = self.ranks.len();
+        let label = action.spec();
+
+        // uniform-progress check at the boundary the fold quiesces on
+        for (r, rk) in self.ranks.iter().enumerate() {
+            if rk.alive && rk.steps_done != self.step {
+                return Err(ProtocolViolation::TornStepDivergence {
+                    rank: r,
+                    steps_done: rk.steps_done,
+                    step: self.step,
+                });
+            }
+        }
+
+        // exactly-once export for a clean leaver
+        if let MembershipAction::Leave { rank } = action {
+            match got.get(rank) {
+                Some(Some(_)) => {
+                    if self.ranks[rank].exports_served != 1 {
+                        return Err(ProtocolViolation::DuplicateExport { rank });
+                    }
+                }
+                _ => return Err(ProtocolViolation::ExportMissed { rank }),
+            }
+        }
+
+        // FIFO ordering: every export must reflect the generation this
+        // fold is redistributing under
+        for (r, reply) in got.iter().enumerate() {
+            if let Some(reply) = reply {
+                if reply.observed_gen != self.gen {
+                    return Err(ProtocolViolation::StaleExport {
+                        rank: r,
+                        observed: reply.observed_gen,
+                        expected: self.gen,
+                    });
+                }
+            }
+        }
+
+        // the production transition, on the production types
+        let states: Vec<Option<Vec<f32>>> = got
+            .iter()
+            .map(|g| g.as_ref().map(|reply| bag_to_f32(&reply.bag)))
+            .collect();
+        let new_world = (t.next_world)(world, action).map_err(|e| {
+            ProtocolViolation::WorldInvalid { detail: e.to_string() }
+        })?;
+        let out = (t.redistribute)(states, action, &bag_to_f32(&self.last_combined));
+        if out.len() != new_world {
+            return Err(ProtocolViolation::ShapeMismatch { got: out.len(), want: new_world });
+        }
+        let mut actual: Vec<TokenBag> = Vec::with_capacity(new_world);
+        for st in &out {
+            let bag = match st {
+                None => vec![0u8; minted],
+                Some(v) => match f32_to_bag(v, minted) {
+                    Some(b) => b,
+                    None => {
+                        return Err(ProtocolViolation::MassNotConserved {
+                            action: label,
+                            missing: 0,
+                        })
+                    }
+                },
+            };
+            actual.push(bag);
+        }
+
+        // the specification mapping, computed independently from the
+        // model's ground-truth bags
+        let zero = vec![0u8; minted];
+        let (expected, orphan): (Vec<TokenBag>, TokenBag) = match action {
+            MembershipAction::Join { count } => {
+                let mut exp: Vec<TokenBag> =
+                    self.ranks.iter().map(|rk| rk.bag.clone()).collect();
+                exp.extend(std::iter::repeat_with(|| zero.clone()).take(count));
+                (exp, zero.clone())
+            }
+            MembershipAction::Leave { rank } | MembershipAction::Fail { rank } => {
+                let orphan = match action {
+                    MembershipAction::Leave { .. } => self.ranks[rank].bag.clone(),
+                    _ => self.last_combined.clone(),
+                };
+                let survivors: Vec<&RankState> = self
+                    .ranks
+                    .iter()
+                    .enumerate()
+                    .filter(|&(r, _)| r != rank)
+                    .map(|(_, rk)| rk)
+                    .collect();
+                let mut exp: Vec<TokenBag> =
+                    survivors.iter().map(|rk| rk.bag.clone()).collect();
+                if let Some(first) = exp.first_mut() {
+                    *first = bag_add(first, &orphan);
+                }
+                (exp, orphan)
+            }
+        };
+
+        // decision tree: survivors first (a misrouted orphan shows up as
+        // a non-donor gaining exactly the orphan), then the donor, whose
+        // deviation is classified by total mass
+        for i in 1..new_world {
+            if actual[i] != expected[i] {
+                if !bag_is_zero(&orphan) && actual[i] == bag_add(&expected[i], &orphan) {
+                    return Err(ProtocolViolation::MisroutedFold { action: label, rank: i });
+                }
+                return Err(ProtocolViolation::SurvivorStateChanged {
+                    action: label,
+                    rank: i,
+                });
+            }
+        }
+        if actual.first() != expected.first() {
+            let tot_a: u32 = actual.iter().map(bag_total).sum();
+            let tot_e: u32 = expected.iter().map(bag_total).sum();
+            return Err(match tot_a.cmp(&tot_e) {
+                std::cmp::Ordering::Greater => ProtocolViolation::MassDuplicated {
+                    action: label,
+                    excess: tot_a - tot_e,
+                },
+                std::cmp::Ordering::Less => ProtocolViolation::MassNotConserved {
+                    action: label,
+                    missing: tot_e - tot_a,
+                },
+                std::cmp::Ordering::Equal => ProtocolViolation::SurvivorStateChanged {
+                    action: label,
+                    rank: 0,
+                },
+            });
+        }
+
+        // rebuild the world on the re-derived cluster and mixed seed
+        let generation = (self.gen as u64) + 1;
+        let (nodes, gpn) = (t.next_cluster)(new_world, self.gpn as usize);
+        if nodes * gpn != new_world {
+            return Err(ProtocolViolation::WorldInvalid {
+                detail: format!(
+                    "cluster {nodes}x{gpn} does not cover the new world of {new_world}"
+                ),
+            });
+        }
+        if (t.generation_seed)(MODEL_SEED, generation) == MODEL_SEED {
+            return Err(ProtocolViolation::SeedReplay { generation });
+        }
+        self.gen = self.gen.saturating_add(1);
+        self.gpn = gpn.min(255) as u8;
+        self.ranks = actual
+            .into_iter()
+            .map(|bag| RankState {
+                alive: true,
+                layout_gen: self.gen,
+                steps_done: self.step,
+                queue: Vec::new(),
+                bag,
+                exports_served: 0,
+            })
+            .collect();
+        self.coord = CoordPhase::Idle;
+        Ok(())
+    }
+
+    /// Liveness: a state with no enabled action must be a clean quiesce —
+    /// target depth reached, every scheduled event applied, no pending
+    /// failure, no queued command — and every survivor in step.
+    pub fn classify_terminal(&self, script: &Script) -> Result<(), ProtocolViolation> {
+        let mut stuck = Vec::new();
+        if self.step < script.steps {
+            stuck.push(format!("{} of {} steps", self.step, script.steps));
+        }
+        if self.next_scheduled < script.scheduled.len() {
+            stuck.push(format!(
+                "{} unfired scheduled event(s)",
+                script.scheduled.len() - self.next_scheduled
+            ));
+        }
+        if self.pending_fail.is_some() {
+            stuck.push("an unhandled detected failure".to_string());
+        }
+        if !matches!(self.coord, CoordPhase::Idle) {
+            stuck.push("coordinator mid-protocol".to_string());
+        }
+        if self.ranks.iter().any(|rk| rk.alive && !rk.queue.is_empty()) {
+            stuck.push("pending rank commands".to_string());
+        }
+        if !stuck.is_empty() {
+            return Err(ProtocolViolation::Deadlock { detail: stuck.join(", ") });
+        }
+        for (r, rk) in self.ranks.iter().enumerate() {
+            if rk.alive && rk.steps_done != self.step {
+                return Err(ProtocolViolation::TornStepDivergence {
+                    rank: r,
+                    steps_done: rk.steps_done,
+                    step: self.step,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Total residual token mass in the world (the conserved quantity,
+    /// modulo the documented Fail surrogate substitution).
+    pub fn total_mass(&self) -> u32 {
+        self.ranks.iter().map(|rk| bag_total(&rk.bag)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(world: usize) -> Script {
+        Script { world, gpn: 1, steps: 2, scheduled: vec![], detected: vec![] }
+    }
+
+    #[test]
+    fn initial_state_mints_one_token_per_rank_plus_surrogate() {
+        let s = ProtocolState::initial(&quiet(3));
+        assert_eq!(s.total_mass(), 3);
+        assert_eq!(s.ranks.len(), 3);
+        assert_eq!(bag_total(&s.last_combined), 1);
+        assert_eq!(s.last_combined[3], 1, "surrogate token is id `world`");
+    }
+
+    #[test]
+    fn bag_roundtrip_rejects_non_multisets() {
+        assert_eq!(f32_to_bag(&[1.0, 0.0, 2.0], 3), Some(vec![1, 0, 2]));
+        assert_eq!(f32_to_bag(&[1.5], 2), None, "fractional counts are not tokens");
+        assert_eq!(f32_to_bag(&[-1.0], 2), None, "negative mass is not a multiset");
+        assert_eq!(f32_to_bag(&[1.0, 1.0, 1.0], 2), None, "universe overflow");
+        let bag = vec![2u8, 0, 1];
+        assert_eq!(f32_to_bag(&bag_to_f32(&bag), 3), Some(bag));
+    }
+
+    #[test]
+    fn quiet_script_steps_to_clean_quiescence() {
+        let script = quiet(2);
+        let t = Transitions::real();
+        let mut s = ProtocolState::initial(&script);
+        // drive one deterministic schedule to the end
+        let mut guard = 0;
+        loop {
+            let acts = s.enabled_actions(&script);
+            let Some(&a) = acts.first() else { break };
+            s = s.apply(a, &script, &t).expect("no violation on the real protocol");
+            guard += 1;
+            assert!(guard < 100, "schedule failed to quiesce");
+        }
+        assert!(s.classify_terminal(&script).is_ok());
+        assert_eq!(s.step, 2);
+        assert_eq!(s.total_mass(), 2, "stepping is mass-neutral");
+    }
+
+    #[test]
+    fn violation_kinds_are_distinct_and_displayable() {
+        let all = [
+            ProtocolViolation::MassNotConserved { action: "x".into(), missing: 1 },
+            ProtocolViolation::MassDuplicated { action: "x".into(), excess: 1 },
+            ProtocolViolation::SurvivorStateChanged { action: "x".into(), rank: 0 },
+            ProtocolViolation::MisroutedFold { action: "x".into(), rank: 1 },
+            ProtocolViolation::StaleExport { rank: 0, observed: 1, expected: 0 },
+            ProtocolViolation::StaleLayoutStep { rank: 0, have: 0, want: 1 },
+            ProtocolViolation::TornStepDivergence { rank: 0, steps_done: 1, step: 0 },
+            ProtocolViolation::ExportMissed { rank: 0 },
+            ProtocolViolation::DuplicateExport { rank: 0 },
+            ProtocolViolation::Deadlock { detail: "x".into() },
+            ProtocolViolation::WorldInvalid { detail: "x".into() },
+            ProtocolViolation::ShapeMismatch { got: 1, want: 2 },
+            ProtocolViolation::SeedReplay { generation: 1 },
+            ProtocolViolation::StateBoundExceeded { states: 1 },
+        ];
+        let kinds: std::collections::HashSet<&str> =
+            all.iter().map(|v| v.kind()).collect();
+        assert_eq!(kinds.len(), all.len(), "kind() must be injective over variants");
+        for v in &all {
+            assert!(!v.to_string().is_empty());
+        }
+    }
+}

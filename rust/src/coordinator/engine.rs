@@ -21,14 +21,17 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::analysis::verify_schedule;
 use crate::comm::topology::{Collective, LevelBytes};
 use crate::compress::{CommRecord, Scheme, SchemeKind};
 use crate::config::{ExecBackend, Optimizer, RunConfig};
 use crate::coordinator::bucketizer::{bucketize, Bucket};
-use crate::coordinator::membership::{redistribute, MembershipAction};
+use crate::coordinator::membership::{
+    export_skip, generation_seed, next_cluster, redistribute, validated_next_world,
+    MembershipAction,
+};
 use crate::covap::{shard_buckets, EfScheduler, IntervalController, IntervalDecision};
 use crate::data::{DataShard, SyntheticCorpus};
 use crate::exec::{
@@ -485,7 +488,9 @@ impl DpEngine {
     }
 
     fn step_threaded(&mut self) -> Result<StepData> {
-        let exec = self.exec.as_mut().expect("threaded backend");
+        let Some(exec) = self.exec.as_mut() else {
+            bail!("step_threaded called without a threaded backend");
+        };
         let out = exec.step(
             self.step,
             Arc::new(self.params.clone()),
@@ -738,19 +743,10 @@ impl DpEngine {
     pub fn apply_membership(&mut self, action: MembershipAction) -> Result<()> {
         let t0 = Instant::now();
         let old_world = self.cfg.workers;
-        let new_world = action.next_world(old_world);
-        ensure!(
-            new_world >= 1,
-            "membership action {} would empty the world",
-            action.spec()
-        );
-        if let MembershipAction::Fail { rank } | MembershipAction::Leave { rank } = action {
-            ensure!(
-                rank < old_world,
-                "membership action {}: rank outside the world of {old_world}",
-                action.spec()
-            );
-        }
+        // the pure transition functions below (validated_next_world,
+        // export_skip, next_cluster, generation_seed, redistribute) are
+        // shared with the protocol model checker — see analysis::checker
+        let new_world = validated_next_world(old_world, action)?;
 
         // 1. export: every old rank's EF residuals, flattened over the
         //    current tensor layout. A *failed* rank's threads may already
@@ -759,13 +755,7 @@ impl DpEngine {
         let layout: Vec<(usize, usize)> =
             self.tensors.iter().map(|t| (t.offset, t.numel)).collect();
         let states: Vec<Option<Vec<f32>>> = match self.exec.as_mut() {
-            Some(exec) => {
-                let skip = match action {
-                    MembershipAction::Fail { rank } => Some(rank),
-                    _ => None,
-                };
-                exec.export_states(&layout, skip)
-            }
+            Some(exec) => exec.export_states(&layout, export_skip(action)),
             None => (0..old_world)
                 .map(|r| self.scheme.export_residuals(r, &layout))
                 .collect(),
@@ -778,12 +768,8 @@ impl DpEngine {
         //    fresh accounting schedule is verified before use
         self.generation += 1;
         self.cfg.workers = new_world;
-        let gpn = self.cfg.cluster.gpus_per_node.max(1);
-        self.cfg.cluster = if new_world % gpn == 0 {
-            ClusterSpec::new(new_world / gpn, gpn)
-        } else {
-            ClusterSpec::new(new_world, 1)
-        };
+        let (nodes, gpn) = next_cluster(new_world, self.cfg.cluster.gpus_per_node);
+        self.cfg.cluster = ClusterSpec::new(nodes, gpn);
         self.topo = self.cfg.topology.resolve(self.cfg.cluster);
         let acct_sched = self.topo.allgather_schedule(self.cfg.cluster);
         verify_schedule(&acct_sched).map_err(|v| {
@@ -794,8 +780,7 @@ impl DpEngine {
         // 4. fresh deterministic shards for the new generation (the
         //    generation-mixed seed keeps both backends identical while
         //    never replaying the pre-event stream)
-        let gseed =
-            self.cfg.seed ^ self.generation.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let gseed = generation_seed(self.cfg.seed, self.generation);
         let dims = self.arts.manifest.dims.clone();
         let corpus = SyntheticCorpus::new(dims.vocab);
         let make_shards = || -> Vec<DataShard> {

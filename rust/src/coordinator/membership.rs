@@ -32,7 +32,7 @@
 use anyhow::{bail, Result};
 
 /// One membership change, applied at a step boundary.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MembershipAction {
     /// Rank dies without warning (crash, OOM, fabric partition). Its
     /// residuals are unrecoverable; the deterministic surrogate rule
@@ -66,7 +66,7 @@ impl MembershipAction {
 }
 
 /// A scheduled membership event: `action` fires before step `at_step`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MembershipEvent {
     pub at_step: u64,
     pub action: MembershipAction,
@@ -151,6 +151,70 @@ pub fn world_evolution(initial: usize, events: &[MembershipEvent]) -> Result<(us
         max_w = max_w.max(world);
     }
     Ok((min_w, max_w))
+}
+
+// ---- pure transition functions --------------------------------------
+//
+// Every re-world decision the engine makes is factored out here so the
+// protocol model checker (`analysis::model` / `analysis::checker`) drives
+// the *same* transition implementation the engine runs — a divergence
+// between "what we prove" and "what we ship" is a compile error, not a
+// hand-mirroring bug. All four are total, allocation-free and
+// deterministic; `DpEngine::apply_membership` is a thin impure shell
+// around them (export, thread respawn, observability).
+
+/// Validate `action` against the world it fires in and return the world
+/// size after it — the guard `apply_membership` runs before touching any
+/// state. Rejects out-of-range ranks and emptying the world.
+pub fn validated_next_world(world: usize, action: MembershipAction) -> Result<usize> {
+    if let MembershipAction::Fail { rank } | MembershipAction::Leave { rank } = action {
+        if rank >= world {
+            bail!(
+                "membership action {}: rank outside the world of {world}",
+                action.spec()
+            );
+        }
+    }
+    let next = action.next_world(world);
+    if next == 0 {
+        bail!("membership action {} would empty the world", action.spec());
+    }
+    Ok(next)
+}
+
+/// Which old rank the export collector must skip: a *failed* rank's
+/// threads may already be dead, so no `ExportState` is sent to it (its
+/// state is unrecoverable and the surrogate rule applies either way).
+/// Leavers are alive and must export — exactly once.
+// xtask: hot-path
+pub fn export_skip(action: MembershipAction) -> Option<usize> {
+    match action {
+        MembershipAction::Fail { rank } => Some(rank),
+        MembershipAction::Leave { .. } | MembershipAction::Join { .. } => None,
+    }
+}
+
+/// Cluster shape for the re-worlded fleet: preserve the machine's
+/// gpus-per-node when the new world still fills whole nodes, else fall
+/// back to one flat rank per node. Returns `(nodes, gpus_per_node)`;
+/// the product is always exactly `new_world`.
+// xtask: hot-path
+pub fn next_cluster(new_world: usize, gpus_per_node: usize) -> (usize, usize) {
+    let gpn = gpus_per_node.max(1);
+    if new_world % gpn == 0 {
+        (new_world / gpn, gpn)
+    } else {
+        (new_world, 1)
+    }
+}
+
+/// The generation-mixed data/scheme seed: both backends rebuild shards
+/// and schemes from `(kind, world, generation_seed(..))`, so they stay
+/// bitwise identical across a re-world while never replaying the
+/// pre-event sample stream (`generation >= 1` always perturbs the seed).
+// xtask: hot-path
+pub fn generation_seed(seed: u64, generation: u64) -> u64 {
+    seed ^ generation.wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// The pure heart of the re-world: map the old world's per-rank flattened
@@ -265,6 +329,45 @@ mod tests {
         // out-of-order steps
         let ev = parse_membership_schedule("5:join,2:join").unwrap();
         assert!(world_evolution(2, &ev).is_err());
+    }
+
+    #[test]
+    fn validated_next_world_guards_the_transition() {
+        assert_eq!(validated_next_world(3, MembershipAction::Fail { rank: 2 }).unwrap(), 2);
+        assert_eq!(validated_next_world(2, MembershipAction::Leave { rank: 0 }).unwrap(), 1);
+        assert_eq!(validated_next_world(1, MembershipAction::Join { count: 4 }).unwrap(), 5);
+        assert!(validated_next_world(2, MembershipAction::Fail { rank: 2 }).is_err());
+        assert!(validated_next_world(1, MembershipAction::Leave { rank: 0 }).is_err());
+    }
+
+    #[test]
+    fn export_skip_only_skips_failed_ranks() {
+        assert_eq!(export_skip(MembershipAction::Fail { rank: 3 }), Some(3));
+        assert_eq!(export_skip(MembershipAction::Leave { rank: 3 }), None);
+        assert_eq!(export_skip(MembershipAction::Join { count: 1 }), None);
+    }
+
+    #[test]
+    fn next_cluster_preserves_gpn_when_divisible() {
+        assert_eq!(next_cluster(8, 4), (2, 4));
+        assert_eq!(next_cluster(7, 4), (7, 1));
+        assert_eq!(next_cluster(3, 0), (3, 1)); // degenerate gpn clamps to 1
+        for world in 1..=17usize {
+            for gpn in 0..=5usize {
+                let (n, g) = next_cluster(world, gpn);
+                assert_eq!(n * g, world, "cluster shape must cover the world exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn generation_seed_never_replays_the_base_stream() {
+        assert_eq!(generation_seed(42, 0), 42);
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(42u64);
+        for gen in 1..=64u64 {
+            assert!(seen.insert(generation_seed(42, gen)), "seed replayed at gen {gen}");
+        }
     }
 
     fn bits(v: &[f32]) -> Vec<u32> {

@@ -36,7 +36,7 @@ pub mod timeline;
 pub mod validate;
 
 pub use barrier::Barrier;
-pub use rank::{fnv1a_f32, Cmd, RankMsg, RankStepResult, StepSpec};
+pub use rank::{fifo_layout_gen_at, fnv1a_f32, Cmd, CmdTag, RankMsg, RankStepResult, StepSpec};
 pub use ring::{
     allgather_frames, allgather_payloads, allgather_sched, broadcast_abort, make_mesh,
     ring_allreduce_threaded, GatherScratch, MeshError, MeshLink, Pacer, PacerSet, RetryPolicy,

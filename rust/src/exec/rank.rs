@@ -76,6 +76,59 @@ pub enum Cmd {
     Shutdown,
 }
 
+impl Cmd {
+    /// The payload-free tag of this command — the shape the FIFO-ordering
+    /// argument (and the protocol model checker) reasons over.
+    pub fn tag(&self) -> CmdTag {
+        match self {
+            Cmd::Step(_) => CmdTag::Step,
+            Cmd::Reconfigure { .. } => CmdTag::Reconfigure,
+            Cmd::SetPacer(_) => CmdTag::SetPacer,
+            Cmd::SetWork(_) => CmdTag::SetWork,
+            Cmd::Fail { .. } => CmdTag::Fail,
+            Cmd::ExportState { .. } => CmdTag::ExportState,
+            Cmd::Shutdown => CmdTag::Shutdown,
+        }
+    }
+}
+
+/// Payload-free mirror of [`Cmd`], one variant per variant (kept in sync
+/// by [`Cmd::tag`]'s exhaustive match). `analysis::model` builds rank
+/// command queues out of these, so the checker explores exactly the
+/// command vocabulary the real compute thread consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmdTag {
+    Step,
+    Reconfigure,
+    SetPacer,
+    SetWork,
+    Fail,
+    ExportState,
+    Shutdown,
+}
+
+/// The per-rank command queue's FIFO semantics as a pure function: given
+/// the shard-layout generation a rank currently holds and its queued
+/// commands in enqueue order, the generation the command at `idx`
+/// observes when the compute thread processes the queue head-first. Only
+/// [`Cmd::Reconfigure`] advances the layout, so
+/// `observed(idx) = start + #Reconfigures strictly before idx` — this is
+/// the whole "an export can never be sliced by a stale layout" argument
+/// ([`Cmd::ExportState`]'s doc), stated executably. The engine enqueues
+/// any `Reconfigure` *before* the `ExportState` it must cover; FIFO
+/// delivery does the rest. Shared by `compute_main` reasoning, the loom
+/// models (C/D) and the protocol checker's stale-layout invariant.
+// xtask: hot-path
+pub fn fifo_layout_gen_at(start: u8, queue: &[CmdTag], idx: usize) -> u8 {
+    let mut gen = start;
+    for tag in queue.iter().take(idx) {
+        if matches!(tag, CmdTag::Reconfigure) {
+            gen = gen.saturating_add(1);
+        }
+    }
+    gen
+}
+
 /// One step's shared inputs (cheap to clone: Arcs + scalars).
 #[derive(Clone)]
 pub struct StepSpec {
@@ -558,5 +611,35 @@ mod tests {
         assert_ne!(fnv1a_f32(&[0.0]), fnv1a_f32(&[-0.0]), "must see sign bits");
         assert_eq!(fnv1a_f32(&[1.0, 2.0]), fnv1a_f32(&[1.0, 2.0]));
         assert_ne!(fnv1a_f32(&[1.0, 2.0]), fnv1a_f32(&[2.0, 1.0]));
+    }
+
+    #[test]
+    fn fifo_ordering_semantics_are_positional() {
+        use CmdTag::*;
+        // reconfigure-before-export: the export observes the NEW layout
+        let q = [Reconfigure, ExportState];
+        assert_eq!(fifo_layout_gen_at(0, &q, 0), 0, "the reconfigure itself runs on the old");
+        assert_eq!(fifo_layout_gen_at(0, &q, 1), 1, "the export observes the new layout");
+        // export-before-reconfigure would observe the stale one
+        let q = [ExportState, Reconfigure];
+        assert_eq!(fifo_layout_gen_at(3, &q, 0), 3);
+        // non-reconfigure traffic never perturbs the layout
+        let q = [Step, SetPacer, SetWork, Fail, Shutdown, ExportState];
+        assert_eq!(fifo_layout_gen_at(7, &q, 5), 7);
+        // multiple reconfigures accumulate in order
+        let q = [Reconfigure, Step, Reconfigure, ExportState];
+        assert_eq!(fifo_layout_gen_at(0, &q, 3), 2);
+    }
+
+    #[test]
+    fn cmd_tags_mirror_every_variant() {
+        assert_eq!(Cmd::Shutdown.tag(), CmdTag::Shutdown);
+        assert_eq!(Cmd::SetWork(1).tag(), CmdTag::SetWork);
+        assert_eq!(Cmd::Fail { reason: String::new() }.tag(), CmdTag::Fail);
+        assert_eq!(Cmd::ExportState { layout: vec![] }.tag(), CmdTag::ExportState);
+        assert_eq!(
+            Cmd::Reconfigure { kind: SchemeKind::Baseline, old: vec![], new: vec![] }.tag(),
+            CmdTag::Reconfigure
+        );
     }
 }

@@ -20,7 +20,18 @@
 //!             statically verify every collective topology's hop schedule
 //!             (deadlock-freedom, exactly-once delivery, strictly-earlier
 //!             sourcing, bounded in-flight frames, wire-byte conservation)
-//!             over cluster shapes up to P=1024; writes a bench doc
+//!             over cluster shapes up to P=1024 — including the evolved
+//!             post-membership-event shapes the elastic engine rebuilds
+//!             onto; writes a bench doc
+//!   check-protocol  [--min-world N] [--max-world N] [--steps N]
+//!             [--max-states N] [--json PATH]
+//!             exhaustively model-check the elastic membership protocol
+//!             (DESIGN.md §13): BFS over every interleaving of scheduled
+//!             and detected fail/join/leave events, proving EF-mass
+//!             conservation, exactly-once export, FIFO reconfigure/export
+//!             ordering, uniform torn-step skipping and deadlock-free
+//!             quiescence on the production transition functions, then
+//!             run the seeded-mutant self-test; writes a bench doc
 //!
 //! train also accepts --backend analytic|threaded, --policy overlap|seq,
 //! --topology ring|hier|tree|auto (collective topology: flat ring,
@@ -62,6 +73,7 @@ fn main() -> Result<()> {
         Some("simulate") => simulate(&args),
         Some("exec") => exec_cmd(&args),
         Some("verify-schedules") => verify_schedules(&args),
+        Some("check-protocol") => check_protocol(&args),
         Some("schemes") => {
             for k in SchemeKind::evaluation_set() {
                 println!("{}", k.label());
@@ -73,7 +85,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand '{o}'");
             }
             eprintln!(
-                "usage: covap <smoke|train|profile|simulate|exec|verify-schedules|schemes> [flags]"
+                "usage: covap <smoke|train|profile|simulate|exec|verify-schedules|check-protocol|schemes> [flags]"
             );
             std::process::exit(2);
         }
@@ -214,6 +226,7 @@ fn exec_cmd(args: &Args) -> Result<()> {
 fn verify_schedules(args: &Args) -> Result<()> {
     use covap::analysis::{verify_frame_lengths, verify_schedule, wire_conservation};
     use covap::comm::{Collective as _, TopologyKind};
+    use covap::coordinator::membership::{next_cluster, MembershipAction};
     use covap::util::json::Json;
 
     let t0 = std::time::Instant::now();
@@ -242,54 +255,161 @@ fn verify_schedules(args: &Args) -> Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut checked = 0usize;
     let mut max_world = 0usize;
+    let mut evolved_checked = 0usize;
     for kind in TopologyKind::all() {
         for &(nodes, g) in shapes {
-            let c = ClusterSpec::new(nodes, g);
-            let p = c.world();
-            let topo = kind.resolve(c);
-            let sched = topo.allgather_schedule(c);
-            let report = verify_schedule(&sched).map_err(|v| {
-                anyhow::anyhow!("{} on {nodes}x{g}: INVALID schedule: {v}", topo.name())
-            })?;
-            let mut wire_total = 0usize;
-            for scheme in SchemeKind::evaluation_set() {
-                let len = covap::harness::wire_bytes(&scheme, TENSOR_NUMEL);
-                let lens = vec![len; p];
-                verify_frame_lengths(&scheme, TENSOR_NUMEL, &lens).map_err(|v| {
-                    anyhow::anyhow!("{}: frame-length check failed: {v}", scheme.label())
-                })?;
-                let wire = wire_conservation(&sched, &lens).map_err(|v| {
-                    anyhow::anyhow!(
-                        "{} on {nodes}x{g} ({}): wire conservation failed: {v}",
-                        topo.name(),
-                        scheme.label()
-                    )
-                })?;
-                wire_total = wire_total.max(wire.total_sent);
+            // the static shape, then every shape the elastic engine can
+            // rebuild onto after one membership event — re-derived
+            // through the same `next_cluster` rule `apply_membership`
+            // uses, so the generation-mixed worlds PR 8 builds are
+            // certified before any rank thread is spawned onto them
+            let p0 = ClusterSpec::new(nodes, g).world();
+            let mut variants: Vec<(usize, usize, String)> =
+                vec![(nodes, g, String::new())];
+            let events = [
+                MembershipAction::Fail { rank: 0 },
+                MembershipAction::Leave { rank: p0.saturating_sub(1) },
+                MembershipAction::Join { count: 1 },
+            ];
+            for action in events {
+                let evolved = action.next_world(p0);
+                if evolved == 0 || evolved == p0 {
+                    continue; // event would empty (or not change) this world
+                }
+                let (n2, g2) = next_cluster(evolved, g);
+                variants.push((n2, g2, action.spec()));
             }
-            rows.push(Json::obj(vec![
-                ("topology", Json::Str(topo.name().to_string())),
-                ("nodes", Json::Num(nodes as f64)),
-                ("gpus_per_node", Json::Num(g as f64)),
-                ("world", Json::Num(p as f64)),
-                ("hops", Json::Num(report.hops as f64)),
-                ("rounds", Json::Num(report.rounds as f64)),
-                ("max_recv", Json::Num(report.max_recv as f64)),
-                ("max_in_flight", Json::Num(report.max_in_flight as f64)),
-                ("epoch_skew", Json::Num(report.epoch_skew as f64)),
-                ("wire_total_sent", Json::Num(wire_total as f64)),
-                ("verify_s", Json::Num(t0.elapsed().as_secs_f64())),
-            ]));
-            checked += 1;
-            max_world = max_world.max(p);
+            for (vn, vg, event) in variants {
+                let c = ClusterSpec::new(vn, vg);
+                let p = c.world();
+                let topo = kind.resolve(c);
+                let sched = topo.allgather_schedule(c);
+                let report = verify_schedule(&sched).map_err(|v| {
+                    anyhow::anyhow!("{} on {vn}x{vg}: INVALID schedule: {v}", topo.name())
+                })?;
+                let mut wire_total = 0usize;
+                for scheme in SchemeKind::evaluation_set() {
+                    let len = covap::harness::wire_bytes(&scheme, TENSOR_NUMEL);
+                    let lens = vec![len; p];
+                    verify_frame_lengths(&scheme, TENSOR_NUMEL, &lens).map_err(|v| {
+                        anyhow::anyhow!("{}: frame-length check failed: {v}", scheme.label())
+                    })?;
+                    let wire = wire_conservation(&sched, &lens).map_err(|v| {
+                        anyhow::anyhow!(
+                            "{} on {vn}x{vg} ({}): wire conservation failed: {v}",
+                            topo.name(),
+                            scheme.label()
+                        )
+                    })?;
+                    wire_total = wire_total.max(wire.total_sent);
+                }
+                if !event.is_empty() {
+                    evolved_checked += 1;
+                }
+                rows.push(Json::obj(vec![
+                    ("topology", Json::Str(topo.name().to_string())),
+                    ("nodes", Json::Num(vn as f64)),
+                    ("gpus_per_node", Json::Num(vg as f64)),
+                    ("event", Json::Str(event)),
+                    ("world", Json::Num(p as f64)),
+                    ("hops", Json::Num(report.hops as f64)),
+                    ("rounds", Json::Num(report.rounds as f64)),
+                    ("max_recv", Json::Num(report.max_recv as f64)),
+                    ("max_in_flight", Json::Num(report.max_in_flight as f64)),
+                    ("epoch_skew", Json::Num(report.epoch_skew as f64)),
+                    ("wire_total_sent", Json::Num(wire_total as f64)),
+                    ("verify_s", Json::Num(t0.elapsed().as_secs_f64())),
+                ]));
+                checked += 1;
+                max_world = max_world.max(p);
+            }
         }
     }
     let out = args.get_or("json", "BENCH_schedule_verify.json");
     covap::harness::write_bench_doc(Path::new(&out), "schedule_verify", rows)?;
     println!(
-        "verify-schedules: {} topology x shape combinations OK (max P = {}) in {}",
+        "verify-schedules: {} topology x shape combinations OK ({} post-membership-event shapes, max P = {}) in {}",
         checked,
+        evolved_checked,
         max_world,
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Exhaustively model-check the elastic membership protocol (DESIGN.md
+/// §13): for every world size in `[--min-world, --max-world]`, explore
+/// every interleaving of the auto-enumerated scheduled + detected
+/// fail/join/leave scripts over the production transition functions,
+/// then run the seeded-mutant self-test that proves each invariant
+/// would fire. Emits one bench-doc row per world plus one per mutant;
+/// the final summary row carries the CI state-count budget gate.
+fn check_protocol(args: &Args) -> Result<()> {
+    use covap::analysis::{check_world, run_self_test, Bounds, Transitions};
+    use covap::util::json::Json;
+
+    let t0 = std::time::Instant::now();
+    let min_world: usize = args.get_parsed("min-world", 2usize)?;
+    let max_world: usize = args.get_parsed("max-world", 5usize)?;
+    let steps: u8 = args.get_parsed("steps", 2u8)?;
+    let max_states: usize = args.get_parsed("max-states", 500_000usize)?;
+    if min_world < 2 || max_world < min_world {
+        bail!("check-protocol: need 2 <= --min-world <= --max-world");
+    }
+    let bounds = Bounds { max_states };
+    let real = Transitions::real();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut total_states = 0usize;
+    let mut total_scripts = 0usize;
+    let mut total_transitions = 0usize;
+    let mut max_depth = 0usize;
+    for world in min_world..=max_world {
+        let rep = check_world(world, steps, &real, &bounds).map_err(|(label, v)| {
+            anyhow::anyhow!("protocol violation [{}] in script {label}: {v}", v.kind())
+        })?;
+        println!(
+            "world {world}: {} scripts, {} states, {} transitions, depth {}, {} terminals",
+            rep.scripts, rep.states, rep.transitions, rep.max_depth, rep.terminals
+        );
+        rows.push(Json::obj(vec![
+            ("world", Json::Num(world as f64)),
+            ("steps", Json::Num(steps as f64)),
+            ("scripts", Json::Num(rep.scripts as f64)),
+            ("states", Json::Num(rep.states as f64)),
+            ("transitions", Json::Num(rep.transitions as f64)),
+            ("max_depth", Json::Num(rep.max_depth as f64)),
+            ("terminals", Json::Num(rep.terminals as f64)),
+        ]));
+        total_states += rep.states;
+        total_scripts += rep.scripts;
+        total_transitions += rep.transitions;
+        max_depth = max_depth.max(rep.max_depth);
+    }
+    let caught = run_self_test(&bounds)
+        .map_err(|e| anyhow::anyhow!("seeded-mutant self-test FAILED: {e}"))?;
+    for &(name, kind) in &caught {
+        rows.push(Json::obj(vec![
+            ("mutant", Json::Str(name.to_string())),
+            ("caught_as", Json::Str(kind.to_string())),
+        ]));
+    }
+    rows.push(Json::obj(vec![
+        ("summary", Json::Num(1.0)),
+        ("total_states", Json::Num(total_states as f64)),
+        ("total_scripts", Json::Num(total_scripts as f64)),
+        ("total_transitions", Json::Num(total_transitions as f64)),
+        ("max_depth", Json::Num(max_depth as f64)),
+        ("mutants_caught", Json::Num(caught.len() as f64)),
+        ("check_s", Json::Num(t0.elapsed().as_secs_f64())),
+    ]));
+    let out = args.get_or("json", "BENCH_protocol_check.json");
+    covap::harness::write_bench_doc(Path::new(&out), "protocol_check", rows)?;
+    println!(
+        "check-protocol: worlds {min_world}-{max_world} exhaustive ({total_scripts} \
+         scripts, {total_states} states, {total_transitions} transitions, depth <= \
+         {max_depth}); {} seeded mutants each caught with a distinct violation; in {}",
+        caught.len(),
         fmt_secs(t0.elapsed().as_secs_f64())
     );
     println!("wrote {out}");

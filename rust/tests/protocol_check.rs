@@ -1,0 +1,210 @@
+//! Protocol model checking, from the outside (DESIGN.md §13).
+//!
+//! Three halves:
+//! * the **real-transition sweep** — exhaustively explore every
+//!   auto-enumerated interleaving of scheduled and detected
+//!   fail/join/leave events for worlds 2–5 over the *production*
+//!   transition functions (`membership::redistribute`,
+//!   `validated_next_world`, `export_skip`, `next_cluster`,
+//!   `generation_seed`, `exec::fifo_layout_gen_at`) and require zero
+//!   violations;
+//! * the **tentpole seeded mutants** — lost residual on eviction, export
+//!   after rebuild, double-fold of the surrogate, barrier-skip
+//!   divergence — each must be rejected with its own distinct
+//!   `ProtocolViolation` variant;
+//! * the **redistribute mutation tests** (mirroring the PR 7
+//!   schedule-mutation pattern) — drop a survivor's residual, fold the
+//!   surrogate twice, route the leaver's export to the wrong rank — each
+//!   likewise caught with a distinct variant, asserted by discriminant
+//!   so a Display rewording can't silently merge two diagnoses.
+
+use std::mem::discriminant;
+
+use covap::analysis::checker::{self, mutants};
+use covap::analysis::{
+    check_script, check_world, enumerate_scripts, Bounds, ProtocolViolation, Script,
+    Transitions,
+};
+use covap::coordinator::membership::MembershipAction;
+
+fn leave0_world3() -> Script {
+    Script {
+        world: 3,
+        gpn: 1,
+        steps: 2,
+        scheduled: vec![(0, MembershipAction::Leave { rank: 0 })],
+        detected: vec![],
+    }
+}
+
+fn fail0_world3() -> Script {
+    Script {
+        world: 3,
+        gpn: 1,
+        steps: 2,
+        scheduled: vec![(0, MembershipAction::Fail { rank: 0 })],
+        detected: vec![],
+    }
+}
+
+fn detected_world3() -> Script {
+    Script { world: 3, gpn: 1, steps: 2, scheduled: vec![], detected: vec![2] }
+}
+
+fn must_catch(name: &str, t: &Transitions, script: &Script) -> ProtocolViolation {
+    match check_script(script, t, &Bounds::default()) {
+        Ok(rep) => panic!(
+            "mutant '{name}' escaped: {} states on {} with no violation",
+            rep.states,
+            script.label()
+        ),
+        Err(v) => v,
+    }
+}
+
+// ---- the real transition functions: zero violations, worlds 2..=5 ----
+
+#[test]
+fn real_protocol_is_violation_free_for_worlds_2_through_5() {
+    let real = Transitions::real();
+    let bounds = Bounds::default();
+    for world in 2..=5 {
+        let rep = check_world(world, 2, &real, &bounds).unwrap_or_else(|(label, v)| {
+            panic!("world {world}, script {label}: [{}] {v}", v.kind())
+        });
+        assert!(rep.scripts >= 10, "world {world}: enumeration shrank to {}", rep.scripts);
+        assert!(
+            rep.states > 100,
+            "world {world}: only {} states — interleavings are not being explored",
+            rep.states
+        );
+        assert!(rep.terminals > 0, "world {world}: no terminal states reached");
+    }
+}
+
+#[test]
+fn detected_failures_are_explored_at_every_point() {
+    // a detected-failure script must branch far wider than the quiet
+    // baseline: the failure can strike before, between and inside both
+    // barriers, and also never fire at all
+    let quiet = Script { world: 3, gpn: 1, steps: 2, scheduled: vec![], detected: vec![] };
+    let real = Transitions::real();
+    let b = Bounds::default();
+    let quiet_rep = check_script(&quiet, &real, &b).expect("quiet script clean");
+    let det_rep = check_script(&detected_world3(), &real, &b).expect("detected script clean");
+    assert!(
+        det_rep.states > 2 * quiet_rep.states,
+        "detected-failure branching collapsed: {} vs quiet {}",
+        det_rep.states,
+        quiet_rep.states
+    );
+    // `FireDetected` stays enabled until it fires, so every maximal path
+    // eventually takes it: the never-fired prefix is explored and checked
+    // but the only quiescent terminal is post-fold
+    assert!(det_rep.terminals >= 1, "detected script must reach quiescence");
+}
+
+// ---- tentpole seeded mutants: distinct violation variants ------------
+
+#[test]
+fn tentpole_mutants_each_caught_with_a_distinct_variant() {
+    let caught = [
+        must_catch(
+            "lost-residual-on-eviction",
+            &mutants::lost_residual_on_eviction(),
+            &fail0_world3(),
+        ),
+        must_catch("export-after-rebuild", &mutants::export_after_rebuild(), &leave0_world3()),
+        must_catch("double-fold-surrogate", &mutants::double_fold_surrogate(), &fail0_world3()),
+        must_catch(
+            "barrier-skip-divergence",
+            &mutants::barrier_skip_divergence(),
+            &detected_world3(),
+        ),
+    ];
+    assert!(matches!(caught[0], ProtocolViolation::MassNotConserved { .. }), "{}", caught[0]);
+    assert!(matches!(caught[1], ProtocolViolation::StaleExport { .. }), "{}", caught[1]);
+    assert!(matches!(caught[2], ProtocolViolation::MassDuplicated { .. }), "{}", caught[2]);
+    assert!(
+        matches!(caught[3], ProtocolViolation::TornStepDivergence { .. }),
+        "{}",
+        caught[3]
+    );
+    let kinds: std::collections::HashSet<_> = caught.iter().map(discriminant).collect();
+    assert_eq!(kinds.len(), caught.len(), "tentpole mutants must map to distinct variants");
+}
+
+// ---- redistribute mutation tests (PR 7 pattern) ----------------------
+
+#[test]
+fn redistribute_mutants_each_caught_with_a_distinct_variant() {
+    let caught = [
+        must_catch(
+            "drop-survivor-residual",
+            &mutants::drop_survivor_residual(),
+            &leave0_world3(),
+        ),
+        must_catch("double-fold-surrogate", &mutants::double_fold_surrogate(), &fail0_world3()),
+        must_catch("misroute-fold", &mutants::misroute_fold(), &leave0_world3()),
+    ];
+    assert!(
+        matches!(caught[0], ProtocolViolation::SurvivorStateChanged { .. }),
+        "{}",
+        caught[0]
+    );
+    assert!(matches!(caught[1], ProtocolViolation::MassDuplicated { .. }), "{}", caught[1]);
+    assert!(matches!(caught[2], ProtocolViolation::MisroutedFold { .. }), "{}", caught[2]);
+    let kinds: std::collections::HashSet<_> = caught.iter().map(discriminant).collect();
+    assert_eq!(kinds.len(), caught.len(), "redistribute mutants must map to distinct variants");
+}
+
+#[test]
+fn exactly_once_export_mutants_are_caught() {
+    let missed =
+        must_catch("skip-leaver-export", &mutants::skip_leaver_export(), &leave0_world3());
+    assert!(matches!(missed, ProtocolViolation::ExportMissed { rank: 0 }), "{missed}");
+    let dup =
+        must_catch("double-export-request", &mutants::double_export_request(), &fail0_world3());
+    assert!(matches!(dup, ProtocolViolation::DuplicateExport { .. }), "{dup}");
+}
+
+// ---- the CLI's battery, end to end -----------------------------------
+
+#[test]
+fn cli_self_test_battery_passes_and_is_distinct() {
+    let caught = checker::run_self_test(&Bounds::default()).expect("self-test battery");
+    let kinds: std::collections::HashSet<&str> = caught.iter().map(|&(_, k)| k).collect();
+    assert_eq!(caught.len(), checker::self_test_cases().len());
+    assert_eq!(kinds.len(), caught.len(), "every mutant needs its own violation kind");
+}
+
+#[test]
+fn mutant_scripts_are_clean_under_real_transitions() {
+    // the mutants are caught because of the *transition swap*, not
+    // because the scripts themselves are unsatisfiable
+    let real = Transitions::real();
+    for script in [leave0_world3(), fail0_world3(), detected_world3()] {
+        let rep = check_script(&script, &real, &Bounds::default())
+            .unwrap_or_else(|v| panic!("{}: [{}] {v}", script.label(), v.kind()));
+        assert!(rep.states > 0);
+    }
+}
+
+#[test]
+fn enumerated_scripts_fit_comfortably_inside_default_bounds() {
+    // the CI gate budgets on total state count; each individual script
+    // must stay far from the per-script ceiling so the sweep's cost is
+    // additive, not cliff-shaped
+    let real = Transitions::real();
+    let bounds = Bounds::default();
+    for script in enumerate_scripts(5, 2) {
+        let rep = check_script(&script, &real, &bounds)
+            .unwrap_or_else(|v| panic!("{}: [{}] {v}", script.label(), v.kind()));
+        assert!(
+            rep.states < bounds.max_states / 4,
+            "{}: {} states is within 4x of the ceiling",
+            script.label(),
+            rep.states
+        );
+    }
+}

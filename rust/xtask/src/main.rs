@@ -16,6 +16,21 @@
 //!    `obs/log.rs` (the leveled logger), `main.rs` (CLI output) and
 //!    `util/bench.rs` (bench tables); everything else must use the
 //!    `obs::log` macros so verbosity stays centrally gated.
+//! 4. **no-unwrap-in-recovery** — `coordinator/membership.rs`,
+//!    `coordinator/engine.rs` and everything under `analysis/` must not
+//!    call `.unwrap()` / `.expect(` outside `#[cfg(test)]` regions: these
+//!    are the elastic recovery paths and their proof layer — a panic
+//!    while re-worlding turns a survivable rank failure into a full-run
+//!    abort, so errors must flow as typed values (`anyhow::Result`,
+//!    `ProtocolViolation`). `analysis/loom_model.rs` is exempt: under
+//!    loom, a panic *is* the failure signal the exhaustive scheduler
+//!    reports.
+//!
+//! The hot-path rule also covers the factored-out pure transition
+//! functions shared by the engine and the protocol model checker
+//! (`coordinator/membership.rs`, `exec/rank.rs`): they run once per
+//! delivered command / membership fold, inside loops the checker drives
+//! millions of times.
 //!
 //! Dependency-free by design: the "parser" is a hand-rolled lexer that
 //! blanks comments, strings and char literals (handling nested block
@@ -27,11 +42,28 @@ use std::path::{Path, PathBuf};
 /// Files whose `// xtask: hot-path` functions are allocation-checked.
 /// Each must contain at least one marker — losing them all silently
 /// (e.g. in a refactor) is itself a violation.
-const HOT_PATH_FILES: &[&str] = &["compress/rank.rs", "compress/mod.rs", "exec/ring.rs"];
+const HOT_PATH_FILES: &[&str] = &[
+    "compress/rank.rs",
+    "compress/mod.rs",
+    "exec/ring.rs",
+    "coordinator/membership.rs",
+    "exec/rank.rs",
+];
 
 /// Worker-thread files where `.unwrap()` / `.expect(` are banned outside
 /// test regions.
 const NO_UNWRAP_FILES: &[&str] = &["exec/ring.rs", "exec/rank.rs", "exec/barrier.rs"];
+
+/// Elastic-recovery files (an entry ending in `/` covers the whole
+/// directory) where `.unwrap()` / `.expect(` are banned outside test
+/// regions: a panic mid-re-world aborts the run the recovery existed to
+/// save.
+const RECOVERY_FILES: &[&str] =
+    &["coordinator/membership.rs", "coordinator/engine.rs", "analysis/"];
+
+/// Exceptions to `RECOVERY_FILES`: loom models assert by panicking — the
+/// loom scheduler converts the panic into a counterexample trace.
+const RECOVERY_EXEMPT: &[&str] = &["analysis/loom_model.rs"];
 
 /// The only files allowed to print directly to stdout/stderr.
 const PRINT_ALLOWED: &[&str] = &["obs/log.rs", "main.rs", "util/bench.rs"];
@@ -165,6 +197,18 @@ fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
             &mut out,
         );
     }
+    if covers(RECOVERY_FILES, rel) && !RECOVERY_EXEMPT.contains(&rel) {
+        token_ban_rule(
+            rel,
+            src,
+            &stripped.text,
+            &tests,
+            &[".unwrap()", ".expect("],
+            "no-unwrap-in-recovery",
+            "recovery paths must return typed errors (anyhow::Result / ProtocolViolation), not panic",
+            &mut out,
+        );
+    }
     if !PRINT_ALLOWED.contains(&rel) {
         token_ban_rule(
             rel,
@@ -178,6 +222,12 @@ fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
         );
     }
     out
+}
+
+/// Does `rel` fall under `list`? Entries ending in `/` are directory
+/// prefixes; everything else matches exactly.
+fn covers(list: &[&str], rel: &str) -> bool {
+    list.iter().any(|e| *e == rel || (e.ends_with('/') && rel.starts_with(e)))
 }
 
 // ---- rule: hot-path allocation ban -----------------------------------
@@ -505,7 +555,7 @@ pub fn clean() -> &'static str {
     "ok"
 }
 "####;
-        assert!(lint_source("exec/rank.rs", src).is_empty());
+        assert!(lint_source("exec/barrier.rs", src).is_empty());
     }
 
     #[test]
@@ -603,7 +653,62 @@ fn f<'a, 'b>(x: &'a str, y: &'b [u8]) -> &'a str {
         // every quote-delimited literal is blanked; lifetimes survive
         assert!(s.text.contains("&'a str"));
         assert!(!s.text.contains('∞'));
-        assert!(lint_source("exec/rank.rs", src).is_empty());
+        assert!(lint_source("exec/barrier.rs", src).is_empty());
+    }
+
+    #[test]
+    fn covers_matches_files_and_directory_prefixes() {
+        assert!(covers(RECOVERY_FILES, "coordinator/membership.rs"));
+        assert!(covers(RECOVERY_FILES, "coordinator/engine.rs"));
+        assert!(covers(RECOVERY_FILES, "analysis/model.rs"));
+        assert!(covers(RECOVERY_FILES, "analysis/checker.rs"));
+        assert!(!covers(RECOVERY_FILES, "coordinator/bucketizer.rs"));
+        assert!(!covers(RECOVERY_FILES, "analysis.rs"));
+    }
+
+    #[test]
+    fn unwrap_in_recovery_path_fails_but_loom_model_is_exempt() {
+        let src = "
+fn reworld(x: Option<u8>) -> u8 {
+    x.unwrap()
+}
+";
+        let v = lint_source("coordinator/engine.rs", src);
+        assert_eq!(v.len(), 1, "{:?}", v.iter().map(|x| x.to_string()).collect::<Vec<_>>());
+        assert!(v[0].to_string().contains("no-unwrap-in-recovery"), "{}", v[0]);
+        // the directory prefix pulls in the whole analysis tree
+        let v = lint_source("analysis/checker.rs", src);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].to_string().contains("no-unwrap-in-recovery"));
+        // loom models panic by design: the scheduler reports the trace
+        assert!(lint_source("analysis/loom_model.rs", src).is_empty());
+        // test regions stay exempt
+        let test_only = "
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1u8).unwrap();
+    }
+}
+";
+        assert!(lint_source("analysis/model.rs", test_only).is_empty());
+    }
+
+    #[test]
+    fn shared_transition_functions_carry_hot_path_markers() {
+        // the factored-out pure transitions must stay marked (and
+        // therefore allocation-free): the model checker drives them in
+        // its innermost loop
+        let root = default_src_root();
+        for rel in ["coordinator/membership.rs", "exec/rank.rs"] {
+            let src = std::fs::read_to_string(root.join(rel)).expect("source readable");
+            let s = strip(&src);
+            assert!(
+                !s.markers.is_empty(),
+                "{rel}: expected at least one `// xtask: hot-path` marker"
+            );
+        }
     }
 
     #[test]
