@@ -246,7 +246,11 @@ fn main() -> anyhow::Result<()> {
             ),
         ),
     ]));
-    covap::harness::write_bench_doc(&json_path, "adaptive_loop", rows)?;
+    let meta = covap::harness::BenchMeta::new(covap::harness::iso_timestamp_now())
+        .scheme("covap@auto")
+        .topology("ring")
+        .backend("threaded");
+    covap::harness::write_bench_doc(&json_path, "adaptive_loop", &meta, rows)?;
     println!("\nwrote {}", json_path.display());
 
     // ---- acceptance criteria (closed-loop bench) ----

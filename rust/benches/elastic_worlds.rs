@@ -250,7 +250,11 @@ fn main() -> anyhow::Result<()> {
         ("pre_exposed_s", Json::from(o.exposed[0])),
         ("post_exposed_s", Json::from(*o.exposed.last().unwrap())),
     ]));
-    covap::harness::write_bench_doc(&json_path, "elastic_worlds", rows)?;
+    let meta = covap::harness::BenchMeta::new(covap::harness::iso_timestamp_now())
+        .scheme("covap@2")
+        .topology("auto")
+        .backend("threaded");
+    covap::harness::write_bench_doc(&json_path, "elastic_worlds", &meta, rows)?;
     println!("\nwrote {}", json_path.display());
 
     // ---- acceptance criteria (elastic bench) ----

@@ -21,7 +21,7 @@ use std::path::PathBuf;
 use covap::compress::SchemeKind;
 use covap::config::{Optimizer, RunConfig};
 use covap::exec::compare_backends;
-use covap::harness::{write_bench_json, BenchRow};
+use covap::harness::{iso_timestamp_now, write_bench_json, BenchMeta, BenchRow};
 use covap::sim::Policy;
 use covap::util::bench::Table;
 use covap::util::cli::Args;
@@ -182,7 +182,11 @@ fn main() -> anyhow::Result<()> {
     }
     t2.print("COVAP — measured overlap vs sequential (paced ring)");
 
-    write_bench_json(&json_path, "exec_vs_sim", &rows)?;
+    let meta = BenchMeta::new(iso_timestamp_now())
+        .scheme("sweep")
+        .topology("ring")
+        .backend("both");
+    write_bench_json(&json_path, "exec_vs_sim", &meta, &rows)?;
     println!("\nwrote {}", json_path.display());
     Ok(())
 }

@@ -30,7 +30,7 @@ use covap::compress::{
     Scratch,
 };
 use covap::covap::CoarseFilter;
-use covap::harness::write_bench_doc;
+use covap::harness::{iso_timestamp_now, write_bench_doc, BenchMeta};
 use covap::util::bench::{sink, time_fn, Table};
 use covap::util::cli::Args;
 use covap::util::json::Json;
@@ -264,7 +264,11 @@ fn main() -> anyhow::Result<()> {
             ])
         })
         .collect();
-    write_bench_doc(&json_path, "perf_hotpath", rows)?;
+    let meta = BenchMeta::new(iso_timestamp_now())
+        .scheme("sweep")
+        .topology("ring")
+        .backend("inline");
+    write_bench_doc(&json_path, "perf_hotpath", &meta, rows)?;
     covap::log_info!(target: "bench", "wrote {}", json_path.display());
 
     if !quick {

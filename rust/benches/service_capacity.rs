@@ -1,0 +1,175 @@
+//! service_capacity — tenant-count sweep on the shared-fabric service.
+//!
+//! The multi-tenant payoff of overlapping-aware compression (DESIGN.md
+//! §14): on a shared inter-node fabric, each of `N` overlapping tenants
+//! sees `base/N` of the spine, so a dense tenant's step time degrades
+//! like `C + N·M` while a compressed tenant's degrades like `C + N·m`
+//! with `m ≈ M/I` — COVAP flattens the contention slope. This bench
+//! sweeps the tenant count for baseline (dense DDP), fp16 and
+//! covap@auto on one cluster and finds, per scheme, the largest tenant
+//! count whose **tail time-to-solution** stays within a fixed budget
+//! (anchored at a multiple of the solo dense run). Acceptance: COVAP
+//! sustains strictly more tenants than the dense baseline within the
+//! same budget.
+//!
+//!     cargo bench --bench service_capacity -- [--quick]
+//!         [--json BENCH_service_capacity.json] [--budget-factor F]
+//!
+//! Analytic backend, virtual time — the whole sweep is deterministic.
+//! Emits BENCH_service_capacity.json: one row per (scheme, tenants)
+//! cell plus a per-scheme summary row with the sustained tenant count.
+
+use std::path::PathBuf;
+
+use covap::compress::SchemeKind;
+use covap::harness::{iso_timestamp_now, write_bench_doc, BenchMeta};
+use covap::network::ClusterSpec;
+use covap::service::{run_trace, JobSpec, ServiceReport, ServiceSpec};
+use covap::util::bench::Table;
+use covap::util::cli::Args;
+use covap::util::fmt_secs;
+use covap::util::json::Json;
+
+/// One shared cluster for the whole sweep: every tenant gang-schedules
+/// 4 ranks over 2 nodes, so 6 tenants fill the fabric side by side and
+/// all of them contend for the one spine.
+const CLUSTER: (usize, usize) = (12, 2);
+const BASE_GBPS: f64 = 1.0;
+
+fn sweep(quick: bool) -> &'static [usize] {
+    if quick {
+        &[1, 2, 4]
+    } else {
+        &[1, 2, 3, 4, 6]
+    }
+}
+
+fn trace(scheme: &SchemeKind, tenants: usize, steps: u64) -> ServiceSpec {
+    let jobs = (0..tenants)
+        .map(|i| {
+            let mut j = JobSpec::new(i, &format!("tenant-{i}"), scheme.clone(), 4);
+            j.nodes = 2;
+            j.steps = steps;
+            j
+        })
+        .collect();
+    ServiceSpec {
+        cluster: ClusterSpec::new(CLUSTER.0, CLUSTER.1),
+        base_gbps: BASE_GBPS,
+        jobs,
+    }
+}
+
+fn mean_exposed_s(r: &ServiceReport) -> f64 {
+    r.jobs.iter().map(|j| j.sim_exposed_s).sum::<f64>() / r.jobs.len() as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let quick = args.has("quick");
+    let budget_factor: f64 = args.get_parsed("budget-factor", 2.5)?;
+    let json_path = PathBuf::from(args.get_or("json", "BENCH_service_capacity.json"));
+    let steps: u64 = if quick { 4 } else { 8 };
+
+    let schemes: Vec<(&str, SchemeKind)> = vec![
+        ("baseline", SchemeKind::Baseline),
+        ("fp16", SchemeKind::Fp16),
+        ("covap@auto", SchemeKind::parse("covap@auto").expect("spec")),
+    ];
+
+    // The budget every scheme is held to: a multiple of the *dense solo*
+    // tail TTS — the "users tolerate this much slowdown of the
+    // uncontended dense run" line.
+    let solo_dense = run_trace(trace(&schemes[0].1, 1, steps))?;
+    let budget_s = budget_factor * solo_dense.tail_tts_s();
+    println!(
+        "service_capacity: {}x{} cluster @ {} Gbps, {} steps/job, \
+         tail-TTS budget {} ({}x dense solo)",
+        CLUSTER.0,
+        CLUSTER.1,
+        BASE_GBPS,
+        steps,
+        fmt_secs(budget_s),
+        budget_factor
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut t = Table::new(&["scheme", "tenants", "tail tts", "mean exposed", "fabric load", "fits"]);
+    let mut sustained: Vec<(&str, usize)> = Vec::new();
+    for (label, scheme) in &schemes {
+        let mut max_fit = 0usize;
+        for &n in sweep(quick) {
+            let report = run_trace(trace(scheme, n, steps))?;
+            assert_eq!(report.jobs.len(), n, "{label}: tenant starved at n={n}");
+            let tail = report.tail_tts_s();
+            let fits = tail <= budget_s;
+            if fits {
+                max_fit = max_fit.max(n);
+            }
+            t.row(&[
+                label.to_string(),
+                n.to_string(),
+                fmt_secs(tail),
+                fmt_secs(mean_exposed_s(&report)),
+                format!("{:.2}", report.fabric_load),
+                if fits { "yes".into() } else { "no".into() },
+            ]);
+            rows.push(Json::obj(vec![
+                ("scheme", Json::from(*label)),
+                ("tenants", Json::from(n)),
+                ("steps", Json::from(steps as usize)),
+                ("tail_tts_s", Json::from(tail)),
+                ("mean_exposed_s", Json::from(mean_exposed_s(&report))),
+                ("makespan_s", Json::from(report.makespan_s)),
+                ("fabric_load", Json::from(report.fabric_load)),
+                ("gpu_utilization", Json::from(report.gpu_utilization)),
+                ("budget_s", Json::from(budget_s)),
+                ("fits_budget", Json::from(fits)),
+            ]));
+        }
+        sustained.push((label, max_fit));
+        rows.push(Json::obj(vec![
+            ("summary", Json::from(1usize)),
+            ("scheme", Json::from(*label)),
+            ("sustained_tenants", Json::from(max_fit)),
+            ("budget_s", Json::from(budget_s)),
+            ("budget_factor", Json::from(budget_factor)),
+        ]));
+    }
+    t.print("service capacity — tail TTS by scheme x tenant count (virtual time)");
+
+    let mut s = Table::new(&["scheme", "sustained tenants"]);
+    for (label, n) in &sustained {
+        s.row(&[label.to_string(), n.to_string()]);
+    }
+    s.print(&format!("tenants sustained within {} tail-TTS budget", fmt_secs(budget_s)));
+
+    let meta = BenchMeta::new(iso_timestamp_now())
+        .scheme("sweep")
+        .topology("auto")
+        .backend("analytic");
+    write_bench_doc(&json_path, "service_capacity", &meta, rows)?;
+    println!("wrote {}", json_path.display());
+
+    // ---- acceptance criteria (multi-tenant capacity bench) ----
+    let by = |name: &str| sustained.iter().find(|(l, _)| *l == name).map(|(_, n)| *n).unwrap();
+    let (base_n, fp16_n, covap_n) = (by("baseline"), by("fp16"), by("covap@auto"));
+    assert!(base_n >= 1, "dense solo run must fit its own budget");
+    assert!(
+        covap_n > base_n,
+        "covap@auto must sustain strictly more tenants than dense baseline \
+         within the {budget_factor}x budget (covap {covap_n} vs baseline {base_n})"
+    );
+    assert!(
+        covap_n >= fp16_n,
+        "covap@auto should not sustain fewer tenants than fp16 \
+         (covap {covap_n} vs fp16 {fp16_n})"
+    );
+    println!(
+        "OK: sustained tenants baseline={base_n} fp16={fp16_n} covap@auto={covap_n} \
+         within {} ({}x dense solo)",
+        fmt_secs(budget_s),
+        budget_factor
+    );
+    Ok(())
+}

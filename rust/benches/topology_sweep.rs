@@ -26,7 +26,10 @@ use covap::compress::SchemeKind;
 use covap::config::RunConfig;
 use covap::covap::interval_from_ccr;
 use covap::exec::compare_backends;
-use covap::harness::{paper_profile, scheme_breakdown, scheme_level_bytes, write_bench_doc};
+use covap::harness::{
+    iso_timestamp_now, paper_profile, scheme_breakdown, scheme_level_bytes, write_bench_doc,
+    BenchMeta,
+};
 use covap::network::{ClusterSpec, NetworkModel};
 use covap::sim::Policy;
 use covap::util::bench::Table;
@@ -210,7 +213,11 @@ fn main() -> anyhow::Result<()> {
         last.0, last.1
     );
 
-    write_bench_doc(&json_path, "topology", rows)?;
+    let meta = BenchMeta::new(iso_timestamp_now())
+        .scheme("sweep")
+        .topology("sweep")
+        .backend("both");
+    write_bench_doc(&json_path, "topology", &meta, rows)?;
     println!("\nwrote {}", json_path.display());
     Ok(())
 }

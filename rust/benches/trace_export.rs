@@ -100,7 +100,11 @@ fn main() -> anyhow::Result<()> {
         ("instant_events", Json::from(instants)),
         ("trace_path", Json::from(out.to_string_lossy().as_ref())),
     ])];
-    covap::harness::write_bench_doc(&json_path, "trace_export", rows)?;
+    let meta = covap::harness::BenchMeta::new(covap::harness::iso_timestamp_now())
+        .scheme("covap@auto")
+        .topology("auto")
+        .backend("both");
+    covap::harness::write_bench_doc(&json_path, "trace_export", &meta, rows)?;
     covap::log_info!(target: "bench", "wrote {}", json_path.display());
 
     println!(

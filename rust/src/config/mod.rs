@@ -161,6 +161,17 @@ pub struct RunConfig {
     /// ladder (attempt k waits `comm_timeout_ms << k`). 0 disables
     /// timeouts entirely (blocking receives — the default).
     pub comm_timeout_ms: u64,
+    /// Deterministic-timing mode (the service layer, DESIGN.md §14): when
+    /// > 0, the simulated timeline prices every worker's forward/backward
+    /// at exactly this many seconds — instead of the measured wall times —
+    /// and compression at `model_compress_s_per_elem`, so breakdowns (and
+    /// the service's virtual clocks derived from them) are
+    /// bitwise-reproducible across runs. `compute_scale` is ignored in
+    /// this mode. 0 = measure (the default).
+    pub model_comp_s: f64,
+    /// Modeled compression cost per element, seconds (only read when
+    /// `model_comp_s` > 0).
+    pub model_compress_s_per_elem: f64,
 }
 
 impl Default for RunConfig {
@@ -196,6 +207,8 @@ impl Default for RunConfig {
             elastic: false,
             comm_retry: 0,
             comm_timeout_ms: 0,
+            model_comp_s: 0.0,
+            model_compress_s_per_elem: 0.0,
         }
     }
 }
@@ -438,6 +451,15 @@ impl RunConfig {
         if self.profile_hysteresis == 0 {
             bail!("profile_hysteresis must be >= 1");
         }
+        if self.model_comp_s < 0.0 || !self.model_comp_s.is_finite() {
+            bail!("model_comp_s must be finite and >= 0, got {}", self.model_comp_s);
+        }
+        if self.model_compress_s_per_elem < 0.0 || !self.model_compress_s_per_elem.is_finite() {
+            bail!(
+                "model_compress_s_per_elem must be finite and >= 0, got {}",
+                self.model_compress_s_per_elem
+            );
+        }
         for (i, (_, gbps)) in self.pace_schedule.iter().enumerate() {
             // strictly positive: 0 means "unpaced" for the threaded wire
             // but "zero bandwidth" (infinite time) for the α–β model — a
@@ -515,6 +537,20 @@ impl RunConfig {
                 "comm_retry={} with comm_timeout_ms=0 is inert (blocking \
                  receives never time out; set --comm-timeout-ms > 0)",
                 self.comm_retry
+            );
+        }
+        // Scheduled membership events fire regardless of `elastic` (the
+        // scripted chaos tests rely on that), but without `elastic` a
+        // *detected* rank failure still aborts the run instead of
+        // recovering — a combination that usually means the flag was
+        // forgotten. Warn, don't fail.
+        if !self.membership_schedule.is_empty() && !self.elastic {
+            crate::log_warn!(
+                target: "config",
+                "membership_schedule has {} event(s) but elastic=false: \
+                 scripted events still apply, yet detected failures abort \
+                 instead of recovering (set --elastic for live recovery)",
+                self.membership_schedule.len()
             );
         }
         Ok(())
@@ -1056,6 +1092,24 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.membership_schedule = parse_membership_schedule("5:join,2:join").unwrap();
         assert!(cfg.validate().is_err());
+    }
+
+    /// Satellite regression: a membership schedule WITHOUT `elastic` is a
+    /// warn-only combination — scripted events must keep applying (the
+    /// scheduled-chaos parity tests depend on it), so validate() must
+    /// return Ok, never gate behavior on the flag. The warning itself is
+    /// log-only; what this pins down is that the combination stays legal
+    /// in both directions.
+    #[test]
+    fn membership_schedule_without_elastic_is_warn_only() {
+        let mut cfg = RunConfig { workers: 4, ..RunConfig::default() };
+        cfg.membership_schedule = parse_membership_schedule("2:fail:1,4:join:1").unwrap();
+        assert!(!cfg.elastic);
+        cfg.validate().unwrap();
+
+        // the same script with elastic on is equally fine (no warning path)
+        cfg.elastic = true;
+        cfg.validate().unwrap();
     }
 
     /// Satellite regression: a non-COVAP scheme plus profile_steps must

@@ -507,6 +507,30 @@ impl DpEngine {
         ))
     }
 
+    /// Set the effective wire bandwidth (Gbit/s) this engine sees from the
+    /// next step on: the α–β model's NIC rate for analytic pricing and the
+    /// threaded pacers for the measured wire, exactly as if a
+    /// `pace_schedule` entry fired this step. The service layer's
+    /// contention model (DESIGN.md §14) calls this between steps as jobs
+    /// sharing the fabric arrive and depart; like a scheduled pace change
+    /// it never changes numeric results, only timing.
+    pub fn set_effective_pace(&mut self, gbps: f64) {
+        if self.cfg.pace_gbps == gbps {
+            return;
+        }
+        self.cfg.pace_gbps = gbps;
+        self.cfg.net.nic_gbps = gbps;
+        if let Some(exec) = &self.exec {
+            exec.set_pacers(PacerSet::from_net(gbps, &self.cfg.net));
+        }
+    }
+
+    /// Current effective wire bandwidth in Gbit/s (base rate until a pace
+    /// event or [`DpEngine::set_effective_pace`] changes it).
+    pub fn effective_pace(&self) -> f64 {
+        self.cfg.pace_gbps
+    }
+
     /// Apply this step's scenario knobs before executing it: scheduled
     /// bandwidth changes hit both the threaded pacer and the α–β model's
     /// NIC rate (so measured *and* modeled CCR drift together), straggler
@@ -517,11 +541,7 @@ impl DpEngine {
         for i in 0..self.cfg.pace_schedule.len() {
             let (at, gbps) = self.cfg.pace_schedule[i];
             if at == step {
-                self.cfg.pace_gbps = gbps;
-                self.cfg.net.nic_gbps = gbps;
-                if let Some(exec) = &self.exec {
-                    exec.set_pacers(PacerSet::from_net(gbps, &self.cfg.net));
-                }
+                self.set_effective_pace(gbps);
             }
         }
         if self.cfg.stragglers.is_empty() {
@@ -607,8 +627,15 @@ impl DpEngine {
         comp_walls: &[f64],
         records: &[CommRecord],
     ) -> (f64, Vec<TensorCost>) {
-        let mean_wall = comp_walls.iter().sum::<f64>() / comp_walls.len() as f64
-            * self.cfg.compute_scale;
+        // model_comp_s > 0: deterministic-timing mode (the service layer)
+        // prices compute/compression from the model instead of measured
+        // walls, so the breakdown is bitwise-reproducible across runs.
+        let modeled = self.cfg.model_comp_s > 0.0;
+        let mean_wall = if modeled {
+            self.cfg.model_comp_s
+        } else {
+            comp_walls.iter().sum::<f64>() / comp_walls.len() as f64 * self.cfg.compute_scale
+        };
         let t_before = mean_wall * 0.32; // fwd ~1/3, bwd ~2/3
         let t_comp_total = mean_wall - t_before;
         let total_elems: usize = self.tensors.iter().map(|t| t.numel).sum();
@@ -620,7 +647,11 @@ impl DpEngine {
                 comp_s: t_comp_total * t.numel as f64 / total_elems as f64,
                 // compression runs on the same accelerator as the backward
                 // pass: map its measured wall time with the same scale
-                compress_s: r.compress_s * self.cfg.compute_scale,
+                compress_s: if modeled {
+                    t.numel as f64 * self.cfg.model_compress_s_per_elem
+                } else {
+                    r.compress_s * self.cfg.compute_scale
+                },
                 wire_bytes: r.wire_bytes,
                 collective: r.collective,
                 rounds: r.rounds,
@@ -659,8 +690,14 @@ impl DpEngine {
             }
             events
         } else {
-            let arrive: Vec<f64> =
-                comp_walls.iter().map(|w| w * self.cfg.compute_scale).collect();
+            // deterministic-timing mode: every worker arrives at the
+            // modeled compute time, so profiling (and covap@auto's
+            // interval choice) is reproducible too
+            let arrive: Vec<f64> = if self.cfg.model_comp_s > 0.0 {
+                vec![self.cfg.model_comp_s; comp_walls.len()]
+            } else {
+                comp_walls.iter().map(|w| w * self.cfg.compute_scale).collect()
+            };
             let mut events = Vec::with_capacity(arrive.len() * 2);
             for (w, &d) in arrive.iter().enumerate() {
                 events.push(Event {

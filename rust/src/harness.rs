@@ -372,17 +372,112 @@ fn num_or_null(x: f64) -> Json {
     }
 }
 
+/// Version of the `BENCH_*.json` envelope. Bump when the envelope shape
+/// (not a bench's row shape) changes, so the cross-run diff tooling the
+/// ROADMAP item-3 barometer builds on can refuse to compare apples to
+/// pears. v2 introduced the `meta` block itself.
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
+
+/// The shared meta block every `BENCH_*.json` carries: schema version,
+/// a caller-supplied ISO-8601 timestamp (benches pass
+/// [`iso_timestamp_now`]; deterministic tests pass a fixed string), and
+/// the scheme/topology/backend configuration the run priced — enough to
+/// decide whether two artifacts from different runs are comparable.
+#[derive(Debug, Clone, Default)]
+pub struct BenchMeta {
+    /// ISO-8601 UTC timestamp, supplied by the caller.
+    pub timestamp: String,
+    /// Scheme spec (`covap@auto`, `baseline`, or a sweep label).
+    pub scheme: String,
+    /// Collective topology (`ring`, `hier`, `tree`, `auto`, or a label).
+    pub topology: String,
+    /// Execution backend (`analytic`, `threaded`, `both`, ...).
+    pub backend: String,
+}
+
+impl BenchMeta {
+    /// A meta block with the given timestamp; fill the config fields
+    /// with the builder-style setters.
+    pub fn new(timestamp: impl Into<String>) -> BenchMeta {
+        BenchMeta { timestamp: timestamp.into(), ..BenchMeta::default() }
+    }
+
+    pub fn scheme(mut self, s: impl Into<String>) -> BenchMeta {
+        self.scheme = s.into();
+        self
+    }
+
+    pub fn topology(mut self, t: impl Into<String>) -> BenchMeta {
+        self.topology = t.into();
+        self
+    }
+
+    pub fn backend(mut self, b: impl Into<String>) -> BenchMeta {
+        self.backend = b.into();
+        self
+    }
+
+    /// Meta block describing one `RunConfig`'s scheme/topology/backend.
+    pub fn from_config(timestamp: impl Into<String>, cfg: &crate::config::RunConfig) -> BenchMeta {
+        BenchMeta {
+            timestamp: timestamp.into(),
+            scheme: cfg.scheme.spec(),
+            topology: cfg.topology.spec().to_string(),
+            backend: cfg.backend.label().to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::from(BENCH_SCHEMA_VERSION as usize)),
+            ("timestamp", Json::from(self.timestamp.as_str())),
+            ("scheme", Json::from(self.scheme.as_str())),
+            ("topology", Json::from(self.topology.as_str())),
+            ("backend", Json::from(self.backend.as_str())),
+        ])
+    }
+}
+
+/// Current wall time as an ISO-8601 UTC string (`2026-08-07T12:34:56Z`),
+/// dependency-free (civil-from-days arithmetic). Benches pass this into
+/// [`BenchMeta`]; anything that must stay bitwise-reproducible passes a
+/// fixed string instead.
+pub fn iso_timestamp_now() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (days, rem) = (secs / 86_400, secs % 86_400);
+    let (h, m, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+    // civil-from-days (Howard Hinnant's algorithm), valid for the unix era
+    let z = days as i64 + 719_468;
+    let era = z / 146_097;
+    let doe = z - era * 146_097;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let mth = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if mth <= 2 { y + 1 } else { y };
+    format!("{y:04}-{mth:02}-{d:02}T{h:02}:{m:02}:{s:02}Z")
+}
+
 /// Write a `BENCH_<name>.json` artifact with caller-shaped rows — the
 /// generic form of [`write_bench_json`] for benches whose rows are not
 /// (scheme, world, policy) cells (e.g. `perf_hotpath`'s throughput +
 /// allocation counts). Stable envelope:
-/// `{"bench": ..., "metrics": {...}, "rows": [..]}` where `"metrics"` is a
-/// snapshot of the process-wide obs registry (DESIGN.md §10) — counters,
-/// gauges and p50/p95/p99 histograms stamped by everything that ran in
-/// this process before the write.
-pub fn write_bench_doc(path: &Path, bench: &str, rows: Vec<Json>) -> Result<()> {
+/// `{"bench": ..., "meta": {...}, "metrics": {...}, "rows": [..]}` where
+/// `"meta"` is the shared [`BenchMeta`] block (schema version, caller
+/// timestamp, scheme/topology/backend) that makes artifacts diffable
+/// across runs, and `"metrics"` is a snapshot of the process-wide obs
+/// registry (DESIGN.md §10) — counters, gauges and p50/p95/p99
+/// histograms stamped by everything that ran in this process before the
+/// write.
+pub fn write_bench_doc(path: &Path, bench: &str, meta: &BenchMeta, rows: Vec<Json>) -> Result<()> {
     let doc = Json::obj(vec![
         ("bench", Json::from(bench)),
+        ("meta", meta.to_json()),
         ("metrics", crate::obs::registry::global_snapshot()),
         ("rows", Json::Arr(rows)),
     ]);
@@ -394,7 +489,12 @@ pub fn write_bench_doc(path: &Path, bench: &str, rows: Vec<Json>) -> Result<()> 
 /// Write `BENCH_<name>.json` next to `dir` (typically the repo root): a
 /// stable, machine-readable artifact CI uploads so the bench trajectory
 /// accumulates across PRs.
-pub fn write_bench_json(path: &Path, bench: &str, rows: &[BenchRow]) -> Result<()> {
+pub fn write_bench_json(
+    path: &Path,
+    bench: &str,
+    meta: &BenchMeta,
+    rows: &[BenchRow],
+) -> Result<()> {
     let rows_json: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -418,7 +518,7 @@ pub fn write_bench_json(path: &Path, bench: &str, rows: &[BenchRow]) -> Result<(
             ])
         })
         .collect();
-    write_bench_doc(path, bench, rows_json)
+    write_bench_doc(path, bench, meta, rows_json)
 }
 
 #[cfg(test)]
@@ -570,9 +670,24 @@ mod tests {
             moved_bytes: 5678,
             bitwise_equal: Some(true),
         }];
-        write_bench_json(&path, "test", &rows).unwrap();
+        let meta = BenchMeta::new("2026-01-02T03:04:05Z")
+            .scheme("covap@4")
+            .topology("ring")
+            .backend("both");
+        write_bench_json(&path, "test", &meta, &rows).unwrap();
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "test");
+        // Shared meta block: schema version + caller timestamp + config
+        // labels, identical shape in every artifact.
+        let m = j.get("meta").unwrap();
+        assert_eq!(
+            m.get("schema_version").unwrap().as_usize().unwrap(),
+            BENCH_SCHEMA_VERSION as usize
+        );
+        assert_eq!(m.get("timestamp").unwrap().as_str().unwrap(), "2026-01-02T03:04:05Z");
+        assert_eq!(m.get("scheme").unwrap().as_str().unwrap(), "covap@4");
+        assert_eq!(m.get("topology").unwrap().as_str().unwrap(), "ring");
+        assert_eq!(m.get("backend").unwrap().as_str().unwrap(), "both");
         // Envelope embeds the obs registry snapshot (DESIGN.md §10).
         let metrics = j.get("metrics").unwrap();
         assert!(metrics.get("counters").is_ok());
@@ -583,6 +698,25 @@ mod tests {
         assert_eq!(arr[0].get("world").unwrap().as_usize().unwrap(), 4);
         assert_eq!(arr[0].get("moved_bytes").unwrap().as_usize().unwrap(), 5678);
         assert_eq!(arr[0].get("sim_exposed_s").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn iso_timestamp_shape_and_config_meta() {
+        let ts = iso_timestamp_now();
+        // 2026-08-07T12:34:56Z: fixed width, date/time separators in place
+        assert_eq!(ts.len(), 20, "{ts}");
+        assert_eq!(&ts[4..5], "-");
+        assert_eq!(&ts[7..8], "-");
+        assert_eq!(&ts[10..11], "T");
+        assert_eq!(&ts[13..14], ":");
+        assert_eq!(&ts[16..17], ":");
+        assert!(ts.ends_with('Z'));
+        assert!(ts.starts_with("20"), "unix-era year: {ts}");
+        let cfg = crate::config::RunConfig::default();
+        let m = BenchMeta::from_config("2026-01-01T00:00:00Z", &cfg);
+        assert_eq!(m.scheme, cfg.scheme.spec());
+        assert_eq!(m.backend, "analytic");
+        assert_eq!(m.topology, cfg.topology.spec());
     }
 
     #[test]

@@ -46,6 +46,7 @@ pub mod network;
 pub mod obs;
 pub mod profiler;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod trainer;
 pub mod util;

@@ -32,6 +32,20 @@
 //!             ordering, uniform torn-step skipping and deadlock-free
 //!             quiescence on the production transition functions, then
 //!             run the seeded-mutant self-test; writes a bench doc
+//!   serve     [--jobs FILE] [--backend analytic|threaded] [--quick]
+//!             [--json PATH]
+//!             run the multi-tenant training service (DESIGN.md §14):
+//!             jobs from a `jobs.json` trace (or the built-in scripted
+//!             4-job demo) are queued, gang-scheduled onto the shared
+//!             cluster, and stepped on a virtual clock while the
+//!             contention model splits the inter-node fabric among
+//!             overlapping tenants; prints per-job time-to-solution,
+//!             queue wait and tail step latency, errors if any job
+//!             starves, and optionally writes a bench doc. Trace format:
+//!             {"cluster": {"nodes": N, "gpus_per_node": G},
+//!              "nic_gbps": F, "jobs": [{"name": S, "scheme": S,
+//!              "workers": N, "nodes": N, "priority": N, "arrival_s": F,
+//!              "steps": N, "elastic": B, "backend": S}, ...]}
 //!
 //! train also accepts --backend analytic|threaded, --policy overlap|seq,
 //! --topology ring|hier|tree|auto (collective topology: flat ring,
@@ -52,7 +66,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use covap::compress::SchemeKind;
 use covap::config::RunConfig;
 use covap::coordinator::DpEngine;
@@ -74,6 +88,7 @@ fn main() -> Result<()> {
         Some("exec") => exec_cmd(&args),
         Some("verify-schedules") => verify_schedules(&args),
         Some("check-protocol") => check_protocol(&args),
+        Some("serve") => serve(&args),
         Some("schemes") => {
             for k in SchemeKind::evaluation_set() {
                 println!("{}", k.label());
@@ -85,7 +100,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand '{o}'");
             }
             eprintln!(
-                "usage: covap <smoke|train|profile|simulate|exec|verify-schedules|check-protocol|schemes> [flags]"
+                "usage: covap <smoke|train|profile|simulate|exec|serve|verify-schedules|check-protocol|schemes> [flags]"
             );
             std::process::exit(2);
         }
@@ -326,7 +341,11 @@ fn verify_schedules(args: &Args) -> Result<()> {
         }
     }
     let out = args.get_or("json", "BENCH_schedule_verify.json");
-    covap::harness::write_bench_doc(Path::new(&out), "schedule_verify", rows)?;
+    let meta = covap::harness::BenchMeta::new(covap::harness::iso_timestamp_now())
+        .scheme("evaluation-set")
+        .topology("all")
+        .backend("static");
+    covap::harness::write_bench_doc(Path::new(&out), "schedule_verify", &meta, rows)?;
     println!(
         "verify-schedules: {} topology x shape combinations OK ({} post-membership-event shapes, max P = {}) in {}",
         checked,
@@ -404,7 +423,11 @@ fn check_protocol(args: &Args) -> Result<()> {
         ("check_s", Json::Num(t0.elapsed().as_secs_f64())),
     ]));
     let out = args.get_or("json", "BENCH_protocol_check.json");
-    covap::harness::write_bench_doc(Path::new(&out), "protocol_check", rows)?;
+    let meta = covap::harness::BenchMeta::new(covap::harness::iso_timestamp_now())
+        .scheme("membership-protocol")
+        .topology("model")
+        .backend("static");
+    covap::harness::write_bench_doc(Path::new(&out), "protocol_check", &meta, rows)?;
     println!(
         "check-protocol: worlds {min_world}-{max_world} exhaustive ({total_scripts} \
          scripts, {total_states} states, {total_transitions} transitions, depth <= \
@@ -413,6 +436,105 @@ fn check_protocol(args: &Args) -> Result<()> {
         fmt_secs(t0.elapsed().as_secs_f64())
     );
     println!("wrote {out}");
+    Ok(())
+}
+
+/// Run the multi-tenant training service (DESIGN.md §14) over a job
+/// trace: queue → gang-schedule → contention-paced stepping on a virtual
+/// clock. Errors if any job cannot complete (the no-starvation gate CI
+/// relies on); prints the per-job summary table and service aggregates.
+fn serve(args: &Args) -> Result<()> {
+    use covap::harness::{iso_timestamp_now, write_bench_doc, BenchMeta};
+    use covap::service::{ServiceDaemon, ServiceSpec};
+    use covap::util::bench::Table;
+    use covap::util::json::Json;
+
+    if let Some(lv) = args.get("log-level").and_then(|s| covap::obs::log::LogLevel::parse(&s)) {
+        covap::obs::log::set_level(lv);
+    }
+    let quick = args.has("quick");
+    let mut spec = match args.get("jobs") {
+        Some(path) => ServiceSpec::parse(
+            &std::fs::read_to_string(&path)
+                .with_context(|| format!("reading job trace {path}"))?,
+        )?,
+        None => ServiceSpec::demo(quick),
+    };
+    if let Some(b) = args.get("backend") {
+        let backend = covap::config::ExecBackend::parse(&b)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend '{b}' (analytic|threaded)"))?;
+        spec = spec.with_backend(backend);
+    }
+    let submitted = spec.jobs.len();
+    let cluster = spec.cluster;
+    let base_gbps = spec.base_gbps;
+    let backends: Vec<&str> = {
+        let mut b: Vec<&str> =
+            spec.jobs.iter().map(|j| j.backend.label()).collect::<std::collections::BTreeSet<_>>().into_iter().collect();
+        if b.is_empty() {
+            b.push("analytic");
+        }
+        b
+    };
+    let backend_label = backends.join("+");
+    println!(
+        "serve: {} job(s) on a {}x{} cluster @ {} Gbps shared fabric [{}]",
+        submitted, cluster.nodes, cluster.gpus_per_node, base_gbps, backend_label
+    );
+    let mut daemon = ServiceDaemon::new(spec)?;
+    let report = daemon.run()?;
+    if report.jobs.len() != submitted {
+        bail!(
+            "starvation: only {}/{} jobs completed",
+            report.jobs.len(),
+            submitted
+        );
+    }
+
+    let mut t = Table::new(&[
+        "job", "scheme", "ranks", "pri", "arrive", "wait", "tts", "exposed comm", "p95 step",
+        "preempt",
+    ]);
+    for j in &report.jobs {
+        t.row(&[
+            j.name.clone(),
+            j.scheme.clone(),
+            j.workers.to_string(),
+            j.priority.to_string(),
+            fmt_secs(j.arrival_s),
+            fmt_secs(j.queue_wait_s),
+            fmt_secs(j.tts_s),
+            fmt_secs(j.sim_exposed_s),
+            fmt_secs(j.step_p95_s),
+            format!("{}/{}", j.preemptions, j.regrows),
+        ]);
+    }
+    t.print("multi-tenant service — per-job summary (virtual time)");
+    println!(
+        "makespan {} | fabric load {:.2} | gpu utilization {:.2} | all {} job(s) completed",
+        fmt_secs(report.makespan_s),
+        report.fabric_load,
+        report.gpu_utilization,
+        report.jobs.len()
+    );
+
+    if let Some(out) = args.get("json") {
+        let meta = BenchMeta::new(iso_timestamp_now())
+            .scheme("multi-tenant")
+            .topology("auto")
+            .backend(&backend_label);
+        let mut rows: Vec<Json> = report.jobs.iter().map(|j| j.to_json()).collect();
+        rows.push(Json::obj(vec![
+            ("summary", Json::from(1usize)),
+            ("jobs", Json::from(report.jobs.len())),
+            ("makespan_s", Json::from(report.makespan_s)),
+            ("fabric_load", Json::from(report.fabric_load)),
+            ("gpu_utilization", Json::from(report.gpu_utilization)),
+            ("tail_tts_s", Json::from(report.tail_tts_s())),
+        ]));
+        write_bench_doc(Path::new(&out), "service", &meta, rows)?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 

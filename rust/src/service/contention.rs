@@ -1,0 +1,114 @@
+//! Contention model for the shared inter-node fabric (DESIGN.md §14).
+//!
+//! Every running job whose allocation spans more than one node moves its
+//! collectives over the same inter-node spine (the oversubscribed-core
+//! assumption: disjoint node pairs still share uplink capacity). The
+//! model is weighted max-min fair sharing at admission granularity: when
+//! `k` spanning jobs overlap in time, each gets
+//! `base_gbps * weight / Σ weights` with `weight = priority + 1`, and
+//! single-node jobs keep the full base rate (NVLink-class intra-node
+//! links are not the contended resource). The daemon recomputes shares
+//! whenever the running set changes and feeds each job's engine its
+//! effective rate through [`crate::coordinator::DpEngine::set_effective_pace`]
+//! — the same pace machinery a scheduled `pace_schedule` entry uses, so
+//! both backends (analytic α–β pricing and threaded pacers) see the
+//! shared fabric identically.
+
+use crate::service::queue::JobId;
+
+/// One running job as the fabric sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricUser {
+    pub id: JobId,
+    pub priority: u32,
+    /// Whether the job's allocation crosses the inter-node fabric.
+    pub spans_fabric: bool,
+}
+
+/// Weighted fair-share splitter for one shared fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionModel {
+    /// Rate a solo spanning job sees, Gbit/s.
+    pub base_gbps: f64,
+}
+
+impl ContentionModel {
+    pub fn new(base_gbps: f64) -> ContentionModel {
+        ContentionModel { base_gbps }
+    }
+
+    fn weight(priority: u32) -> f64 {
+        priority as f64 + 1.0
+    }
+
+    /// Effective bandwidth per job given the currently running set.
+    /// Spanning jobs split `base_gbps` by weight; single-node jobs are
+    /// unconstrained (full base rate). Input order is preserved.
+    pub fn shares(&self, users: &[FabricUser]) -> Vec<(JobId, f64)> {
+        let total: f64 =
+            users.iter().filter(|u| u.spans_fabric).map(|u| Self::weight(u.priority)).sum();
+        users
+            .iter()
+            .map(|u| {
+                let gbps = if u.spans_fabric && total > 0.0 {
+                    self.base_gbps * Self::weight(u.priority) / total
+                } else {
+                    self.base_gbps
+                };
+                (u.id, gbps)
+            })
+            .collect()
+    }
+
+    /// The fraction of the fabric the spanning set demands: 0 when the
+    /// fabric is idle, 1.0 when exactly saturated, `k` when `k` equal
+    /// tenants contend — the obs gauge the daemon exports as fabric load.
+    pub fn demand(&self, users: &[FabricUser]) -> f64 {
+        users.iter().filter(|u| u.spans_fabric).count() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn user(id: JobId, priority: u32, spans: bool) -> FabricUser {
+        FabricUser { id, priority, spans_fabric: spans }
+    }
+
+    #[test]
+    fn solo_spanning_job_gets_full_rate() {
+        let m = ContentionModel::new(10.0);
+        let s = m.shares(&[user(0, 1, true)]);
+        assert_eq!(s, vec![(0, 10.0)]);
+    }
+
+    #[test]
+    fn equal_tenants_halve_the_fabric_and_conserve_it() {
+        let m = ContentionModel::new(10.0);
+        let s = m.shares(&[user(0, 1, true), user(1, 1, true)]);
+        assert_eq!(s[0].1, 5.0);
+        assert_eq!(s[1].1, 5.0);
+        let total: f64 = s.iter().map(|(_, g)| g).sum();
+        assert!((total - 10.0).abs() < 1e-12, "fabric conserved");
+    }
+
+    #[test]
+    fn priority_weights_the_split() {
+        let m = ContentionModel::new(9.0);
+        // weights 2 and 1 -> 6 / 3
+        let s = m.shares(&[user(0, 1, true), user(1, 0, true)]);
+        assert!((s[0].1 - 6.0).abs() < 1e-12);
+        assert!((s[1].1 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_node_jobs_are_unconstrained() {
+        let m = ContentionModel::new(4.0);
+        let s = m.shares(&[user(0, 1, false), user(1, 1, true), user(2, 9, false)]);
+        assert_eq!(s[0].1, 4.0);
+        assert_eq!(s[1].1, 4.0, "only spanning jobs contend; a solo one keeps the base rate");
+        assert_eq!(s[2].1, 4.0);
+        assert_eq!(m.demand(&[user(0, 1, false), user(1, 1, true)]), 1.0);
+    }
+}

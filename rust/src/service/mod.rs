@@ -1,0 +1,28 @@
+//! Multi-tenant training service (DESIGN.md §14): a long-running
+//! daemon that queues, gang-schedules and steps many concurrent
+//! training jobs on one shared cluster, with an inter-node fabric
+//! contention model feeding every job's engine its effective bandwidth
+//! through the pace machinery.
+//!
+//! * [`queue`] — job specs, trace parsing, and the priority admission
+//!   queue (fairness key: priority desc, arrival asc, id asc).
+//! * [`scheduler`] — gang placement onto the shared `ClusterSpec`
+//!   (admit / queue / preempt by free capacity; elastic shrink/grow).
+//! * [`contention`] — weighted fair sharing of the inter-node spine
+//!   among jobs whose collectives overlap in time.
+//! * [`daemon`] — the deterministic virtual-time event loop tying them
+//!   together, emitting per-job time-to-solution, queue wait and tail
+//!   latency plus fabric-level utilization through the obs registry.
+//!
+//! Surfaced as `covap serve --jobs jobs.json` (or the built-in scripted
+//! trace) — see the CLI docs in `main.rs`.
+
+pub mod contention;
+pub mod daemon;
+pub mod queue;
+pub mod scheduler;
+
+pub use contention::{ContentionModel, FabricUser};
+pub use daemon::{run_trace, JobSummary, ServiceDaemon, ServiceReport};
+pub use queue::{JobId, JobQueue, JobSpec, ServiceSpec};
+pub use scheduler::{Allocation, GangScheduler};

@@ -1,0 +1,310 @@
+//! Job specifications and the priority admission queue (DESIGN.md §14).
+//!
+//! A [`JobSpec`] is one tenant's training request: workload preset ×
+//! scheme × world size × priority, plus a virtual arrival time on the
+//! service clock. The [`JobQueue`] holds jobs that have been submitted
+//! but not yet admitted, ordered by the service's fairness key
+//! (priority desc, arrival asc, id asc) — the scheduler always offers
+//! capacity to the highest-priority oldest job first, with backfill for
+//! smaller jobs behind a blocked head (so a wide job cannot starve the
+//! narrow ones, and every finite trace drains).
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::SchemeKind;
+use crate::config::ExecBackend;
+use crate::network::ClusterSpec;
+use crate::util::json::Json;
+
+/// Stable job identifier: the index of the job in its submission trace.
+pub type JobId = usize;
+
+/// One tenant's training request.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub name: String,
+    /// Gradient-compression scheme this tenant runs.
+    pub scheme: SchemeKind,
+    /// World size (ranks) the job gang-schedules.
+    pub workers: usize,
+    /// Requested node span: ranks are spread evenly over this many nodes
+    /// (`workers % nodes == 0`). 0 = auto (smallest span that fits a
+    /// node's GPU count). Jobs with span > 1 use the shared inter-node
+    /// fabric and are subject to contention.
+    pub nodes: usize,
+    /// Higher wins admission and a larger fabric share.
+    pub priority: u32,
+    /// Virtual submission time on the service clock, seconds.
+    pub arrival_s: f64,
+    /// Training steps until the job completes.
+    pub steps: u64,
+    /// Synthetic workload preset (`tiny`, `small`, ...).
+    pub preset: String,
+    pub backend: ExecBackend,
+    /// Elastic jobs may be shrunk (nodes revoked via `Leave` events) to
+    /// admit higher-priority arrivals, and re-grown when capacity frees.
+    pub elastic: bool,
+    /// Engine seed (per-job, so tenants are decorrelated).
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// A job with the trace defaults; callers override fields as needed.
+    pub fn new(id: JobId, name: &str, scheme: SchemeKind, workers: usize) -> JobSpec {
+        JobSpec {
+            id,
+            name: name.to_string(),
+            scheme,
+            workers,
+            nodes: 0,
+            priority: 1,
+            arrival_s: 0.0,
+            steps: 4,
+            preset: "tiny".to_string(),
+            backend: ExecBackend::Analytic,
+            elastic: false,
+            seed: 17 + id as u64,
+        }
+    }
+
+    /// Parse one job object from a `jobs.json` trace.
+    fn parse(id: JobId, j: &Json) -> Result<JobSpec> {
+        let name = j
+            .get_or("name", &Json::Str(format!("job-{id}")))
+            .as_str()?
+            .to_string();
+        let spec = j.get_or("scheme", &Json::Str("baseline".into())).as_str()?.to_string();
+        let scheme = SchemeKind::parse(&spec)
+            .with_context(|| format!("job '{name}': unknown scheme spec '{spec}'"))?;
+        let workers = j.get("workers").and_then(|w| w.as_usize()).unwrap_or(2);
+        if workers == 0 {
+            bail!("job '{name}': workers must be >= 1");
+        }
+        let mut job = JobSpec::new(id, &name, scheme, workers);
+        job.nodes = j.get_or("nodes", &Json::from(0usize)).as_usize()?;
+        job.priority = j.get_or("priority", &Json::from(1usize)).as_usize()? as u32;
+        job.arrival_s = j.get_or("arrival_s", &Json::from(0.0)).as_f64()?;
+        job.steps = j.get_or("steps", &Json::from(4usize)).as_usize()? as u64;
+        job.preset = j.get_or("preset", &Json::Str("tiny".into())).as_str()?.to_string();
+        job.elastic = j.get_or("elastic", &Json::from(false)).as_bool()?;
+        job.seed = j.get_or("seed", &Json::from(17 + id)).as_usize()? as u64;
+        if let Ok(b) = j.get("backend") {
+            let s = b.as_str()?;
+            job.backend = ExecBackend::parse(s)
+                .with_context(|| format!("job '{name}': unknown backend '{s}'"))?;
+        }
+        Ok(job)
+    }
+}
+
+/// A full service trace: the shared cluster, its fabric rate, and the
+/// submitted jobs.
+#[derive(Debug, Clone)]
+pub struct ServiceSpec {
+    /// The shared cluster every tenant gang-schedules onto.
+    pub cluster: ClusterSpec,
+    /// Base inter-node fabric bandwidth in Gbit/s — what a solo job sees;
+    /// the contention model splits this among overlapping tenants.
+    pub base_gbps: f64,
+    pub jobs: Vec<JobSpec>,
+}
+
+impl ServiceSpec {
+    /// Parse a `jobs.json` trace:
+    /// `{"cluster": {"nodes": N, "gpus_per_node": G}, "nic_gbps": F,
+    ///   "jobs": [{...}, ...]}`.
+    pub fn parse(text: &str) -> Result<ServiceSpec> {
+        let j = Json::parse(text).context("parsing service trace")?;
+        let c = j.get("cluster").context("trace needs a \"cluster\" object")?;
+        let cluster = ClusterSpec::new(
+            c.get("nodes").and_then(|v| v.as_usize()).unwrap_or(2),
+            c.get("gpus_per_node").and_then(|v| v.as_usize()).unwrap_or(4),
+        );
+        let base_gbps = j.get_or("nic_gbps", &Json::from(1.0)).as_f64()?;
+        let mut jobs = Vec::new();
+        for (id, job) in j.get("jobs").context("trace needs a \"jobs\" array")?.as_arr()?.iter().enumerate()
+        {
+            jobs.push(JobSpec::parse(id, job)?);
+        }
+        if jobs.is_empty() {
+            bail!("service trace has no jobs");
+        }
+        Ok(ServiceSpec { cluster, base_gbps, jobs })
+    }
+
+    /// The built-in scripted trace (the CI `service-sim` job): 4 tenants
+    /// on a 2-node fabric — two fabric-spanning jobs that contend from
+    /// t=0, a high-priority single-node arrival that preempts (shrinks)
+    /// the elastic tenant while the cluster is full, and a late
+    /// low-priority straggler that exercises queueing.
+    pub fn demo(quick: bool) -> ServiceSpec {
+        let steps = |n: u64| if quick { n.div_ceil(2) } else { n };
+        let mut a = JobSpec::new(0, "tenant-a", SchemeKind::parse("covap@2").unwrap(), 4);
+        a.nodes = 2;
+        a.elastic = true;
+        a.steps = steps(10);
+        let mut b = JobSpec::new(1, "tenant-b", SchemeKind::Baseline, 4);
+        b.nodes = 2;
+        b.steps = steps(10);
+        // arrives just after the first admissions while both nodes are
+        // full: higher priority + no free slots => shrink of tenant-a
+        let mut c = JobSpec::new(2, "probe-c", SchemeKind::Fp16, 2);
+        c.nodes = 1;
+        c.priority = 3;
+        c.arrival_s = 1e-9;
+        c.steps = steps(6);
+        let mut d = JobSpec::new(3, "late-d", SchemeKind::parse("covap@auto").unwrap(), 2);
+        d.nodes = 1;
+        d.priority = 0;
+        d.arrival_s = 5e-4;
+        d.steps = steps(6);
+        ServiceSpec {
+            cluster: ClusterSpec::new(2, 4),
+            base_gbps: 1.0,
+            jobs: vec![a, b, c, d],
+        }
+    }
+
+    /// Force every job onto one backend (the `covap serve --backend` flag).
+    pub fn with_backend(mut self, backend: ExecBackend) -> ServiceSpec {
+        for j in &mut self.jobs {
+            j.backend = backend;
+        }
+        self
+    }
+}
+
+/// Pending-job queue ordered by the fairness key.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    pending: Vec<JobSpec>,
+}
+
+/// Admission order: priority desc, then arrival asc, then id asc.
+fn fairness_key(j: &JobSpec) -> (std::cmp::Reverse<u32>, u64, JobId) {
+    // arrival_s is finite and non-negative (validated on submit), so its
+    // bit pattern orders the same as the value
+    (std::cmp::Reverse(j.priority), j.arrival_s.to_bits(), j.id)
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    /// Submit a job (keeps the queue sorted by the fairness key).
+    pub fn push(&mut self, job: JobSpec) -> Result<()> {
+        if !job.arrival_s.is_finite() || job.arrival_s < 0.0 {
+            bail!("job '{}': arrival_s must be finite and >= 0", job.name);
+        }
+        self.pending.push(job);
+        self.pending.sort_by_key(fairness_key);
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Earliest arrival time among pending jobs.
+    pub fn next_arrival(&self) -> Option<f64> {
+        self.pending.iter().map(|j| j.arrival_s).fold(None, |m, t| match m {
+            Some(x) if x <= t => Some(x),
+            _ => Some(t),
+        })
+    }
+
+    /// Ids of jobs that have arrived by `now`, in admission order.
+    pub fn arrived(&self, now: f64) -> Vec<JobId> {
+        self.pending.iter().filter(|j| j.arrival_s <= now).map(|j| j.id).collect()
+    }
+
+    /// Remove and return a pending job by id.
+    pub fn take(&mut self, id: JobId) -> Option<JobSpec> {
+        let idx = self.pending.iter().position(|j| j.id == id)?;
+        Some(self.pending.remove(idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_orders_by_priority_then_arrival_then_id() {
+        let mut q = JobQueue::new();
+        let mut lo = JobSpec::new(0, "lo", SchemeKind::Baseline, 2);
+        lo.priority = 1;
+        lo.arrival_s = 0.0;
+        let mut hi = JobSpec::new(1, "hi", SchemeKind::Baseline, 2);
+        hi.priority = 5;
+        hi.arrival_s = 3.0;
+        let mut old = JobSpec::new(2, "old", SchemeKind::Baseline, 2);
+        old.priority = 5;
+        old.arrival_s = 1.0;
+        q.push(lo).unwrap();
+        q.push(hi).unwrap();
+        q.push(old).unwrap();
+        // all arrived: high priority first, older high-pri job before newer
+        assert_eq!(q.arrived(10.0), vec![2, 1, 0]);
+        // only jobs at or before now
+        assert_eq!(q.arrived(0.5), vec![0]);
+        assert_eq!(q.next_arrival(), Some(0.0));
+        assert_eq!(q.take(1).unwrap().name, "hi");
+        assert_eq!(q.len(), 2);
+        assert!(q.take(1).is_none());
+    }
+
+    #[test]
+    fn queue_rejects_bad_arrival() {
+        let mut q = JobQueue::new();
+        let mut j = JobSpec::new(0, "nan", SchemeKind::Baseline, 2);
+        j.arrival_s = f64::NAN;
+        assert!(q.push(j).is_err());
+    }
+
+    #[test]
+    fn trace_parses_with_defaults_and_rejects_garbage() {
+        let spec = ServiceSpec::parse(
+            r#"{"cluster": {"nodes": 2, "gpus_per_node": 4}, "nic_gbps": 2.5,
+                "jobs": [
+                  {"name": "a", "scheme": "covap@auto", "workers": 4, "nodes": 2,
+                   "priority": 2, "arrival_s": 0.0, "steps": 8, "elastic": true},
+                  {"scheme": "fp16", "workers": 2}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.cluster.nodes, 2);
+        assert_eq!(spec.base_gbps, 2.5);
+        assert_eq!(spec.jobs.len(), 2);
+        assert!(spec.jobs[0].elastic);
+        assert_eq!(spec.jobs[0].nodes, 2);
+        assert_eq!(spec.jobs[1].name, "job-1");
+        assert_eq!(spec.jobs[1].workers, 2);
+        assert!(!spec.jobs[1].elastic);
+        assert!(ServiceSpec::parse(r#"{"jobs": []}"#).is_err());
+        assert!(ServiceSpec::parse(
+            r#"{"cluster": {"nodes": 1, "gpus_per_node": 1},
+                "jobs": [{"scheme": "no-such-scheme"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn demo_trace_is_wellformed() {
+        for quick in [false, true] {
+            let s = ServiceSpec::demo(quick);
+            assert_eq!(s.jobs.len(), 4);
+            assert!(s.jobs.iter().filter(|j| j.nodes == 2).count() >= 2, "fabric contention");
+            assert!(s.jobs.iter().any(|j| j.elastic), "preemptable tenant");
+            let cap = s.cluster.world();
+            let demand: usize = s.jobs.iter().filter(|j| j.arrival_s == 0.0).map(|j| j.workers).sum();
+            assert_eq!(demand, cap, "t=0 jobs fill the cluster exactly");
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Gang scheduler for the shared cluster (DESIGN.md §14).
+//!
+//! Tracks free GPU slots per node of one shared [`ClusterSpec`] and
+//! places whole jobs at once (gang scheduling: all ranks or none). A
+//! job's placement is an [`Allocation`] — `k` nodes × `workers / k`
+//! slots each — chosen deterministically (lowest node indices first),
+//! so two runs of the same trace produce identical placements. Elastic
+//! jobs can be *shrunk* one node at a time to make room for
+//! higher-priority arrivals and *re-grown* when capacity frees; the
+//! daemon mirrors each shrink/grow into the job's engine with
+//! `Leave`/`Join` membership events.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::network::ClusterSpec;
+use crate::service::queue::{JobId, JobSpec};
+
+/// A job's placement: which nodes it holds and how many GPU slots on
+/// each (even split — the engine's own `ClusterSpec` mirrors this shape).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    /// Node indices on the shared cluster, ascending.
+    pub nodes: Vec<usize>,
+    /// GPU slots held on each of those nodes.
+    pub per_node: usize,
+}
+
+impl Allocation {
+    /// Ranks this allocation currently runs.
+    pub fn world(&self) -> usize {
+        self.nodes.len() * self.per_node
+    }
+
+    /// The cluster shape the job's engine sees.
+    pub fn cluster(&self) -> ClusterSpec {
+        ClusterSpec::new(self.nodes.len().max(1), self.per_node)
+    }
+
+    /// Whether this job's collectives cross the shared inter-node fabric
+    /// (and therefore contend with other spanning jobs).
+    pub fn spans_fabric(&self) -> bool {
+        self.nodes.len() > 1
+    }
+}
+
+/// Free-capacity tracker + placement policy for the shared cluster.
+#[derive(Debug)]
+pub struct GangScheduler {
+    cluster: ClusterSpec,
+    /// Free GPU slots per node.
+    free: Vec<usize>,
+    allocs: BTreeMap<JobId, Allocation>,
+}
+
+impl GangScheduler {
+    pub fn new(cluster: ClusterSpec) -> GangScheduler {
+        GangScheduler {
+            cluster,
+            free: vec![cluster.gpus_per_node; cluster.nodes],
+            allocs: BTreeMap::new(),
+        }
+    }
+
+    /// The node span a job needs: its requested span, or the smallest
+    /// `k` dividing `workers` whose per-node share fits a node. Errors
+    /// when no span can ever fit on this cluster — the unschedulable
+    /// (would-starve-forever) case the daemon rejects at submit time.
+    pub fn span_of(&self, job: &JobSpec) -> Result<usize> {
+        let g = self.cluster.gpus_per_node;
+        if job.nodes > 0 {
+            let k = job.nodes;
+            if k > self.cluster.nodes {
+                bail!("job '{}': wants {} nodes, cluster has {}", job.name, k, self.cluster.nodes);
+            }
+            if job.workers % k != 0 {
+                bail!("job '{}': workers {} not divisible by nodes {}", job.name, job.workers, k);
+            }
+            if job.workers / k > g {
+                bail!(
+                    "job '{}': {} ranks/node exceeds the node size {}",
+                    job.name,
+                    job.workers / k,
+                    g
+                );
+            }
+            return Ok(k);
+        }
+        for k in 1..=self.cluster.nodes {
+            if job.workers % k == 0 && job.workers / k <= g {
+                return Ok(k);
+            }
+        }
+        bail!(
+            "job '{}': {} ranks cannot be evenly placed on a {}x{} cluster",
+            job.name,
+            job.workers,
+            self.cluster.nodes,
+            g
+        )
+    }
+
+    /// Whether the job could be admitted right now without mutating state.
+    pub fn can_admit(&self, job: &JobSpec) -> bool {
+        self.place(job).is_some()
+    }
+
+    fn place(&self, job: &JobSpec) -> Option<Allocation> {
+        let k = self.span_of(job).ok()?;
+        let per = job.workers / k;
+        let nodes: Vec<usize> =
+            (0..self.cluster.nodes).filter(|&n| self.free[n] >= per).take(k).collect();
+        if nodes.len() < k {
+            return None;
+        }
+        Some(Allocation { nodes, per_node: per })
+    }
+
+    /// Gang-admit a job if capacity allows: all ranks placed or none.
+    pub fn try_admit(&mut self, job: &JobSpec) -> Option<Allocation> {
+        let alloc = self.place(job)?;
+        for &n in &alloc.nodes {
+            self.free[n] -= alloc.per_node;
+        }
+        self.allocs.insert(job.id, alloc.clone());
+        Some(alloc)
+    }
+
+    /// Release a completed (or aborted) job's slots.
+    pub fn release(&mut self, id: JobId) -> Option<Allocation> {
+        let alloc = self.allocs.remove(&id)?;
+        for &n in &alloc.nodes {
+            self.free[n] += alloc.per_node;
+        }
+        Some(alloc)
+    }
+
+    /// Revoke one node from a multi-node allocation (elastic shrink).
+    /// Returns the number of ranks to `Leave` from the job's engine, or
+    /// None when the job holds fewer than two nodes.
+    pub fn shrink(&mut self, id: JobId) -> Option<usize> {
+        let alloc = self.allocs.get_mut(&id)?;
+        if alloc.nodes.len() < 2 {
+            return None;
+        }
+        let n = alloc.nodes.pop().expect("len >= 2");
+        self.free[n] += alloc.per_node;
+        Some(alloc.per_node)
+    }
+
+    /// Give a shrunk job one node back (elastic re-grow). Returns the
+    /// number of ranks to `Join` into the job's engine, or None when no
+    /// node has enough free slots.
+    pub fn grow(&mut self, id: JobId) -> Option<usize> {
+        let alloc = self.allocs.get_mut(&id)?;
+        let n = (0..self.cluster.nodes)
+            .find(|n| !alloc.nodes.contains(n) && self.free[*n] >= alloc.per_node)?;
+        self.free[n] -= alloc.per_node;
+        alloc.nodes.push(n);
+        alloc.nodes.sort_unstable();
+        Some(alloc.per_node)
+    }
+
+    pub fn allocation(&self, id: JobId) -> Option<&Allocation> {
+        self.allocs.get(&id)
+    }
+
+    pub fn free_gpus(&self) -> usize {
+        self.free.iter().sum()
+    }
+
+    pub fn cluster(&self) -> ClusterSpec {
+        self.cluster
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SchemeKind;
+
+    fn job(id: JobId, workers: usize, nodes: usize) -> JobSpec {
+        let mut j = JobSpec::new(id, &format!("j{id}"), SchemeKind::Baseline, workers);
+        j.nodes = nodes;
+        j
+    }
+
+    #[test]
+    fn admits_releases_and_tracks_capacity() {
+        let mut s = GangScheduler::new(ClusterSpec::new(2, 4));
+        assert_eq!(s.free_gpus(), 8);
+        let a = s.try_admit(&job(0, 4, 2)).unwrap();
+        assert_eq!((a.nodes.as_slice(), a.per_node), (&[0, 1][..], 2));
+        assert!(a.spans_fabric());
+        assert_eq!(a.cluster().world(), 4);
+        let b = s.try_admit(&job(1, 4, 2)).unwrap();
+        assert_eq!(b.per_node, 2);
+        assert_eq!(s.free_gpus(), 0);
+        // gang semantics: nothing placed when full
+        assert!(s.try_admit(&job(2, 2, 1)).is_none());
+        s.release(0).unwrap();
+        assert_eq!(s.free_gpus(), 4);
+        let c = s.try_admit(&job(2, 2, 1)).unwrap();
+        assert!(!c.spans_fabric());
+    }
+
+    #[test]
+    fn auto_span_prefers_single_node() {
+        let s = GangScheduler::new(ClusterSpec::new(4, 4));
+        assert_eq!(s.span_of(&job(0, 4, 0)).unwrap(), 1);
+        assert_eq!(s.span_of(&job(0, 8, 0)).unwrap(), 2);
+        assert_eq!(s.span_of(&job(0, 6, 0)).unwrap(), 2);
+        // ragged world that only a flat span fits
+        assert_eq!(s.span_of(&job(0, 3, 0)).unwrap(), 1);
+    }
+
+    #[test]
+    fn unschedulable_shapes_are_rejected_up_front() {
+        let s = GangScheduler::new(ClusterSpec::new(2, 2));
+        assert!(s.span_of(&job(0, 16, 0)).is_err());
+        assert!(s.span_of(&job(0, 4, 3)).is_err());
+        assert!(s.span_of(&job(0, 3, 2)).is_err());
+        assert!(s.span_of(&job(0, 4, 1)).is_err());
+    }
+
+    #[test]
+    fn shrink_and_grow_roundtrip() {
+        let mut s = GangScheduler::new(ClusterSpec::new(3, 2));
+        s.try_admit(&job(0, 4, 2)).unwrap();
+        s.try_admit(&job(1, 2, 1)).unwrap();
+        assert_eq!(s.free_gpus(), 0);
+        // shrink frees one node's worth of ranks
+        assert_eq!(s.shrink(0), Some(2));
+        assert_eq!(s.allocation(0).unwrap().world(), 2);
+        assert_eq!(s.free_gpus(), 2);
+        // single-node jobs cannot shrink further
+        assert_eq!(s.shrink(0), None);
+        assert_eq!(s.shrink(1), None);
+        // grow takes the freed node back
+        assert_eq!(s.grow(0), Some(2));
+        assert_eq!(s.allocation(0).unwrap().world(), 4);
+        assert!(s.allocation(0).unwrap().spans_fabric());
+        assert_eq!(s.free_gpus(), 0);
+        assert_eq!(s.grow(0), None);
+    }
+}

@@ -294,6 +294,12 @@ pub fn price_reconfiguration(
     new_cluster: ClusterSpec,
     moved_bytes: usize,
 ) -> ReconfigCost {
+    // Identity reconfiguration: same shape, nothing to move. No quiesce
+    // or resync rendezvous happens because no step boundary is forced —
+    // priced exactly zero so callers can diff "did anything change".
+    if old_cluster == new_cluster && moved_bytes == 0 {
+        return ReconfigCost { quiesce_s: 0.0, state_move_s: 0.0, resync_s: 0.0, total_s: 0.0 };
+    }
     let quiesce_s = net.sync_round_s(old_cluster);
     let state_move_s = if moved_bytes == 0 {
         0.0
@@ -504,6 +510,46 @@ mod tests {
         let shrink = price_reconfiguration(&net, ClusterSpec::ecs(64), ClusterSpec::ecs(16), 0);
         assert!(shrink.quiesce_s > shrink.resync_s);
         assert_eq!(shrink.state_move_s, 0.0);
+    }
+
+    /// Property: over random cluster pairs, the reconfiguration price is
+    /// monotone in the bytes moved — more residual state can never price
+    /// cheaper, and strictly more bytes price strictly higher.
+    #[test]
+    fn reconfig_price_monotone_in_moved_bytes_property() {
+        use crate::util::prop::{check, usize_in};
+        let net = net();
+        check("reconfig-monotone-bytes", 0x5eca_11, 200, |rng| {
+            let old_c = ClusterSpec::new(usize_in(rng, 1, 8), usize_in(rng, 1, 8));
+            let new_c = ClusterSpec::new(usize_in(rng, 1, 8), usize_in(rng, 1, 8));
+            let a = usize_in(rng, 0, 8 * MB);
+            let b = a + usize_in(rng, 1, 8 * MB);
+            let ca = price_reconfiguration(&net, old_c, new_c, a);
+            let cb = price_reconfiguration(&net, old_c, new_c, b);
+            assert!(
+                cb.state_move_s > ca.state_move_s && cb.total_s > ca.total_s,
+                "moving {b} bytes priced no higher than {a} \
+                 ({old_c:?} -> {new_c:?}: {cb:?} vs {ca:?})"
+            );
+        });
+    }
+
+    /// Property: an identity reconfiguration (same cluster, zero bytes
+    /// moved) prices exactly zero in every phase — "nothing changed"
+    /// must diff as nothing, so callers can gate on total_s == 0.
+    #[test]
+    fn reconfig_identity_prices_zero_property() {
+        use crate::util::prop::{check, usize_in};
+        let net = net();
+        check("reconfig-identity-zero", 0x5eca_12, 200, |rng| {
+            let c = ClusterSpec::new(usize_in(rng, 1, 16), usize_in(rng, 1, 16));
+            let cost = price_reconfiguration(&net, c, c, 0);
+            assert_eq!(
+                (cost.quiesce_s, cost.state_move_s, cost.resync_s, cost.total_s),
+                (0.0, 0.0, 0.0, 0.0),
+                "identity reconfig on {c:?} must price zero, got {cost:?}"
+            );
+        });
     }
 
     const MB: usize = 1 << 20;
